@@ -1,0 +1,21 @@
+use std::sync::Arc;
+use vqt::config::ModelConfig;
+use vqt::edits::Edit;
+use vqt::incremental::{EngineOptions, IncrementalEngine};
+use vqt::model::ModelWeights;
+fn main() {
+    let cfg = ModelConfig::vqt_mini();
+    let w = Arc::new(ModelWeights::load("artifacts/weights_trained_serve.bin", &cfg).unwrap_or_else(|_| ModelWeights::random(&cfg, 7)));
+    let tokens: Vec<u32> = (0..512).map(|i| (i * 37 % 256) as u32).collect();
+    let mut eng = IncrementalEngine::new(w, &tokens, EngineOptions::default());
+    let mut best = f64::INFINITY;
+    for round in 0..5 {
+        let t0 = std::time::Instant::now();
+        for i in 0..20 {
+            eng.apply_edit(Edit::Replace { at: 51, tok: ((round * 20 + i) % 255) as u32 });
+        }
+        let ms = t0.elapsed().as_secs_f64() * 1e3 / 20.0;
+        best = best.min(ms);
+    }
+    println!("early-edit p-best: {best:.2} ms/edit");
+}

@@ -1,0 +1,82 @@
+//! Offline batch processing (the paper's second scenario, §1/§3): a queue
+//! of document revisions waits for processing; revisions of the same
+//! document share a base, so the coordinator processes the base once and
+//! each revision incrementally, storing activations in the compressed
+//! (P, C) form of §3.1. Reports FLOP savings and measured storage
+//! compression.
+//!
+//! Run: `cargo run --release --example revision_batch`
+
+use std::sync::Arc;
+use vqt::bench::serving_weights;
+use vqt::config::{ModelConfig, ServeConfig};
+use vqt::coordinator::{Backend, Coordinator, Request, Response};
+use vqt::edits::trace::{RevisionTrace, TraceConfig};
+use vqt::incremental::EngineOptions;
+use vqt::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    vqt::util::logging::init();
+    let cfg = ModelConfig::vqt_mini();
+    let (weights, trained) = serving_weights(&cfg, "weights_trained_serve.bin");
+    let coordinator = Coordinator::start(
+        Backend {
+            weights: Arc::clone(&weights),
+            artifacts_dir: None,
+            engine_opts: EngineOptions::default(),
+        },
+        ServeConfig::default(),
+    );
+    let client = coordinator.client();
+    let mut rng = Rng::new(77);
+
+    // Build a revision queue: 4 documents × 6 revisions each.
+    let mut tcfg = TraceConfig::mini();
+    tcfg.min_len = 256;
+    tcfg.max_len = 384;
+    println!(
+        "offline revision queue: 4 documents × 6 revisions ({} weights)\n",
+        if trained { "trained" } else { "random-init" }
+    );
+
+    let (mut total_flops, mut total_dense) = (0u64, 0u64);
+    for doc_id in 0..4 {
+        let trace = RevisionTrace::generate(&tcfg, 7, &mut rng);
+        let base = trace.revisions[0].clone();
+        let revisions: Vec<Vec<u32>> = trace.revisions[1..].to_vec();
+        let resp = client.request(Request::BatchRevisions {
+            base: base.clone(),
+            revisions: revisions.clone(),
+        })?;
+        match resp {
+            Response::BatchLogits {
+                each,
+                flops,
+                dense_equiv_flops,
+                storage,
+            } => {
+                total_flops += flops;
+                total_dense += dense_equiv_flops;
+                println!(
+                    "doc {doc_id}: base {} tokens, {} revisions → {:.1}× fewer ops; \
+                     activation storage {:.1}× smaller ({} vs {} floats)",
+                    base.len(),
+                    each.len(),
+                    dense_equiv_flops as f64 / flops as f64,
+                    storage.1 as f64 / storage.0.max(1) as f64,
+                    storage.0,
+                    storage.1
+                );
+            }
+            other => anyhow::bail!("unexpected response {other:?}"),
+        }
+    }
+    println!(
+        "\nqueue total: {:.1}× fewer arithmetic operations than from-scratch processing",
+        total_dense as f64 / total_flops as f64
+    );
+    if let Response::Stats(stats) = client.request(Request::Stats)? {
+        println!("coordinator stats: {}", stats.to_string());
+    }
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! Server demo: start the TCP JSON server on an ephemeral port, run a
+//! scripted client against it, and print the wire exchange — the deploy
+//! shape of the system (one leader process, newline-delimited JSON).
+//!
+//! Run: `cargo run --release --example server_demo`
+
+use std::io::{BufRead, BufReader, Write};
+use std::sync::Arc;
+use vqt::bench::serving_weights;
+use vqt::config::{ModelConfig, ServeConfig};
+use vqt::coordinator::{Backend, Coordinator};
+use vqt::incremental::EngineOptions;
+
+fn main() -> anyhow::Result<()> {
+    vqt::util::logging::init();
+    let cfg = ModelConfig::vqt_mini();
+    let (weights, _) = serving_weights(&cfg, "weights_trained_serve.bin");
+    let coordinator = Coordinator::start(
+        Backend {
+            weights: Arc::clone(&weights),
+            artifacts_dir: None,
+            engine_opts: EngineOptions::default(),
+        },
+        ServeConfig::default(),
+    );
+
+    // Bind an ephemeral port and serve one connection in the background.
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let client = coordinator.client();
+    std::thread::spawn(move || {
+        for conn in listener.incoming() {
+            let Ok(stream) = conn else { continue };
+            let c = client.clone();
+            std::thread::spawn(move || {
+                let _ = vqt::server::handle_conn(stream, c);
+            });
+        }
+    });
+    println!("server listening on {addr}\n");
+
+    let mut conn = std::net::TcpStream::connect(addr)?;
+    let mut reader = BufReader::new(conn.try_clone()?);
+    let mut rpc = |line: &str| -> anyhow::Result<String> {
+        println!("→ {line}");
+        conn.write_all(line.as_bytes())?;
+        conn.write_all(b"\n")?;
+        let mut resp = String::new();
+        reader.read_line(&mut resp)?;
+        // Truncate long logit arrays for display.
+        let disp = if resp.len() > 160 {
+            format!("{}…", &resp[..160])
+        } else {
+            resp.trim().to_string()
+        };
+        println!("← {disp}\n");
+        Ok(resp)
+    };
+
+    let doc: Vec<String> = "what a delightful and moving film"
+        .bytes()
+        .map(|b| b.to_string())
+        .collect();
+    rpc(&format!(
+        r#"{{"op":"open","session":"rev1","tokens":[{}]}}"#,
+        doc.join(",")
+    ))?;
+    rpc(r#"{"op":"edit","session":"rev1","kind":"replace","at":7,"tok":100}"#)?;
+    rpc(r#"{"op":"edit","session":"rev1","kind":"insert","at":0,"tok":33}"#)?;
+    rpc(r#"{"op":"edit","session":"rev1","kind":"delete","at":3}"#)?;
+    rpc(r#"{"op":"stats"}"#)?;
+    rpc(r#"{"op":"close","session":"rev1"}"#)?;
+    println!("server demo complete");
+    // The accept-loop thread holds a coordinator client forever; exit the
+    // process rather than joining the worker (which would never drain).
+    std::process::exit(0);
+}

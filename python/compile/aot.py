@@ -1,0 +1,158 @@
+"""AOT build: lower the L2 JAX model (with L1 Pallas kernels) to HLO *text*
+artifacts and export weights, so the Rust runtime is self-contained.
+
+Interchange is HLO text, NOT a serialized HloModuleProto: jax ≥ 0.5 emits
+protos with 64-bit instruction ids that xla_extension 0.5.1 (behind the
+`xla` crate) rejects; the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Outputs under artifacts/:
+  weights_serve.bin            — VQTB weights for the serving model
+  model_fwd_n{N}.hlo.txt       — dense VQT forward at bucket length N
+  baseline_fwd_n{N}.hlo.txt    — softmax/no-VQ baseline at bucket length N
+  vq_assign_n{N}.hlo.txt       — standalone L1 VQ-assignment kernel
+  manifest.json                — param argument order + artifact index
+
+Artifact signature: (params..., tokens i32[N], pos i32[N], length i32[])
+→ (logits f32[classes],). Params are passed as arguments (not baked as
+constants) in sorted-name order — the same order Rust's BTreeMap yields.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import binfmt
+from .kernels.ref import vq_bias
+from .kernels.vq_assign import vq_assign
+from .model import ModelCfg, forward_logits, init_params, vqt_mini, vqt_tiny
+
+BUCKETS = (32, 64, 128, 256, 512)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True so the Rust
+    side unwraps with `to_tuple1`)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_forward(cfg: ModelCfg, params: dict, n: int, use_pallas: bool) -> str:
+    """Lower forward_logits at sequence bucket n with params as arguments."""
+    names = sorted(params)
+    specs = [jax.ShapeDtypeStruct(params[k].shape, params[k].dtype) for k in names]
+    tok_spec = jax.ShapeDtypeStruct((n,), jnp.int32)
+    len_spec = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def fn(*args):
+        p = dict(zip(names, args[: len(names)]))
+        tokens, pos, length = args[len(names) :]
+        return (forward_logits(p, cfg, tokens, pos, length, use_pallas=use_pallas),)
+
+    lowered = jax.jit(fn).lower(*specs, tok_spec, tok_spec, len_spec)
+    return to_hlo_text(lowered)
+
+
+def lower_vq_assign(cfg: ModelCfg, params: dict, n: int) -> str:
+    """Standalone L1 kernel artifact: (x (n,d), books (H,q,chunk),
+    bias (H,q)) → codes (n, H). Codebooks are arguments rather than baked
+    constants: xla_extension 0.5.1's HLO text parser mis-handles large
+    multi-dim constants (verified empirically — constants round-trip to
+    zeros), while parameters round-trip fine."""
+    books = params["layers.0.vq.book"]
+
+    def fn(x, b, bias):
+        return (vq_assign(x, b, bias),)
+
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((n, cfg.d_model), jnp.float32),
+        jax.ShapeDtypeStruct(books.shape, jnp.float32),
+        jax.ShapeDtypeStruct(books.shape[:2], jnp.float32),
+    )
+    return to_hlo_text(lowered)
+
+
+def build(out_dir: str, preset: str, buckets, seed: int, weights_path: str | None):
+    os.makedirs(out_dir, exist_ok=True)
+    cfg = {"vqt_mini": vqt_mini, "vqt_tiny": vqt_tiny}[preset]()
+    if weights_path and os.path.exists(weights_path):
+        params = binfmt.read_tensors(weights_path)
+        print(f"loaded trained weights from {weights_path}")
+    else:
+        params = init_params(cfg, seed)
+        print(f"using deterministic random init (seed {seed})")
+    buckets = [b for b in buckets if b <= cfg.max_seq]
+
+    binfmt.write_tensors(os.path.join(out_dir, "weights_serve.bin"), params)
+
+    manifest = {
+        "preset": preset,
+        "param_order": sorted(params),
+        "buckets": list(buckets),
+        "artifacts": {},
+        "config": {
+            "vocab_size": cfg.vocab_size,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff,
+            "max_seq": cfg.max_seq,
+            "pos_pool": cfg.pos_pool,
+            "vq_heads": cfg.vq_heads,
+            "vq_codes": cfg.vq_codes,
+            "attention": cfg.attention,
+            "n_classes": cfg.n_classes,
+            "ln_eps": cfg.ln_eps,
+        },
+    }
+
+    for n in buckets:
+        name = f"model_fwd_n{n}.hlo.txt"
+        text = lower_forward(cfg, params, n, use_pallas=True)
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        manifest["artifacts"][f"model_fwd_n{n}"] = name
+        print(f"wrote {name} ({len(text)} chars)")
+
+    # Standalone L1 kernel artifact at the largest bucket.
+    if cfg.vq_heads > 0 and buckets:
+        n = buckets[-1]
+        name = f"vq_assign_n{n}.hlo.txt"
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(lower_vq_assign(cfg, params, n))
+        manifest["artifacts"][f"vq_assign_n{n}"] = name
+        print(f"wrote {name}")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json ({len(manifest['artifacts'])} artifacts)")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--preset", default="vqt_mini", choices=["vqt_mini", "vqt_tiny"])
+    ap.add_argument("--buckets", default=",".join(map(str, BUCKETS)))
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument(
+        "--weights",
+        default="../artifacts/weights_trained_serve.bin",
+        help="use trained weights if present (falls back to random init)",
+    )
+    args = ap.parse_args()
+    buckets = [int(b) for b in args.buckets.split(",") if b]
+    build(args.out, args.preset, buckets, args.seed, args.weights)
+
+
+if __name__ == "__main__":
+    main()

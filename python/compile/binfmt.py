@@ -1,0 +1,62 @@
+"""VQTB binary tensor container — Python writer/reader.
+
+Mirrors ``rust/src/util/binfmt.rs``; this is the weight/data interchange
+format between the build-time Python pipeline and the Rust runtime.
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Dict
+
+import numpy as np
+
+MAGIC = b"VQTB"
+VERSION = 1
+
+_DTYPES = {0: np.float32, 1: np.int32}
+_DTYPE_CODES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1}
+
+
+def write_tensors(path: str, tensors: Dict[str, np.ndarray]) -> None:
+    """Write a name→array mapping (f32/i32 only) to a VQTB file."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", VERSION, len(tensors)))
+        for name in sorted(tensors):
+            arr = np.ascontiguousarray(tensors[name])
+            if arr.dtype not in _DTYPE_CODES:
+                if np.issubdtype(arr.dtype, np.floating):
+                    arr = arr.astype(np.float32)
+                elif np.issubdtype(arr.dtype, np.integer):
+                    arr = arr.astype(np.int32)
+                else:
+                    raise TypeError(f"unsupported dtype {arr.dtype} for '{name}'")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", _DTYPE_CODES[arr.dtype], arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.astype("<" + arr.dtype.str[1:]).tobytes())
+
+
+def read_tensors(path: str) -> Dict[str, np.ndarray]:
+    """Read a VQTB file back into a name→array mapping."""
+    with open(path, "rb") as f:
+        if f.read(4) != MAGIC:
+            raise ValueError("not a VQTB file")
+        version, count = struct.unpack("<II", f.read(8))
+        if version != VERSION:
+            raise ValueError(f"unsupported version {version}")
+        out: Dict[str, np.ndarray] = {}
+        for _ in range(count):
+            (name_len,) = struct.unpack("<I", f.read(4))
+            name = f.read(name_len).decode("utf-8")
+            dtype_code, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            n = int(np.prod(dims)) if dims else 1
+            dtype = _DTYPES[dtype_code]
+            data = np.frombuffer(f.read(4 * n), dtype="<" + np.dtype(dtype).str[1:])
+            out[name] = data.reshape(dims).astype(dtype)
+        return out

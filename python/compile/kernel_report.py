@@ -1,0 +1,56 @@
+"""L1 §Perf report: BlockSpec sweep for both Pallas kernels — VMEM
+footprint and MXU-shape estimates per grid step.
+
+interpret=True wallclock on CPU is NOT a TPU proxy, so this report is
+structural: it verifies the chosen schedules fit VMEM with headroom and
+states the systolic-array tile shapes each contraction maps to.
+
+Usage: python -m compile.kernel_report
+"""
+
+from __future__ import annotations
+
+from .kernels.attn_gelu import vmem_footprint_bytes as attn_vmem
+from .kernels.vq_assign import vmem_footprint_bytes as vq_vmem
+
+VMEM_BYTES = 16 * 1024 * 1024  # v4/v5-class per-core VMEM
+
+
+def report(cfg_name: str, d: int, heads: int, q: int, n_heads: int):
+    print(f"\n== {cfg_name}: d={d}, vq_heads={heads}, q={q}, attn_heads={n_heads} ==")
+    chunk = d // heads
+    print("vq_assign (scores matmul + argmax):")
+    for bn in (64, 128, 256, 512):
+        v = vq_vmem(bn, d, heads, q)
+        fill = min(chunk, 128) / 128 * min(q, 128) / 128
+        marker = " <== chosen" if bn == 128 else ""
+        print(
+            f"  block_n={bn:<4} VMEM {v/1024:8.1f} KiB ({v/VMEM_BYTES*100:4.1f}% of 16MiB)  "
+            f"MXU tile ({bn}x{chunk})·({chunk}x{q}), contraction fill {fill:.2f}{marker}"
+        )
+    dh = d // n_heads
+    print("attn_gelu (tiled causal, no online-softmax state):")
+    for bq, bk in ((64, 64), (128, 128), (256, 128), (256, 256)):
+        v = attn_vmem(bq, bk, d)
+        marker = " <== chosen" if (bq, bk) == (128, 128) else ""
+        print(
+            f"  block=({bq:>3},{bk:>3}) VMEM {v/1024:8.1f} KiB ({v/VMEM_BYTES*100:4.1f}%)  "
+            f"per-head qk tile ({bq}x{dh})·({dh}x{bk}){marker}"
+        )
+
+
+def main():
+    # The serving model and the paper-scale target.
+    report("vqt_mini (served)", d=128, heads=2, q=64, n_heads=4)
+    report("OPT-125M scale (paper target)", d=768, heads=2, q=64, n_heads=12)
+    print(
+        "\nNotes: codebooks are pinned across the whole grid (index map is"
+        " constant); at OPT-125M chunk width (384) the scores contraction"
+        " saturates the MXU's 128-lane contraction axis. The attention"
+        " kernel's independence of k-tiles (element-wise σ) is the same"
+        " property that makes the L3 incremental corrections exact."
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""Pallas kernel: causal multi-head GELU-elementwise attention (L1 #2).
+
+The paper replaces softmax with an element-wise non-linearity (eq. 1)
+precisely so incremental column corrections are exact. On TPU this also
+*simplifies* the flash-attention schedule: without softmax there is no
+online max/denominator state — each (query-tile × key-tile) contribution is
+independent, so the kernel is a plain 2-D tiled matmul-accumulate:
+
+  grid = (q_tiles, k_tiles); out[qi] += gelu(Q[qi]·K[kj]ᵀ·s) ⊙ mask · V[kj]
+
+with an f32 VMEM accumulator tile and the causal/pad mask applied in
+coefficient space (gelu(s)·0 = 0, exact). K-tiles beyond the diagonal are
+skipped entirely via `pl.when`-style masking of whole tiles.
+
+Always lowered with `interpret=True` (CPU PJRT cannot run Mosaic).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import gelu
+
+
+def _attn_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    mask_ref,
+    o_ref,
+    *,
+    n_heads: int,
+    out_scale: float,
+    block_q: int,
+    block_k: int,
+):
+    qi = pl.program_id(0)
+    kj = pl.program_id(1)
+    q = q_ref[...]  # (bq, d)
+    k = k_ref[...]  # (bk, d)
+    v = v_ref[...]  # (bk, d)
+    kv_mask = mask_ref[...]  # (bk,)
+    bq, d = q.shape
+    bk = k.shape[0]
+    dh = d // n_heads
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+
+    # Global row/col ids for the causal mask.
+    rows = qi * block_q + jax.lax.iota(jnp.int32, bq)
+    cols = kj * block_k + jax.lax.iota(jnp.int32, bk)
+    causal = (rows[:, None] >= cols[None, :]).astype(jnp.float32)
+    m = causal * kv_mask[None, :]
+
+    parts = []
+    for h in range(n_heads):
+        qh = q[:, h * dh : (h + 1) * dh]
+        kh = k[:, h * dh : (h + 1) * dh]
+        vh = v[:, h * dh : (h + 1) * dh]
+        coeff = gelu(jnp.dot(qh, kh.T) * scale) * m  # (bq, bk)
+        parts.append(jnp.dot(coeff, vh))
+    acc = jnp.concatenate(parts, axis=1) if n_heads > 1 else parts[0]
+
+    # Accumulate across k-tiles: first tile initializes, rest add.
+    @pl.when(kj == 0)
+    def _init():
+        o_ref[...] = acc * out_scale
+
+    @pl.when(kj > 0)
+    def _acc():
+        o_ref[...] += acc * out_scale
+
+
+@functools.partial(jax.jit, static_argnames=("n_heads", "out_scale", "block_q", "block_k"))
+def attn_gelu(q, k, v, kv_mask, n_heads: int, out_scale: float, block_q: int = 128, block_k: int = 128):
+    """Tiled causal GELU attention. q/k/v: (n, d); kv_mask: (n,) float.
+
+    Returns (n, d). `n` must tile by the block sizes (or be ≤ them).
+    """
+    n, d = q.shape
+    bq = min(block_q, n)
+    bk = min(block_k, n)
+    assert n % bq == 0 and n % bk == 0, f"sequence {n} not tileable by ({bq},{bk})"
+    grid = (n // bq, n // bk)
+    return pl.pallas_call(
+        functools.partial(
+            _attn_kernel,
+            n_heads=n_heads,
+            out_scale=out_scale,
+            block_q=bq,
+            block_k=bk,
+        ),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bk, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bk, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bk,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+        interpret=True,
+    )(q, k, v, kv_mask)
+
+
+def vmem_footprint_bytes(block_q: int, block_k: int, d: int) -> int:
+    """Estimated VMEM bytes per grid step (f32): Q, K, V, mask, coeff, out."""
+    return 4 * (block_q * d + 2 * block_k * d + block_k + block_q * block_k + block_q * d)

@@ -1,0 +1,93 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+Everything here mirrors the Rust L3 arithmetic exactly (same GELU tanh
+approximation, same layernorm formula, same attention masking), so the
+chain  Pallas kernel == this reference == Rust dense forward  gives
+end-to-end numerical parity across all three layers.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gelu(x):
+    """GELU, tanh approximation — matches `tensor::gelu_scalar` in Rust and
+    `jax.nn.gelu(approximate=True)`."""
+    c = 0.7978845608028654  # sqrt(2/pi)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+
+
+def layernorm(x, g, b, eps):
+    """Row-wise layernorm over the last axis (biased variance, like Rust)."""
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * g + b
+
+
+def vq_bias(books):
+    """b = −‖c‖²/2 per head/code: (H, q)."""
+    return -0.5 * jnp.sum(books * books, axis=-1)
+
+
+def vq_scores_ref(x, books, bias):
+    """Multi-head VQ scores (App. A.2 inner-product form).
+
+    x:     (n, d)
+    books: (H, q, d/H)
+    bias:  (H, q) — the −‖c‖²/2 terms
+    →      (n, H, q)
+    """
+    n, _ = x.shape
+    h, _, chunk = books.shape
+    xh = x.reshape(n, h, chunk)
+    scores = jnp.einsum("nhc,hqc->nhq", xh, books)
+    return scores + bias[None, :, :]
+
+
+def vq_assign_ref(x, books, bias):
+    """Nearest-codeword indices per head: (n, H) int32."""
+    return jnp.argmax(vq_scores_ref(x, books, bias), axis=-1).astype(jnp.int32)
+
+
+def vq_decode_ref(codes, books):
+    """Gather codewords and concatenate chunks: (n, H) → (n, d)."""
+    h = books.shape[0]
+    parts = [books[i][codes[:, i]] for i in range(h)]
+    return jnp.concatenate(parts, axis=-1)
+
+
+def attn_gelu_ref(q, k, v, n_heads, kv_mask, out_scale):
+    """Causal multi-head GELU-elementwise attention (paper eq. 1).
+
+    q, k, v: (n, d); kv_mask: (n,) 1/0 float over key/value columns.
+    out_i = out_scale · Σ_{j≤i} gelu(q_i·k_j/√d_h) ⊙ v_j   (per head)
+    """
+    n, d = q.shape
+    dh = d // n_heads
+    qh = q.reshape(n, n_heads, dh)
+    kh = k.reshape(n, n_heads, dh)
+    vh = v.reshape(n, n_heads, dh)
+    scores = jnp.einsum("ihd,jhd->hij", qh, kh) / jnp.sqrt(jnp.float32(dh))
+    coeff = gelu(scores)
+    causal = jnp.tril(jnp.ones((n, n), dtype=coeff.dtype))
+    coeff = coeff * causal[None, :, :] * kv_mask[None, None, :]
+    out = jnp.einsum("hij,jhd->ihd", coeff, vh)
+    return out.reshape(n, d) * out_scale
+
+
+def attn_softmax_ref(q, k, v, n_heads, kv_mask, out_scale):
+    """Softmax baseline attention (OPT-style), same masking conventions."""
+    n, d = q.shape
+    dh = d // n_heads
+    qh = q.reshape(n, n_heads, dh)
+    kh = k.reshape(n, n_heads, dh)
+    vh = v.reshape(n, n_heads, dh)
+    scores = jnp.einsum("ihd,jhd->hij", qh, kh) / jnp.sqrt(jnp.float32(dh))
+    causal = jnp.tril(jnp.ones((n, n), dtype=scores.dtype))
+    mask = causal[None, :, :] * kv_mask[None, None, :]
+    scores = jnp.where(mask > 0, scores, -1e9)
+    coeff = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    coeff = coeff / jnp.sum(coeff, axis=-1, keepdims=True)
+    out = jnp.einsum("hij,jhd->ihd", coeff, vh)
+    return out.reshape(n, d) * out_scale

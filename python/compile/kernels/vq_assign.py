@@ -1,0 +1,76 @@
+"""Pallas kernel: multi-head VQ assignment (L1 hot-spot #1).
+
+TPU adaptation of the paper's VQ layer (DESIGN.md §2): assignment uses the
+inner-product form  argmin‖x−c‖ = argmax(x·c + b)  from App. A.2, so each
+head's scoring is a single `(block_n, chunk) × (chunk, q)` matmul — an
+MXU-shaped contraction — followed by a row argmax (VPU reduction).
+
+BlockSpec schedule: a 1-D grid tiles the sequence; each grid step holds one
+`(block_n, d)` activation tile plus ALL codebooks in VMEM (the codebooks are
+tiny: H·q·chunk = d·q floats — e.g. 32 KiB for d=128, q=64 — and are pinned
+across the whole grid). This replaces what a CUDA port would do with one
+threadblock per row.
+
+Always lowered with `interpret=True`: the CPU PJRT plugin cannot execute
+Mosaic custom-calls; real-TPU estimates are reported in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _vq_assign_kernel(x_ref, books_ref, bias_ref, codes_ref, *, heads: int):
+    """One sequence tile: scores = x_h @ C_hᵀ + b_h, codes = argmax."""
+    x = x_ref[...]  # (bn, d)
+    books = books_ref[...]  # (H, q, chunk)
+    bias = bias_ref[...]  # (H, q)
+    bn, d = x.shape
+    chunk = d // heads
+    # Unrolled per-head loop (H is small and static): each head is one
+    # (bn, chunk) × (chunk, q) matmul on the MXU.
+    codes = []
+    for h in range(heads):
+        xh = x[:, h * chunk : (h + 1) * chunk]
+        scores = jnp.dot(xh, books[h].T) + bias[h][None, :]  # (bn, q)
+        codes.append(jnp.argmax(scores, axis=-1).astype(jnp.int32))
+    codes_ref[...] = jnp.stack(codes, axis=-1)  # (bn, H)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def vq_assign(x, books, bias, block_n: int = 128):
+    """Multi-head VQ assignment via Pallas.
+
+    x: (n, d) activations; books: (H, q, d/H); bias: (H, q).
+    Returns codes (n, H) int32. `n` must be a multiple of `block_n` or
+    smaller than it (single tile).
+    """
+    n, d = x.shape
+    heads, q, chunk = books.shape
+    assert d == heads * chunk, "codebook chunking mismatch"
+    bn = min(block_n, n)
+    assert n % bn == 0, f"sequence {n} not tileable by {bn}"
+    grid = (n // bn,)
+    return pl.pallas_call(
+        functools.partial(_vq_assign_kernel, heads=heads),
+        out_shape=jax.ShapeDtypeStruct((n, heads), jnp.int32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),  # stream tiles
+            pl.BlockSpec((heads, q, chunk), lambda i: (0, 0, 0)),  # pinned
+            pl.BlockSpec((heads, q), lambda i: (0, 0)),  # pinned
+        ],
+        out_specs=pl.BlockSpec((bn, heads), lambda i: (i, 0)),
+        interpret=True,
+    )(x, books, bias)
+
+
+def vmem_footprint_bytes(block_n: int, d: int, heads: int, q: int) -> int:
+    """Estimated VMEM bytes per grid step (f32): stream tile + codebooks +
+    bias + codes tile. Used by the §Perf BlockSpec sweep."""
+    chunk = d // heads
+    return 4 * (block_n * d + heads * q * chunk + heads * q + block_n * heads)

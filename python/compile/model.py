@@ -1,0 +1,220 @@
+"""L2: the VQT model forward pass in JAX (build-time only).
+
+Mirrors the Rust L3 dense oracle (`rust/src/model/dense.rs`) operation for
+operation so AOT artifacts executed through PJRT agree numerically with the
+in-process engine. The hot spots dispatch to the L1 Pallas kernels when
+``use_pallas=True`` (the AOT path); training uses the pure-jnp path.
+
+Model structure per block (pre-LN):
+  x ← x + W_mix · VQ(σ(QKᵀ·s)V · c)            (attention, paper eq. 1)
+  x ← x + FFN(LN2(x))
+with Q/K/V from LN1(x); classifier = linear over masked mean-pool of
+LN_f(x).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .kernels.attn_gelu import attn_gelu
+from .kernels.vq_assign import vq_assign
+
+
+@dataclass(frozen=True)
+class ModelCfg:
+    """Mirror of the Rust `ModelConfig` (see `config/mod.rs`)."""
+
+    vocab_size: int = 257
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 512
+    max_seq: int = 512
+    pos_pool: int = 512 * 8
+    vq_heads: int = 2
+    vq_codes: int = 64
+    attention: str = "gelu"  # "gelu" | "softmax"
+    n_classes: int = 2
+    ln_eps: float = 1e-5
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def out_scale(self) -> float:
+        return 1.0 / float(np.sqrt(self.max_seq))
+
+
+def vqt_mini() -> ModelCfg:
+    return ModelCfg()
+
+
+def vqt_tiny() -> ModelCfg:
+    return ModelCfg(
+        vocab_size=64,
+        d_model=32,
+        n_layers=2,
+        n_heads=2,
+        d_ff=64,
+        max_seq=64,
+        pos_pool=64 * 8,
+        vq_heads=2,
+        vq_codes=16,
+    )
+
+
+def table1_cfg(variant: str) -> ModelCfg:
+    """The four Table-1 model variants at laptop scale."""
+    base = dict(
+        vocab_size=257,
+        d_model=64,
+        n_layers=2,
+        n_heads=4,
+        d_ff=256,
+        max_seq=128,
+        pos_pool=128 * 8,
+        n_classes=2,
+    )
+    if variant == "opt":  # OPT-mini baseline
+        return ModelCfg(**base, vq_heads=0, vq_codes=0, attention="softmax")
+    if variant == "distil":  # DistilOPT-mini: half depth
+        return ModelCfg(**{**base, "n_layers": 1}, vq_heads=0, vq_codes=0, attention="softmax")
+    if variant == "vq_h2":
+        return ModelCfg(**base, vq_heads=2, vq_codes=64, attention="gelu")
+    if variant == "vq_h4":
+        return ModelCfg(**base, vq_heads=4, vq_codes=64, attention="gelu")
+    raise ValueError(f"unknown variant {variant}")
+
+
+# ---------------------------------------------------------------------------
+# Parameters (flat dict, names == VQTB tensor names == Rust loader names)
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelCfg, seed: int) -> dict:
+    """Deterministic init; returns a flat {name: np.ndarray} dict."""
+    rng = np.random.default_rng(seed)
+    d = cfg.d_model
+
+    def mat(r, c, s):
+        return (rng.standard_normal((r, c)) * s).astype(np.float32)
+
+    p = {
+        "embed_tokens": mat(cfg.vocab_size, d, 0.02),
+        "embed_pos": mat(cfg.pos_pool, d, 0.02),
+        "ln_f.g": np.ones(d, np.float32),
+        "ln_f.b": np.zeros(d, np.float32),
+        "w_cls": mat(d, cfg.n_classes, 1.0 / np.sqrt(d)),
+        "b_cls": np.zeros(cfg.n_classes, np.float32),
+    }
+    ps = 1.0 / np.sqrt(d)
+    for i in range(cfg.n_layers):
+        pre = f"layers.{i}."
+        p[pre + "ln1.g"] = np.ones(d, np.float32)
+        p[pre + "ln1.b"] = np.zeros(d, np.float32)
+        p[pre + "wq"] = mat(d, d, ps)
+        p[pre + "wk"] = mat(d, d, ps)
+        p[pre + "wv"] = mat(d, d, ps)
+        p[pre + "bq"] = np.zeros(d, np.float32)
+        p[pre + "bk"] = np.zeros(d, np.float32)
+        p[pre + "bv"] = np.zeros(d, np.float32)
+        if cfg.vq_heads > 0:
+            chunk = d // cfg.vq_heads
+            p[pre + "vq.book"] = (
+                rng.standard_normal((cfg.vq_heads, cfg.vq_codes, chunk)) / np.sqrt(chunk)
+            ).astype(np.float32)
+        p[pre + "w_mix"] = mat(d, d, ps)
+        p[pre + "b_mix"] = np.zeros(d, np.float32)
+        p[pre + "ln2.g"] = np.ones(d, np.float32)
+        p[pre + "ln2.b"] = np.zeros(d, np.float32)
+        p[pre + "w_ff1"] = mat(d, cfg.d_ff, ps)
+        p[pre + "b_ff1"] = np.zeros(cfg.d_ff, np.float32)
+        p[pre + "w_ff2"] = mat(cfg.d_ff, d, 1.0 / np.sqrt(cfg.d_ff))
+        p[pre + "b_ff2"] = np.zeros(d, np.float32)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Forward pass (single document)
+# ---------------------------------------------------------------------------
+
+
+def _attention_block(params, cfg: ModelCfg, li: int, x, kv_mask, use_pallas: bool, quantizer=None):
+    """LN1 → QKV → attention → (VQ) — returns the pre-mix attention output
+    and the per-row codes (or None).
+
+    `quantizer(attn, books, bias) → (attn_q, codes)` overrides the hard
+    VQ (training uses a straight-through estimator here).
+    """
+    pre = f"layers.{li}."
+    h = ref.layernorm(x, params[pre + "ln1.g"], params[pre + "ln1.b"], cfg.ln_eps)
+    q = h @ params[pre + "wq"] + params[pre + "bq"]
+    k = h @ params[pre + "wk"] + params[pre + "bk"]
+    v = h @ params[pre + "wv"] + params[pre + "bv"]
+    if cfg.attention == "gelu":
+        if use_pallas:
+            attn = attn_gelu(q, k, v, kv_mask, cfg.n_heads, cfg.out_scale)
+        else:
+            attn = ref.attn_gelu_ref(q, k, v, cfg.n_heads, kv_mask, cfg.out_scale)
+    else:
+        attn = ref.attn_softmax_ref(q, k, v, cfg.n_heads, kv_mask, cfg.out_scale)
+    codes = None
+    if cfg.vq_heads > 0:
+        books = params[pre + "vq.book"]
+        bias = ref.vq_bias(books)
+        if quantizer is not None:
+            attn, codes = quantizer(attn, books, bias)
+        else:
+            if use_pallas:
+                codes = vq_assign(attn, books, bias)
+            else:
+                codes = ref.vq_assign_ref(attn, books, bias)
+            attn = ref.vq_decode_ref(codes, books)
+    return attn, codes
+
+
+def forward(params, cfg: ModelCfg, tokens, pos, length, use_pallas: bool = False, quantizer=None):
+    """Single-document forward.
+
+    tokens, pos: int32 (n,) — n is static (the artifact's bucket size);
+    length: int32 scalar — rows ≥ length are padding (masked out of
+    attention columns and pooling).
+    Returns (logits (n_classes,), codes list per layer or Nones).
+    """
+    n = tokens.shape[0]
+    idx = jnp.arange(n)
+    kv_mask = (idx < length).astype(jnp.float32)
+    x = params["embed_tokens"][tokens] + params["embed_pos"][pos]
+    all_codes = []
+    for li in range(cfg.n_layers):
+        pre = f"layers.{li}."
+        attn, codes = _attention_block(params, cfg, li, x, kv_mask, use_pallas, quantizer)
+        all_codes.append(codes)
+        x = x + attn @ params[pre + "w_mix"] + params[pre + "b_mix"]
+        h2 = ref.layernorm(x, params[pre + "ln2.g"], params[pre + "ln2.b"], cfg.ln_eps)
+        ff = ref.gelu(h2 @ params[pre + "w_ff1"] + params[pre + "b_ff1"])
+        x = x + ff @ params[pre + "w_ff2"] + params[pre + "b_ff2"]
+    hfin = ref.layernorm(x, params["ln_f.g"], params["ln_f.b"], cfg.ln_eps)
+    pooled = jnp.sum(hfin * kv_mask[:, None], axis=0) / jnp.maximum(
+        length.astype(jnp.float32), 1.0
+    )
+    logits = pooled @ params["w_cls"] + params["b_cls"]
+    return logits, all_codes
+
+
+def forward_logits(params, cfg: ModelCfg, tokens, pos, length, use_pallas: bool = False):
+    """Logits-only wrapper (the AOT entry point)."""
+    return forward(params, cfg, tokens, pos, length, use_pallas)[0]
+
+
+# Batched training forward: vmap over (tokens, pos, length).
+def batched_logits(params, cfg: ModelCfg, tokens, pos, lengths):
+    return jax.vmap(lambda t, p, l: forward_logits(params, cfg, t, p, l))(
+        tokens, pos, lengths
+    )

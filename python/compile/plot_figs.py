@@ -1,0 +1,69 @@
+"""Render Figures 3 and 4 from the bench CSVs as ASCII scatter plots
+(matplotlib is not in the offline image; the CSVs plot directly elsewhere).
+
+Usage: python -m compile.plot_figs [fig3_offline.csv] [fig4_online.csv]
+(the benches write these into the repo root)
+"""
+
+from __future__ import annotations
+
+import math
+import sys
+
+
+def load(path):
+    xs, ys = [], []
+    with open(path) as f:
+        next(f)  # header
+        for line in f:
+            a, b = line.strip().split(",")
+            xs.append(float(a))
+            ys.append(float(b))
+    return xs, ys
+
+
+def ascii_scatter(xs, ys, logx, logy, width=72, height=20, xlabel="", ylabel=""):
+    tx = [math.log10(max(x, 1e-4)) if logx else x for x in xs]
+    ty = [math.log10(max(y, 1e-2)) if logy else y for y in ys]
+    x0, x1 = min(tx), max(tx)
+    y0, y1 = min(ty), max(ty)
+    grid = [[" "] * width for _ in range(height)]
+    for a, b in zip(tx, ty):
+        col = int((a - x0) / max(x1 - x0, 1e-9) * (width - 1))
+        row = int((b - y0) / max(y1 - y0, 1e-9) * (height - 1))
+        grid[height - 1 - row][col] = "•"
+    top = f"{ylabel} (log)" if logy else ylabel
+    print(top)
+    for r in grid:
+        print("  |" + "".join(r))
+    print("  +" + "-" * width)
+    lo = f"{10**x0:.3g}" if logx else f"{x0:.3g}"
+    hi = f"{10**x1:.3g}" if logx else f"{x1:.3g}"
+    print(f"   {lo}{' ' * (width - len(lo) - len(hi))}{hi}   {xlabel}")
+
+
+def median(v):
+    s = sorted(v)
+    n = len(s)
+    return s[n // 2] if n % 2 else 0.5 * (s[n // 2 - 1] + s[n // 2])
+
+
+def main():
+    fig3 = sys.argv[1] if len(sys.argv) > 1 else "fig3_offline.csv"
+    fig4 = sys.argv[2] if len(sys.argv) > 2 else "fig4_online.csv"
+    try:
+        xs, ys = load(fig3)
+        print(f"\n== Figure 3 (offline): speedup vs fraction modified — {len(xs)} pairs, median {median(ys):.1f}x ==")
+        ascii_scatter(xs, ys, logx=True, logy=True, xlabel="fraction of modified tokens (log)", ylabel="speedup")
+    except FileNotFoundError:
+        print(f"({fig3} not found — run `cargo bench --bench fig3_offline`)")
+    try:
+        xs, ys = load(fig4)
+        print(f"\n== Figure 4 (online): speedup vs normalized edit location — {len(xs)} edits, median {median(ys):.1f}x ==")
+        ascii_scatter(xs, ys, logx=False, logy=True, xlabel="normalized edit location", ylabel="speedup")
+    except FileNotFoundError:
+        print(f"({fig4} not found — run `cargo bench --bench fig4_online`)")
+
+
+if __name__ == "__main__":
+    main()

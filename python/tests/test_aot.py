@@ -1,0 +1,41 @@
+"""AOT build smoke tests (vqt_tiny preset: fast to lower)."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import binfmt
+from compile.aot import build, lower_forward, to_hlo_text
+from compile.model import init_params, vqt_tiny
+
+
+def test_lower_forward_emits_hlo_text():
+    cfg = vqt_tiny()
+    params = init_params(cfg, 1)
+    text = lower_forward(cfg, params, 16, use_pallas=True)
+    assert "HloModule" in text
+    assert "f32[2]" in text  # logits output
+    # Params are arguments, not constants: count parameter declarations.
+    assert text.count("parameter(") >= len(params) + 3
+
+
+def test_build_tiny_bundle(tmp_path):
+    out = str(tmp_path / "artifacts")
+    build(out, "vqt_tiny", [16, 32], seed=3, weights_path=None)
+    with open(os.path.join(out, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["buckets"] == [16, 32]
+    assert "model_fwd_n16" in manifest["artifacts"]
+    assert "vq_assign_n32" in manifest["artifacts"]
+    weights = binfmt.read_tensors(os.path.join(out, "weights_serve.bin"))
+    assert manifest["param_order"] == sorted(weights)
+    for art in manifest["artifacts"].values():
+        path = os.path.join(out, art)
+        assert os.path.getsize(path) > 100
+        with open(path) as f:
+            assert "HloModule" in f.read(200)
+    # Config block mirrors the preset.
+    assert manifest["config"]["d_model"] == vqt_tiny().d_model
+    assert manifest["config"]["attention"] == "gelu"

@@ -1,0 +1,79 @@
+"""Substrate tests: VQTB container round-trip and the synthetic corpus."""
+
+import numpy as np
+import pytest
+
+from compile import binfmt
+from compile.datagen import (
+    DataConfig,
+    NEG_LEXICON,
+    PAD,
+    POS_LEXICON,
+    make_dataset,
+    sample_positions,
+)
+
+
+def test_binfmt_roundtrip(tmp_path):
+    path = str(tmp_path / "t.bin")
+    tensors = {
+        "a": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "b.ids": np.array([-1, 5, 9], dtype=np.int32),
+        "scalarish": np.array([3.5], dtype=np.float32),
+    }
+    binfmt.write_tensors(path, tensors)
+    back = binfmt.read_tensors(path)
+    assert set(back) == set(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], tensors[k])
+        assert back[k].dtype == tensors[k].dtype
+
+
+def test_binfmt_rejects_garbage(tmp_path):
+    path = str(tmp_path / "bad.bin")
+    with open(path, "wb") as f:
+        f.write(b"NOPEnope")
+    with pytest.raises(ValueError):
+        binfmt.read_tensors(path)
+
+
+def test_dataset_shapes_and_labels():
+    cfg = DataConfig(min_len=20, max_len=40)
+    toks, lens, labels = make_dataset(cfg, 64, seed=0)
+    assert toks.shape == (64, 40)
+    assert ((lens >= 20) & (lens <= 40)).all()
+    assert set(np.unique(labels)) <= {0, 1}
+    # Pad region is PAD.
+    for i in range(64):
+        assert (toks[i, lens[i] :] == PAD).all()
+        assert (toks[i, : lens[i]] != PAD).all()
+
+
+def test_dataset_is_learnable_by_lexicon_count():
+    """The Bayes-ish rule (count lexicon hits) must beat chance easily —
+    otherwise Table 1 training could not separate model variants."""
+    cfg = DataConfig()
+    toks, lens, labels = make_dataset(cfg, 512, seed=1)
+    correct = 0
+    for i in range(512):
+        doc = toks[i, : lens[i]]
+        p = np.isin(doc, POS_LEXICON).sum()
+        n = np.isin(doc, NEG_LEXICON).sum()
+        correct += int((1 if p >= n else 0) == labels[i])
+    assert correct / 512 > 0.85
+
+
+def test_dataset_deterministic():
+    cfg = DataConfig()
+    a = make_dataset(cfg, 32, seed=9)
+    b = make_dataset(cfg, 32, seed=9)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_sample_positions_sorted_in_pool():
+    rng = np.random.default_rng(0)
+    pos = sample_positions(rng, 8, 32, 256)
+    assert pos.shape == (8, 32)
+    assert (np.diff(pos, axis=1) > 0).all()
+    assert pos.min() >= 0 and pos.max() < 256

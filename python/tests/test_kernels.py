@@ -1,0 +1,148 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp references, swept over
+shapes/dtypes with hypothesis. This is the CORE kernel correctness signal."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attn_gelu import attn_gelu, vmem_footprint_bytes as attn_vmem
+from compile.kernels.vq_assign import vq_assign, vmem_footprint_bytes as vq_vmem
+
+
+def rand(rng, *shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# VQ assignment kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_tiles=st.integers(1, 4),
+    block=st.sampled_from([8, 16, 32]),
+    heads=st.sampled_from([1, 2, 4]),
+    q=st.sampled_from([8, 16, 64]),
+    chunk=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**16),
+)
+def test_vq_assign_matches_ref(n_tiles, block, heads, q, chunk, seed):
+    rng = np.random.default_rng(seed)
+    n, d = n_tiles * block, heads * chunk
+    x = rand(rng, n, d)
+    books = rand(rng, heads, q, chunk)
+    bias = np.asarray(ref.vq_bias(books))
+    got = vq_assign(jnp.array(x), jnp.array(books), jnp.array(bias), block_n=block)
+    want = ref.vq_assign_ref(jnp.array(x), jnp.array(books), jnp.array(bias))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_vq_assign_is_euclidean_nearest():
+    rng = np.random.default_rng(0)
+    heads, q, chunk, n = 2, 16, 8, 32
+    x = rand(rng, n, heads * chunk)
+    books = rand(rng, heads, q, chunk)
+    bias = np.asarray(ref.vq_bias(books))
+    codes = np.asarray(vq_assign(jnp.array(x), jnp.array(books), jnp.array(bias), block_n=32))
+    for i in range(n):
+        for h in range(heads):
+            xh = x[i, h * chunk : (h + 1) * chunk]
+            dists = ((books[h] - xh) ** 2).sum(-1)
+            assert codes[i, h] == int(np.argmin(dists))
+
+
+def test_vq_assign_idempotent_on_codewords():
+    rng = np.random.default_rng(1)
+    heads, q, chunk = 2, 16, 8
+    books = rand(rng, heads, q, chunk)
+    bias = np.asarray(ref.vq_bias(books))
+    # Every concatenated pair of codewords must map to itself.
+    idx = rng.integers(0, q, size=(16, heads)).astype(np.int32)
+    x = np.asarray(ref.vq_decode_ref(jnp.array(idx), jnp.array(books)))
+    codes = np.asarray(vq_assign(jnp.array(x), jnp.array(books), jnp.array(bias), block_n=16))
+    np.testing.assert_array_equal(codes, idx)
+
+
+# ---------------------------------------------------------------------------
+# GELU attention kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_tiles=st.integers(1, 4),
+    block=st.sampled_from([8, 16]),
+    n_heads=st.sampled_from([1, 2, 4]),
+    dh=st.sampled_from([4, 8]),
+    frac=st.floats(0.3, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_attn_gelu_matches_ref(n_tiles, block, n_heads, dh, frac, seed):
+    rng = np.random.default_rng(seed)
+    n, d = n_tiles * block, n_heads * dh
+    q, k, v = rand(rng, n, d), rand(rng, n, d), rand(rng, n, d)
+    mask = (np.arange(n) < max(1, int(frac * n))).astype(np.float32)
+    scale = 1.0 / np.sqrt(64.0)
+    got = attn_gelu(
+        jnp.array(q), jnp.array(k), jnp.array(v), jnp.array(mask),
+        n_heads, float(scale), block_q=block, block_k=block,
+    )
+    want = ref.attn_gelu_ref(
+        jnp.array(q), jnp.array(k), jnp.array(v), n_heads, jnp.array(mask), float(scale)
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+def test_attn_gelu_causality():
+    """Row i must not depend on keys/values after i."""
+    rng = np.random.default_rng(3)
+    n, d, nh = 32, 16, 2
+    q, k, v = rand(rng, n, d), rand(rng, n, d), rand(rng, n, d)
+    mask = np.ones(n, np.float32)
+    base = np.asarray(attn_gelu(jnp.array(q), jnp.array(k), jnp.array(v), jnp.array(mask), nh, 1.0, block_q=16, block_k=16))
+    k2, v2 = k.copy(), v.copy()
+    k2[20] += 5.0
+    v2[20] -= 3.0
+    pert = np.asarray(attn_gelu(jnp.array(q), jnp.array(k2), jnp.array(v2), jnp.array(mask), nh, 1.0, block_q=16, block_k=16))
+    np.testing.assert_array_equal(base[:20], pert[:20])
+    assert np.abs(base[20:] - pert[20:]).max() > 0
+
+
+def test_attn_gelu_mask_zeroes_columns():
+    rng = np.random.default_rng(4)
+    n, d, nh = 16, 8, 2
+    q, k, v = rand(rng, n, d), rand(rng, n, d), rand(rng, n, d)
+    full = np.ones(n, np.float32)
+    half = (np.arange(n) < 8).astype(np.float32)
+    a = np.asarray(attn_gelu(jnp.array(q), jnp.array(k), jnp.array(v), jnp.array(half), nh, 1.0, block_q=8, block_k=8))
+    # Equivalent to shrinking K/V to the first 8 rows.
+    b_full = np.asarray(ref.attn_gelu_ref(jnp.array(q), jnp.array(k), jnp.array(v), nh, jnp.array(half), 1.0))
+    np.testing.assert_allclose(a, b_full, atol=1e-5)
+    c = np.asarray(attn_gelu(jnp.array(q), jnp.array(k), jnp.array(v), jnp.array(full), nh, 1.0, block_q=8, block_k=8))
+    assert np.abs(a[8:] - c[8:]).max() > 0
+
+
+# ---------------------------------------------------------------------------
+# VMEM estimators (§Perf structural profiling)
+# ---------------------------------------------------------------------------
+
+
+def test_vmem_footprints_monotone_and_sane():
+    assert vq_vmem(128, 128, 2, 64) < vq_vmem(256, 128, 2, 64)
+    # Mini-scale tiles fit a 16 MiB TPU VMEM comfortably.
+    assert vq_vmem(128, 128, 2, 64) < 16 * 1024 * 1024
+    assert attn_vmem(128, 128, 128) < 16 * 1024 * 1024
+    assert attn_vmem(128, 256, 128) > attn_vmem(128, 128, 128)
+
+
+def test_gelu_matches_rust_constants():
+    # Anchor values asserted on the Rust side too (tensor::ops tests).
+    x = jnp.array([0.0, 1.0, 10.0, -10.0])
+    y = np.asarray(ref.gelu(x))
+    assert abs(y[0]) < 1e-7
+    assert abs(y[1] - 0.841192) < 1e-4
+    assert abs(y[2] - 10.0) < 1e-4
+    assert abs(y[3]) < 1e-4

@@ -1,0 +1,82 @@
+//! **Figure 3** — relative reduction in arithmetic operations for OFFLINE
+//! processing of two complete revisions, vs the fraction of modified
+//! tokens. The paper's claim: speedup is inversely proportional to the
+//! fraction modified; median 4.7× at OPT-125M scale.
+//!
+//! Emits the scatter series as CSV (`fig3_offline.csv`) plus summary
+//! statistics and a correlation check.
+
+use vqt::bench::*;
+use vqt::config::ModelConfig;
+use vqt::edits::trace::TraceConfig;
+use vqt::incremental::EngineOptions;
+
+fn main() {
+    let n_pairs = bench_pairs();
+    let tcfg = TraceConfig::mini();
+    let pairs = gen_pairs(&tcfg, n_pairs, 3);
+    let cfg = ModelConfig::vqt_mini();
+    let (w, trained) = serving_weights(&cfg, "weights_trained_serve.bin");
+    println!(
+        "# Fig 3 — offline speedup vs fraction modified ({n_pairs} pairs, {})",
+        if trained { "trained weights" } else { "random-init weights" }
+    );
+
+    let opts = EngineOptions::default();
+    let mut series: Vec<(f64, f64)> = Vec::new();
+    for (i, (a, b)) in pairs.iter().enumerate() {
+        let m = measure_offline_pair(&w, opts, a, b);
+        series.push((m.x, m.speedup()));
+        if (i + 1) % 25 == 0 {
+            eprintln!("  {}/{n_pairs}", i + 1);
+        }
+    }
+    write_csv(
+        "fig3_offline.csv",
+        "fraction_modified,speedup",
+        &series,
+    );
+
+    let speedups: Vec<f64> = series.iter().map(|p| p.1).collect();
+    let med = vqt::util::median(&speedups);
+    println!("median speedup: {med:.1}×   (paper: 4.7× at OPT-125M scale)");
+
+    // The paper's claim: speedup ∝ 1/fraction. Verify the rank correlation
+    // between log(1/x) and log(speedup) is strongly positive.
+    let logx: Vec<f64> = series.iter().map(|p| -(p.0.max(1e-4)).ln()).collect();
+    let logy: Vec<f64> = series.iter().map(|p| p.1.max(1e-9).ln()).collect();
+    let corr = pearson(&logx, &logy);
+    println!("log-log correlation(1/fraction, speedup) = {corr:.3} (expect ≫ 0)");
+
+    // Bucketed summary so the trend is visible without plotting.
+    let mut rows = Vec::new();
+    for (lo, hi) in [(0.0, 0.01), (0.01, 0.03), (0.03, 0.1), (0.1, 0.3), (0.3, 1.0)] {
+        let bucket: Vec<f64> = series
+            .iter()
+            .filter(|p| p.0 >= lo && p.0 < hi)
+            .map(|p| p.1)
+            .collect();
+        if !bucket.is_empty() {
+            rows.push(vec![
+                format!("{lo:.2}–{hi:.2}"),
+                format!("{}", bucket.len()),
+                format!("{:.1}×", vqt::util::median(&bucket)),
+            ]);
+        }
+    }
+    print_table(
+        "Fig 3 (bucketed): speedup by fraction modified",
+        &["fraction", "pairs", "median speedup"],
+        &rows,
+    );
+}
+
+fn pearson(x: &[f64], y: &[f64]) -> f64 {
+    let n = x.len() as f64;
+    let mx = x.iter().sum::<f64>() / n;
+    let my = y.iter().sum::<f64>() / n;
+    let cov: f64 = x.iter().zip(y).map(|(a, b)| (a - mx) * (b - my)).sum();
+    let vx: f64 = x.iter().map(|a| (a - mx) * (a - mx)).sum();
+    let vy: f64 = y.iter().map(|b| (b - my) * (b - my)).sum();
+    cov / (vx.sqrt() * vy.sqrt()).max(1e-12)
+}

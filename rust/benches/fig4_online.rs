@@ -1,0 +1,71 @@
+//! **Figure 4** — relative reduction in arithmetic operations for ONLINE
+//! processing of atomic edits (log scale), vs the edit's normalized
+//! location. The paper: median 12.1×, with later edits cheaper (causal
+//! attention ⇒ fewer affected rows).
+//!
+//! Emits the scatter series as CSV (`fig4_online.csv`) plus summary stats.
+
+use vqt::bench::*;
+use vqt::config::ModelConfig;
+use vqt::edits::trace::TraceConfig;
+use vqt::incremental::EngineOptions;
+use vqt::util::Rng;
+
+fn main() {
+    let n_pairs = bench_pairs();
+    let tcfg = TraceConfig::mini();
+    let pairs = gen_pairs(&tcfg, n_pairs, 4);
+    let cfg = ModelConfig::vqt_mini();
+    let (w, trained) = serving_weights(&cfg, "weights_trained_serve.bin");
+    println!(
+        "# Fig 4 — online atomic-edit speedup vs normalized location ({n_pairs} pairs, {})",
+        if trained { "trained weights" } else { "random-init weights" }
+    );
+
+    let opts = EngineOptions::default();
+    let mut rng = Rng::new(44);
+    let mut series: Vec<(f64, f64)> = Vec::new();
+    for (i, (a, b)) in pairs.iter().enumerate() {
+        if let Some(m) = measure_atomic(&w, opts, a, b, None, &mut rng) {
+            series.push((m.x, m.speedup()));
+        }
+        if (i + 1) % 25 == 0 {
+            eprintln!("  {}/{n_pairs}", i + 1);
+        }
+    }
+    write_csv("fig4_online.csv", "normalized_location,speedup", &series);
+
+    let speedups: Vec<f64> = series.iter().map(|p| p.1).collect();
+    println!(
+        "median speedup: {:.1}×   (paper: 12.1× at OPT-125M scale)",
+        vqt::util::median(&speedups)
+    );
+
+    // Later edits must be cheaper: median speedup in the last third vs the
+    // first third of the document.
+    let early: Vec<f64> = series.iter().filter(|p| p.0 < 0.33).map(|p| p.1).collect();
+    let late: Vec<f64> = series.iter().filter(|p| p.0 > 0.67).map(|p| p.1).collect();
+    let mut rows = Vec::new();
+    for (label, bucket) in [("0.00–0.33", &early), ("0.67–1.00", &late)] {
+        if !bucket.is_empty() {
+            rows.push(vec![
+                label.to_string(),
+                format!("{}", bucket.len()),
+                format!("{:.1}×", vqt::util::median(bucket)),
+            ]);
+        }
+    }
+    print_table(
+        "Fig 4 (bucketed): speedup by edit location",
+        &["location", "edits", "median speedup"],
+        &rows,
+    );
+    if !(early.is_empty() || late.is_empty()) {
+        let e = vqt::util::median(&early);
+        let l = vqt::util::median(&late);
+        println!(
+            "location correlation: late/early = {:.2} (expect > 1 — later edits cheaper)",
+            l / e
+        );
+    }
+}

@@ -1,0 +1,144 @@
+//! Micro-benchmarks over the serving hot paths (wallclock — the §Perf
+//! layer-3 profile targets). Reports per-edit latency by document length
+//! and edit position, engine rebuild cost, the AOT dense path, and
+//! sustained online throughput.
+
+use std::sync::Arc;
+use vqt::bench::{print_table, serving_weights, time_it};
+use vqt::config::ModelConfig;
+use vqt::edits::Edit;
+use vqt::incremental::{EngineOptions, IncrementalEngine};
+use vqt::runtime::ArtifactRuntime;
+use vqt::util::Rng;
+
+fn main() {
+    let cfg = ModelConfig::vqt_mini();
+    let (w, trained) = serving_weights(&cfg, "weights_trained_serve.bin");
+    println!(
+        "# micro_hotpath ({}) — vqt_mini d={} L={} seq≤{}",
+        if trained { "trained" } else { "random-init" },
+        cfg.d_model,
+        cfg.n_layers,
+        cfg.max_seq
+    );
+    let mut rng = Rng::new(1);
+
+    // --- per-edit latency by length × position --------------------------
+    let mut rows = Vec::new();
+    for &n in &[64usize, 128, 256, 512] {
+        let tokens: Vec<u32> = (0..n).map(|_| rng.below(256) as u32).collect();
+        for (pos_label, frac) in [("early(10%)", 0.1), ("mid(50%)", 0.5), ("late(90%)", 0.9)] {
+            let at = ((n as f64 * frac) as usize).min(n - 1);
+            let mut eng = IncrementalEngine::new(w.clone(), &tokens, EngineOptions::default());
+            let mut tok = 0u32;
+            let mut flops = 0u64;
+            let t = time_it(2, 12, || {
+                tok = (tok + 1) % 255;
+                flops = eng.apply_edit(Edit::Replace { at, tok }).flops;
+            });
+            rows.push(vec![
+                format!("replace n={n} {pos_label}"),
+                format!("{:.2}", t.p50.as_secs_f64() * 1e3),
+                format!("{:.2}", t.mean.as_secs_f64() * 1e3),
+                format!("{:.1}M", flops as f64 / 1e6),
+            ]);
+        }
+    }
+    // Insert/delete cycle at mid-document.
+    {
+        let n = 256;
+        let tokens: Vec<u32> = (0..n).map(|_| rng.below(256) as u32).collect();
+        let mut eng = IncrementalEngine::new(w.clone(), &tokens, EngineOptions::default());
+        let t = time_it(2, 12, || {
+            eng.apply_edit(Edit::Insert { at: 128, tok: 7 });
+            eng.apply_edit(Edit::Delete { at: 128 });
+        });
+        rows.push(vec![
+            "insert+delete n=256 mid".into(),
+            format!("{:.2}", t.p50.as_secs_f64() * 1e3),
+            format!("{:.2}", t.mean.as_secs_f64() * 1e3),
+            "-".into(),
+        ]);
+    }
+    // Full rebuild (defrag worst case).
+    for &n in &[128usize, 512] {
+        let tokens: Vec<u32> = (0..n).map(|_| rng.below(256) as u32).collect();
+        let mut eng = IncrementalEngine::new(w.clone(), &tokens, EngineOptions::default());
+        let t = time_it(1, 5, || eng.rebuild());
+        rows.push(vec![
+            format!("full rebuild n={n}"),
+            format!("{:.2}", t.p50.as_secs_f64() * 1e3),
+            format!("{:.2}", t.mean.as_secs_f64() * 1e3),
+            "-".into(),
+        ]);
+    }
+    print_table(
+        "L3 engine latencies",
+        &["op", "p50 (ms)", "mean (ms)", "flops"],
+        &rows,
+    );
+
+    // --- AOT dense path (L2 through PJRT) --------------------------------
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        let rt = ArtifactRuntime::open(&dir).expect("artifact runtime");
+        rt.warmup().expect("warmup");
+        let mut rows = Vec::new();
+        for &n in &[32usize, 128, 512] {
+            let tokens: Vec<u32> = (0..n).map(|_| rng.below(256) as u32).collect();
+            let pool = rt.manifest.config.pos_pool;
+            let pos: Vec<u32> = (0..n).map(|i| (((2 * i + 1) * pool) / (2 * n)) as u32).collect();
+            let t = time_it(2, 10, || {
+                rt.dense_logits(&tokens, &pos).expect("dense");
+            });
+            rows.push(vec![
+                format!("AOT dense fwd n={n}"),
+                format!("{:.2}", t.p50.as_secs_f64() * 1e3),
+                format!("{:.2}", t.mean.as_secs_f64() * 1e3),
+            ]);
+        }
+        print_table("L2 AOT path (PJRT CPU)", &["op", "p50 (ms)", "mean (ms)"], &rows);
+    } else {
+        println!("(no artifacts/ — run `make artifacts` for the L2 rows)");
+    }
+
+    // --- sustained online throughput --------------------------------------
+    let n = 384;
+    let tokens: Vec<u32> = (0..n).map(|_| rng.below(256) as u32).collect();
+    let mut eng = IncrementalEngine::new(w.clone(), &tokens, EngineOptions::default());
+    let edits = 300;
+    let t0 = std::time::Instant::now();
+    for i in 0..edits {
+        let at = rng.below(eng.len());
+        match i % 3 {
+            0 => {
+                eng.apply_edit(Edit::Replace {
+                    at,
+                    tok: rng.below(256) as u32,
+                });
+            }
+            1 if eng.len() < cfg.max_seq => {
+                eng.apply_edit(Edit::Insert {
+                    at,
+                    tok: rng.below(256) as u32,
+                });
+            }
+            _ if eng.len() > 64 => {
+                eng.apply_edit(Edit::Delete { at });
+            }
+            _ => {}
+        }
+    }
+    let dt = t0.elapsed();
+    println!(
+        "\nsustained online editing: {edits} mixed edits on n≈{n} in {:.2}s → {:.0} edits/s \
+         ({} defrags, speedup ledger {:.1}×)",
+        dt.as_secs_f64(),
+        edits as f64 / dt.as_secs_f64(),
+        eng.stats.defrags,
+        vqt::flops::dense_forward_flops(&cfg, n) as f64 * edits as f64
+            / eng.ledger.total() as f64
+    );
+
+    let _ = Arc::strong_count(&w);
+}

@@ -1,0 +1,269 @@
+//! Shared benchmark harness: wall-clock timing, table/CSV reporting, and
+//! the workload runners the paper-figure benches build on. (criterion is
+//! not in the offline crate set; this module provides the equivalents the
+//! repo needs, with deterministic workloads.)
+
+use crate::config::ModelConfig;
+use crate::edits::trace::{
+    modified_fraction, sample_atomic, RevisionTrace, TraceConfig,
+};
+use crate::edits::{diff_tokens, Edit};
+use crate::flops::dense_forward_flops;
+use crate::incremental::{EngineOptions, IncrementalEngine};
+use crate::model::ModelWeights;
+use crate::util::{median, Rng};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Timing statistics over repeated runs.
+#[derive(Clone, Debug)]
+pub struct Timing {
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+/// Time `f` with warmup; reports robust statistics.
+pub fn time_it(warmup: usize, iters: usize, mut f: impl FnMut()) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let sum: Duration = samples.iter().sum();
+    Timing {
+        iters,
+        mean: sum / iters as u32,
+        p50: samples[iters / 2],
+        min: samples[0],
+        max: samples[iters - 1],
+    }
+}
+
+/// Markdown-ish table printer (fixed-width columns).
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n## {title}\n");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let line = |cells: Vec<String>| {
+        let mut s = String::from("|");
+        for (i, c) in cells.iter().enumerate() {
+            s += &format!(" {:<w$} |", c, w = widths[i]);
+        }
+        println!("{s}");
+    };
+    line(header.iter().map(|s| s.to_string()).collect());
+    println!(
+        "|{}|",
+        widths
+            .iter()
+            .map(|w| "-".repeat(w + 2))
+            .collect::<Vec<_>>()
+            .join("|")
+    );
+    for row in rows {
+        line(row.clone());
+    }
+}
+
+/// Environment-tunable workload size: `VQT_BENCH_PAIRS` (default mirrors
+/// the paper's 500, scaled down to keep `cargo bench` under control; set
+/// to 500 for the full protocol).
+pub fn bench_pairs() -> usize {
+    std::env::var("VQT_BENCH_PAIRS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(120)
+}
+
+/// The serving-model weights benches run against: the trained checkpoint
+/// from `make train` when present, deterministic random init otherwise
+/// (clearly labelled in output via the returned flag).
+pub fn serving_weights(cfg: &ModelConfig, trained_name: &str) -> (Arc<ModelWeights>, bool) {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts")
+        .join(trained_name);
+    if path.exists() {
+        if let Ok(w) = ModelWeights::load(&path, cfg) {
+            return (Arc::new(w), true);
+        }
+    }
+    (Arc::new(ModelWeights::random(cfg, 7)), false)
+}
+
+/// A revision-pair workload: consecutive revisions from synthetic traces
+/// in the paper's length window protocol.
+pub fn gen_pairs(cfg: &TraceConfig, n_pairs: usize, seed: u64) -> Vec<(Vec<u32>, Vec<u32>)> {
+    let mut rng = Rng::new(seed);
+    let mut pairs = Vec::with_capacity(n_pairs);
+    // Several documents, several revisions each (mirrors "articles with a
+    // long history of revisions").
+    while pairs.len() < n_pairs {
+        let revs = (n_pairs - pairs.len()).min(11).max(2);
+        let trace = RevisionTrace::generate(cfg, revs, &mut rng);
+        for (a, b) in trace.pairs() {
+            if pairs.len() < n_pairs {
+                pairs.push((a.clone(), b.clone()));
+            }
+        }
+    }
+    pairs
+}
+
+/// Result of one incremental measurement.
+#[derive(Clone, Debug)]
+pub struct Measured {
+    /// Ops the incremental engine spent.
+    pub incremental_flops: u64,
+    /// Ops a dense from-scratch pass over the result would cost.
+    pub dense_flops: u64,
+    /// Fig-3 x-axis (offline) or normalized location (online).
+    pub x: f64,
+    pub defragged: bool,
+}
+
+impl Measured {
+    pub fn speedup(&self) -> f64 {
+        self.dense_flops as f64 / self.incremental_flops.max(1) as f64
+    }
+}
+
+/// Offline protocol (Table 2 "Entire Revision", Fig. 3): the engine holds
+/// revision A, a whole revision B arrives, the diff is applied
+/// incrementally. Speedup = dense(B) / incremental ops.
+pub fn measure_offline_pair(
+    w: &Arc<ModelWeights>,
+    opts: EngineOptions,
+    a: &[u32],
+    b: &[u32],
+) -> Measured {
+    let mut eng = IncrementalEngine::new(w.clone(), a, opts);
+    eng.ledger = Default::default();
+    let script = diff_tokens(a, b);
+    let rep = eng.apply_revision(&script);
+    Measured {
+        incremental_flops: rep.flops,
+        dense_flops: dense_forward_flops(&w.cfg, b.len()),
+        x: modified_fraction(a, b),
+        defragged: rep.defragged,
+    }
+}
+
+/// Online protocol (Table 2 "Atomic", Fig. 4): sample one atomic edit from
+/// the pair per the paper (§4), apply it to a warm engine.
+pub fn measure_atomic(
+    w: &Arc<ModelWeights>,
+    opts: EngineOptions,
+    a: &[u32],
+    b: &[u32],
+    window: Option<(f64, f64)>,
+    rng: &mut Rng,
+) -> Option<Measured> {
+    let sample = sample_atomic(a, b, window, rng)?;
+    if sample.base.len() >= w.cfg.max_seq {
+        return None;
+    }
+    let mut eng = IncrementalEngine::new(w.clone(), &sample.base, opts);
+    eng.ledger = Default::default();
+    let rep = eng.apply_edit(sample.edit);
+    Some(Measured {
+        incremental_flops: rep.flops,
+        dense_flops: dense_forward_flops(&w.cfg, eng.len()),
+        x: sample.normalized_pos,
+        defragged: rep.defragged,
+    })
+}
+
+/// Baseline speedup of a from-scratch model vs OPT-mini from-scratch
+/// (DistilOPT's "2×" row in Table 2 = depth ratio, computed honestly from
+/// the FLOP formulas).
+pub fn baseline_speedup(full: &ModelConfig, small: &ModelConfig, n: usize) -> f64 {
+    dense_forward_flops(full, n) as f64 / dense_forward_flops(small, n) as f64
+}
+
+/// Median speedup across measurements.
+pub fn median_speedup(ms: &[Measured]) -> f64 {
+    median(&ms.iter().map(|m| m.speedup()).collect::<Vec<_>>())
+}
+
+/// Simple CSV dump for figure series.
+pub fn write_csv(path: &str, header: &str, rows: &[(f64, f64)]) {
+    use std::io::Write;
+    let mut f = std::fs::File::create(path).expect("create csv");
+    writeln!(f, "{header}").unwrap();
+    for (x, y) in rows {
+        writeln!(f, "{x},{y}").unwrap();
+    }
+    println!("(wrote {path}: {} points)", rows.len());
+}
+
+/// Edit-based variant of `Edit` application to a token vec, for workload
+/// bookkeeping in benches.
+pub fn apply(tokens: &[u32], e: Edit) -> Vec<u32> {
+    crate::edits::apply_edits(tokens, &[e])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gen_pairs_count_and_window() {
+        let cfg = TraceConfig::tiny();
+        let pairs = gen_pairs(&cfg, 25, 1);
+        assert_eq!(pairs.len(), 25);
+        for (a, b) in &pairs {
+            assert!(a.len() >= cfg.min_len && b.len() <= cfg.max_len);
+        }
+    }
+
+    #[test]
+    fn offline_measurement_speedup_positive() {
+        let cfg = ModelConfig::vqt_tiny();
+        let w = Arc::new(ModelWeights::random(&cfg, 3));
+        let tcfg = TraceConfig::tiny();
+        let pairs = gen_pairs(&tcfg, 3, 2);
+        for (a, b) in &pairs {
+            let m = measure_offline_pair(&w, EngineOptions::default(), a, b);
+            assert!(m.speedup() > 0.5, "speedup {}", m.speedup());
+            assert!(m.x > 0.0);
+        }
+    }
+
+    #[test]
+    fn atomic_measurement() {
+        let cfg = ModelConfig::vqt_tiny();
+        let w = Arc::new(ModelWeights::random(&cfg, 4));
+        let tcfg = TraceConfig::tiny();
+        let pairs = gen_pairs(&tcfg, 6, 5);
+        let mut rng = Rng::new(6);
+        let mut got = 0;
+        for (a, b) in &pairs {
+            if let Some(m) = measure_atomic(&w, EngineOptions::default(), a, b, None, &mut rng) {
+                assert!(m.speedup() > 1.0, "atomic speedup {}", m.speedup());
+                got += 1;
+            }
+        }
+        assert!(got >= 4);
+    }
+
+    #[test]
+    fn timing_smoke() {
+        let t = time_it(1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(t.iters, 5);
+        assert!(t.min <= t.p50 && t.p50 <= t.max);
+    }
+}

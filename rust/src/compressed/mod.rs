@@ -1,0 +1,355 @@
+//! The compressed vector-quantized activation format (paper §3.1) and the
+//! efficient operations defined over it (§3.2, App. A.3).
+//!
+//! A batch of activations `X ∈ R^{b×n×d}` whose vectors are quantized can be
+//! stored as a *codebook* `C ∈ R^{q×d}` of the unique vectors plus an index
+//! matrix `P ∈ {1..q}^{b×n}`. When the batch holds near-identical revisions
+//! of one document, `P`'s columns agree almost everywhere, so `P` itself is
+//! stored as a per-location *base* index plus sparse per-member overrides —
+//! `O((n+b))` indices and `O((n+b)·d)` floats instead of `O(b·n·d)`.
+//!
+//! Operations:
+//! - per-location maps `Y = F(X)` touch only the codebook: `(P, F(C))`;
+//! - binary element-wise ops resolve the *unique pairs* of operand indices
+//!   (App. A.3), growing the codebook additively for aligned operands;
+//! - materialization is only for tests/debugging.
+
+use crate::flops::{Cat, FlopLedger};
+use std::collections::HashMap;
+
+/// Dense-id interner for arbitrary u64 keys (hash-consing). The engine uses
+/// it to give every distinct quantized vector / residual-stream state a
+/// compact identity.
+#[derive(Clone, Debug, Default)]
+pub struct Interner {
+    map: HashMap<(u64, u64), u32>,
+}
+
+impl Interner {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Intern a (namespace, key) pair into a dense id.
+    pub fn intern(&mut self, ns: u64, key: u64) -> u32 {
+        let next = self.map.len() as u32;
+        *self.map.entry((ns, key)).or_insert(next)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+/// The compressed batch representation of one layer's activations.
+#[derive(Clone, Debug)]
+pub struct CompressedBatch {
+    /// Sequence length (aligned across the batch; see §3.3 offline padding).
+    pub n: usize,
+    /// Batch size.
+    pub b: usize,
+    /// Vector width.
+    pub d: usize,
+    /// Codebook of unique vectors, row per index.
+    pub codebook: Vec<Vec<f32>>,
+    /// Base index per sequence location (the majority value of P[:, j]).
+    pub base: Vec<u32>,
+    /// Per member: sparse overrides (location, codebook index), sorted by
+    /// location.
+    pub overrides: Vec<Vec<(u32, u32)>>,
+}
+
+impl CompressedBatch {
+    /// Build from a dense batch (`rows[member][loc]` of d-vectors) by
+    /// hashing exact vector bit-patterns. Used by tests and by the batch
+    /// ingestion path after quantization guarantees exact repeats.
+    pub fn from_dense(batch: &[Vec<Vec<f32>>]) -> CompressedBatch {
+        assert!(!batch.is_empty());
+        let b = batch.len();
+        let n = batch[0].len();
+        let d = if n > 0 { batch[0][0].len() } else { 0 };
+        let mut codebook: Vec<Vec<f32>> = Vec::new();
+        let mut lut: HashMap<Vec<u32>, u32> = HashMap::new();
+        let mut p = vec![vec![0u32; n]; b];
+        for (bi, member) in batch.iter().enumerate() {
+            assert_eq!(member.len(), n, "ragged batch");
+            for (j, v) in member.iter().enumerate() {
+                assert_eq!(v.len(), d);
+                let bits: Vec<u32> = v.iter().map(|x| x.to_bits()).collect();
+                let idx = *lut.entry(bits).or_insert_with(|| {
+                    codebook.push(v.clone());
+                    (codebook.len() - 1) as u32
+                });
+                p[bi][j] = idx;
+            }
+        }
+        Self::from_index_matrix(n, b, d, codebook, &p)
+    }
+
+    /// Build from an explicit index matrix, choosing the per-location
+    /// majority as base.
+    pub fn from_index_matrix(
+        n: usize,
+        b: usize,
+        d: usize,
+        codebook: Vec<Vec<f32>>,
+        p: &[Vec<u32>],
+    ) -> CompressedBatch {
+        let mut base = vec![0u32; n];
+        for j in 0..n {
+            let mut counts: HashMap<u32, usize> = HashMap::new();
+            for member in p {
+                *counts.entry(member[j]).or_insert(0) += 1;
+            }
+            base[j] = counts
+                .into_iter()
+                .max_by_key(|&(idx, c)| (c, std::cmp::Reverse(idx)))
+                .map(|(idx, _)| idx)
+                .unwrap_or(0);
+        }
+        let overrides = p
+            .iter()
+            .map(|member| {
+                member
+                    .iter()
+                    .enumerate()
+                    .filter(|&(j, &idx)| idx != base[j])
+                    .map(|(j, &idx)| (j as u32, idx))
+                    .collect()
+            })
+            .collect();
+        CompressedBatch {
+            n,
+            b,
+            d,
+            codebook,
+            base,
+            overrides,
+        }
+    }
+
+    /// Index of member `bi` at location `j`.
+    #[inline]
+    pub fn index_at(&self, bi: usize, j: usize) -> u32 {
+        match self.overrides[bi].binary_search_by_key(&(j as u32), |&(l, _)| l) {
+            Ok(k) => self.overrides[bi][k].1,
+            Err(_) => self.base[j],
+        }
+    }
+
+    /// Materialize one member densely (test/debug only).
+    pub fn materialize(&self, bi: usize) -> Vec<Vec<f32>> {
+        (0..self.n)
+            .map(|j| self.codebook[self.index_at(bi, j) as usize].clone())
+            .collect()
+    }
+
+    /// Total override count (the sparse part of P).
+    pub fn override_count(&self) -> usize {
+        self.overrides.iter().map(|o| o.len()).sum()
+    }
+
+    /// Floats stored by this representation (codebook + indices at one
+    /// float-equivalent each, conservatively).
+    pub fn storage_floats(&self) -> usize {
+        self.codebook.len() * self.d + self.n + 2 * self.override_count()
+    }
+
+    /// Floats a dense representation would store.
+    pub fn dense_floats(&self) -> usize {
+        self.b * self.n * self.d
+    }
+
+    /// Apply a per-location vector map `f` (§3.2): only the codebook is
+    /// touched — `O(q·cost(f))` instead of `O(b·n·cost(f))`. The ledger is
+    /// ticked `per_vector_ops × q`.
+    pub fn map_per_location(
+        &self,
+        mut f: impl FnMut(&[f32]) -> Vec<f32>,
+        per_vector_ops: u64,
+        ledger: &mut FlopLedger,
+    ) -> CompressedBatch {
+        let codebook: Vec<Vec<f32>> = self.codebook.iter().map(|v| f(v)).collect();
+        ledger.add(Cat::Elementwise, per_vector_ops * self.codebook.len() as u64);
+        let d = codebook.first().map(|v| v.len()).unwrap_or(0);
+        CompressedBatch {
+            n: self.n,
+            b: self.b,
+            d,
+            codebook,
+            base: self.base.clone(),
+            overrides: self.overrides.clone(),
+        }
+    }
+
+    /// Binary element-wise op with another compressed batch over the same
+    /// (b, n) geometry (App. A.3): resolves unique index *pairs*, applies
+    /// `f` once per unique pair, and re-bases. Codebook growth is additive
+    /// when the operands are aligned revisions of the same input.
+    pub fn zip_binary(
+        &self,
+        other: &CompressedBatch,
+        mut f: impl FnMut(&[f32], &[f32]) -> Vec<f32>,
+        per_vector_ops: u64,
+        ledger: &mut FlopLedger,
+    ) -> CompressedBatch {
+        assert_eq!((self.n, self.b), (other.n, other.b), "geometry mismatch");
+        let mut pair_lut: HashMap<(u32, u32), u32> = HashMap::new();
+        let mut codebook: Vec<Vec<f32>> = Vec::new();
+        let mut p = vec![vec![0u32; self.n]; self.b];
+        for bi in 0..self.b {
+            for j in 0..self.n {
+                let pair = (self.index_at(bi, j), other.index_at(bi, j));
+                let idx = *pair_lut.entry(pair).or_insert_with(|| {
+                    codebook.push(f(
+                        &self.codebook[pair.0 as usize],
+                        &other.codebook[pair.1 as usize],
+                    ));
+                    (codebook.len() - 1) as u32
+                });
+                p[bi][j] = idx;
+                // Index-pair resolution bookkeeping (cheap, but counted —
+                // the paper's O(B log B) term).
+                ledger.add(Cat::Bookkeeping, 1);
+            }
+        }
+        ledger.add(Cat::Elementwise, per_vector_ops * codebook.len() as u64);
+        Self::from_index_matrix(self.n, self.b, self.d, codebook, &p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Build a batch of `b` members that share a base sequence with `k`
+    /// per-member divergent locations — the revision-batch shape.
+    fn revision_like(b: usize, n: usize, d: usize, k: usize, seed: u64) -> Vec<Vec<Vec<f32>>> {
+        let mut r = Rng::new(seed);
+        // Quantized-like vocabulary of 8 distinct vectors.
+        let vocab: Vec<Vec<f32>> = (0..8)
+            .map(|_| (0..d).map(|_| (r.below(5) as f32) - 2.0).collect())
+            .collect();
+        let base: Vec<usize> = (0..n).map(|_| r.below(vocab.len())).collect();
+        (0..b)
+            .map(|_| {
+                let mut rows: Vec<Vec<f32>> =
+                    base.iter().map(|&i| vocab[i].clone()).collect();
+                for _ in 0..k {
+                    let j = r.below(n);
+                    rows[j] = vocab[r.below(vocab.len())].clone();
+                }
+                rows
+            })
+            .collect()
+    }
+
+    #[test]
+    fn roundtrip_materialization() {
+        let batch = revision_like(4, 20, 6, 3, 1);
+        let c = CompressedBatch::from_dense(&batch);
+        for (bi, member) in batch.iter().enumerate() {
+            assert_eq!(&c.materialize(bi), member);
+        }
+    }
+
+    #[test]
+    fn storage_is_near_linear_not_b_n_d() {
+        // §3.1: storage O((n+b)·d) ≪ O(b·n·d) for revision-like batches.
+        let (b, n, d, k) = (16, 64, 32, 2);
+        let batch = revision_like(b, n, d, k, 2);
+        let c = CompressedBatch::from_dense(&batch);
+        assert!(c.codebook.len() <= 8, "codebook {}", c.codebook.len());
+        assert!(c.override_count() <= b * k);
+        assert!(
+            c.storage_floats() * 4 < c.dense_floats(),
+            "compressed {} vs dense {}",
+            c.storage_floats(),
+            c.dense_floats()
+        );
+    }
+
+    #[test]
+    fn per_location_map_equals_dense_map() {
+        let batch = revision_like(3, 15, 4, 2, 3);
+        let c = CompressedBatch::from_dense(&batch);
+        let mut led = FlopLedger::new();
+        let mapped = c.map_per_location(|v| v.iter().map(|x| x * 2.0 + 1.0).collect(), 8, &mut led);
+        for (bi, member) in batch.iter().enumerate() {
+            let expect: Vec<Vec<f32>> = member
+                .iter()
+                .map(|row| row.iter().map(|x| x * 2.0 + 1.0).collect())
+                .collect();
+            assert_eq!(mapped.materialize(bi), expect);
+        }
+        // Cost ∝ codebook size, not b·n.
+        assert_eq!(led.elementwise, 8 * c.codebook.len() as u64);
+        assert!((c.codebook.len() as usize) < 3 * 15);
+    }
+
+    #[test]
+    fn zip_binary_equals_dense_zip() {
+        let x = revision_like(3, 12, 4, 2, 4);
+        let y = revision_like(3, 12, 4, 2, 5);
+        let cx = CompressedBatch::from_dense(&x);
+        let cy = CompressedBatch::from_dense(&y);
+        let mut led = FlopLedger::new();
+        let z = cx.zip_binary(&cy, |a, b| a.iter().zip(b).map(|(p, q)| p + q).collect(), 4, &mut led);
+        for bi in 0..3 {
+            let expect: Vec<Vec<f32>> = x[bi]
+                .iter()
+                .zip(&y[bi])
+                .map(|(a, b)| a.iter().zip(b).map(|(p, q)| p + q).collect())
+                .collect();
+            assert_eq!(z.materialize(bi), expect);
+        }
+    }
+
+    #[test]
+    fn zip_binary_additive_codebook_growth_when_aligned() {
+        // App. A.3: aligned operands (same divergence pattern) grow the
+        // codebook additively, not multiplicatively.
+        let x = revision_like(8, 40, 4, 1, 6);
+        // y = x scaled → same index structure.
+        let y: Vec<Vec<Vec<f32>>> = x
+            .iter()
+            .map(|m| m.iter().map(|r| r.iter().map(|v| v * 3.0).collect()).collect())
+            .collect();
+        let cx = CompressedBatch::from_dense(&x);
+        let cy = CompressedBatch::from_dense(&y);
+        let mut led = FlopLedger::new();
+        let z = cx.zip_binary(&cy, |a, b| a.iter().zip(b).map(|(p, q)| p + q).collect(), 4, &mut led);
+        assert_eq!(z.codebook.len(), cx.codebook.len(), "aligned ⇒ no growth");
+    }
+
+    #[test]
+    fn interner_dense_and_stable() {
+        let mut i = Interner::new();
+        let a = i.intern(1, 100);
+        let b = i.intern(1, 200);
+        let a2 = i.intern(1, 100);
+        assert_eq!(a, a2);
+        assert_ne!(a, b);
+        assert_eq!(i.len(), 2);
+        // Different namespaces don't collide.
+        let c = i.intern(2, 100);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn index_at_binary_search_paths() {
+        let batch = revision_like(2, 10, 3, 4, 7);
+        let c = CompressedBatch::from_dense(&batch);
+        for bi in 0..2 {
+            for j in 0..10 {
+                let direct = &c.codebook[c.index_at(bi, j) as usize];
+                assert_eq!(direct, &batch[bi][j]);
+            }
+        }
+    }
+}

@@ -1,0 +1,399 @@
+//! Configuration system: model hyper-parameters, serving options, bench
+//! parameters. Everything loads from JSON files (see `configs/` at the repo
+//! root) or from the built-in presets used by tests and benches.
+
+use crate::util::Json;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Which attention normalization the model uses.
+///
+/// The paper replaces softmax with an element-wise non-linearity (GELU) so
+/// that incremental column corrections are exact (§3, eq. 1). `Softmax` is
+/// kept for the OPT-style dense baseline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AttentionKind {
+    Softmax,
+    GeluElementwise,
+}
+
+impl AttentionKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "softmax" => Ok(AttentionKind::Softmax),
+            "gelu" => Ok(AttentionKind::GeluElementwise),
+            other => bail!("unknown attention kind '{other}' (want softmax|gelu)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AttentionKind::Softmax => "softmax",
+            AttentionKind::GeluElementwise => "gelu",
+        }
+    }
+}
+
+/// Transformer + VQ hyper-parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    /// Token vocabulary (byte-level: 256 + PAD).
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    /// Attention heads.
+    pub n_heads: usize,
+    pub d_ff: usize,
+    /// Maximum document length in tokens.
+    pub max_seq: usize,
+    /// Positional-embedding pool size (§3.3): `gap_factor × max_seq`.
+    pub pos_pool: usize,
+    /// Multi-head VQ heads (0 disables VQ ⇒ plain baseline model).
+    pub vq_heads: usize,
+    /// Codes per VQ head (paper: 64).
+    pub vq_codes: usize,
+    pub attention: AttentionKind,
+    /// Classifier classes (sentiment: 2).
+    pub n_classes: usize,
+    pub ln_eps: f32,
+}
+
+impl ModelConfig {
+    /// The VQT-mini preset — the trained/served model (substitute for
+    /// VQ-OPT-125M at laptop scale; see DESIGN.md §1).
+    pub fn vqt_mini() -> ModelConfig {
+        ModelConfig {
+            vocab_size: 257, // 256 bytes + PAD
+            d_model: 128,
+            n_layers: 4,
+            n_heads: 4,
+            d_ff: 512,
+            max_seq: 512,
+            pos_pool: 512 * 8,
+            vq_heads: 2,
+            vq_codes: 64,
+            attention: AttentionKind::GeluElementwise,
+            n_classes: 2,
+            ln_eps: 1e-5,
+        }
+    }
+
+    /// Tiny preset for fast unit/property tests.
+    pub fn vqt_tiny() -> ModelConfig {
+        ModelConfig {
+            vocab_size: 64,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 64,
+            max_seq: 64,
+            pos_pool: 64 * 8,
+            vq_heads: 2,
+            vq_codes: 16,
+            attention: AttentionKind::GeluElementwise,
+            n_classes: 2,
+            ln_eps: 1e-5,
+        }
+    }
+
+    /// OPT-125M dimensions, used for *analytic* FLOP reporting at paper
+    /// scale (never executed densely on this host).
+    pub fn opt_125m_scale() -> ModelConfig {
+        ModelConfig {
+            vocab_size: 50272,
+            d_model: 768,
+            n_layers: 12,
+            n_heads: 12,
+            d_ff: 3072,
+            max_seq: 2048,
+            pos_pool: 2048 * 8,
+            vq_heads: 2,
+            vq_codes: 64,
+            attention: AttentionKind::GeluElementwise,
+            n_classes: 2,
+            ln_eps: 1e-5,
+        }
+    }
+
+    /// Head dimension.
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Per-VQ-head chunk width.
+    pub fn vq_dim(&self) -> usize {
+        assert!(self.vq_heads > 0, "vq_dim on a non-VQ model");
+        self.d_model / self.vq_heads
+    }
+
+    /// Approximate parameter count (reporting only).
+    pub fn param_count(&self) -> usize {
+        let d = self.d_model;
+        let mut p = self.vocab_size * d + self.pos_pool * d;
+        p += self.n_layers
+            * (4 * d * d + 4 * d          // qkv+mix weights and biases
+                + 2 * d * self.d_ff + self.d_ff + d // ffn
+                + 4 * d                   // ln params
+                + if self.vq_heads > 0 { self.vq_codes * d } else { 0 });
+        p += 2 * d; // final LN
+        p += d * self.n_classes + self.n_classes;
+        p
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.d_model % self.n_heads != 0 {
+            bail!("d_model {} not divisible by n_heads {}", self.d_model, self.n_heads);
+        }
+        if self.vq_heads > 0 && self.d_model % self.vq_heads != 0 {
+            bail!("d_model {} not divisible by vq_heads {}", self.d_model, self.vq_heads);
+        }
+        if self.pos_pool < self.max_seq {
+            bail!("pos_pool {} < max_seq {}", self.pos_pool, self.max_seq);
+        }
+        if self.vocab_size == 0 || self.n_layers == 0 || self.n_classes == 0 {
+            bail!("zero-sized model dimension");
+        }
+        Ok(())
+    }
+
+    pub fn from_json(j: &Json) -> Result<ModelConfig> {
+        let base = match j.get("preset").as_str() {
+            Some("vqt_mini") | None => ModelConfig::vqt_mini(),
+            Some("vqt_tiny") => ModelConfig::vqt_tiny(),
+            Some("opt_125m_scale") => ModelConfig::opt_125m_scale(),
+            Some(p) => bail!("unknown preset '{p}'"),
+        };
+        let u = |key: &str, dflt: usize| -> usize { j.get(key).as_usize().unwrap_or(dflt) };
+        let mut cfg = ModelConfig {
+            vocab_size: u("vocab_size", base.vocab_size),
+            d_model: u("d_model", base.d_model),
+            n_layers: u("n_layers", base.n_layers),
+            n_heads: u("n_heads", base.n_heads),
+            d_ff: u("d_ff", base.d_ff),
+            max_seq: u("max_seq", base.max_seq),
+            pos_pool: u("pos_pool", base.pos_pool),
+            vq_heads: u("vq_heads", base.vq_heads),
+            vq_codes: u("vq_codes", base.vq_codes),
+            attention: base.attention,
+            n_classes: u("n_classes", base.n_classes),
+            ln_eps: j.get("ln_eps").as_f64().unwrap_or(base.ln_eps as f64) as f32,
+        };
+        if let Some(s) = j.get("attention").as_str() {
+            cfg.attention = AttentionKind::parse(s)?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("vocab_size", Json::num(self.vocab_size as f64)),
+            ("d_model", Json::num(self.d_model as f64)),
+            ("n_layers", Json::num(self.n_layers as f64)),
+            ("n_heads", Json::num(self.n_heads as f64)),
+            ("d_ff", Json::num(self.d_ff as f64)),
+            ("max_seq", Json::num(self.max_seq as f64)),
+            ("pos_pool", Json::num(self.pos_pool as f64)),
+            ("vq_heads", Json::num(self.vq_heads as f64)),
+            ("vq_codes", Json::num(self.vq_codes as f64)),
+            ("attention", Json::str(self.attention.name())),
+            ("n_classes", Json::num(self.n_classes as f64)),
+            ("ln_eps", Json::num(self.ln_eps as f64)),
+        ])
+    }
+}
+
+/// Serving options for the coordinator.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// TCP bind address for the JSON server.
+    pub bind: String,
+    /// Worker threads executing inference.
+    pub workers: usize,
+    /// Max requests batched together (offline batch path).
+    pub max_batch: usize,
+    /// Batching deadline: flush a partial batch after this many ms.
+    pub batch_deadline_ms: u64,
+    /// Queue capacity before backpressure rejects new requests.
+    pub queue_capacity: usize,
+    /// Periodically verify incremental state against a dense recompute
+    /// every N edits (0 disables) — failure-detection knob.
+    pub verify_every: usize,
+    /// Max live sessions before LRU eviction.
+    pub max_sessions: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            bind: "127.0.0.1:7478".to_string(),
+            workers: 1,
+            max_batch: 8,
+            batch_deadline_ms: 5,
+            queue_capacity: 256,
+            verify_every: 0,
+            max_sessions: 64,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn from_json(j: &Json) -> Result<ServeConfig> {
+        let d = ServeConfig::default();
+        Ok(ServeConfig {
+            bind: j.get("bind").as_str().unwrap_or(&d.bind).to_string(),
+            workers: j.get("workers").as_usize().unwrap_or(d.workers),
+            max_batch: j.get("max_batch").as_usize().unwrap_or(d.max_batch),
+            batch_deadline_ms: j
+                .get("batch_deadline_ms")
+                .as_usize()
+                .unwrap_or(d.batch_deadline_ms as usize) as u64,
+            queue_capacity: j.get("queue_capacity").as_usize().unwrap_or(d.queue_capacity),
+            verify_every: j.get("verify_every").as_usize().unwrap_or(d.verify_every),
+            max_sessions: j.get("max_sessions").as_usize().unwrap_or(d.max_sessions),
+        })
+    }
+}
+
+/// Load a JSON config file into (ModelConfig, ServeConfig).
+pub fn load_config_file(path: impl AsRef<Path>) -> Result<(ModelConfig, ServeConfig)> {
+    let text = std::fs::read_to_string(path.as_ref())
+        .with_context(|| format!("reading config {}", path.as_ref().display()))?;
+    let j = Json::parse(&text).context("parsing config JSON")?;
+    let model = ModelConfig::from_json(j.get("model"))?;
+    let serve = ServeConfig::from_json(j.get("serve"))?;
+    Ok((model, serve))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        ModelConfig::vqt_mini().validate().unwrap();
+        ModelConfig::vqt_tiny().validate().unwrap();
+        ModelConfig::opt_125m_scale().validate().unwrap();
+    }
+
+    #[test]
+    fn opt_scale_param_count_near_125m() {
+        let p = ModelConfig::opt_125m_scale().param_count();
+        // OPT-125M is ~125M; our pos pool is larger (8× gap factor).
+        assert!(p > 100_000_000 && p < 200_000_000, "params {p}");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = ModelConfig::vqt_mini();
+        let j = cfg.to_json();
+        let back = ModelConfig::from_json(&j).unwrap();
+        assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn json_overrides() {
+        let j = Json::parse(r#"{"preset": "vqt_tiny", "n_layers": 3, "attention": "softmax"}"#)
+            .unwrap();
+        let cfg = ModelConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.n_layers, 3);
+        assert_eq!(cfg.attention, AttentionKind::Softmax);
+        assert_eq!(cfg.d_model, ModelConfig::vqt_tiny().d_model);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut cfg = ModelConfig::vqt_tiny();
+        cfg.n_heads = 5; // 32 % 5 != 0
+        assert!(cfg.validate().is_err());
+        let mut cfg = ModelConfig::vqt_tiny();
+        cfg.pos_pool = 8;
+        assert!(cfg.validate().is_err());
+    }
+}
+
+impl ModelConfig {
+    /// The Table-1 model variants at laptop scale — mirrors
+    /// `python/compile/model.py::table1_cfg`.
+    pub fn table1(variant: &str) -> anyhow::Result<ModelConfig> {
+        let base = ModelConfig {
+            vocab_size: 257,
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 4,
+            d_ff: 256,
+            max_seq: 128,
+            pos_pool: 128 * 8,
+            vq_heads: 0,
+            vq_codes: 0,
+            attention: AttentionKind::Softmax,
+            n_classes: 2,
+            ln_eps: 1e-5,
+        };
+        let cfg = match variant {
+            "opt" => base,
+            "distil" => ModelConfig { n_layers: 1, ..base },
+            "vq_h2" => ModelConfig {
+                vq_heads: 2,
+                vq_codes: 64,
+                attention: AttentionKind::GeluElementwise,
+                ..base
+            },
+            "vq_h4" => ModelConfig {
+                vq_heads: 4,
+                vq_codes: 64,
+                attention: AttentionKind::GeluElementwise,
+                ..base
+            },
+            other => anyhow::bail!("unknown table1 variant '{other}'"),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// vqt_mini with 4 VQ heads (the serving-scale h=4 row of Table 2).
+    pub fn vqt_mini_h4() -> ModelConfig {
+        ModelConfig {
+            vq_heads: 4,
+            ..ModelConfig::vqt_mini()
+        }
+    }
+}
+
+#[cfg(test)]
+mod file_tests {
+    use super::*;
+
+    #[test]
+    fn ships_a_valid_example_config() {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs/serve.json");
+        let (model, serve) = load_config_file(path).unwrap();
+        assert_eq!(model, ModelConfig::vqt_mini());
+        assert_eq!(serve.verify_every, 256);
+        assert_eq!(serve.bind, "127.0.0.1:7478");
+    }
+
+    #[test]
+    fn table1_variants_match_python() {
+        // Mirrors python/compile/model.py::table1_cfg.
+        let opt = ModelConfig::table1("opt").unwrap();
+        assert_eq!((opt.d_model, opt.n_layers, opt.vq_heads), (64, 2, 0));
+        assert_eq!(opt.attention, AttentionKind::Softmax);
+        let h4 = ModelConfig::table1("vq_h4").unwrap();
+        assert_eq!((h4.vq_heads, h4.vq_codes), (4, 64));
+        assert_eq!(h4.attention, AttentionKind::GeluElementwise);
+        assert!(ModelConfig::table1("bogus").is_err());
+    }
+
+    #[test]
+    fn mini_h4_divides_heads() {
+        let cfg = ModelConfig::vqt_mini_h4();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.n_heads % cfg.vq_heads, 0);
+    }
+
+    #[test]
+    fn missing_config_file_errors() {
+        assert!(load_config_file("/nonexistent/zzz.json").is_err());
+    }
+}

@@ -1,0 +1,86 @@
+//! Batching policy: the worker drains the request queue up to
+//! `max_batch` jobs (bounded by a deadline) and reorders them for session
+//! locality before execution.
+//!
+//! Invariant (property-tested): the relative order of jobs belonging to
+//! the same session is preserved — reordering across sessions is free,
+//! reordering within a session would corrupt edit scripts.
+
+/// Minimal view of a queued job for planning purposes.
+pub trait SessionKeyed {
+    /// Session key; `None` for session-less ops (dense calls, stats).
+    fn session_key(&self) -> Option<&str>;
+}
+
+/// Stable-group jobs by session key: all jobs of the first-seen session
+/// first (in arrival order), then the next session, etc. Session-less jobs
+/// keep their arrival positions relative to their own kind at the end.
+pub fn plan<J: SessionKeyed>(jobs: Vec<J>) -> Vec<J> {
+    if jobs.len() <= 1 {
+        return jobs;
+    }
+    // Assign each job a (group_rank, arrival) sort key.
+    let mut group_rank: Vec<(Option<String>, usize)> = Vec::new();
+    let mut keys = Vec::with_capacity(jobs.len());
+    for (arrival, j) in jobs.iter().enumerate() {
+        let k = j.session_key().map(|s| s.to_string());
+        let rank = match group_rank.iter().position(|(g, _)| *g == k) {
+            Some(i) => i,
+            None => {
+                group_rank.push((k.clone(), arrival));
+                group_rank.len() - 1
+            }
+        };
+        keys.push((rank, arrival));
+    }
+    let mut order: Vec<usize> = (0..jobs.len()).collect();
+    order.sort_by_key(|&i| keys[i]);
+    // Permute.
+    let mut slots: Vec<Option<J>> = jobs.into_iter().map(Some).collect();
+    order
+        .into_iter()
+        .map(|i| slots[i].take().expect("each slot moved once"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug, PartialEq, Clone)]
+    struct J(Option<&'static str>, u32);
+
+    impl SessionKeyed for J {
+        fn session_key(&self) -> Option<&str> {
+            self.0
+        }
+    }
+
+    #[test]
+    fn groups_by_session_preserving_intra_order() {
+        let jobs = vec![
+            J(Some("a"), 0),
+            J(Some("b"), 1),
+            J(Some("a"), 2),
+            J(None, 3),
+            J(Some("b"), 4),
+        ];
+        let planned = plan(jobs);
+        assert_eq!(
+            planned,
+            vec![
+                J(Some("a"), 0),
+                J(Some("a"), 2),
+                J(Some("b"), 1),
+                J(Some("b"), 4),
+                J(None, 3),
+            ]
+        );
+    }
+
+    #[test]
+    fn single_job_untouched() {
+        let planned = plan(vec![J(Some("x"), 9)]);
+        assert_eq!(planned, vec![J(Some("x"), 9)]);
+    }
+}

@@ -1,0 +1,182 @@
+//! Serving metrics: counters, log-bucket latency histograms, FLOP savings.
+
+use crate::util::Json;
+
+/// Log-bucketed histogram (µs-scale friendly: buckets are powers of 2).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    /// bucket i counts values in [2^i, 2^(i+1)).
+    buckets: Vec<u64>,
+    count: u64,
+    sum: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: vec![0; 48],
+            count: 0,
+            sum: 0.0,
+            max: 0.0,
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, v: f64) {
+        let b = if v < 1.0 {
+            0
+        } else {
+            (v.log2() as usize).min(self.buckets.len() - 1)
+        };
+        self.buckets[b] += 1;
+        self.count += 1;
+        self.sum += v;
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Approximate percentile from the buckets (upper bound of bucket).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((p / 100.0) * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return (1u64 << (i + 1)) as f64;
+            }
+        }
+        self.max
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.count as f64)),
+            ("mean", Json::num(self.mean())),
+            ("p50", Json::num(self.percentile(50.0))),
+            ("p99", Json::num(self.percentile(99.0))),
+            ("max", Json::num(self.max)),
+        ])
+    }
+}
+
+/// Aggregated serving metrics (owned by the worker thread; snapshotted on
+/// request).
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    /// Per-request wall latency in microseconds, by op kind.
+    pub lat_edit_us: Histogram,
+    pub lat_revision_us: Histogram,
+    pub lat_dense_us: Histogram,
+    /// FLOPs actually spent by incremental processing.
+    pub flops_incremental: u64,
+    /// FLOPs a dense recompute would have spent for the same requests.
+    pub flops_dense_equiv: u64,
+    pub edits: u64,
+    pub revisions: u64,
+    pub dense_calls: u64,
+    pub defrags: u64,
+    pub sessions_opened: u64,
+    pub sessions_evicted: u64,
+    pub rejected_backpressure: u64,
+    pub errors: u64,
+}
+
+impl Metrics {
+    /// The aggregate speedup the engine achieved (paper's headline ratio).
+    pub fn speedup(&self) -> f64 {
+        if self.flops_incremental == 0 {
+            0.0
+        } else {
+            self.flops_dense_equiv as f64 / self.flops_incremental as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("lat_edit_us", self.lat_edit_us.to_json()),
+            ("lat_revision_us", self.lat_revision_us.to_json()),
+            ("lat_dense_us", self.lat_dense_us.to_json()),
+            ("flops_incremental", Json::num(self.flops_incremental as f64)),
+            ("flops_dense_equiv", Json::num(self.flops_dense_equiv as f64)),
+            ("speedup", Json::num(self.speedup())),
+            ("edits", Json::num(self.edits as f64)),
+            ("revisions", Json::num(self.revisions as f64)),
+            ("dense_calls", Json::num(self.dense_calls as f64)),
+            ("defrags", Json::num(self.defrags as f64)),
+            ("sessions_opened", Json::num(self.sessions_opened as f64)),
+            ("sessions_evicted", Json::num(self.sessions_evicted as f64)),
+            (
+                "rejected_backpressure",
+                Json::num(self.rejected_backpressure as f64),
+            ),
+            ("errors", Json::num(self.errors as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_basics() {
+        let mut h = Histogram::new();
+        for v in [1.0, 2.0, 4.0, 8.0, 1000.0] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert!(h.mean() > 200.0);
+        assert_eq!(h.max(), 1000.0);
+        assert!(h.percentile(50.0) >= 4.0);
+        assert!(h.percentile(99.0) >= 1000.0);
+    }
+
+    #[test]
+    fn histogram_empty() {
+        let h = Histogram::new();
+        assert_eq!(h.percentile(99.0), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn speedup_ratio() {
+        let mut m = Metrics::default();
+        m.flops_dense_equiv = 1000;
+        m.flops_incremental = 100;
+        assert_eq!(m.speedup(), 10.0);
+    }
+
+    #[test]
+    fn metrics_json_shape() {
+        let m = Metrics::default();
+        let j = m.to_json();
+        assert!(j.get("speedup").as_f64().is_some());
+        assert!(j.get("lat_edit_us").get("p99").as_f64().is_some());
+    }
+}

@@ -1,0 +1,12 @@
+//! The serving coordinator (L3): session management, request routing,
+//! batching, metrics, backpressure. The paper's incremental engine is the
+//! execution backend; the AOT L2 artifact is the dense baseline path.
+
+pub mod batcher;
+pub mod metrics;
+pub mod service;
+pub mod session;
+
+pub use metrics::{Histogram, Metrics};
+pub use service::{Backend, Client, Coordinator, Request, Response};
+pub use session::SessionStore;

@@ -1,0 +1,530 @@
+//! The coordinator service: a worker thread owning all inference state
+//! (sessions, engines, PJRT runtime — none of which are `Send`-friendly or
+//! cheap to share), fronted by a bounded channel. Clients are cheap
+//! clonable handles.
+
+use crate::compressed::CompressedBatch;
+use crate::config::ServeConfig;
+use crate::edits::{diff_tokens, Edit};
+use crate::flops::{dense_forward_flops, FlopLedger};
+use crate::incremental::{EngineOptions, IncrementalEngine};
+use crate::model::{dense_forward, ModelWeights};
+use crate::runtime::ArtifactRuntime;
+use crate::util::Json;
+use anyhow::{bail, Result};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::batcher::{plan, SessionKeyed};
+use super::metrics::Metrics;
+use super::session::SessionStore;
+
+/// Requests accepted by the coordinator.
+#[derive(Clone, Debug)]
+pub enum Request {
+    /// Open (or reset) a session with an initial document.
+    Open { session: String, tokens: Vec<u32> },
+    /// Apply one edit to a session (the online path).
+    Edit { session: String, edit: Edit },
+    /// Apply an edit script to a session.
+    EditScript { session: String, edits: Vec<Edit> },
+    /// Submit a whole new revision; the coordinator diffs and applies
+    /// incrementally (the offline path).
+    Revision { session: String, tokens: Vec<u32> },
+    /// Process a batch of revisions sharing one base document (offline
+    /// batch; §3.1 compressed storage is measured and reported).
+    BatchRevisions {
+        base: Vec<u32>,
+        revisions: Vec<Vec<u32>>,
+    },
+    /// Dense forward via the AOT L2 artifact (baseline / fallback path).
+    Dense { tokens: Vec<u32> },
+    /// Top-k next-token suggestions for a session (the writing-assistant
+    /// payload; tied-embedding LM head over the last row).
+    Suggest { session: String, k: usize },
+    /// Persist a session's full state to a checkpoint file.
+    Checkpoint { session: String, path: String },
+    /// Restore a session from a checkpoint file (no recompute).
+    Restore { session: String, path: String },
+    /// Close a session.
+    Close { session: String },
+    /// Metrics snapshot.
+    Stats,
+}
+
+impl Request {
+    fn kind(&self) -> &'static str {
+        match self {
+            Request::Open { .. } => "open",
+            Request::Edit { .. } => "edit",
+            Request::EditScript { .. } => "edit_script",
+            Request::Revision { .. } => "revision",
+            Request::BatchRevisions { .. } => "batch_revisions",
+            Request::Dense { .. } => "dense",
+            Request::Suggest { .. } => "suggest",
+            Request::Checkpoint { .. } => "checkpoint",
+            Request::Restore { .. } => "restore",
+            Request::Close { .. } => "close",
+            Request::Stats => "stats",
+        }
+    }
+}
+
+/// Responses produced by the coordinator.
+#[derive(Clone, Debug)]
+pub enum Response {
+    Logits {
+        logits: Vec<f32>,
+        predicted: usize,
+        /// Arithmetic ops actually spent on this request.
+        flops: u64,
+        /// What a from-scratch dense pass would have cost.
+        dense_equiv_flops: u64,
+        defragged: bool,
+    },
+    BatchLogits {
+        each: Vec<Vec<f32>>,
+        flops: u64,
+        dense_equiv_flops: u64,
+        /// (compressed floats, dense floats) for the batch code state
+        /// across layers — the §3.1 storage claim, measured.
+        storage: (usize, usize),
+    },
+    Stats(Json),
+    Suggestions(Vec<(u32, f32)>),
+    Done,
+    Closed {
+        existed: bool,
+    },
+    Err(String),
+}
+
+impl Response {
+    pub fn logits(&self) -> Result<&[f32]> {
+        match self {
+            Response::Logits { logits, .. } => Ok(logits),
+            Response::Err(e) => bail!("coordinator error: {e}"),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+}
+
+struct Job {
+    req: Request,
+    reply: mpsc::Sender<Response>,
+    enqueued: Instant,
+}
+
+impl SessionKeyed for Job {
+    fn session_key(&self) -> Option<&str> {
+        match &self.req {
+            Request::Open { session, .. }
+            | Request::Edit { session, .. }
+            | Request::EditScript { session, .. }
+            | Request::Revision { session, .. }
+            | Request::Suggest { session, .. }
+            | Request::Checkpoint { session, .. }
+            | Request::Restore { session, .. }
+            | Request::Close { session } => Some(session),
+            _ => None,
+        }
+    }
+}
+
+/// Clonable client handle to a running coordinator.
+#[derive(Clone)]
+pub struct Client {
+    tx: mpsc::SyncSender<Job>,
+}
+
+impl Client {
+    /// Blocking request (waits for queue space — natural backpressure).
+    pub fn request(&self, req: Request) -> Result<Response> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Job {
+                req,
+                reply: rtx,
+                enqueued: Instant::now(),
+            })
+            .map_err(|_| anyhow::anyhow!("coordinator stopped"))?;
+        Ok(rrx.recv()?)
+    }
+
+    /// Non-blocking request: fails fast when the queue is full
+    /// (backpressure surfaces to the caller).
+    pub fn try_request(&self, req: Request) -> Result<Response> {
+        let (rtx, rrx) = mpsc::channel();
+        match self.tx.try_send(Job {
+            req,
+            reply: rtx,
+            enqueued: Instant::now(),
+        }) {
+            Ok(()) => Ok(rrx.recv()?),
+            Err(mpsc::TrySendError::Full(_)) => bail!("queue full (backpressure)"),
+            Err(mpsc::TrySendError::Disconnected(_)) => bail!("coordinator stopped"),
+        }
+    }
+}
+
+/// Running coordinator (worker thread + client factory). The worker exits
+/// when every `Client` handle (including the coordinator's own) is gone.
+pub struct Coordinator {
+    client: Option<Client>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+/// What the worker serves from.
+pub struct Backend {
+    pub weights: Arc<ModelWeights>,
+    /// AOT artifacts (None ⇒ dense requests run on the in-process oracle).
+    pub artifacts_dir: Option<std::path::PathBuf>,
+    pub engine_opts: EngineOptions,
+}
+
+impl Coordinator {
+    /// Spawn the worker thread and return the handle.
+    pub fn start(backend: Backend, cfg: ServeConfig) -> Coordinator {
+        let (tx, rx) = mpsc::sync_channel::<Job>(cfg.queue_capacity);
+        let client = Client { tx: tx.clone() };
+        let handle = std::thread::Builder::new()
+            .name("vqt-coordinator".into())
+            .spawn(move || worker_loop(backend, cfg, rx))
+            .expect("spawn coordinator");
+        Coordinator {
+            client: Some(client),
+            handle: Some(handle),
+        }
+    }
+
+    pub fn client(&self) -> Client {
+        self.client.as_ref().expect("coordinator running").clone()
+    }
+
+    /// Drop our client handle and wait for the worker to drain and exit.
+    /// (Outstanding client clones keep the worker alive until dropped.)
+    pub fn shutdown(mut self) {
+        self.client = None;
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.client = None;
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(backend: Backend, cfg: ServeConfig, rx: mpsc::Receiver<Job>) {
+    let runtime = backend.artifacts_dir.as_ref().and_then(|d| {
+        match ArtifactRuntime::open(d) {
+            Ok(rt) => Some(rt),
+            Err(e) => {
+                log::warn!("artifact runtime unavailable ({e:#}); dense requests use the in-process oracle");
+                None
+            }
+        }
+    });
+    let mut state = Worker {
+        weights: backend.weights,
+        engine_opts: backend.engine_opts,
+        runtime,
+        sessions: SessionStore::new(cfg.max_sessions),
+        metrics: Metrics::default(),
+        verify_every: cfg.verify_every,
+    };
+    loop {
+        // Block for the first job, then drain up to max_batch more within
+        // the deadline.
+        let first = match rx.recv() {
+            Ok(j) => j,
+            Err(_) => break, // all clients gone
+        };
+        let mut batch = vec![first];
+        let deadline =
+            Instant::now() + std::time::Duration::from_millis(cfg.batch_deadline_ms);
+        while batch.len() < cfg.max_batch {
+            match rx.try_recv() {
+                Ok(j) => batch.push(j),
+                Err(mpsc::TryRecvError::Empty) => {
+                    if Instant::now() >= deadline {
+                        break;
+                    }
+                    std::thread::yield_now();
+                }
+                Err(mpsc::TryRecvError::Disconnected) => break,
+            }
+        }
+        for job in plan(batch) {
+            let kind = job.req.kind();
+            let t0 = Instant::now();
+            let resp = state.handle(job.req);
+            let wait_us = job.enqueued.elapsed().as_micros() as f64;
+            let us = t0.elapsed().as_micros() as f64;
+            match kind {
+                "edit" | "edit_script" => state.metrics.lat_edit_us.record(us),
+                "revision" | "batch_revisions" => state.metrics.lat_revision_us.record(us),
+                "dense" => state.metrics.lat_dense_us.record(us),
+                _ => {}
+            }
+            log::debug!("{kind}: {us:.0}µs (+{wait_us:.0}µs queued)");
+            if matches!(resp, Response::Err(_)) {
+                state.metrics.errors += 1;
+            }
+            let _ = job.reply.send(resp);
+        }
+    }
+    log::info!("coordinator worker exiting");
+}
+
+struct Worker {
+    weights: Arc<ModelWeights>,
+    engine_opts: EngineOptions,
+    runtime: Option<ArtifactRuntime>,
+    sessions: SessionStore,
+    metrics: Metrics,
+    verify_every: usize,
+}
+
+impl Worker {
+    fn handle(&mut self, req: Request) -> Response {
+        match self.handle_inner(req) {
+            Ok(r) => r,
+            Err(e) => Response::Err(format!("{e:#}")),
+        }
+    }
+
+    fn dense_equiv(&self, n: usize) -> u64 {
+        dense_forward_flops(&self.weights.cfg, n)
+    }
+
+    fn handle_inner(&mut self, req: Request) -> Result<Response> {
+        match req {
+            Request::Open { session, tokens } => {
+                anyhow::ensure!(!tokens.is_empty(), "empty document");
+                anyhow::ensure!(
+                    tokens.len() <= self.weights.cfg.max_seq,
+                    "document too long"
+                );
+                let mut opts = self.engine_opts;
+                opts.verify_every = self.verify_every;
+                let engine = IncrementalEngine::new(self.weights.clone(), &tokens, opts);
+                let flops = engine.ledger.total();
+                let logits = engine.logits().to_vec();
+                let predicted = engine.predict();
+                if self.sessions.insert(session, engine).is_some() {
+                    self.metrics.sessions_evicted += 1;
+                }
+                self.metrics.sessions_opened += 1;
+                let n = tokens.len();
+                self.metrics.flops_incremental += flops;
+                self.metrics.flops_dense_equiv += self.dense_equiv(n);
+                Ok(Response::Logits {
+                    logits,
+                    predicted,
+                    flops,
+                    dense_equiv_flops: self.dense_equiv(n),
+                    defragged: false,
+                })
+            }
+            Request::Edit { session, edit } => self.apply_edits(&session, &[edit]),
+            Request::EditScript { session, edits } => self.apply_edits(&session, &edits),
+            Request::Revision { session, tokens } => {
+                let s = self
+                    .sessions
+                    .get_mut(&session)
+                    .ok_or_else(|| anyhow::anyhow!("unknown session '{session}'"))?;
+                let script = diff_tokens(s.engine.tokens(), &tokens);
+                let rep = s.engine.apply_revision(&script);
+                s.edits += script.len() as u64;
+                let n = s.engine.len();
+                let predicted = s.engine.predict();
+                self.metrics.revisions += 1;
+                self.metrics.edits += script.len() as u64;
+                self.metrics.flops_incremental += rep.flops;
+                let dense_equiv = self.dense_equiv(n);
+                self.metrics.flops_dense_equiv += dense_equiv;
+                Ok(Response::Logits {
+                    logits: rep.logits,
+                    predicted,
+                    flops: rep.flops,
+                    dense_equiv_flops: dense_equiv,
+                    defragged: rep.defragged,
+                })
+            }
+            Request::BatchRevisions { base, revisions } => self.batch_revisions(base, revisions),
+            Request::Dense { tokens } => {
+                self.metrics.dense_calls += 1;
+                let n = tokens.len();
+                let logits = match &self.runtime {
+                    Some(rt) => {
+                        // Deterministic spread positions (same protocol as
+                        // the engine's initial assignment).
+                        let pool = rt.manifest.config.pos_pool;
+                        let pos: Vec<u32> = (0..n)
+                            .map(|i| (((2 * i + 1) * pool) / (2 * n)) as u32)
+                            .collect();
+                        rt.dense_logits(&tokens, &pos)?
+                    }
+                    None => {
+                        let pool = self.weights.cfg.pos_pool;
+                        let pos: Vec<u32> = (0..n)
+                            .map(|i| (((2 * i + 1) * pool) / (2 * n)) as u32)
+                            .collect();
+                        let mut led = FlopLedger::new();
+                        dense_forward(&self.weights, &tokens, &pos, &mut led).logits
+                    }
+                };
+                let predicted = crate::tensor::argmax(&logits);
+                Ok(Response::Logits {
+                    logits,
+                    predicted,
+                    flops: self.dense_equiv(n),
+                    dense_equiv_flops: self.dense_equiv(n),
+                    defragged: false,
+                })
+            }
+            Request::Suggest { session, k } => {
+                let s = self
+                    .sessions
+                    .get_mut(&session)
+                    .ok_or_else(|| anyhow::anyhow!("unknown session '{session}'"))?;
+                Ok(Response::Suggestions(s.engine.suggest_topk(k.clamp(1, 64))))
+            }
+            Request::Checkpoint { session, path } => {
+                anyhow::ensure!(
+                    !path.contains(".."),
+                    "checkpoint path must not contain '..'"
+                );
+                let s = self
+                    .sessions
+                    .get_mut(&session)
+                    .ok_or_else(|| anyhow::anyhow!("unknown session '{session}'"))?;
+                s.engine.to_tensor_file().save(&path)?;
+                Ok(Response::Done)
+            }
+            Request::Restore { session, path } => {
+                anyhow::ensure!(!path.contains(".."), "checkpoint path must not contain '..'");
+                let tf = crate::util::TensorFile::load(&path)?;
+                let mut opts = self.engine_opts;
+                opts.verify_every = self.verify_every;
+                let engine =
+                    IncrementalEngine::from_tensor_file(self.weights.clone(), &tf, opts)?;
+                if self.sessions.insert(session, engine).is_some() {
+                    self.metrics.sessions_evicted += 1;
+                }
+                self.metrics.sessions_opened += 1;
+                Ok(Response::Done)
+            }
+            Request::Close { session } => {
+                let existed = self.sessions.remove(&session).is_some();
+                Ok(Response::Closed { existed })
+            }
+            Request::Stats => {
+                let mut j = self.metrics.to_json();
+                if let Json::Obj(map) = &mut j {
+                    map.insert(
+                        "live_sessions".into(),
+                        Json::num(self.sessions.len() as f64),
+                    );
+                }
+                Ok(Response::Stats(j))
+            }
+        }
+    }
+
+    fn apply_edits(&mut self, session: &str, edits: &[Edit]) -> Result<Response> {
+        let s = self
+            .sessions
+            .get_mut(session)
+            .ok_or_else(|| anyhow::anyhow!("unknown session '{session}'"))?;
+        let rep = s.engine.apply_edits(edits);
+        s.edits += edits.len() as u64;
+        let n = s.engine.len();
+        let predicted = s.engine.predict();
+        let defrags = s.engine.stats.defrags;
+        self.metrics.edits += edits.len() as u64;
+        self.metrics.defrags = self.metrics.defrags.max(defrags);
+        self.metrics.flops_incremental += rep.flops;
+        // Dense equivalent: one from-scratch pass per edit (the online
+        // comparison the paper makes for atomic edits).
+        let dense_equiv = self.dense_equiv(n) * edits.len().max(1) as u64;
+        self.metrics.flops_dense_equiv += dense_equiv;
+        Ok(Response::Logits {
+            logits: rep.logits,
+            predicted,
+            flops: rep.flops,
+            dense_equiv_flops: dense_equiv,
+            defragged: rep.defragged,
+        })
+    }
+
+    /// Offline batch: process the base once, fork per revision, apply each
+    /// diff incrementally; measure the §3.1 compressed storage of the VQ
+    /// code state across the batch.
+    fn batch_revisions(&mut self, base: Vec<u32>, revisions: Vec<Vec<u32>>) -> Result<Response> {
+        anyhow::ensure!(!base.is_empty(), "empty base document");
+        let mut opts = self.engine_opts;
+        opts.verify_every = 0;
+        let base_engine = IncrementalEngine::new(self.weights.clone(), &base, opts);
+        let mut flops = base_engine.ledger.total();
+        let mut dense_equiv = self.dense_equiv(base.len());
+        let mut each = Vec::with_capacity(revisions.len());
+        let mut forks = Vec::with_capacity(revisions.len());
+        for rev in &revisions {
+            let mut fork = base_engine.fork();
+            let script = diff_tokens(&base, rev);
+            let rep = fork.apply_revision(&script);
+            flops += rep.flops;
+            dense_equiv += self.dense_equiv(rev.len());
+            each.push(rep.logits);
+            forks.push(fork);
+        }
+        self.metrics.revisions += revisions.len() as u64;
+        self.metrics.flops_incremental += flops;
+        self.metrics.flops_dense_equiv += dense_equiv;
+        // §3.1 storage measurement over the final layer's code state:
+        // members must share geometry, so measure on the shortest length.
+        let min_len = forks
+            .iter()
+            .map(|f| f.len())
+            .chain(std::iter::once(base_engine.len()))
+            .min()
+            .unwrap_or(0);
+        let cfg = &self.weights.cfg;
+        let mut storage = (0usize, 0usize);
+        if min_len > 0 && cfg.vq_heads > 0 {
+            let li = cfg.n_layers - 1;
+            let mut lut = std::collections::HashMap::new();
+            let mut codebook: Vec<Vec<f32>> = Vec::new();
+            let vq = self.weights.layers[li].vq.as_ref().unwrap();
+            let mut p: Vec<Vec<u32>> = Vec::new();
+            for eng in std::iter::once(&base_engine).chain(forks.iter()) {
+                let row: Vec<u32> = eng.layer_codes(li)[..min_len]
+                    .iter()
+                    .map(|&c| {
+                        *lut.entry(c.pack()).or_insert_with(|| {
+                            codebook.push(vq.decode(c));
+                            (codebook.len() - 1) as u32
+                        })
+                    })
+                    .collect();
+                p.push(row);
+            }
+            let cb = CompressedBatch::from_index_matrix(min_len, p.len(), cfg.d_model, codebook, &p);
+            storage = (cb.storage_floats(), cb.dense_floats());
+        }
+        Ok(Response::BatchLogits {
+            each,
+            flops,
+            dense_equiv_flops: dense_equiv,
+            storage,
+        })
+    }
+}

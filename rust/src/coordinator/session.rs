@@ -1,0 +1,147 @@
+//! Document sessions: one incremental engine per live document, with LRU
+//! eviction. Owned by the coordinator worker thread.
+
+use crate::incremental::IncrementalEngine;
+use std::collections::HashMap;
+
+/// One live editing session.
+pub struct Session {
+    pub engine: IncrementalEngine,
+    /// Monotonic access stamp for LRU.
+    pub last_access: u64,
+    /// Total edits served.
+    pub edits: u64,
+}
+
+/// Session store with capacity-bounded LRU eviction.
+pub struct SessionStore {
+    map: HashMap<String, Session>,
+    clock: u64,
+    capacity: usize,
+    pub evictions: u64,
+}
+
+impl SessionStore {
+    pub fn new(capacity: usize) -> SessionStore {
+        assert!(capacity > 0);
+        SessionStore {
+            map: HashMap::new(),
+            clock: 0,
+            capacity,
+            evictions: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn contains(&self, id: &str) -> bool {
+        self.map.contains_key(id)
+    }
+
+    /// Insert (or replace) a session; evicts the least-recently-used entry
+    /// when at capacity. Returns the evicted session id, if any.
+    pub fn insert(&mut self, id: String, engine: IncrementalEngine) -> Option<String> {
+        self.clock += 1;
+        let mut evicted = None;
+        if !self.map.contains_key(&id) && self.map.len() >= self.capacity {
+            if let Some(oldest) = self
+                .map
+                .iter()
+                .min_by_key(|(_, s)| s.last_access)
+                .map(|(k, _)| k.clone())
+            {
+                self.map.remove(&oldest);
+                self.evictions += 1;
+                evicted = Some(oldest);
+            }
+        }
+        self.map.insert(
+            id,
+            Session {
+                engine,
+                last_access: self.clock,
+                edits: 0,
+            },
+        );
+        evicted
+    }
+
+    /// Mutable access, refreshing LRU recency.
+    pub fn get_mut(&mut self, id: &str) -> Option<&mut Session> {
+        self.clock += 1;
+        let clock = self.clock;
+        self.map.get_mut(id).map(|s| {
+            s.last_access = clock;
+            s
+        })
+    }
+
+    pub fn remove(&mut self, id: &str) -> Option<Session> {
+        self.map.remove(id)
+    }
+
+    pub fn ids(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.map.keys().cloned().collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::incremental::EngineOptions;
+    use crate::model::ModelWeights;
+    use std::sync::Arc;
+
+    fn engine(w: &Arc<ModelWeights>, seed: u64) -> IncrementalEngine {
+        let tokens: Vec<u32> = (0..6).map(|i| ((seed + i) % 60) as u32).collect();
+        IncrementalEngine::new(w.clone(), &tokens, EngineOptions::default())
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let cfg = ModelConfig::vqt_tiny();
+        let w = Arc::new(ModelWeights::random(&cfg, 1));
+        let mut store = SessionStore::new(2);
+        assert_eq!(store.insert("a".into(), engine(&w, 1)), None);
+        assert_eq!(store.insert("b".into(), engine(&w, 2)), None);
+        // Touch "a" so "b" is the LRU.
+        store.get_mut("a").unwrap();
+        let evicted = store.insert("c".into(), engine(&w, 3));
+        assert_eq!(evicted.as_deref(), Some("b"));
+        assert!(store.contains("a") && store.contains("c"));
+        assert_eq!(store.evictions, 1);
+    }
+
+    #[test]
+    fn replace_does_not_evict() {
+        let cfg = ModelConfig::vqt_tiny();
+        let w = Arc::new(ModelWeights::random(&cfg, 1));
+        let mut store = SessionStore::new(1);
+        store.insert("a".into(), engine(&w, 1));
+        assert_eq!(store.insert("a".into(), engine(&w, 2)), None);
+        assert_eq!(store.len(), 1);
+        assert_eq!(store.evictions, 0);
+    }
+
+    #[test]
+    fn remove_and_ids() {
+        let cfg = ModelConfig::vqt_tiny();
+        let w = Arc::new(ModelWeights::random(&cfg, 1));
+        let mut store = SessionStore::new(4);
+        store.insert("x".into(), engine(&w, 1));
+        store.insert("y".into(), engine(&w, 2));
+        assert_eq!(store.ids(), vec!["x".to_string(), "y".to_string()]);
+        assert!(store.remove("x").is_some());
+        assert!(store.remove("x").is_none());
+        assert_eq!(store.len(), 1);
+    }
+}

@@ -1,0 +1,218 @@
+//! Token-sequence diffing (Myers O(ND)) and edit-script application.
+//!
+//! The offline pipeline receives whole revisions; `diff_tokens` recovers a
+//! minimal edit script so the incremental engine can process just the
+//! changed rows — mirroring how the paper aligns consecutive Wikipedia
+//! revisions.
+
+use super::Edit;
+
+/// Apply an edit script to a token sequence (indices are interpreted
+/// against the evolving document, left to right).
+pub fn apply_edits(tokens: &[u32], edits: &[Edit]) -> Vec<u32> {
+    let mut v = tokens.to_vec();
+    for e in edits {
+        match *e {
+            Edit::Replace { at, tok } => v[at] = tok,
+            Edit::Insert { at, tok } => v.insert(at, tok),
+            Edit::Delete { at } => {
+                v.remove(at);
+            }
+        }
+    }
+    v
+}
+
+/// LCS edit-distance (number of insertions + deletions; replacements
+/// count as delete+insert here, matching the classic LCS-based measure).
+pub fn edit_distance(a: &[u32], b: &[u32]) -> usize {
+    lcs_trace(a, b).0
+}
+
+/// Minimal edit script turning `a` into `b`, expressed as `Edit`s with
+/// left-to-right evolving indices. Adjacent delete+insert pairs at the same
+/// spot are fused into `Replace` (cheaper for the engine: no position-pool
+/// traffic).
+pub fn diff_tokens(a: &[u32], b: &[u32]) -> Vec<Edit> {
+    let (_, ops) = lcs_trace(a, b);
+    // ops: per-position micro-ops over ORIGINAL indices; convert to an
+    // evolving-index script, fusing Del+Ins → Replace.
+    let mut script = Vec::new();
+    let mut shift: isize = 0; // current index shift from earlier edits
+    let mut i = 0;
+    while i < ops.len() {
+        match ops[i] {
+            Op::Del(ai) => {
+                if let Some(&Op::Ins(aj, tok)) = ops.get(i + 1) {
+                    // Replace when the insertion lands where the deletion was.
+                    if aj == ai + 1 {
+                        script.push(Edit::Replace {
+                            at: (ai as isize + shift) as usize,
+                            tok,
+                        });
+                        i += 2;
+                        continue;
+                    }
+                }
+                script.push(Edit::Delete {
+                    at: (ai as isize + shift) as usize,
+                });
+                shift -= 1;
+                i += 1;
+            }
+            Op::Ins(ai, tok) => {
+                script.push(Edit::Insert {
+                    at: (ai as isize + shift) as usize,
+                    tok,
+                });
+                shift += 1;
+                i += 1;
+            }
+        }
+    }
+    script
+}
+
+/// Micro-op over original `a` indices: Del(i) deletes a[i]; Ins(i, tok)
+/// inserts before original index i (i.e. after a[i-1]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Op {
+    Del(usize),
+    Ins(usize, u32),
+}
+
+/// LCS dynamic program with trace reconstruction. O(n·m) time/space —
+/// documents are ≤ a few thousand tokens, so this is well within budget
+/// and (unlike a hand-rolled Myers backtrack) straightforwardly correct.
+fn lcs_trace(a: &[u32], b: &[u32]) -> (usize, Vec<Op>) {
+    let (n, m) = (a.len(), b.len());
+    // dp[i][j] = LCS length of a[..i], b[..j], flattened row-major.
+    let w = m + 1;
+    let mut dp = vec![0u32; (n + 1) * w];
+    for i in 1..=n {
+        for j in 1..=m {
+            dp[i * w + j] = if a[i - 1] == b[j - 1] {
+                dp[(i - 1) * w + (j - 1)] + 1
+            } else {
+                dp[(i - 1) * w + j].max(dp[i * w + (j - 1)])
+            };
+        }
+    }
+    let lcs = dp[n * w + m] as usize;
+    let dist = n + m - 2 * lcs;
+
+    // Backtrack from (n, m). Prefer the Ins step on ties so that the
+    // reversed op list yields Del-before-Ins runs, which the Replace
+    // fusion in `diff_tokens` relies on.
+    let mut ops = Vec::with_capacity(dist);
+    let (mut i, mut j) = (n, m);
+    while i > 0 || j > 0 {
+        if i > 0 && j > 0 && a[i - 1] == b[j - 1] && dp[i * w + j] == dp[(i - 1) * w + (j - 1)] + 1
+        {
+            i -= 1;
+            j -= 1;
+        } else if j > 0 && (i == 0 || dp[i * w + (j - 1)] >= dp[(i - 1) * w + j]) {
+            // Insertion of b[j-1] before original index i.
+            ops.push(Op::Ins(i, b[j - 1]));
+            j -= 1;
+        } else {
+            // Deletion of a[i-1].
+            ops.push(Op::Del(i - 1));
+            i -= 1;
+        }
+    }
+    ops.reverse();
+    (dist, ops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn check_roundtrip(a: &[u32], b: &[u32]) {
+        let script = diff_tokens(a, b);
+        let applied = apply_edits(a, &script);
+        assert_eq!(applied, b, "script {script:?} failed for {a:?} -> {b:?}");
+    }
+
+    #[test]
+    fn identical_sequences_empty_script() {
+        let a = vec![1, 2, 3];
+        assert_eq!(diff_tokens(&a, &a), vec![]);
+        assert_eq!(edit_distance(&a, &a), 0);
+    }
+
+    #[test]
+    fn single_ops() {
+        check_roundtrip(&[1, 2, 3], &[1, 9, 3]); // replace
+        check_roundtrip(&[1, 2, 3], &[1, 2, 9, 3]); // insert
+        check_roundtrip(&[1, 2, 3], &[1, 3]); // delete
+        check_roundtrip(&[], &[5]);
+        check_roundtrip(&[5], &[]);
+        check_roundtrip(&[], &[]);
+    }
+
+    #[test]
+    fn replace_fusion() {
+        let script = diff_tokens(&[1, 2, 3], &[1, 9, 3]);
+        assert_eq!(script, vec![Edit::Replace { at: 1, tok: 9 }]);
+    }
+
+    #[test]
+    fn distance_is_minimal_on_known_cases() {
+        assert_eq!(edit_distance(&[1, 2, 3], &[1, 9, 3]), 2); // del+ins
+        assert_eq!(edit_distance(&[1, 2, 3], &[2, 3]), 1);
+        assert_eq!(edit_distance(&[1, 2, 3], &[1, 2, 3, 4]), 1);
+        // ABCABBA -> CBABAC (classic Myers example, distance 5)
+        let a: Vec<u32> = "ABCABBA".bytes().map(u32::from).collect();
+        let b: Vec<u32> = "CBABAC".bytes().map(u32::from).collect();
+        assert_eq!(edit_distance(&a, &b), 5);
+        check_roundtrip(&a, &b);
+    }
+
+    #[test]
+    fn random_pairs_roundtrip() {
+        let mut r = Rng::new(123);
+        for _ in 0..300 {
+            let n = r.below(40);
+            let a: Vec<u32> = (0..n).map(|_| r.below(6) as u32).collect();
+            let m = r.below(40);
+            let b: Vec<u32> = (0..m).map(|_| r.below(6) as u32).collect();
+            check_roundtrip(&a, &b);
+        }
+    }
+
+    #[test]
+    fn random_mutations_roundtrip_and_small_scripts() {
+        let mut r = Rng::new(77);
+        for _ in 0..200 {
+            let n = r.range(10, 60);
+            let a: Vec<u32> = (0..n).map(|_| r.below(50) as u32).collect();
+            let mut b = a.clone();
+            let k = r.range(1, 5);
+            for _ in 0..k {
+                if b.is_empty() {
+                    break;
+                }
+                match r.below(3) {
+                    0 => {
+                        let i = r.below(b.len());
+                        b[i] = r.below(50) as u32;
+                    }
+                    1 => {
+                        let i = r.below(b.len() + 1);
+                        b.insert(i, r.below(50) as u32);
+                    }
+                    _ => {
+                        let i = r.below(b.len());
+                        b.remove(i);
+                    }
+                }
+            }
+            check_roundtrip(&a, &b);
+            // Minimality bound: script length ≤ 2 edits per mutation.
+            assert!(diff_tokens(&a, &b).len() <= 2 * k);
+        }
+    }
+}

@@ -1,0 +1,40 @@
+//! Document edits: atomic operations, diffing, and synthetic revision
+//! traces (the substitute for the paper's scraped Wikipedia edit
+//! histories — see DESIGN.md §1).
+
+pub mod diff;
+pub mod trace;
+
+pub use diff::{apply_edits, diff_tokens, edit_distance};
+pub use trace::{RevisionTrace, TraceConfig};
+
+/// One atomic edit, addressed by *current* row index. A sequence of edits is
+/// applied left-to-right with indices interpreted against the document state
+/// produced by the previous edit (standard edit-script semantics).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Edit {
+    /// Replace the token at `at` with `tok`.
+    Replace { at: usize, tok: u32 },
+    /// Insert `tok` before row `at` (`at == len` appends).
+    Insert { at: usize, tok: u32 },
+    /// Delete the token at `at`.
+    Delete { at: usize },
+}
+
+impl Edit {
+    /// Row index the edit touches.
+    pub fn at(&self) -> usize {
+        match *self {
+            Edit::Replace { at, .. } | Edit::Insert { at, .. } | Edit::Delete { at } => at,
+        }
+    }
+
+    /// Net length change.
+    pub fn len_delta(&self) -> isize {
+        match self {
+            Edit::Replace { .. } => 0,
+            Edit::Insert { .. } => 1,
+            Edit::Delete { .. } => -1,
+        }
+    }
+}

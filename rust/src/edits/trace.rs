@@ -1,0 +1,283 @@
+//! Synthetic revision-trace generator — the stand-in for the paper's
+//! scraped Wikipedia edit histories (DESIGN.md §1).
+//!
+//! The paper's evaluation needs, per Table 2 / Figs. 3–4:
+//! - pairs of consecutive revisions of long documents (1536–2048 tokens in
+//!   the paper; length window configurable here),
+//! - a heavy-tailed mix of small and large revisions (fraction of modified
+//!   tokens spanning ~0.1 % … 50 %, the x-axis of Fig. 3),
+//! - an "atomic edit" protocol: pick a random modified location within a
+//!   pair, apply all changes before it, and process just that one edit
+//!   (Fig. 4's x-axis is the edit's normalized position).
+
+use super::diff::{apply_edits, diff_tokens};
+use super::Edit;
+use crate::util::Rng;
+
+/// Generator parameters.
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    /// Token vocabulary (tokens are drawn Zipf-like so documents have the
+    /// self-similarity real text does).
+    pub vocab: usize,
+    /// Document length window (inclusive); revisions stay within it.
+    pub min_len: usize,
+    pub max_len: usize,
+    /// Mean number of edit *spans* per revision (heavy-tailed).
+    pub spans_mean: f64,
+    /// Mean tokens per span (heavy-tailed).
+    pub span_len_mean: f64,
+}
+
+impl TraceConfig {
+    /// Mini-scale default mirroring the paper's protocol shape: the paper
+    /// used 1536–2048-token Wikipedia revisions; we default to a 384–512
+    /// window that the VQT-mini config can hold. Span statistics are
+    /// calibrated so the fraction-modified distribution concentrates around
+    /// 0.5–3 % with a heavy tail — the regime Wikipedia edits live in
+    /// (most revisions touch a handful of tokens; a few rewrite sections).
+    pub fn mini() -> TraceConfig {
+        TraceConfig {
+            vocab: 256,
+            min_len: 384,
+            max_len: 512,
+            spans_mean: 1.4,
+            span_len_mean: 3.5,
+        }
+    }
+
+    /// Tiny config for unit tests.
+    pub fn tiny() -> TraceConfig {
+        TraceConfig {
+            vocab: 50,
+            min_len: 24,
+            max_len: 48,
+            spans_mean: 1.5,
+            span_len_mean: 3.0,
+        }
+    }
+}
+
+/// Draw a token with a Zipf-ish rank-frequency profile.
+fn sample_token(cfg: &TraceConfig, rng: &mut Rng) -> u32 {
+    // Mixture: 70 % from the top ~10 % of the vocab, 30 % uniform.
+    if rng.chance(0.7) {
+        let top = (cfg.vocab / 10).max(1);
+        rng.below(top) as u32
+    } else {
+        rng.below(cfg.vocab) as u32
+    }
+}
+
+/// Generate an initial document within the length window.
+pub fn generate_document(cfg: &TraceConfig, rng: &mut Rng) -> Vec<u32> {
+    let n = rng.range(cfg.min_len, cfg.max_len);
+    (0..n).map(|_| sample_token(cfg, rng)).collect()
+}
+
+/// Mutate a document into its next revision. Returns the new revision.
+pub fn next_revision(cfg: &TraceConfig, doc: &[u32], rng: &mut Rng) -> Vec<u32> {
+    let mut v = doc.to_vec();
+    let spans = rng.heavy_count(cfg.spans_mean).min(32);
+    for _ in 0..spans {
+        if v.is_empty() {
+            break;
+        }
+        let span = rng.heavy_count(cfg.span_len_mean).min(v.len() / 2 + 1);
+        let at = rng.below(v.len());
+        match rng.below(3) {
+            0 => {
+                // Replace a span.
+                for i in at..(at + span).min(v.len()) {
+                    v[i] = sample_token(cfg, rng);
+                }
+            }
+            1 => {
+                // Insert a span (respect max_len).
+                let room = cfg.max_len.saturating_sub(v.len());
+                for i in 0..span.min(room) {
+                    v.insert(at + i, sample_token(cfg, rng));
+                }
+            }
+            _ => {
+                // Delete a span (respect min_len).
+                let room = v.len().saturating_sub(cfg.min_len);
+                let k = span.min(room).min(v.len() - at);
+                for _ in 0..k {
+                    v.remove(at);
+                }
+            }
+        }
+    }
+    // Guarantee at least one modification so every pair is a real revision.
+    if v == doc {
+        let at = rng.below(v.len());
+        let mut t = sample_token(cfg, rng);
+        while t == v[at] {
+            t = sample_token(cfg, rng);
+        }
+        v[at] = t;
+    }
+    v
+}
+
+/// A document's revision history.
+#[derive(Clone, Debug)]
+pub struct RevisionTrace {
+    pub revisions: Vec<Vec<u32>>,
+}
+
+impl RevisionTrace {
+    /// Generate a history of `n_revisions` (≥ 2) revisions.
+    pub fn generate(cfg: &TraceConfig, n_revisions: usize, rng: &mut Rng) -> RevisionTrace {
+        assert!(n_revisions >= 2);
+        let mut revisions = Vec::with_capacity(n_revisions);
+        revisions.push(generate_document(cfg, rng));
+        for _ in 1..n_revisions {
+            let next = next_revision(cfg, revisions.last().unwrap(), rng);
+            revisions.push(next);
+        }
+        RevisionTrace { revisions }
+    }
+
+    /// Consecutive revision pairs.
+    pub fn pairs(&self) -> impl Iterator<Item = (&Vec<u32>, &Vec<u32>)> {
+        self.revisions.windows(2).map(|w| (&w[0], &w[1]))
+    }
+}
+
+/// An atomic-edit sample drawn from a revision pair (paper §4, Fig. 4
+/// protocol): `base` is the old revision with all changes *before* the
+/// sampled one already applied; `edit` is the single change to process;
+/// `normalized_pos` is its location divided by the document length.
+#[derive(Clone, Debug)]
+pub struct AtomicSample {
+    pub base: Vec<u32>,
+    pub edit: Edit,
+    pub normalized_pos: f64,
+}
+
+/// Sample one atomic edit from the diff of a revision pair. Returns `None`
+/// if the revisions are identical. `location_window` restricts the
+/// normalized edit location (e.g. `Some((0.0, 0.05))` for Table 2's
+/// "first 5 %" protocol).
+pub fn sample_atomic(
+    old: &[u32],
+    new: &[u32],
+    location_window: Option<(f64, f64)>,
+    rng: &mut Rng,
+) -> Option<AtomicSample> {
+    let script = diff_tokens(old, new);
+    if script.is_empty() {
+        return None;
+    }
+    // Candidate indices honouring the location window.
+    let candidates: Vec<usize> = (0..script.len())
+        .filter(|&i| match location_window {
+            None => true,
+            Some((lo, hi)) => {
+                let pos = script[i].at() as f64 / old.len().max(1) as f64;
+                pos >= lo && pos <= hi
+            }
+        })
+        .collect();
+    if candidates.is_empty() {
+        return None;
+    }
+    let pick = candidates[rng.below(candidates.len())];
+    let base = apply_edits(old, &script[..pick]);
+    let edit = script[pick];
+    let normalized_pos = edit.at() as f64 / base.len().max(1) as f64;
+    Some(AtomicSample {
+        base,
+        edit,
+        normalized_pos,
+    })
+}
+
+/// Fraction of modified tokens between two revisions — Fig. 3's x-axis
+/// (edit distance over mean length).
+pub fn modified_fraction(old: &[u32], new: &[u32]) -> f64 {
+    let d = super::diff::edit_distance(old, new) as f64;
+    let denom = (old.len() + new.len()) as f64 / 2.0;
+    (d / denom.max(1.0)).min(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn documents_in_window() {
+        let cfg = TraceConfig::tiny();
+        let mut r = Rng::new(1);
+        for _ in 0..50 {
+            let d = generate_document(&cfg, &mut r);
+            assert!(d.len() >= cfg.min_len && d.len() <= cfg.max_len);
+            assert!(d.iter().all(|&t| (t as usize) < cfg.vocab));
+        }
+    }
+
+    #[test]
+    fn revisions_stay_in_window_and_differ() {
+        let cfg = TraceConfig::tiny();
+        let mut r = Rng::new(2);
+        let trace = RevisionTrace::generate(&cfg, 20, &mut r);
+        assert_eq!(trace.revisions.len(), 20);
+        for (a, b) in trace.pairs() {
+            assert!(b.len() >= cfg.min_len && b.len() <= cfg.max_len);
+            assert_ne!(a, b, "every revision must modify something");
+        }
+    }
+
+    #[test]
+    fn modified_fraction_spans_a_range() {
+        // The generator must produce both small and large revisions so the
+        // Fig. 3 x-axis is covered.
+        let cfg = TraceConfig::tiny();
+        let mut r = Rng::new(3);
+        let trace = RevisionTrace::generate(&cfg, 120, &mut r);
+        let fracs: Vec<f64> = trace.pairs().map(|(a, b)| modified_fraction(a, b)).collect();
+        let min = fracs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = fracs.iter().cloned().fold(0.0, f64::max);
+        assert!(min < 0.08, "need small revisions, min {min}");
+        assert!(max > 0.15, "need large revisions, max {max}");
+    }
+
+    #[test]
+    fn atomic_sample_is_consistent() {
+        let cfg = TraceConfig::tiny();
+        let mut r = Rng::new(4);
+        let trace = RevisionTrace::generate(&cfg, 30, &mut r);
+        let mut found = 0;
+        for (a, b) in trace.pairs() {
+            if let Some(s) = sample_atomic(a, b, None, &mut r) {
+                found += 1;
+                // Applying the sampled edit to base must move strictly
+                // toward `b`: base+edit equals applying prefix+1 of script.
+                let after = apply_edits(&s.base, &[s.edit]);
+                assert_ne!(after, s.base);
+                assert!((0.0..=1.0).contains(&s.normalized_pos));
+            }
+        }
+        assert!(found >= 25);
+    }
+
+    #[test]
+    fn atomic_sample_respects_window() {
+        let cfg = TraceConfig::tiny();
+        let mut r = Rng::new(5);
+        let mut checked = 0;
+        for _ in 0..50 {
+            let a = generate_document(&cfg, &mut r);
+            let b = next_revision(&cfg, &a, &mut r);
+            if let Some(s) = sample_atomic(&a, &b, Some((0.0, 0.3)), &mut r) {
+                // The *pre-application* location was within the window of
+                // the old doc; allow slack from prefix application shifts.
+                assert!(s.normalized_pos <= 0.45, "pos {}", s.normalized_pos);
+                checked += 1;
+            }
+        }
+        assert!(checked > 0);
+    }
+}

@@ -1,0 +1,1531 @@
+//! The incremental VQT inference engine — the paper's core contribution.
+//!
+//! Holds the per-layer state of one document and updates it under edits
+//! with cost proportional to the edit's effect, not the document length:
+//!
+//! - **Per-location reuse** (§3.2): a row's block output is a pure function
+//!   of its residual-stream input and its VQ code; unchanged ⇒ reused.
+//! - **Attention deltas** (App. A.1): with element-wise σ instead of
+//!   softmax, a changed key/value at column j contributes an exact
+//!   correction term `±σ(q_i·k_j·s)·v_j` to every later row i — no
+//!   renormalization, unlike softmax.
+//! - **VQ cost hiding** (App. A.2): attention outputs are maintained
+//!   directly in *VQ score space*. Per row we keep
+//!   `acc[i] = ⟨Σ_j σ_h(q_i,k_j)·v_j, C⟩`, exploiting linearity of the
+//!   codebook projection: corrections update `acc` with the precomputed
+//!   per-attention-head projections `⟨v_j|_h, C⟩` in O(n_heads·q) and
+//!   re-assignment is a scale+bias+argmax — the d-dimensional attention
+//!   accumulator never materializes.
+//! - **Insert/delete** (§3.3): sampled positional embeddings with gaps; a
+//!   gap-exhausted insert triggers defragmentation (full rebuild), counted
+//!   in the stats and in the FLOP ledger (the amortized-cost story is
+//!   reported honestly by the benches).
+//!
+//! Head-alignment requirement: each attention head's value slice must lie
+//! inside a single VQ chunk, i.e. `n_heads % vq_heads == 0` — checked at
+//! construction. (`vq_heads=2, n_heads=4`: heads {0,1} ↦ chunk 0, {2,3} ↦
+//! chunk 1.)
+
+use crate::config::AttentionKind;
+use crate::edits::Edit;
+use crate::flops::{self, Cat, FlopLedger, MULADD, TRANSCENDENTAL};
+use crate::model::{attn_out_scale, dense_forward, ModelWeights};
+use crate::positions::{InsertOutcome, PositionAllocator};
+use crate::tensor;
+use crate::vq::CodeTuple;
+use std::sync::Arc;
+
+use super::rowstore::RowStore;
+
+/// Engine tuning knobs (ablation surface).
+#[derive(Clone, Copy, Debug)]
+pub struct EngineOptions {
+    /// Use the App. A.2 score-space trick. When false, the engine maintains
+    /// the d-dimensional attention accumulator and re-quantizes touched
+    /// rows from scratch (the naive exact variant, for the ablation bench).
+    pub score_trick: bool,
+    /// After this many edits, self-verify against a dense recompute and
+    /// rebuild on drift (0 = never).
+    pub verify_every: usize,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        EngineOptions {
+            score_trick: true,
+            verify_every: 0,
+        }
+    }
+}
+
+/// Lifetime statistics.
+#[derive(Clone, Debug, Default)]
+pub struct EngineStats {
+    pub edits_applied: u64,
+    pub defrags: u64,
+    pub full_rebuilds: u64,
+    /// Rows whose attention was recomputed in full.
+    pub rows_recomputed: u64,
+    /// Column-correction terms applied to clean rows.
+    pub corrections: u64,
+    /// VQ code changes observed (dirty propagation across layers).
+    pub code_flips: u64,
+    /// Rows whose block output was recomputed.
+    pub outputs_recomputed: u64,
+    pub verifications: u64,
+}
+
+/// Result of one edit (or edit-script) application.
+#[derive(Clone, Debug)]
+pub struct EditReport {
+    /// Arithmetic operations spent.
+    pub flops: u64,
+    /// Classifier logits afterwards.
+    pub logits: Vec<f32>,
+    /// Whether a defrag (full rebuild) happened.
+    pub defragged: bool,
+}
+
+/// Dense-recompute comparison (the exactness check).
+#[derive(Clone, Debug)]
+pub struct VerifyReport {
+    pub max_logit_diff: f32,
+    pub max_hidden_diff: f32,
+    pub code_mismatches: usize,
+    pub total_codes: usize,
+}
+
+impl VerifyReport {
+    pub fn is_exact(&self, tol: f32) -> bool {
+        self.code_mismatches == 0 && self.max_logit_diff <= tol
+    }
+}
+
+/// Per-layer cached state (one entry per sequence row throughout).
+#[derive(Clone, Debug)]
+struct LayerState {
+    /// Residual-stream input to the block — (n, d).
+    x: RowStore,
+    /// Post-LN1 projections — (n, d) each.
+    q: RowStore,
+    k: RowStore,
+    v: RowStore,
+    /// Per-attention-head codebook projections ⟨v|_h, C⟩ — (n, n_heads·q)
+    /// (score trick only; zero-width otherwise).
+    vc: RowStore,
+    /// Attention accumulator: score space (n, vq_heads·q) with the trick,
+    /// value space (n, d) without.
+    acc: RowStore,
+    /// Current VQ code per row.
+    codes: Vec<CodeTuple>,
+}
+
+/// A pending change to attention column `j` within a layer.
+enum ColChange {
+    /// k/v at j changed: carries the previous key and value-projection.
+    Modified {
+        j: usize,
+        k_old: Vec<f32>,
+        val_old: Vec<f32>,
+    },
+    /// New column inserted at j (the new row recomputes itself fully).
+    Added { j: usize },
+    /// Column removed: carries the removed key and value-projection.
+    Removed {
+        j: usize,
+        k_old: Vec<f32>,
+        val_old: Vec<f32>,
+    },
+}
+
+/// The incremental inference engine for one document session.
+#[derive(Clone)]
+pub struct IncrementalEngine {
+    w: Arc<ModelWeights>,
+    opts: EngineOptions,
+    tokens: Vec<u32>,
+    positions: PositionAllocator,
+    layers: Vec<LayerState>,
+    /// Final hidden states (post ln_f) per row — (n, d).
+    final_hidden: RowStore,
+    /// Running sum of final hidden rows (mean-pool numerator).
+    pooled_sum: Vec<f32>,
+    logits: Vec<f32>,
+    /// Reusable hot-path scratch (row_output / qkv_row temporaries).
+    scratch: Scratch,
+    pub ledger: FlopLedger,
+    pub stats: EngineStats,
+}
+
+/// Per-engine scratch buffers — avoids per-row allocations on hot paths.
+#[derive(Clone, Default)]
+struct Scratch {
+    a: Vec<f32>,
+    b: Vec<f32>,
+    c: Vec<f32>,
+    mid: Vec<f32>,
+}
+
+impl IncrementalEngine {
+    /// Create an engine and build the full state for `tokens`.
+    pub fn new(w: Arc<ModelWeights>, tokens: &[u32], opts: EngineOptions) -> Self {
+        let cfg = &w.cfg;
+        assert_eq!(
+            cfg.attention,
+            AttentionKind::GeluElementwise,
+            "incremental inference requires element-wise attention (paper §3)"
+        );
+        assert!(cfg.vq_heads > 0, "incremental inference requires VQ layers");
+        assert_eq!(
+            cfg.n_heads % cfg.vq_heads,
+            0,
+            "n_heads must be a multiple of vq_heads for score-space updates"
+        );
+        let d = cfg.d_model;
+        let hq = cfg.vq_heads * cfg.vq_codes;
+        let (vc_w, acc_w) = if opts.score_trick {
+            (cfg.n_heads * cfg.vq_codes, hq)
+        } else {
+            (0, d)
+        };
+        let layers = (0..cfg.n_layers)
+            .map(|_| LayerState {
+                x: RowStore::new(d),
+                q: RowStore::new(d),
+                k: RowStore::new(d),
+                v: RowStore::new(d),
+                vc: RowStore::new(vc_w),
+                acc: RowStore::new(acc_w),
+                codes: Vec::new(),
+            })
+            .collect();
+        let mut eng = IncrementalEngine {
+            positions: PositionAllocator::spread(w.cfg.pos_pool, tokens.len()),
+            w,
+            opts,
+            tokens: tokens.to_vec(),
+            layers,
+            final_hidden: RowStore::new(d),
+            pooled_sum: vec![0.0; d],
+            logits: vec![],
+            scratch: Scratch::default(),
+            ledger: FlopLedger::new(),
+            stats: EngineStats::default(),
+        };
+        eng.rebuild();
+        eng
+    }
+
+    pub fn tokens(&self) -> &[u32] {
+        &self.tokens
+    }
+
+    pub fn position_ids(&self) -> &[u32] {
+        self.positions.ids()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    pub fn logits(&self) -> &[f32] {
+        &self.logits
+    }
+
+    pub fn predict(&self) -> usize {
+        tensor::argmax(&self.logits)
+    }
+
+    pub fn weights(&self) -> &Arc<ModelWeights> {
+        &self.w
+    }
+
+    /// Fork an independent copy with fresh counters (offline batch: one
+    /// fork per revision — the shared base state is the compressed-batch
+    /// reuse of §3.1).
+    pub fn fork(&self) -> IncrementalEngine {
+        let mut c = self.clone();
+        c.ledger = FlopLedger::new();
+        c.stats = EngineStats::default();
+        c
+    }
+
+    // ------------------------------------------------------------------
+    // Full build
+    // ------------------------------------------------------------------
+
+    /// Rebuild all state from `self.tokens` / `self.positions` (session
+    /// start and defragmentation). Costs a full forward pass, on-ledger.
+    pub fn rebuild(&mut self) {
+        self.stats.full_rebuilds += 1;
+        let cfg = self.w.cfg.clone();
+        let n = self.tokens.len();
+        assert!(n <= cfg.max_seq, "document exceeds max_seq");
+        assert_eq!(self.positions.len(), n);
+        let d = cfg.d_model;
+
+        for l in &mut self.layers {
+            l.x.clear();
+            l.q.clear();
+            l.k.clear();
+            l.v.clear();
+            l.vc.clear();
+            l.acc.clear();
+            l.codes.clear();
+        }
+        self.final_hidden.clear();
+        self.pooled_sum = vec![0.0; d];
+
+        let pos = self.positions.ids().to_vec();
+        let mut x_rows: Vec<Vec<f32>> = (0..n)
+            .map(|i| self.embed_row(self.tokens[i], pos[i]))
+            .collect();
+
+        for li in 0..cfg.n_layers {
+            for x in x_rows.iter().take(n) {
+                let (q, k, v) = self.qkv_row(li, x);
+                let vc = self.project_value(li, &v);
+                let layer = &mut self.layers[li];
+                layer.x.push_row(x);
+                layer.q.push_row(&q);
+                layer.k.push_row(&k);
+                layer.v.push_row(&v);
+                layer.vc.push_row(&vc);
+            }
+            for (i, x) in x_rows.iter_mut().enumerate() {
+                let acc = self.attn_full_row(li, i);
+                self.layers[li].acc.push_row(&acc);
+                let code = self.assign_code(li, &acc);
+                self.layers[li].codes.push(code);
+                *x = self.row_output(li, x, code);
+            }
+        }
+
+        for x in &x_rows {
+            let h = self.final_row(x);
+            tensor::axpy(1.0, &h, &mut self.pooled_sum);
+            self.final_hidden.push_row(&h);
+        }
+        self.ledger.add(Cat::Elementwise, (n * d) as u64);
+        self.recompute_logits();
+    }
+
+    // ------------------------------------------------------------------
+    // Primitive computations (each ticks the ledger with its actual cost)
+    // ------------------------------------------------------------------
+
+    fn embed_row(&mut self, tok: u32, pos: u32) -> Vec<f32> {
+        let d = self.w.cfg.d_model;
+        let te = self.w.embed_tokens.row(tok as usize);
+        let pe = self.w.embed_pos.row(pos as usize);
+        let out = te.iter().zip(pe).map(|(a, b)| a + b).collect();
+        self.ledger.add(Cat::Embed, 2 * d as u64);
+        out
+    }
+
+    /// LN1 + QKV projections for one row (scratch-buffered).
+    fn qkv_row(&mut self, li: usize, x: &[f32]) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let w = Arc::clone(&self.w);
+        let layer = &w.layers[li];
+        let cfg = &w.cfg;
+        let d = cfg.d_model;
+        let h = &mut self.scratch.a;
+        h.resize(d, 0.0);
+        tensor::layernorm_into(x, &layer.ln1_g, &layer.ln1_b, cfg.ln_eps, h);
+        let (mut q, mut k, mut v) = (vec![0.0; d], vec![0.0; d], vec![0.0; d]);
+        tensor::vec_matmul_into(h, &layer.wq, &mut q);
+        tensor::vec_matmul_into(h, &layer.wk, &mut k);
+        tensor::vec_matmul_into(h, &layer.wv, &mut v);
+        for i in 0..d {
+            q[i] += layer.bq[i];
+            k[i] += layer.bk[i];
+            v[i] += layer.bv[i];
+        }
+        self.ledger.add(Cat::Elementwise, flops::layernorm_cost(d));
+        self.ledger.add(Cat::Linear, MULADD * (3 * d * d) as u64);
+        (q, k, v)
+    }
+
+    /// Per-attention-head codebook projections of a value row:
+    /// `out[h·q + c] = ⟨v|_h , C_{g(h)}[c]|_h⟩` where g(h) is the VQ chunk
+    /// containing head h and the codeword is restricted to head h's slice.
+    /// Empty when the trick is off.
+    fn project_value(&mut self, li: usize, v: &[f32]) -> Vec<f32> {
+        if !self.opts.score_trick {
+            return Vec::new();
+        }
+        let w = Arc::clone(&self.w);
+        let vq = w.layers[li].vq.as_ref().unwrap();
+        let cfg = &w.cfg;
+        let nh = cfg.n_heads;
+        let dh = cfg.d_head();
+        let chunk = vq.chunk();
+        let mut out = vec![0.0; nh * vq.codes];
+        for h in 0..nh {
+            let g = h * vq.heads / nh; // VQ chunk containing head h
+            let off_in_chunk = h * dh - g * chunk;
+            let vh = &v[h * dh..(h + 1) * dh];
+            let book = &vq.books[g];
+            for c in 0..vq.codes {
+                let cw = &book.row(c)[off_in_chunk..off_in_chunk + dh];
+                out[h * vq.codes + c] = tensor::dot(vh, cw);
+            }
+        }
+        // nh · q dots of width d_head ⇒ d·q muladds total.
+        self.ledger
+            .add(Cat::Vq, MULADD * (cfg.d_model * vq.codes) as u64);
+        out
+    }
+
+    /// Unified correction sweep: apply one column change (optional old
+    /// term to subtract, optional new column to add) to every clean row in
+    /// `range`. Allocation-free inner loop; ledger ticked in bulk.
+    /// Returns the number of corrected rows.
+    fn correct_rows(
+        &mut self,
+        li: usize,
+        range: std::ops::Range<usize>,
+        row_dirty: &[bool],
+        old: Option<(&[f32], &[f32])>,
+        new_j: Option<usize>,
+        mut acc_touched: Option<&mut Vec<bool>>,
+    ) -> u64 {
+        let cfg = &self.w.cfg;
+        let (nh, dh, d) = (cfg.n_heads, cfg.d_head(), cfg.d_model);
+        let scale = 1.0 / (dh as f32).sqrt();
+        let trick = self.opts.score_trick;
+        let (vqh, codes) = if trick {
+            let vq = self.w.layers[li].vq.as_ref().unwrap();
+            (vq.heads, vq.codes)
+        } else {
+            (0, 0)
+        };
+        let mut coeffs = [0f32; 16];
+        debug_assert!(nh <= 16);
+        let mut count = 0u64;
+        {
+            let layer = &mut self.layers[li];
+            let newkv = new_j.map(|j| {
+                (
+                    layer.k.copy_row(j),
+                    if trick {
+                        layer.vc.copy_row(j)
+                    } else {
+                        layer.v.copy_row(j)
+                    },
+                )
+            });
+            for i in range {
+                if row_dirty[i] {
+                    continue;
+                }
+                let q = layer.q.row(i);
+                let acc = layer.acc.row_mut(i);
+                if let Some((k_old, val_old)) = old {
+                    head_coeffs_raw(q, k_old, nh, dh, scale, &mut coeffs);
+                    apply_term_raw(acc, &coeffs[..nh], val_old, -1.0, trick, vqh, codes, dh);
+                }
+                if let Some((k_new, val_new)) = &newkv {
+                    head_coeffs_raw(q, k_new, nh, dh, scale, &mut coeffs);
+                    apply_term_raw(acc, &coeffs[..nh], val_new, 1.0, trick, vqh, codes, dh);
+                }
+                if let Some(t) = acc_touched.as_deref_mut() {
+                    t[i] = true;
+                }
+                count += 1;
+            }
+        }
+        // Bulk accounting: per corrected row, per term: q·k (d muladds) +
+        // per-head scale/σ, plus the score-space (h·q) or value-space (d)
+        // accumulate.
+        let terms = (old.is_some() as u64) + (new_j.is_some() as u64);
+        let per_coeff = MULADD * d as u64 + (nh as u64) * (1 + TRANSCENDENTAL);
+        let per_acc = if trick {
+            MULADD * (nh * codes) as u64
+        } else {
+            MULADD * d as u64
+        };
+        self.ledger
+            .add(Cat::Attention, count * terms * per_coeff);
+        self.ledger.add(
+            if trick { Cat::Vq } else { Cat::Attention },
+            count * terms * per_acc,
+        );
+        self.stats.corrections += count;
+        count
+    }
+
+    /// Full attention accumulator for row i (over all visible columns).
+    /// Allocation-free per column; ledger ticked in bulk.
+    fn attn_full_row(&mut self, li: usize, i: usize) -> Vec<f32> {
+        self.stats.rows_recomputed += 1;
+        let cfg = &self.w.cfg;
+        let (nh, dh, d) = (cfg.n_heads, cfg.d_head(), cfg.d_model);
+        let scale = 1.0 / (dh as f32).sqrt();
+        let trick = self.opts.score_trick;
+        let (vqh, codes) = if trick {
+            let vq = self.w.layers[li].vq.as_ref().unwrap();
+            (vq.heads, vq.codes)
+        } else {
+            (0, 0)
+        };
+        let layer = &self.layers[li];
+        let width = layer.acc.cols;
+        let mut acc = vec![0.0; width];
+        let q = layer.q.row(i);
+        let mut coeffs = [0f32; 16];
+        debug_assert!(nh <= 16);
+        for j in 0..=i {
+            let k = layer.k.row(j);
+            head_coeffs_raw(q, k, nh, dh, scale, &mut coeffs);
+            let val = if trick { layer.vc.row(j) } else { layer.v.row(j) };
+            apply_term_raw(&mut acc, &coeffs[..nh], val, 1.0, trick, vqh, codes, dh);
+        }
+        let per_coeff = MULADD * d as u64 + (nh as u64) * (1 + TRANSCENDENTAL);
+        let per_acc = if trick {
+            MULADD * (nh * codes) as u64
+        } else {
+            MULADD * d as u64
+        };
+        let c = (i + 1) as u64;
+        self.ledger.add(Cat::Attention, c * per_coeff);
+        self.ledger
+            .add(if trick { Cat::Vq } else { Cat::Attention }, c * per_acc);
+        acc
+    }
+
+    /// VQ assignment from an accumulator.
+    fn assign_code(&mut self, li: usize, acc: &[f32]) -> CodeTuple {
+        let w = Arc::clone(&self.w);
+        let vq = w.layers[li].vq.as_ref().unwrap();
+        let out_scale = attn_out_scale(w.cfg.max_seq);
+        if self.opts.score_trick {
+            // biased[k] = acc[k]·scale + b[k]; argmax per VQ head.
+            let mut biased = vec![0.0; acc.len()];
+            for h in 0..vq.heads {
+                for c in 0..vq.codes {
+                    let k = h * vq.codes + c;
+                    biased[k] = acc[k] * out_scale + vq.bias[h][c];
+                }
+            }
+            self.ledger.add(Cat::Vq, MULADD * acc.len() as u64);
+            vq.codes_from_scores(&biased, &mut self.ledger)
+        } else {
+            let scaled: Vec<f32> = acc.iter().map(|x| x * out_scale).collect();
+            self.ledger.add(Cat::Vq, acc.len() as u64);
+            vq.assign(&scaled, &mut self.ledger)
+        }
+    }
+
+    /// Block tail for one row: VQ-decode(code) → mix → residual → LN2 →
+    /// FFN → residual. Pure function of (x, code) — the paper's reuse unit.
+    /// Scratch-buffered: zero allocations beyond the returned vector.
+    fn row_output(&mut self, li: usize, x: &[f32], code: CodeTuple) -> Vec<f32> {
+        self.stats.outputs_recomputed += 1;
+        let w = Arc::clone(&self.w);
+        let layer = &w.layers[li];
+        let cfg = &w.cfg;
+        let d = cfg.d_model;
+        let vq = layer.vq.as_ref().unwrap();
+        let sc = &mut self.scratch;
+        sc.a.resize(d, 0.0);
+        sc.b.resize(d, 0.0);
+        sc.c.resize(d, 0.0);
+        sc.mid.resize(cfg.d_ff, 0.0);
+        vq.decode_into(code, &mut sc.a);
+        self.ledger.add(Cat::Bookkeeping, d as u64);
+        tensor::vec_matmul_into(&sc.a, &layer.w_mix, &mut sc.b);
+        // y (residual 1) in sc.c
+        for i in 0..d {
+            sc.c[i] = x[i] + sc.b[i] + layer.b_mix[i];
+        }
+        tensor::layernorm_into(&sc.c, &layer.ln2_g, &layer.ln2_b, cfg.ln_eps, &mut sc.a);
+        tensor::vec_matmul_into(&sc.a, &layer.w_ff1, &mut sc.mid);
+        for (m, &b) in sc.mid.iter_mut().zip(&layer.b_ff1) {
+            *m += b;
+        }
+        tensor::gelu_slice(&mut sc.mid);
+        let mut out = vec![0.0; d];
+        tensor::vec_matmul_into(&sc.mid, &layer.w_ff2, &mut out);
+        for i in 0..d {
+            out[i] += layer.b_ff2[i] + sc.c[i];
+        }
+        self.ledger
+            .add(Cat::Linear, MULADD * (d * d + 2 * d * cfg.d_ff) as u64);
+        self.ledger.add(
+            Cat::Elementwise,
+            flops::layernorm_cost(d) + cfg.d_ff as u64 * TRANSCENDENTAL + 2 * d as u64,
+        );
+        out
+    }
+
+    fn final_row(&mut self, x: &[f32]) -> Vec<f32> {
+        let w = Arc::clone(&self.w);
+        let d = w.cfg.d_model;
+        let mut h = vec![0.0; d];
+        tensor::layernorm_into(x, &w.lnf_g, &w.lnf_b, w.cfg.ln_eps, &mut h);
+        self.ledger.add(Cat::Elementwise, flops::layernorm_cost(d));
+        h
+    }
+
+    fn recompute_logits(&mut self) {
+        let w = Arc::clone(&self.w);
+        let cfg = &w.cfg;
+        let d = cfg.d_model;
+        let n = self.tokens.len().max(1);
+        let inv = 1.0 / n as f32;
+        let pooled: Vec<f32> = self.pooled_sum.iter().map(|s| s * inv).collect();
+        let mut logits = vec![0.0; cfg.n_classes];
+        tensor::vec_matmul_into(&pooled, &w.w_cls, &mut logits);
+        for (l, &b) in logits.iter_mut().zip(&w.b_cls) {
+            *l += b;
+        }
+        self.ledger
+            .add(Cat::Linear, d as u64 + MULADD * (d * cfg.n_classes) as u64);
+        self.logits = logits;
+    }
+
+    // ------------------------------------------------------------------
+    // Incremental edit application
+    // ------------------------------------------------------------------
+
+    /// Apply one edit incrementally. Cost ∝ affected rows, not document
+    /// length (modulo defragmentation).
+    pub fn apply_edit(&mut self, edit: Edit) -> EditReport {
+        let snapshot = self.ledger.clone();
+        self.stats.edits_applied += 1;
+
+        let change0: ChangeSet = match edit {
+            Edit::Replace { at, tok } => {
+                assert!(at < self.tokens.len(), "replace out of bounds");
+                self.tokens[at] = tok;
+                let pos = self.positions.ids()[at];
+                let emb = self.embed_row(tok, pos);
+                ChangeSet::modified(at, emb)
+            }
+            Edit::Insert { at, tok } => {
+                assert!(at <= self.tokens.len(), "insert out of bounds");
+                assert!(self.tokens.len() < self.w.cfg.max_seq, "document full");
+                match self.positions.insert(at) {
+                    InsertOutcome::InGap(p) => {
+                        self.tokens.insert(at, tok);
+                        let emb = self.embed_row(tok, p);
+                        ChangeSet::inserted(at, emb)
+                    }
+                    InsertOutcome::Defragged(_) => {
+                        self.tokens.insert(at, tok);
+                        self.stats.defrags += 1;
+                        self.rebuild();
+                        return EditReport {
+                            flops: self.ledger.since(&snapshot).total(),
+                            logits: self.logits.clone(),
+                            defragged: true,
+                        };
+                    }
+                }
+            }
+            Edit::Delete { at } => {
+                assert!(at < self.tokens.len(), "delete out of bounds");
+                assert!(self.tokens.len() > 1, "cannot delete the last token");
+                self.tokens.remove(at);
+                self.positions.remove(at);
+                ChangeSet::deleted(at)
+            }
+        };
+
+        let mut change = change0;
+        for li in 0..self.w.cfg.n_layers {
+            change = self.apply_layer(li, change);
+        }
+        self.apply_classifier(change);
+
+        if self.opts.verify_every > 0
+            && self.stats.edits_applied % self.opts.verify_every as u64 == 0
+        {
+            self.stats.verifications += 1;
+            let rep = self.verify();
+            if !rep.is_exact(1e-3) {
+                log::warn!(
+                    "incremental drift (max logit diff {:.2e}, {} code mismatches) — rebuilding",
+                    rep.max_logit_diff,
+                    rep.code_mismatches
+                );
+                self.rebuild();
+            }
+        }
+
+        EditReport {
+            flops: self.ledger.since(&snapshot).total(),
+            logits: self.logits.clone(),
+            defragged: false,
+        }
+    }
+
+    /// Apply a whole edit script.
+    pub fn apply_edits(&mut self, edits: &[Edit]) -> EditReport {
+        let snapshot = self.ledger.clone();
+        let mut defragged = false;
+        for &e in edits {
+            defragged |= self.apply_edit(e).defragged;
+        }
+        EditReport {
+            flops: self.ledger.since(&snapshot).total(),
+            logits: self.logits.clone(),
+            defragged,
+        }
+    }
+
+    /// One layer's incremental update; returns the next layer's change set.
+    fn apply_layer(&mut self, li: usize, change: ChangeSet) -> ChangeSet {
+        let score_trick = self.opts.score_trick;
+        let mut col_changes: Vec<ColChange> = Vec::new();
+
+        // --- 1. structural + input updates ---------------------------------
+        match change.structural {
+            Some(Structural::Inserted(at)) => {
+                let new_x = change
+                    .rows
+                    .iter()
+                    .find(|(r, _)| *r == at)
+                    .map(|(_, v)| v.clone())
+                    .expect("inserted row must carry its input");
+                let (q, k, v) = self.qkv_row(li, &new_x);
+                let vc = self.project_value(li, &v);
+                let vq_heads = self.w.cfg.vq_heads;
+                let layer = &mut self.layers[li];
+                layer.x.insert_row(at, &new_x);
+                layer.q.insert_row(at, &q);
+                layer.k.insert_row(at, &k);
+                layer.v.insert_row(at, &v);
+                if score_trick {
+                    layer.vc.insert_row(at, &vc);
+                }
+                let accw = layer.acc.cols;
+                layer.acc.insert_row(at, &vec![0.0; accw]);
+                layer.codes.insert(at, CodeTuple::new(&vec![0; vq_heads]));
+                col_changes.push(ColChange::Added { j: at });
+            }
+            Some(Structural::Deleted(at)) => {
+                let layer = &mut self.layers[li];
+                layer.x.remove_row(at);
+                layer.q.remove_row(at);
+                let k_old = layer.k.remove_row(at);
+                let v_old = layer.v.remove_row(at);
+                let vc_old = if score_trick {
+                    layer.vc.remove_row(at)
+                } else {
+                    Vec::new()
+                };
+                layer.acc.remove_row(at);
+                layer.codes.remove(at);
+                let val_old = if score_trick { vc_old } else { v_old };
+                col_changes.push(ColChange::Removed { j: at, k_old, val_old });
+            }
+            None => {}
+        }
+        for (r, new_x) in &change.rows {
+            let r = *r;
+            if change.structural == Some(Structural::Inserted(r)) {
+                continue; // handled above
+            }
+            let k_old = self.layers[li].k.copy_row(r);
+            let val_old = if score_trick {
+                self.layers[li].vc.copy_row(r)
+            } else {
+                self.layers[li].v.copy_row(r)
+            };
+            let (q, k, v) = self.qkv_row(li, new_x);
+            let vc = self.project_value(li, &v);
+            let layer = &mut self.layers[li];
+            layer.x.row_mut(r).copy_from_slice(new_x);
+            layer.q.row_mut(r).copy_from_slice(&q);
+            layer.k.row_mut(r).copy_from_slice(&k);
+            layer.v.row_mut(r).copy_from_slice(&v);
+            if score_trick {
+                layer.vc.row_mut(r).copy_from_slice(&vc);
+            }
+            col_changes.push(ColChange::Modified { j: r, k_old, val_old });
+        }
+
+        // --- 2. attention updates -------------------------------------------
+        let n = self.layers[li].x.rows();
+        let mut row_dirty = vec![false; n];
+        for cc in &col_changes {
+            match cc {
+                ColChange::Modified { j, .. } | ColChange::Added { j } => row_dirty[*j] = true,
+                ColChange::Removed { .. } => {}
+            }
+        }
+        let mut acc_touched = vec![false; n];
+        for cc in &col_changes {
+            match cc {
+                ColChange::Modified { j, k_old, val_old } => {
+                    self.correct_rows(
+                        li,
+                        *j..n,
+                        &row_dirty,
+                        Some((k_old, val_old)),
+                        Some(*j),
+                        Some(&mut acc_touched),
+                    );
+                }
+                ColChange::Added { j } => {
+                    self.correct_rows(
+                        li,
+                        (*j + 1)..n,
+                        &row_dirty,
+                        None,
+                        Some(*j),
+                        Some(&mut acc_touched),
+                    );
+                }
+                ColChange::Removed { j, k_old, val_old } => {
+                    // Rows now at index ≥ j were at ≥ j+1 and saw column j.
+                    self.correct_rows(
+                        li,
+                        *j..n,
+                        &row_dirty,
+                        Some((k_old, val_old)),
+                        None,
+                        Some(&mut acc_touched),
+                    );
+                }
+            }
+        }
+        for i in 0..n {
+            if row_dirty[i] {
+                let acc = self.attn_full_row(li, i);
+                self.layers[li].acc.row_mut(i).copy_from_slice(&acc);
+                acc_touched[i] = true;
+            }
+        }
+
+        // --- 3. re-assignment + output recompute -----------------------------
+        let mut next = ChangeSet::carry_structural(&change);
+        for i in 0..n {
+            let input_changed = change.row_changed(i);
+            if !acc_touched[i] && !input_changed {
+                continue;
+            }
+            let acc = self.layers[li].acc.copy_row(i);
+            let new_code = self.assign_code(li, &acc);
+            let code_changed = new_code != self.layers[li].codes[i];
+            if code_changed {
+                self.stats.code_flips += 1;
+                self.layers[li].codes[i] = new_code;
+            }
+            if input_changed || code_changed {
+                let x = self.layers[li].x.copy_row(i);
+                let out = self.row_output(li, &x, new_code);
+                next.rows.push((i, out));
+            }
+        }
+        next
+    }
+
+    // ------------------------------------------------------------------
+    // Classifier maintenance
+    // ------------------------------------------------------------------
+
+    fn apply_classifier(&mut self, change: ChangeSet) {
+        let d = self.w.cfg.d_model;
+        match change.structural {
+            Some(Structural::Inserted(at)) => {
+                self.final_hidden.insert_row(at, &vec![0.0; d]);
+            }
+            Some(Structural::Deleted(at)) => {
+                let old = self.final_hidden.remove_row(at);
+                tensor::axpy(-1.0, &old, &mut self.pooled_sum);
+                self.ledger.add(Cat::Elementwise, d as u64);
+            }
+            None => {}
+        }
+        for (r, new_x) in &change.rows {
+            let h = self.final_row(new_x);
+            let old = self.final_hidden.copy_row(*r);
+            for ((s, &o), &nv) in self.pooled_sum.iter_mut().zip(&old).zip(&h) {
+                *s += nv - o;
+            }
+            self.ledger.add(Cat::Elementwise, 2 * d as u64);
+            self.final_hidden.row_mut(*r).copy_from_slice(&h);
+        }
+        self.recompute_logits();
+    }
+
+    // ------------------------------------------------------------------
+    // Verification
+    // ------------------------------------------------------------------
+
+    /// Compare against a from-scratch dense recompute (the exactness
+    /// claim, modulo f32 accumulation order).
+    pub fn verify(&self) -> VerifyReport {
+        let mut led = FlopLedger::new();
+        let dense = dense_forward(&self.w, &self.tokens, self.positions.ids(), &mut led);
+        let mut max_logit = 0f32;
+        for (a, b) in self.logits.iter().zip(&dense.logits) {
+            max_logit = max_logit.max((a - b).abs());
+        }
+        let (mut mism, mut total) = (0, 0);
+        for li in 0..self.w.cfg.n_layers {
+            for (a, b) in self.layers[li].codes.iter().zip(&dense.codes[li]) {
+                total += 1;
+                if a != b {
+                    mism += 1;
+                }
+            }
+        }
+        let mut max_hidden = 0f32;
+        for i in 0..self.tokens.len() {
+            for (a, b) in self.final_hidden.row(i).iter().zip(dense.hidden.row(i)) {
+                max_hidden = max_hidden.max((a - b).abs());
+            }
+        }
+        VerifyReport {
+            max_logit_diff: max_logit,
+            max_hidden_diff: max_hidden,
+            code_mismatches: mism,
+            total_codes: total,
+        }
+    }
+}
+
+
+/// Per-head σ(q·k·s) coefficients — hot-path variant with a fixed-size
+/// output buffer and no ledger (callers account in bulk).
+#[inline]
+fn head_coeffs_raw(q: &[f32], k: &[f32], nh: usize, dh: usize, scale: f32, out: &mut [f32; 16]) {
+    for h in 0..nh {
+        let s = tensor::dot(&q[h * dh..(h + 1) * dh], &k[h * dh..(h + 1) * dh]) * scale;
+        out[h] = tensor::gelu_scalar(s);
+    }
+}
+
+/// `acc ±= Σ_h coeffs[h] · val_h` — score space (trick: per-head codebook
+/// projections landing in their VQ chunk segment) or value space.
+#[inline]
+fn apply_term_raw(
+    acc: &mut [f32],
+    coeffs: &[f32],
+    val: &[f32],
+    sign: f32,
+    trick: bool,
+    vq_heads: usize,
+    codes: usize,
+    dh: usize,
+) {
+    let nh = coeffs.len();
+    if trick {
+        for (h, &c) in coeffs.iter().enumerate() {
+            if c == 0.0 {
+                continue;
+            }
+            let g = h * vq_heads / nh;
+            let seg = &val[h * codes..(h + 1) * codes];
+            let dst = &mut acc[g * codes..(g + 1) * codes];
+            tensor::axpy(sign * c, seg, dst);
+        }
+    } else {
+        for (h, &c) in coeffs.iter().enumerate() {
+            if c == 0.0 {
+                continue;
+            }
+            let seg = &val[h * dh..(h + 1) * dh];
+            let dst = &mut acc[h * dh..(h + 1) * dh];
+            tensor::axpy(sign * c, seg, dst);
+        }
+    }
+}
+
+/// Rows whose input hidden vector changed this layer (with new values),
+/// plus at most one structural op per edit.
+struct ChangeSet {
+    rows: Vec<(usize, Vec<f32>)>,
+    structural: Option<Structural>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Structural {
+    Inserted(usize),
+    Deleted(usize),
+}
+
+impl ChangeSet {
+    fn modified(at: usize, x: Vec<f32>) -> ChangeSet {
+        ChangeSet {
+            rows: vec![(at, x)],
+            structural: None,
+        }
+    }
+
+    fn inserted(at: usize, x: Vec<f32>) -> ChangeSet {
+        ChangeSet {
+            rows: vec![(at, x)],
+            structural: Some(Structural::Inserted(at)),
+        }
+    }
+
+    fn deleted(at: usize) -> ChangeSet {
+        ChangeSet {
+            rows: vec![],
+            structural: Some(Structural::Deleted(at)),
+        }
+    }
+
+    fn carry_structural(prev: &ChangeSet) -> ChangeSet {
+        ChangeSet {
+            rows: vec![],
+            structural: prev.structural,
+        }
+    }
+
+    fn row_changed(&self, i: usize) -> bool {
+        self.rows.iter().any(|(r, _)| *r == i)
+    }
+}
+
+impl IncrementalEngine {
+    /// Current VQ codes of layer `li` (one per row) — used by the batch
+    /// coordinator's §3.1 storage measurement and by state-parity tests.
+    pub fn layer_codes(&self, li: usize) -> &[CodeTuple] {
+        &self.layers[li].codes
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Batched revision application (the paper's OFFLINE path, §3.1/§3.2):
+// all of a revision's changes propagate in ONE pass per layer, so each
+// clean row receives all column corrections together and re-assigns its
+// VQ code once — instead of once per edit.
+// ---------------------------------------------------------------------------
+
+/// Structural description of a whole revision against the current state.
+struct BatchPlan {
+    /// final row index → original row index (None = inserted row).
+    final_ids: Vec<Option<usize>>,
+    /// original rows that were deleted (sorted).
+    deleted: Vec<usize>,
+    /// original rows whose token changed (sorted, survivors only).
+    modified: Vec<usize>,
+}
+
+impl IncrementalEngine {
+    /// Apply a whole-revision edit script in one batched propagation pass.
+    /// Exact (same result as sequential `apply_edit`s) but with offline
+    /// batch cost: corrections are aggregated per clean row and each row
+    /// re-quantizes once.
+    pub fn apply_revision(&mut self, edits: &[Edit]) -> EditReport {
+        if edits.is_empty() {
+            return EditReport {
+                flops: 0,
+                logits: self.logits.clone(),
+                defragged: false,
+            };
+        }
+        if edits.len() == 1 {
+            return self.apply_edit(edits[0]);
+        }
+        let snapshot = self.ledger.clone();
+        self.stats.edits_applied += edits.len() as u64;
+
+        // ---- plan: simulate the script over (tokens, positions, ids) ----
+        let n0 = self.tokens.len();
+        let mut ids: Vec<Option<usize>> = (0..n0).map(Some).collect();
+        let mut modified = std::collections::BTreeSet::new();
+        let mut deleted = std::collections::BTreeSet::new();
+        let mut defragged = false;
+        for &e in edits {
+            match e {
+                Edit::Replace { at, tok } => {
+                    assert!(at < self.tokens.len(), "replace out of bounds");
+                    self.tokens[at] = tok;
+                    if let Some(orig) = ids[at] {
+                        modified.insert(orig);
+                    }
+                }
+                Edit::Insert { at, tok } => {
+                    assert!(at <= self.tokens.len(), "insert out of bounds");
+                    // Scripts may exceed max_seq *transiently* (LCS order
+                    // interleaves inserts/deletes by position); only the
+                    // final length is bounded — checked after the loop.
+                    assert!(
+                        self.tokens.len() < self.w.cfg.pos_pool,
+                        "position pool exhausted"
+                    );
+                    match self.positions.insert(at) {
+                        InsertOutcome::InGap(_) => {
+                            self.tokens.insert(at, tok);
+                            ids.insert(at, None);
+                        }
+                        InsertOutcome::Defragged(_) => {
+                            // Positions all moved: finish token edits, then
+                            // rebuild from scratch.
+                            self.tokens.insert(at, tok);
+                            ids.insert(at, None);
+                            self.stats.defrags += 1;
+                            defragged = true;
+                        }
+                    }
+                }
+                Edit::Delete { at } => {
+                    assert!(at < self.tokens.len(), "delete out of bounds");
+                    assert!(self.tokens.len() > 1, "cannot delete the last token");
+                    self.tokens.remove(at);
+                    self.positions.remove(at);
+                    if let Some(orig) = ids.remove(at) {
+                        deleted.insert(orig);
+                        modified.remove(&orig);
+                    }
+                }
+            }
+        }
+        assert!(
+            self.tokens.len() <= self.w.cfg.max_seq,
+            "revision leaves document over max_seq"
+        );
+        if defragged {
+            // Any remaining structural edits were already applied to
+            // tokens/positions above (the loop continued); rebuild now.
+            self.rebuild();
+            return EditReport {
+                flops: self.ledger.since(&snapshot).total(),
+                logits: self.logits.clone(),
+                defragged: true,
+            };
+        }
+        let plan = BatchPlan {
+            final_ids: ids,
+            deleted: deleted.into_iter().collect(),
+            modified: modified.into_iter().collect(),
+        };
+
+        // ---- layer-0 inputs for new/modified rows ----
+        let pos = self.positions.ids().to_vec();
+        let mut rows: Vec<(usize, Vec<f32>)> = Vec::new();
+        for (f, orig) in plan.final_ids.iter().enumerate() {
+            let recompute = match orig {
+                None => true,
+                Some(o) => plan.modified.binary_search(o).is_ok(),
+            };
+            if recompute {
+                let emb = self.embed_row(self.tokens[f], pos[f]);
+                rows.push((f, emb));
+            }
+        }
+
+        // ---- propagate through layers ----
+        for li in 0..self.w.cfg.n_layers {
+            rows = self.apply_layer_batch(li, &plan, rows, li == 0);
+        }
+        self.apply_classifier_batch(&plan, rows);
+
+        EditReport {
+            flops: self.ledger.since(&snapshot).total(),
+            logits: self.logits.clone(),
+            defragged: false,
+        }
+    }
+
+    /// One layer of the batched pass. `rows` carries the new block inputs
+    /// (final-layout indices). `restructure` layers 0..L all need the same
+    /// structural reindex exactly once — we do it per layer (each layer's
+    /// stores are in original layout until its turn).
+    fn apply_layer_batch(
+        &mut self,
+        li: usize,
+        plan: &BatchPlan,
+        rows: Vec<(usize, Vec<f32>)>,
+        _first: bool,
+    ) -> Vec<(usize, Vec<f32>)> {
+        let score_trick = self.opts.score_trick;
+        let nf = plan.final_ids.len();
+
+        // 1. Capture old (k, val) of deleted and modified original rows.
+        let mut removed_cols: Vec<(usize, Vec<f32>, Vec<f32>)> = Vec::new(); // (orig, k, val)
+        for &o in &plan.deleted {
+            let k_old = self.layers[li].k.copy_row(o);
+            let val_old = if score_trick {
+                self.layers[li].vc.copy_row(o)
+            } else {
+                self.layers[li].v.copy_row(o)
+            };
+            removed_cols.push((o, k_old, val_old));
+        }
+        let mut modified_cols: std::collections::HashMap<usize, (Vec<f32>, Vec<f32>)> =
+            std::collections::HashMap::new(); // orig -> old (k, val)
+        // Rows whose input changed include both plan.modified (token-level)
+        // and code-flip propagation from the previous layer; capture the
+        // old k/val for every SURVIVING row in `rows`.
+        let orig_of: Vec<Option<usize>> = plan.final_ids.clone();
+        for (f, _) in &rows {
+            if let Some(o) = orig_of[*f] {
+                let k_old = self.layers[li].k.copy_row(o);
+                let val_old = if score_trick {
+                    self.layers[li].vc.copy_row(o)
+                } else {
+                    self.layers[li].v.copy_row(o)
+                };
+                modified_cols.insert(o, (k_old, val_old));
+            }
+        }
+
+        // 2. Restructure every store into the final layout.
+        {
+            let layer = &mut self.layers[li];
+            layer.x.reindex(&plan.final_ids);
+            layer.q.reindex(&plan.final_ids);
+            layer.k.reindex(&plan.final_ids);
+            layer.v.reindex(&plan.final_ids);
+            if score_trick {
+                layer.vc.reindex(&plan.final_ids);
+            }
+            layer.acc.reindex(&plan.final_ids);
+            let old_codes = std::mem::take(&mut layer.codes);
+            let vq_heads = self.w.cfg.vq_heads;
+            layer.codes = plan
+                .final_ids
+                .iter()
+                .map(|o| match o {
+                    Some(o) => old_codes[*o],
+                    None => CodeTuple::new(&vec![0; vq_heads]),
+                })
+                .collect();
+            self.ledger.add(
+                Cat::Bookkeeping,
+                (nf * (4 * self.w.cfg.d_model + layer.acc.cols)) as u64,
+            );
+        }
+
+        // 3. Update projections for changed rows (new x values).
+        let mut row_dirty = vec![false; nf];
+        for (f, new_x) in &rows {
+            let (q, k, v) = self.qkv_row(li, new_x);
+            let vc = self.project_value(li, &v);
+            let layer = &mut self.layers[li];
+            layer.x.row_mut(*f).copy_from_slice(new_x);
+            layer.q.row_mut(*f).copy_from_slice(&q);
+            layer.k.row_mut(*f).copy_from_slice(&k);
+            layer.v.row_mut(*f).copy_from_slice(&v);
+            if score_trick {
+                layer.vc.row_mut(*f).copy_from_slice(&vc);
+            }
+            row_dirty[*f] = true;
+        }
+
+        // 4. Aggregate corrections per clean row.
+        //    boundary(c) for a removed/modified ORIGINAL column c: first
+        //    final row whose orig > c (survivor order is preserved).
+        let orig_positions: Vec<(usize, usize)> = orig_of
+            .iter()
+            .enumerate()
+            .filter_map(|(f, o)| o.map(|o| (o, f)))
+            .collect(); // sorted by o (and by f)
+        let boundary = |c: usize| -> usize {
+            match orig_positions.binary_search_by_key(&(c + 1), |&(o, _)| o) {
+                Ok(i) => orig_positions[i].1,
+                Err(i) if i < orig_positions.len() => orig_positions[i].1,
+                _ => nf,
+            }
+        };
+        // Removed columns.
+        for (c, k_old, val_old) in &removed_cols {
+            self.correct_rows(li, boundary(*c)..nf, &row_dirty, Some((k_old, val_old)), None, None);
+        }
+        // Modified columns (changed k/v at surviving rows) and Added
+        // columns (inserted rows' k/v): every clean row after the column
+        // is a survivor (inserted rows are all dirty), so one sweep each.
+        for (f_col, _) in &rows {
+            let old = orig_of[*f_col].map(|o| &modified_cols[&o]);
+            match old {
+                Some((k_old, val_old)) => {
+                    self.correct_rows(
+                        li,
+                        (*f_col + 1)..nf,
+                        &row_dirty,
+                        Some((k_old, val_old)),
+                        Some(*f_col),
+                        None,
+                    );
+                }
+                None => {
+                    self.correct_rows(li, (*f_col + 1)..nf, &row_dirty, None, Some(*f_col), None);
+                }
+            }
+        }
+        // Dirty rows: full recompute in the final layout.
+        for f in 0..nf {
+            if row_dirty[f] {
+                let acc = self.attn_full_row(li, f);
+                self.layers[li].acc.row_mut(f).copy_from_slice(&acc);
+            }
+        }
+
+        // 5. Re-assign every touched row ONCE; emit next layer's changes.
+        //    Touched = dirty rows + every clean row at/after the earliest
+        //    column change (their accumulators may have moved).
+        let first_change = rows
+            .iter()
+            .map(|(f, _)| *f)
+            .chain(removed_cols.iter().map(|(c, _, _)| boundary(*c)))
+            .min()
+            .unwrap_or(nf);
+        let mut next = Vec::new();
+        for f in 0..nf {
+            let input_changed = row_dirty[f];
+            if f < first_change && !input_changed {
+                continue;
+            }
+            let acc = self.layers[li].acc.copy_row(f);
+            let new_code = self.assign_code(li, &acc);
+            let code_changed = new_code != self.layers[li].codes[f];
+            if code_changed {
+                self.stats.code_flips += 1;
+                self.layers[li].codes[f] = new_code;
+            }
+            if input_changed || code_changed {
+                let x = self.layers[li].x.copy_row(f);
+                let out = self.row_output(li, &x, new_code);
+                next.push((f, out));
+            }
+        }
+        next
+    }
+
+    /// Classifier maintenance for the batched pass.
+    fn apply_classifier_batch(&mut self, plan: &BatchPlan, rows: Vec<(usize, Vec<f32>)>) {
+        let d = self.w.cfg.d_model;
+        // Subtract deleted rows' contributions, restructure, then update
+        // changed rows.
+        for &o in &plan.deleted {
+            let old = self.final_hidden.copy_row(o);
+            tensor::axpy(-1.0, &old, &mut self.pooled_sum);
+        }
+        self.ledger
+            .add(Cat::Elementwise, (plan.deleted.len() * d) as u64);
+        self.final_hidden.reindex(&plan.final_ids);
+        for (f, new_x) in &rows {
+            let h = self.final_row(new_x);
+            let old = self.final_hidden.copy_row(*f);
+            for ((s, &o), &nv) in self.pooled_sum.iter_mut().zip(&old).zip(&h) {
+                *s += nv - o;
+            }
+            self.ledger.add(Cat::Elementwise, 2 * d as u64);
+            self.final_hidden.row_mut(*f).copy_from_slice(&h);
+        }
+        self.recompute_logits();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Serving extensions: next-token suggestions (the writing-assistant payload)
+// and session persistence (checkpoint/restore without recompute).
+// ---------------------------------------------------------------------------
+
+impl IncrementalEngine {
+    /// Next-token suggestions from the last row's hidden state with tied
+    /// embeddings (OPT-style LM head: `h_last · E_tokensᵀ`). Returns the
+    /// top-k (token, score) pairs. Cost is `vocab·d` muladds — independent
+    /// of document length, so suggestions stay cheap after every edit.
+    pub fn suggest_topk(&mut self, k: usize) -> Vec<(u32, f32)> {
+        assert!(!self.is_empty(), "no rows to suggest from");
+        let w = Arc::clone(&self.w);
+        let cfg = &w.cfg;
+        let h = self.final_hidden.copy_row(self.len() - 1);
+        let mut scored: Vec<(u32, f32)> = (0..cfg.vocab_size)
+            .map(|t| (t as u32, tensor::dot(&h, w.embed_tokens.row(t))))
+            .collect();
+        self.ledger.add(
+            Cat::Linear,
+            MULADD * (cfg.vocab_size * cfg.d_model) as u64,
+        );
+        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        scored.truncate(k);
+        scored
+    }
+
+    /// Serialize the FULL session state (document, positions, per-layer
+    /// caches) so a restart restores the session without a forward pass.
+    pub fn to_tensor_file(&self) -> crate::util::TensorFile {
+        use crate::util::Tensor;
+        let mut tf = crate::util::TensorFile::new();
+        let n = self.len();
+        tf.insert(
+            "tokens",
+            Tensor::i32(vec![n], self.tokens.iter().map(|&t| t as i32).collect()),
+        );
+        tf.insert(
+            "pos_ids",
+            Tensor::i32(
+                vec![n],
+                self.positions.ids().iter().map(|&p| p as i32).collect(),
+            ),
+        );
+        tf.insert(
+            "meta",
+            Tensor::i32(
+                vec![4],
+                vec![
+                    self.w.cfg.n_layers as i32,
+                    self.opts.score_trick as i32,
+                    self.positions.defrag_count as i32,
+                    self.opts.verify_every as i32,
+                ],
+            ),
+        );
+        let put = |tf: &mut crate::util::TensorFile, name: String, rs: &RowStore| {
+            let mut data = Vec::with_capacity(rs.rows() * rs.cols);
+            for i in 0..rs.rows() {
+                data.extend_from_slice(rs.row(i));
+            }
+            tf.insert(name, Tensor::f32(vec![rs.rows(), rs.cols], data));
+        };
+        for (li, l) in self.layers.iter().enumerate() {
+            let p = |s: &str| format!("layer.{li}.{s}");
+            put(&mut tf, p("x"), &l.x);
+            put(&mut tf, p("q"), &l.q);
+            put(&mut tf, p("k"), &l.k);
+            put(&mut tf, p("v"), &l.v);
+            if self.opts.score_trick {
+                put(&mut tf, p("vc"), &l.vc);
+            }
+            put(&mut tf, p("acc"), &l.acc);
+            let mut codes = Vec::with_capacity(n * self.w.cfg.vq_heads);
+            for c in &l.codes {
+                codes.extend(c.as_slice().iter().map(|&x| x as i32));
+            }
+            tf.insert(
+                p("codes"),
+                Tensor::i32(vec![n, self.w.cfg.vq_heads], codes),
+            );
+        }
+        put(&mut tf, "final_hidden".into(), &self.final_hidden);
+        tf.insert(
+            "pooled_sum",
+            Tensor::f32(vec![self.pooled_sum.len()], self.pooled_sum.clone()),
+        );
+        tf.insert("logits", Tensor::f32(vec![self.logits.len()], self.logits.clone()));
+        tf
+    }
+
+    /// Restore a session saved by [`Self::to_tensor_file`]. The weights
+    /// must be the same model the checkpoint was taken from.
+    pub fn from_tensor_file(
+        w: Arc<ModelWeights>,
+        tf: &crate::util::TensorFile,
+        opts: EngineOptions,
+    ) -> anyhow::Result<IncrementalEngine> {
+        let (_, toks) = tf.get("tokens")?.as_i32()?;
+        let (_, pos) = tf.get("pos_ids")?.as_i32()?;
+        let (_, meta) = tf.get("meta")?.as_i32()?;
+        anyhow::ensure!(
+            meta[0] as usize == w.cfg.n_layers,
+            "checkpoint has {} layers, model has {}",
+            meta[0],
+            w.cfg.n_layers
+        );
+        anyhow::ensure!(
+            (meta[1] != 0) == opts.score_trick,
+            "checkpoint score-trick mode mismatch"
+        );
+        let tokens: Vec<u32> = toks.iter().map(|&t| t as u32).collect();
+        let n = tokens.len();
+        // Rebuild through `new` would recompute; instead construct shell
+        // state and fill from the file.
+        let mut eng = IncrementalEngine::new_shell(w.clone(), &tokens, opts);
+        eng.positions = PositionAllocator::restore(
+            w.cfg.pos_pool,
+            pos.iter().map(|&p| p as u32).collect(),
+            meta[2] as u64,
+        )?;
+        let get = |name: String, want_cols: usize| -> anyhow::Result<RowStore> {
+            let (dims, data) = tf.get(&name)?.as_f32()?;
+            anyhow::ensure!(
+                dims.len() == 2 && dims[0] == n && dims[1] == want_cols,
+                "{name}: dims {dims:?} != [{n}, {want_cols}]"
+            );
+            let mut rs = RowStore::new(want_cols);
+            for i in 0..n {
+                rs.push_row(&data[i * want_cols..(i + 1) * want_cols]);
+            }
+            Ok(rs)
+        };
+        let d = w.cfg.d_model;
+        let hq = w.cfg.vq_heads * w.cfg.vq_codes;
+        let (vc_w, acc_w) = if opts.score_trick {
+            (w.cfg.n_heads * w.cfg.vq_codes, hq)
+        } else {
+            (0, d)
+        };
+        for li in 0..w.cfg.n_layers {
+            let p = |s: &str| format!("layer.{li}.{s}");
+            eng.layers[li].x = get(p("x"), d)?;
+            eng.layers[li].q = get(p("q"), d)?;
+            eng.layers[li].k = get(p("k"), d)?;
+            eng.layers[li].v = get(p("v"), d)?;
+            if opts.score_trick {
+                eng.layers[li].vc = get(p("vc"), vc_w)?;
+            }
+            eng.layers[li].acc = get(p("acc"), acc_w)?;
+            let (dims, codes) = tf.get(&p("codes"))?.as_i32()?;
+            anyhow::ensure!(dims == [n, w.cfg.vq_heads], "codes dims");
+            eng.layers[li].codes = (0..n)
+                .map(|i| {
+                    let cs: Vec<crate::vq::Code> = codes
+                        [i * w.cfg.vq_heads..(i + 1) * w.cfg.vq_heads]
+                        .iter()
+                        .map(|&c| c as crate::vq::Code)
+                        .collect();
+                    CodeTuple::new(&cs)
+                })
+                .collect();
+        }
+        eng.final_hidden = get("final_hidden".into(), d)?;
+        let (_, pooled) = tf.get("pooled_sum")?.as_f32()?;
+        eng.pooled_sum = pooled.to_vec();
+        let (_, logits) = tf.get("logits")?.as_f32()?;
+        eng.logits = logits.to_vec();
+        eng.ledger = FlopLedger::new();
+        eng.stats = EngineStats::default();
+        Ok(eng)
+    }
+
+    /// Construct an engine with empty layer state (no forward pass) —
+    /// internal helper for checkpoint restore.
+    fn new_shell(w: Arc<ModelWeights>, tokens: &[u32], opts: EngineOptions) -> IncrementalEngine {
+        let cfg = &w.cfg;
+        let d = cfg.d_model;
+        let hq = cfg.vq_heads * cfg.vq_codes;
+        let (vc_w, acc_w) = if opts.score_trick {
+            (cfg.n_heads * cfg.vq_codes, hq)
+        } else {
+            (0, d)
+        };
+        let layers = (0..cfg.n_layers)
+            .map(|_| LayerState {
+                x: RowStore::new(d),
+                q: RowStore::new(d),
+                k: RowStore::new(d),
+                v: RowStore::new(d),
+                vc: RowStore::new(vc_w),
+                acc: RowStore::new(acc_w),
+                codes: Vec::new(),
+            })
+            .collect();
+        IncrementalEngine {
+            positions: PositionAllocator::spread(w.cfg.pos_pool, tokens.len()),
+            w,
+            opts,
+            tokens: tokens.to_vec(),
+            layers,
+            final_hidden: RowStore::new(d),
+            pooled_sum: vec![0.0; d],
+            logits: vec![],
+            scratch: Scratch::default(),
+            ledger: FlopLedger::new(),
+            stats: EngineStats::default(),
+        }
+    }
+}

@@ -1,0 +1,516 @@
+//! Incremental inference (the paper's core algorithm). See
+//! [`engine::IncrementalEngine`].
+
+pub mod engine;
+pub mod rowstore;
+
+pub use engine::{EditReport, EngineOptions, EngineStats, IncrementalEngine, VerifyReport};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::edits::Edit;
+    use crate::flops::{self, FlopLedger};
+    use crate::model::{dense_forward, ModelWeights};
+    use crate::util::Rng;
+    use std::sync::Arc;
+
+    fn setup(seed: u64, n: usize) -> (Arc<ModelWeights>, Vec<u32>) {
+        let cfg = ModelConfig::vqt_tiny();
+        let w = Arc::new(ModelWeights::random(&cfg, seed));
+        let mut r = Rng::new(seed ^ 0xABCD);
+        let tokens: Vec<u32> = (0..n).map(|_| r.below(cfg.vocab_size) as u32).collect();
+        (w, tokens)
+    }
+
+    /// Random valid edit for the current document length.
+    fn random_edit(r: &mut Rng, len: usize, vocab: usize, max_seq: usize) -> Edit {
+        loop {
+            match r.below(3) {
+                0 => {
+                    return Edit::Replace {
+                        at: r.below(len),
+                        tok: r.below(vocab) as u32,
+                    }
+                }
+                1 if len < max_seq => {
+                    return Edit::Insert {
+                        at: r.below(len + 1),
+                        tok: r.below(vocab) as u32,
+                    }
+                }
+                2 if len > 1 => return Edit::Delete { at: r.below(len) },
+                _ => continue,
+            }
+        }
+    }
+
+    #[test]
+    fn initial_state_matches_dense() {
+        let (w, tokens) = setup(1, 20);
+        let eng = IncrementalEngine::new(w.clone(), &tokens, EngineOptions::default());
+        let rep = eng.verify();
+        assert_eq!(rep.code_mismatches, 0, "codes after rebuild must match dense");
+        assert!(rep.max_logit_diff < 1e-4, "logit diff {}", rep.max_logit_diff);
+        assert!(rep.max_hidden_diff < 1e-3, "hidden diff {}", rep.max_hidden_diff);
+    }
+
+    #[test]
+    fn replace_edit_exactness() {
+        let (w, tokens) = setup(2, 24);
+        let mut eng = IncrementalEngine::new(w.clone(), &tokens, EngineOptions::default());
+        let mut r = Rng::new(99);
+        for _ in 0..10 {
+            let at = r.below(eng.len());
+            let tok = r.below(w.cfg.vocab_size) as u32;
+            eng.apply_edit(Edit::Replace { at, tok });
+            let rep = eng.verify();
+            assert_eq!(rep.code_mismatches, 0, "VQ codes must match dense recompute");
+            assert!(rep.max_logit_diff < 1e-3, "logit diff {}", rep.max_logit_diff);
+        }
+    }
+
+    #[test]
+    fn insert_and_delete_exactness() {
+        let (w, tokens) = setup(3, 16);
+        let mut eng = IncrementalEngine::new(w.clone(), &tokens, EngineOptions::default());
+        let mut r = Rng::new(7);
+        for step in 0..12 {
+            let e = if step % 2 == 0 {
+                Edit::Insert {
+                    at: r.below(eng.len() + 1),
+                    tok: r.below(w.cfg.vocab_size) as u32,
+                }
+            } else {
+                Edit::Delete { at: r.below(eng.len()) }
+            };
+            eng.apply_edit(e);
+            let rep = eng.verify();
+            assert_eq!(rep.code_mismatches, 0, "step {step} {e:?}");
+            assert!(rep.max_logit_diff < 1e-3, "step {step} diff {}", rep.max_logit_diff);
+        }
+    }
+
+    #[test]
+    fn mixed_edit_scripts_property() {
+        // Property: for arbitrary edit scripts, incremental == dense.
+        for seed in 0..8u64 {
+            let (w, tokens) = setup(100 + seed, 14);
+            let mut eng = IncrementalEngine::new(w.clone(), &tokens, EngineOptions::default());
+            let mut r = Rng::new(seed * 31 + 5);
+            let mut doc = tokens.clone();
+            for _ in 0..15 {
+                let e = random_edit(&mut r, doc.len(), w.cfg.vocab_size, w.cfg.max_seq);
+                doc = crate::edits::apply_edits(&doc, &[e]);
+                eng.apply_edit(e);
+            }
+            assert_eq!(eng.tokens(), &doc[..], "token state diverged");
+            let rep = eng.verify();
+            assert_eq!(rep.code_mismatches, 0, "seed {seed}");
+            assert!(rep.max_logit_diff < 1e-3, "seed {seed}: {}", rep.max_logit_diff);
+        }
+    }
+
+    #[test]
+    fn naive_variant_matches_trick_variant() {
+        let (w, tokens) = setup(5, 18);
+        let mut a = IncrementalEngine::new(
+            w.clone(),
+            &tokens,
+            EngineOptions {
+                score_trick: true,
+                verify_every: 0,
+            },
+        );
+        let mut b = IncrementalEngine::new(
+            w.clone(),
+            &tokens,
+            EngineOptions {
+                score_trick: false,
+                verify_every: 0,
+            },
+        );
+        let mut r = Rng::new(55);
+        for _ in 0..8 {
+            let e = random_edit(&mut r, a.len(), w.cfg.vocab_size, w.cfg.max_seq);
+            a.apply_edit(e);
+            b.apply_edit(e);
+            for (x, y) in a.logits().iter().zip(b.logits()) {
+                assert!((x - y).abs() < 1e-3, "trick vs naive logits {x} {y}");
+            }
+        }
+        assert_eq!(b.verify().code_mismatches, 0);
+    }
+
+    #[test]
+    fn rebuild_cost_tracks_dense_cost() {
+        // The ledger of a fresh build should be within ~35 % of the dense
+        // analytic formula (the score-space representation does slightly
+        // different—but same-order—arithmetic).
+        let (w, tokens) = setup(6, 32);
+        let eng = IncrementalEngine::new(w.clone(), &tokens, EngineOptions::default());
+        let built = eng.ledger.total() as f64;
+        let dense = flops::dense_forward_flops(&w.cfg, tokens.len()) as f64;
+        let ratio = built / dense;
+        assert!(
+            (0.65..=1.35).contains(&ratio),
+            "rebuild/dense flops ratio {ratio}"
+        );
+    }
+
+    #[test]
+    fn edit_cost_far_below_dense_cost() {
+        // The headline claim at unit scale: one edit costs a small fraction
+        // of a dense forward pass.
+        let (w, tokens) = setup(7, 48);
+        let mut eng = IncrementalEngine::new(w.clone(), &tokens, EngineOptions::default());
+        let dense = flops::dense_forward_flops(&w.cfg, tokens.len());
+        let mut r = Rng::new(11);
+        let mut total = 0u64;
+        let k = 10;
+        for _ in 0..k {
+            let at = r.below(eng.len());
+            let tok = r.below(w.cfg.vocab_size) as u32;
+            total += eng.apply_edit(Edit::Replace { at, tok }).flops;
+        }
+        let avg = total / k;
+        assert!(
+            avg * 2 < dense,
+            "avg edit cost {avg} not well below dense {dense}"
+        );
+    }
+
+    #[test]
+    fn late_edits_cheaper_than_early_edits() {
+        // Causality: editing near the end touches fewer attention rows.
+        let (w, tokens) = setup(8, 48);
+        let opts = EngineOptions::default();
+        let mut early_eng = IncrementalEngine::new(w.clone(), &tokens, opts);
+        let mut late_eng = IncrementalEngine::new(w.clone(), &tokens, opts);
+        let early = early_eng
+            .apply_edit(Edit::Replace { at: 1, tok: 3 })
+            .flops;
+        let late = late_eng
+            .apply_edit(Edit::Replace {
+                at: tokens.len() - 2,
+                tok: 3,
+            })
+            .flops;
+        assert!(
+            late < early,
+            "late edit ({late}) should be cheaper than early edit ({early})"
+        );
+    }
+
+    #[test]
+    fn fork_is_independent() {
+        let (w, tokens) = setup(9, 12);
+        let base = IncrementalEngine::new(w.clone(), &tokens, EngineOptions::default());
+        let mut f1 = base.fork();
+        let mut f2 = base.fork();
+        f1.apply_edit(Edit::Replace { at: 0, tok: 1 });
+        f2.apply_edit(Edit::Replace { at: 5, tok: 2 });
+        assert_ne!(f1.tokens(), f2.tokens());
+        assert_eq!(base.tokens(), &tokens[..]);
+        assert_eq!(f1.verify().code_mismatches, 0);
+        assert_eq!(f2.verify().code_mismatches, 0);
+    }
+
+    #[test]
+    fn defrag_recovers_exactness() {
+        // Force defragmentation with a tiny position pool and check the
+        // engine stays exact through it.
+        let mut cfg = ModelConfig::vqt_tiny();
+        cfg.pos_pool = cfg.max_seq; // zero slack ⇒ frequent defrag
+        let w = Arc::new(ModelWeights::random(&cfg, 10));
+        let mut r = Rng::new(13);
+        let tokens: Vec<u32> = (0..10).map(|_| r.below(cfg.vocab_size) as u32).collect();
+        let mut eng = IncrementalEngine::new(w.clone(), &tokens, EngineOptions::default());
+        let mut defrags = 0;
+        for _ in 0..20 {
+            let at = r.below(eng.len() + 1);
+            let tok = r.below(cfg.vocab_size) as u32;
+            let rep = eng.apply_edit(Edit::Insert { at, tok });
+            if rep.defragged {
+                defrags += 1;
+            }
+            if eng.len() > 30 {
+                eng.apply_edit(Edit::Delete { at: r.below(eng.len()) });
+            }
+        }
+        assert!(defrags > 0, "expected at least one defrag with zero slack");
+        assert_eq!(eng.stats.defrags as usize, defrags);
+        let rep = eng.verify();
+        assert_eq!(rep.code_mismatches, 0);
+        assert!(rep.max_logit_diff < 1e-3);
+    }
+
+    #[test]
+    fn logits_track_dense_after_each_edit() {
+        let (w, tokens) = setup(11, 20);
+        let mut eng = IncrementalEngine::new(w.clone(), &tokens, EngineOptions::default());
+        let mut r = Rng::new(17);
+        let mut doc = tokens.clone();
+        for _ in 0..6 {
+            let e = random_edit(&mut r, doc.len(), w.cfg.vocab_size, w.cfg.max_seq);
+            doc = crate::edits::apply_edits(&doc, &[e]);
+            let rep = eng.apply_edit(e);
+            let mut led = FlopLedger::new();
+            let dense = dense_forward(&w, &doc, eng.position_ids(), &mut led);
+            for (a, b) in rep.logits.iter().zip(&dense.logits) {
+                assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn verify_every_auto_rebuild_path() {
+        let (w, tokens) = setup(12, 10);
+        let mut eng = IncrementalEngine::new(
+            w.clone(),
+            &tokens,
+            EngineOptions {
+                score_trick: true,
+                verify_every: 2,
+            },
+        );
+        for i in 0..6 {
+            eng.apply_edit(Edit::Replace {
+                at: i % tokens.len(),
+                tok: (i % w.cfg.vocab_size) as u32,
+            });
+        }
+        assert_eq!(eng.stats.verifications, 3);
+    }
+}
+
+#[cfg(test)]
+mod batch_tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::edits::{apply_edits, diff_tokens};
+    use crate::model::ModelWeights;
+    use crate::util::Rng;
+    use std::sync::Arc;
+
+    fn setup(seed: u64, n: usize) -> (Arc<ModelWeights>, Vec<u32>) {
+        let cfg = ModelConfig::vqt_tiny();
+        let w = Arc::new(ModelWeights::random(&cfg, seed));
+        let mut r = Rng::new(seed ^ 0xBEEF);
+        let tokens: Vec<u32> = (0..n).map(|_| r.below(cfg.vocab_size) as u32).collect();
+        (w, tokens)
+    }
+
+    /// Core property: the batched revision pass is EXACT — identical state
+    /// to a dense recompute, for arbitrary revision pairs.
+    #[test]
+    fn batched_revision_matches_dense() {
+        for seed in 0..8u64 {
+            let (w, a) = setup(200 + seed, 20);
+            let mut r = Rng::new(seed * 7 + 1);
+            // Random revision: several replaces, inserts, deletes.
+            let mut b = a.clone();
+            for _ in 0..r.range(2, 10) {
+                let e = crate::testutil::gen_edit(&mut r, b.len(), w.cfg.vocab_size, w.cfg.max_seq);
+                b = apply_edits(&b, &[e]);
+            }
+            let mut eng = IncrementalEngine::new(w.clone(), &a, EngineOptions::default());
+            let script = diff_tokens(&a, &b);
+            eng.apply_revision(&script);
+            assert_eq!(eng.tokens(), &b[..], "seed {seed}: tokens diverged");
+            let rep = eng.verify();
+            assert_eq!(rep.code_mismatches, 0, "seed {seed}");
+            assert!(rep.max_logit_diff < 1e-3, "seed {seed}: {}", rep.max_logit_diff);
+        }
+    }
+
+    /// Batched pass == sequential pass (same logits).
+    #[test]
+    fn batched_equals_sequential() {
+        for seed in 0..5u64 {
+            let (w, a) = setup(300 + seed, 16);
+            let mut r = Rng::new(seed * 13 + 3);
+            let mut b = a.clone();
+            for _ in 0..6 {
+                let e = crate::testutil::gen_edit(&mut r, b.len(), w.cfg.vocab_size, w.cfg.max_seq);
+                b = apply_edits(&b, &[e]);
+            }
+            let script = diff_tokens(&a, &b);
+            let mut batched = IncrementalEngine::new(w.clone(), &a, EngineOptions::default());
+            batched.apply_revision(&script);
+            let mut seq = IncrementalEngine::new(w.clone(), &a, EngineOptions::default());
+            seq.apply_edits(&script);
+            assert_eq!(seq.tokens(), batched.tokens());
+            for (x, y) in batched.logits().iter().zip(seq.logits()) {
+                assert!((x - y).abs() < 1e-3, "batched {x} vs sequential {y}");
+            }
+        }
+    }
+
+    /// Batched pass must be cheaper than sequential for multi-edit scripts.
+    #[test]
+    fn batched_is_cheaper_than_sequential() {
+        let (w, a) = setup(400, 48);
+        let mut r = Rng::new(77);
+        let mut b = a.clone();
+        for _ in 0..12 {
+            let e = crate::testutil::gen_edit(&mut r, b.len(), w.cfg.vocab_size, w.cfg.max_seq);
+            b = apply_edits(&b, &[e]);
+        }
+        let script = diff_tokens(&a, &b);
+        let mut batched = IncrementalEngine::new(w.clone(), &a, EngineOptions::default());
+        let f_b = batched.apply_revision(&script).flops;
+        let mut seq = IncrementalEngine::new(w.clone(), &a, EngineOptions::default());
+        let f_s = seq.apply_edits(&script).flops;
+        assert!(
+            f_b * 2 < f_s,
+            "batched {f_b} should be ≪ sequential {f_s} for {} edits",
+            script.len()
+        );
+    }
+
+    /// Defrag inside a batched revision still converges exactly.
+    #[test]
+    fn batched_defrag_recovers() {
+        let mut cfg = ModelConfig::vqt_tiny();
+        cfg.pos_pool = cfg.max_seq; // zero slack
+        let w = Arc::new(ModelWeights::random(&cfg, 5));
+        let mut r = Rng::new(1);
+        let a: Vec<u32> = (0..12).map(|_| r.below(cfg.vocab_size) as u32).collect();
+        let mut eng = IncrementalEngine::new(w.clone(), &a, EngineOptions::default());
+        // Insert many tokens at one position to force a defrag mid-script.
+        let script: Vec<crate::edits::Edit> = (0..8)
+            .map(|i| crate::edits::Edit::Insert {
+                at: 5,
+                tok: (i % 50) as u32,
+            })
+            .collect();
+        let rep = eng.apply_revision(&script);
+        assert!(rep.defragged, "zero-slack pool must defrag");
+        let rep = eng.verify();
+        assert_eq!(rep.code_mismatches, 0);
+        assert!(rep.max_logit_diff < 1e-3);
+    }
+
+    /// Empty and single-edit scripts take the cheap paths.
+    #[test]
+    fn batched_trivial_scripts() {
+        let (w, a) = setup(500, 10);
+        let mut eng = IncrementalEngine::new(w.clone(), &a, EngineOptions::default());
+        let rep = eng.apply_revision(&[]);
+        assert_eq!(rep.flops, 0);
+        let rep = eng.apply_revision(&[crate::edits::Edit::Replace { at: 3, tok: 9 }]);
+        assert!(rep.flops > 0);
+        assert_eq!(eng.verify().code_mismatches, 0);
+    }
+}
+
+#[cfg(test)]
+mod revision_overflow_tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::edits::{diff_tokens, Edit};
+    use crate::model::ModelWeights;
+    use std::sync::Arc;
+
+    /// Revision scripts may exceed max_seq transiently (inserts before the
+    /// matching deletes in LCS position order); only the final length is
+    /// bounded. Regression test for the fig3 500-pair crash.
+    #[test]
+    fn transient_overflow_during_revision_is_ok() {
+        let cfg = ModelConfig::vqt_tiny(); // max_seq 64
+        let w = Arc::new(ModelWeights::random(&cfg, 2));
+        let n = cfg.max_seq; // document exactly at capacity
+        let a: Vec<u32> = (0..n).map(|i| (i % 50) as u32).collect();
+        // Replace a middle block with different tokens at a shifted offset
+        // so the LCS diff interleaves inserts before deletes.
+        let mut b = a.clone();
+        for i in 10..20 {
+            b[i] = 55;
+        }
+        b.insert(5, 51);
+        b.remove(40);
+        assert_eq!(b.len(), n);
+        let script = diff_tokens(&a, &b);
+        let mut eng = IncrementalEngine::new(w.clone(), &a, EngineOptions::default());
+        eng.apply_revision(&script);
+        assert_eq!(eng.tokens(), &b[..]);
+        let rep = eng.verify();
+        assert_eq!(rep.code_mismatches, 0);
+        assert!(rep.max_logit_diff < 1e-3);
+    }
+
+    /// Checkpoint → restore round-trips full state with zero recompute.
+    #[test]
+    fn checkpoint_restore_roundtrip() {
+        let cfg = ModelConfig::vqt_tiny();
+        let w = Arc::new(ModelWeights::random(&cfg, 3));
+        let tokens: Vec<u32> = (0..20).map(|i| (i * 3 % 60) as u32).collect();
+        let mut eng = IncrementalEngine::new(w.clone(), &tokens, EngineOptions::default());
+        eng.apply_edit(Edit::Replace { at: 4, tok: 9 });
+        eng.apply_edit(Edit::Insert { at: 0, tok: 5 });
+        let tf = eng.to_tensor_file();
+        let mut back =
+            IncrementalEngine::from_tensor_file(w.clone(), &tf, EngineOptions::default()).unwrap();
+        assert_eq!(back.tokens(), eng.tokens());
+        assert_eq!(back.position_ids(), eng.position_ids());
+        assert_eq!(back.logits(), eng.logits());
+        assert_eq!(back.ledger.total(), 0, "restore must not recompute");
+        // The restored engine keeps working incrementally and exactly.
+        back.apply_edit(Edit::Delete { at: 3 });
+        let rep = back.verify();
+        assert_eq!(rep.code_mismatches, 0);
+        assert!(rep.max_logit_diff < 1e-3);
+    }
+
+    /// Restore rejects mismatched configurations.
+    #[test]
+    fn checkpoint_restore_rejects_mismatch() {
+        let cfg = ModelConfig::vqt_tiny();
+        let w = Arc::new(ModelWeights::random(&cfg, 3));
+        let tokens: Vec<u32> = (0..8).map(|i| i as u32).collect();
+        let eng = IncrementalEngine::new(w.clone(), &tokens, EngineOptions::default());
+        let tf = eng.to_tensor_file();
+        // Wrong score-trick mode.
+        assert!(IncrementalEngine::from_tensor_file(
+            w.clone(),
+            &tf,
+            EngineOptions {
+                score_trick: false,
+                verify_every: 0
+            }
+        )
+        .is_err());
+        // Wrong layer count.
+        let mut cfg2 = cfg.clone();
+        cfg2.n_layers = 1;
+        let w2 = Arc::new(ModelWeights::random(&cfg2, 3));
+        assert!(IncrementalEngine::from_tensor_file(w2, &tf, EngineOptions::default()).is_err());
+    }
+
+    /// Suggestions equal a brute-force computation from the dense oracle.
+    #[test]
+    fn suggestions_match_dense_lm_head() {
+        use crate::flops::FlopLedger;
+        use crate::model::dense_forward;
+        let cfg = ModelConfig::vqt_tiny();
+        let w = Arc::new(ModelWeights::random(&cfg, 5));
+        let tokens: Vec<u32> = (0..12).map(|i| (i * 7 % 60) as u32).collect();
+        let mut eng = IncrementalEngine::new(w.clone(), &tokens, EngineOptions::default());
+        let top = eng.suggest_topk(5);
+        assert_eq!(top.len(), 5);
+        assert!(top.windows(2).all(|p| p[0].1 >= p[1].1), "sorted by score");
+        let mut led = FlopLedger::new();
+        let dense = dense_forward(&w, &tokens, eng.position_ids(), &mut led);
+        let h = dense.hidden.row(tokens.len() - 1);
+        let best_dense = (0..cfg.vocab_size)
+            .max_by(|&a, &b| {
+                crate::tensor::dot(h, w.embed_tokens.row(a))
+                    .partial_cmp(&crate::tensor::dot(h, w.embed_tokens.row(b)))
+                    .unwrap()
+            })
+            .unwrap();
+        assert_eq!(top[0].0 as usize, best_dense);
+    }
+}

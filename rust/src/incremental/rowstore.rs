@@ -1,0 +1,147 @@
+//! Flat row-major storage with row insertion/removal — the per-layer state
+//! arrays of the incremental engine. Contiguous storage keeps the
+//! correction inner loops cache-friendly; structural edits are O(n·cols)
+//! memmoves, which is bookkeeping (not arithmetic) and is counted as such.
+
+/// A growable matrix of f32 rows with stable width.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RowStore {
+    pub cols: usize,
+    data: Vec<f32>,
+}
+
+impl RowStore {
+    pub fn new(cols: usize) -> RowStore {
+        RowStore { cols, data: Vec::new() }
+    }
+
+    pub fn with_rows(cols: usize, rows: usize) -> RowStore {
+        RowStore {
+            cols,
+            data: vec![0.0; cols * rows],
+        }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        if self.cols == 0 {
+            0
+        } else {
+            self.data.len() / self.cols
+        }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Two disjoint mutable rows (i != j).
+    pub fn rows_mut2(&mut self, i: usize, j: usize) -> (&mut [f32], &mut [f32]) {
+        assert_ne!(i, j);
+        let c = self.cols;
+        if i < j {
+            let (a, b) = self.data.split_at_mut(j * c);
+            (&mut a[i * c..(i + 1) * c], &mut b[..c])
+        } else {
+            let (a, b) = self.data.split_at_mut(i * c);
+            (&mut b[..c], &mut a[j * c..(j + 1) * c])
+        }
+    }
+
+    pub fn push_row(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.cols);
+        self.data.extend_from_slice(row);
+    }
+
+    pub fn insert_row(&mut self, at: usize, row: &[f32]) {
+        assert_eq!(row.len(), self.cols);
+        assert!(at <= self.rows());
+        let idx = at * self.cols;
+        // splice is an O(n) memmove — structural bookkeeping.
+        self.data.splice(idx..idx, row.iter().copied());
+    }
+
+    pub fn remove_row(&mut self, at: usize) -> Vec<f32> {
+        assert!(at < self.rows());
+        let idx = at * self.cols;
+        self.data.drain(idx..idx + self.cols).collect()
+    }
+
+    pub fn copy_row(&self, i: usize) -> Vec<f32> {
+        self.row(i).to_vec()
+    }
+
+    pub fn clear(&mut self) {
+        self.data.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_remove_roundtrip() {
+        let mut s = RowStore::new(3);
+        s.push_row(&[1.0, 2.0, 3.0]);
+        s.push_row(&[7.0, 8.0, 9.0]);
+        s.insert_row(1, &[4.0, 5.0, 6.0]);
+        assert_eq!(s.rows(), 3);
+        assert_eq!(s.row(1), &[4.0, 5.0, 6.0]);
+        assert_eq!(s.row(2), &[7.0, 8.0, 9.0]);
+        let removed = s.remove_row(0);
+        assert_eq!(removed, vec![1.0, 2.0, 3.0]);
+        assert_eq!(s.row(0), &[4.0, 5.0, 6.0]);
+        assert_eq!(s.rows(), 2);
+    }
+
+    #[test]
+    fn rows_mut2_disjoint() {
+        let mut s = RowStore::with_rows(2, 3);
+        {
+            let (a, b) = s.rows_mut2(0, 2);
+            a[0] = 1.0;
+            b[1] = 2.0;
+        }
+        assert_eq!(s.row(0), &[1.0, 0.0]);
+        assert_eq!(s.row(2), &[0.0, 2.0]);
+        let (x, y) = s.rows_mut2(2, 0);
+        x[0] = 5.0;
+        y[1] = 6.0;
+        assert_eq!(s.row(2), &[5.0, 2.0]);
+        assert_eq!(s.row(0), &[1.0, 6.0]);
+    }
+
+    #[test]
+    fn insert_at_ends() {
+        let mut s = RowStore::new(2);
+        s.insert_row(0, &[1.0, 1.0]);
+        s.insert_row(1, &[3.0, 3.0]);
+        s.insert_row(1, &[2.0, 2.0]);
+        assert_eq!(s.row(0), &[1.0, 1.0]);
+        assert_eq!(s.row(1), &[2.0, 2.0]);
+        assert_eq!(s.row(2), &[3.0, 3.0]);
+    }
+}
+
+impl RowStore {
+    /// Rebuild the store in a new layout: `mapping[f]` gives the old row
+    /// to copy into new row f (None ⇒ zero row). Used by the batched
+    /// revision pass to apply all structural changes at once.
+    pub fn reindex(&mut self, mapping: &[Option<usize>]) {
+        let cols = self.cols;
+        let mut data = vec![0.0; mapping.len() * cols];
+        for (f, o) in mapping.iter().enumerate() {
+            if let Some(o) = o {
+                data[f * cols..(f + 1) * cols].copy_from_slice(self.row(*o));
+            }
+        }
+        self.data = data;
+    }
+}

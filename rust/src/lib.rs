@@ -1,0 +1,34 @@
+//! # vqt — Incrementally-Computable Neural Networks
+//!
+//! A production-shaped reproduction of *"Incrementally-Computable Neural
+//! Networks: Efficient Inference for Dynamic Inputs"* (Sharir & Anandkumar,
+//! 2023): Vector-Quantized Transformers (VQT) whose inference cost under
+//! document edits is proportional to the edit distance, not the document
+//! length.
+//!
+//! Architecture (three layers, Python never on the request path):
+//! - **L3 (this crate)** — serving coordinator + the incremental inference
+//!   engine ([`incremental`], [`coordinator`], [`server`]).
+//! - **L2 (JAX, build time)** — dense VQT forward lowered to HLO text
+//!   artifacts, executed through PJRT by [`runtime`].
+//! - **L1 (Pallas, build time)** — VQ-assignment and GELU-attention kernels
+//!   validated against pure-jnp references.
+//!
+//! Start with [`config::ModelConfig`], [`model::ModelWeights`], and
+//! `incremental::IncrementalEngine`; see `examples/quickstart.rs`.
+
+pub mod bench;
+pub mod compressed;
+pub mod config;
+pub mod coordinator;
+pub mod edits;
+pub mod flops;
+pub mod incremental;
+pub mod model;
+pub mod positions;
+pub mod runtime;
+pub mod server;
+pub mod tensor;
+pub mod testutil;
+pub mod util;
+pub mod vq;

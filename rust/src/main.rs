@@ -1,0 +1,179 @@
+//! `vqt` — the leader binary: serve, bench-style smoke commands, and state
+//! validation. (clap is not in the offline crate set; the CLI is a small
+//! hand-rolled dispatcher.)
+
+use anyhow::{bail, Context, Result};
+use std::sync::Arc;
+use vqt::config::{load_config_file, ModelConfig, ServeConfig};
+use vqt::coordinator::{Backend, Coordinator, Request, Response};
+use vqt::incremental::EngineOptions;
+use vqt::model::ModelWeights;
+use vqt::runtime::ArtifactRuntime;
+
+const USAGE: &str = "vqt — incrementally-computable VQ transformers
+
+USAGE:
+  vqt serve [--config FILE] [--artifacts DIR] [--bind ADDR]
+  vqt validate [--artifacts DIR]      cross-check L1/L2/L3 numerics
+  vqt demo                            quick in-process session demo
+  vqt help
+
+Environment: VQT_LOG=error|warn|info|debug|trace";
+
+fn main() {
+    vqt::util::logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let result = match cmd {
+        "serve" => serve(&args[1..]),
+        "validate" => validate(&args[1..]),
+        "demo" => demo(),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn flag(args: &[String], name: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+fn serve(args: &[String]) -> Result<()> {
+    let (model_cfg, mut serve_cfg) = match flag(args, "--config") {
+        Some(path) => load_config_file(&path)?,
+        None => (ModelConfig::vqt_mini(), ServeConfig::default()),
+    };
+    if let Some(bind) = flag(args, "--bind") {
+        serve_cfg.bind = bind;
+    }
+    let artifacts = flag(args, "--artifacts").unwrap_or_else(|| "artifacts".into());
+    let dir = std::path::PathBuf::from(&artifacts);
+
+    // Prefer the artifact bundle's weights + config so the engine and the
+    // AOT dense path agree; fall back to random weights for bring-up.
+    let (cfg, weights) = if dir.join("manifest.json").exists() {
+        let rt = ArtifactRuntime::open(&dir)?;
+        let cfg = rt.manifest.config.clone();
+        let w = ModelWeights::load(rt.weights_path(), &cfg)?;
+        (cfg, w)
+    } else {
+        log::warn!(
+            "no artifacts at {artifacts}; serving random-init weights (run `make artifacts`)"
+        );
+        let w = ModelWeights::random(&model_cfg, 7);
+        (model_cfg, w)
+    };
+    log::info!(
+        "serving {} params, d={} L={} vq_heads={}",
+        cfg.param_count(),
+        cfg.d_model,
+        cfg.n_layers,
+        cfg.vq_heads
+    );
+    let coordinator = Coordinator::start(
+        Backend {
+            weights: Arc::new(weights),
+            artifacts_dir: dir.join("manifest.json").exists().then_some(dir),
+            engine_opts: EngineOptions::default(),
+        },
+        serve_cfg.clone(),
+    );
+    vqt::server::serve(&serve_cfg.bind, coordinator.client())
+}
+
+fn validate(args: &[String]) -> Result<()> {
+    let dir = std::path::PathBuf::from(
+        flag(args, "--artifacts").unwrap_or_else(|| "artifacts".into()),
+    );
+    if !dir.join("manifest.json").exists() {
+        bail!("no artifacts at {} — run `make artifacts`", dir.display());
+    }
+    let rt = ArtifactRuntime::open(&dir)?;
+    let cfg = rt.manifest.config.clone();
+    let w = Arc::new(ModelWeights::load(rt.weights_path(), &cfg)?);
+    let mut rng = vqt::util::Rng::new(1234);
+    let mut worst: f32 = 0.0;
+    for trial in 0..5 {
+        let n = rng.range(8, cfg.max_seq.min(100));
+        let tokens: Vec<u32> = (0..n).map(|_| rng.below(cfg.vocab_size - 1) as u32).collect();
+        let mut eng = vqt::incremental::IncrementalEngine::new(
+            w.clone(),
+            &tokens,
+            EngineOptions::default(),
+        );
+        for _ in 0..3 {
+            let at = rng.below(eng.len());
+            let tok = rng.below(cfg.vocab_size - 1) as u32;
+            eng.apply_edit(vqt::edits::Edit::Replace { at, tok });
+        }
+        let l2 = rt.dense_logits(eng.tokens(), eng.position_ids())?;
+        let rep = eng.verify();
+        let l2diff = l2
+            .iter()
+            .zip(eng.logits())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        worst = worst.max(l2diff).max(rep.max_logit_diff);
+        println!(
+            "trial {trial}: n={n} L2-vs-engine max diff {l2diff:.2e}, dense-vs-engine {:.2e}, code mismatches {}/{}",
+            rep.max_logit_diff, rep.code_mismatches, rep.total_codes
+        );
+        if rep.code_mismatches != 0 || l2diff > 2e-3 {
+            bail!("validation FAILED");
+        }
+    }
+    println!("validate OK (worst logit diff {worst:.2e})");
+    Ok(())
+}
+
+fn demo() -> Result<()> {
+    let cfg = ModelConfig::vqt_tiny();
+    let w = Arc::new(ModelWeights::random(&cfg, 7));
+    let coordinator = Coordinator::start(
+        Backend {
+            weights: w,
+            artifacts_dir: None,
+            engine_opts: EngineOptions::default(),
+        },
+        ServeConfig::default(),
+    );
+    let client = coordinator.client();
+    let tokens: Vec<u32> = (0..24).map(|i| (i * 7 % 60) as u32).collect();
+    let r = client
+        .request(Request::Open {
+            session: "demo".into(),
+            tokens,
+        })
+        .context("open")?;
+    println!("open → {:?}", r.logits()?);
+    let r = client.request(Request::Edit {
+        session: "demo".into(),
+        edit: vqt::edits::Edit::Replace { at: 3, tok: 42 },
+    })?;
+    if let Response::Logits {
+        flops,
+        dense_equiv_flops,
+        ..
+    } = &r
+    {
+        println!(
+            "edit → {:.1}× fewer ops than dense ({flops} vs {dense_equiv_flops})",
+            *dense_equiv_flops as f64 / *flops as f64
+        );
+    }
+    if let Response::Stats(s) = client.request(Request::Stats)? {
+        println!("stats: {}", s.to_string());
+    }
+    Ok(())
+}

@@ -1,0 +1,9 @@
+//! VQT model definition: weights, dense oracle forward, and the classifier
+//! head. The paper-specific pieces are the GELU-elementwise attention and
+//! the multi-head VQ bottleneck on attention outputs (eq. 1).
+
+pub mod dense;
+pub mod weights;
+
+pub use dense::{attn_out_scale, dense_forward, predict, ForwardOutput};
+pub use weights::{LayerWeights, ModelWeights};

@@ -1,0 +1,291 @@
+//! Model weights: container, deterministic random init (tests), and loading
+//! from the `VQTB` tensor files produced by `python/compile/export_weights.py`.
+//!
+//! Naming convention in the tensor file (all f32):
+//! ```text
+//! embed_tokens            (vocab, d)
+//! embed_pos               (pos_pool, d)
+//! layers.{i}.ln1.g / .b   (d,)
+//! layers.{i}.wq / wk / wv (d, d)     [row-major: y = x · W]
+//! layers.{i}.bq / bk / bv (d,)
+//! layers.{i}.vq.book      (vq_heads, codes, d/vq_heads)   [optional]
+//! layers.{i}.w_mix / b_mix
+//! layers.{i}.ln2.g / .b
+//! layers.{i}.w_ff1 / b_ff1 / w_ff2 / b_ff2
+//! ln_f.g / ln_f.b
+//! w_cls (d, n_classes) / b_cls
+//! ```
+
+use crate::config::ModelConfig;
+use crate::tensor::Matrix;
+use crate::util::{Rng, Tensor, TensorFile};
+use crate::vq::VqCodebooks;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Weights of one transformer block.
+#[derive(Clone, Debug)]
+pub struct LayerWeights {
+    pub ln1_g: Vec<f32>,
+    pub ln1_b: Vec<f32>,
+    pub wq: Matrix,
+    pub wk: Matrix,
+    pub wv: Matrix,
+    pub bq: Vec<f32>,
+    pub bk: Vec<f32>,
+    pub bv: Vec<f32>,
+    /// VQ codebooks on the attention output (None ⇒ baseline block).
+    pub vq: Option<VqCodebooks>,
+    pub w_mix: Matrix,
+    pub b_mix: Vec<f32>,
+    pub ln2_g: Vec<f32>,
+    pub ln2_b: Vec<f32>,
+    pub w_ff1: Matrix,
+    pub b_ff1: Vec<f32>,
+    pub w_ff2: Matrix,
+    pub b_ff2: Vec<f32>,
+}
+
+/// Full model weights.
+#[derive(Clone, Debug)]
+pub struct ModelWeights {
+    pub cfg: ModelConfig,
+    pub embed_tokens: Matrix,
+    pub embed_pos: Matrix,
+    pub layers: Vec<LayerWeights>,
+    pub lnf_g: Vec<f32>,
+    pub lnf_b: Vec<f32>,
+    pub w_cls: Matrix,
+    pub b_cls: Vec<f32>,
+}
+
+impl ModelWeights {
+    /// Deterministic random init (He-style scales). Used by tests and by
+    /// the workload benches when no trained checkpoint is supplied — the
+    /// incremental-vs-dense *exactness* and the FLOP accounting are
+    /// weight-agnostic.
+    pub fn random(cfg: &ModelConfig, seed: u64) -> ModelWeights {
+        cfg.validate().expect("invalid config");
+        let mut r = Rng::new(seed);
+        let d = cfg.d_model;
+        let emb_scale = 0.02;
+        let proj_scale = 1.0 / (d as f32).sqrt();
+        let ff_scale = 1.0 / (cfg.d_ff as f32).sqrt();
+        let mat =
+            |rows: usize, cols: usize, s: f32, r: &mut Rng| Matrix::from_fn(rows, cols, |_, _| r.normal() * s);
+        let embed_tokens = mat(cfg.vocab_size, d, emb_scale, &mut r);
+        let embed_pos = mat(cfg.pos_pool, d, emb_scale, &mut r);
+        let layers = (0..cfg.n_layers)
+            .map(|_| LayerWeights {
+                ln1_g: vec![1.0; d],
+                ln1_b: vec![0.0; d],
+                wq: mat(d, d, proj_scale, &mut r),
+                wk: mat(d, d, proj_scale, &mut r),
+                wv: mat(d, d, proj_scale, &mut r),
+                bq: vec![0.0; d],
+                bk: vec![0.0; d],
+                bv: vec![0.0; d],
+                vq: if cfg.vq_heads > 0 {
+                    Some(VqCodebooks::random(cfg.vq_heads, cfg.vq_codes, d, &mut r))
+                } else {
+                    None
+                },
+                w_mix: mat(d, d, proj_scale, &mut r),
+                b_mix: vec![0.0; d],
+                ln2_g: vec![1.0; d],
+                ln2_b: vec![0.0; d],
+                w_ff1: mat(d, cfg.d_ff, proj_scale, &mut r),
+                b_ff1: vec![0.0; cfg.d_ff],
+                w_ff2: mat(cfg.d_ff, d, ff_scale, &mut r),
+                b_ff2: vec![0.0; d],
+            })
+            .collect();
+        ModelWeights {
+            cfg: cfg.clone(),
+            embed_tokens,
+            embed_pos,
+            layers,
+            lnf_g: vec![1.0; d],
+            lnf_b: vec![0.0; d],
+            w_cls: mat(d, cfg.n_classes, proj_scale, &mut r),
+            b_cls: vec![0.0; cfg.n_classes],
+        }
+    }
+
+    /// Load from a `VQTB` tensor file (see module docs for naming).
+    pub fn load(path: impl AsRef<Path>, cfg: &ModelConfig) -> Result<ModelWeights> {
+        let tf = TensorFile::load(path)?;
+        Self::from_tensor_file(&tf, cfg)
+    }
+
+    pub fn from_tensor_file(tf: &TensorFile, cfg: &ModelConfig) -> Result<ModelWeights> {
+        cfg.validate()?;
+        let d = cfg.d_model;
+        let getm = |name: &str, rows: usize, cols: usize| -> Result<Matrix> {
+            let data = tf.f32_shaped(name, &[rows, cols])?;
+            Ok(Matrix::from_vec(rows, cols, data.to_vec()))
+        };
+        let getv = |name: &str, len: usize| -> Result<Vec<f32>> {
+            Ok(tf.f32_shaped(name, &[len])?.to_vec())
+        };
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for i in 0..cfg.n_layers {
+            let p = |s: &str| format!("layers.{i}.{s}");
+            let vq = if cfg.vq_heads > 0 {
+                let chunk = d / cfg.vq_heads;
+                let (dims, data) = tf.get(&p("vq.book"))?.as_f32()?;
+                anyhow::ensure!(
+                    dims == [cfg.vq_heads, cfg.vq_codes, chunk],
+                    "vq.book dims {dims:?} != {:?}",
+                    [cfg.vq_heads, cfg.vq_codes, chunk]
+                );
+                let per = cfg.vq_codes * chunk;
+                let books = (0..cfg.vq_heads)
+                    .map(|h| {
+                        Matrix::from_vec(
+                            cfg.vq_codes,
+                            chunk,
+                            data[h * per..(h + 1) * per].to_vec(),
+                        )
+                    })
+                    .collect();
+                Some(VqCodebooks::new(books, d))
+            } else {
+                None
+            };
+            layers.push(LayerWeights {
+                ln1_g: getv(&p("ln1.g"), d)?,
+                ln1_b: getv(&p("ln1.b"), d)?,
+                wq: getm(&p("wq"), d, d)?,
+                wk: getm(&p("wk"), d, d)?,
+                wv: getm(&p("wv"), d, d)?,
+                bq: getv(&p("bq"), d)?,
+                bk: getv(&p("bk"), d)?,
+                bv: getv(&p("bv"), d)?,
+                vq,
+                w_mix: getm(&p("w_mix"), d, d)?,
+                b_mix: getv(&p("b_mix"), d)?,
+                ln2_g: getv(&p("ln2.g"), d)?,
+                ln2_b: getv(&p("ln2.b"), d)?,
+                w_ff1: getm(&p("w_ff1"), d, cfg.d_ff)?,
+                b_ff1: getv(&p("b_ff1"), cfg.d_ff)?,
+                w_ff2: getm(&p("w_ff2"), cfg.d_ff, d)?,
+                b_ff2: getv(&p("b_ff2"), d)?,
+            });
+        }
+        Ok(ModelWeights {
+            cfg: cfg.clone(),
+            embed_tokens: getm("embed_tokens", cfg.vocab_size, d)
+                .context("embed_tokens")?,
+            embed_pos: getm("embed_pos", cfg.pos_pool, d).context("embed_pos")?,
+            layers,
+            lnf_g: getv("ln_f.g", d)?,
+            lnf_b: getv("ln_f.b", d)?,
+            w_cls: getm("w_cls", d, cfg.n_classes)?,
+            b_cls: getv("b_cls", cfg.n_classes)?,
+        })
+    }
+
+    /// Serialize to a tensor file (inverse of `from_tensor_file`).
+    pub fn to_tensor_file(&self) -> TensorFile {
+        let mut tf = TensorFile::new();
+        let cfg = &self.cfg;
+        let d = cfg.d_model;
+        let put_m = |tf: &mut TensorFile, name: String, m: &Matrix| {
+            tf.insert(name, Tensor::f32(vec![m.rows, m.cols], m.data.clone()));
+        };
+        let put_v = |tf: &mut TensorFile, name: String, v: &[f32]| {
+            tf.insert(name, Tensor::f32(vec![v.len()], v.to_vec()));
+        };
+        put_m(&mut tf, "embed_tokens".into(), &self.embed_tokens);
+        put_m(&mut tf, "embed_pos".into(), &self.embed_pos);
+        for (i, l) in self.layers.iter().enumerate() {
+            let p = |s: &str| format!("layers.{i}.{s}");
+            put_v(&mut tf, p("ln1.g"), &l.ln1_g);
+            put_v(&mut tf, p("ln1.b"), &l.ln1_b);
+            put_m(&mut tf, p("wq"), &l.wq);
+            put_m(&mut tf, p("wk"), &l.wk);
+            put_m(&mut tf, p("wv"), &l.wv);
+            put_v(&mut tf, p("bq"), &l.bq);
+            put_v(&mut tf, p("bk"), &l.bk);
+            put_v(&mut tf, p("bv"), &l.bv);
+            if let Some(vq) = &l.vq {
+                let chunk = d / vq.heads;
+                let mut data = Vec::with_capacity(vq.heads * vq.codes * chunk);
+                for b in &vq.books {
+                    data.extend_from_slice(&b.data);
+                }
+                tf.insert(
+                    p("vq.book"),
+                    Tensor::f32(vec![vq.heads, vq.codes, chunk], data),
+                );
+            }
+            put_m(&mut tf, p("w_mix"), &l.w_mix);
+            put_v(&mut tf, p("b_mix"), &l.b_mix);
+            put_v(&mut tf, p("ln2.g"), &l.ln2_g);
+            put_v(&mut tf, p("ln2.b"), &l.ln2_b);
+            put_m(&mut tf, p("w_ff1"), &l.w_ff1);
+            put_v(&mut tf, p("b_ff1"), &l.b_ff1);
+            put_m(&mut tf, p("w_ff2"), &l.w_ff2);
+            put_v(&mut tf, p("b_ff2"), &l.b_ff2);
+        }
+        put_v(&mut tf, "ln_f.g".into(), &self.lnf_g);
+        put_v(&mut tf, "ln_f.b".into(), &self.lnf_b);
+        put_m(&mut tf, "w_cls".into(), &self.w_cls);
+        put_v(&mut tf, "b_cls".into(), &self.b_cls);
+        tf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_is_deterministic() {
+        let cfg = ModelConfig::vqt_tiny();
+        let a = ModelWeights::random(&cfg, 42);
+        let b = ModelWeights::random(&cfg, 42);
+        assert_eq!(a.embed_tokens, b.embed_tokens);
+        assert_eq!(a.layers[1].w_ff2, b.layers[1].w_ff2);
+        let c = ModelWeights::random(&cfg, 43);
+        assert_ne!(a.embed_tokens, c.embed_tokens);
+    }
+
+    #[test]
+    fn tensor_file_roundtrip() {
+        let cfg = ModelConfig::vqt_tiny();
+        let w = ModelWeights::random(&cfg, 7);
+        let tf = w.to_tensor_file();
+        let back = ModelWeights::from_tensor_file(&tf, &cfg).unwrap();
+        assert_eq!(back.embed_tokens, w.embed_tokens);
+        assert_eq!(back.w_cls, w.w_cls);
+        for (a, b) in back.layers.iter().zip(&w.layers) {
+            assert_eq!(a.wq, b.wq);
+            assert_eq!(
+                a.vq.as_ref().unwrap().books[0],
+                b.vq.as_ref().unwrap().books[0]
+            );
+        }
+    }
+
+    #[test]
+    fn load_rejects_wrong_shape() {
+        let cfg = ModelConfig::vqt_tiny();
+        let w = ModelWeights::random(&cfg, 7);
+        let mut tf = w.to_tensor_file();
+        tf.insert("w_cls", Tensor::f32(vec![3, 3], vec![0.0; 9]));
+        assert!(ModelWeights::from_tensor_file(&tf, &cfg).is_err());
+    }
+
+    #[test]
+    fn baseline_has_no_vq() {
+        let mut cfg = ModelConfig::vqt_tiny();
+        cfg.vq_heads = 0;
+        let w = ModelWeights::random(&cfg, 1);
+        assert!(w.layers.iter().all(|l| l.vq.is_none()));
+        // And it round-trips without vq entries.
+        let back = ModelWeights::from_tensor_file(&w.to_tensor_file(), &cfg).unwrap();
+        assert!(back.layers[0].vq.is_none());
+    }
+}

@@ -1,0 +1,252 @@
+//! Sampled absolute positional embeddings (paper §3.3, App. B).
+//!
+//! Conventional contiguous positions make token insertion shift every
+//! subsequent position — nearly all representations change and nothing can
+//! be reused. The paper instead trains positional embeddings on *random
+//! ordered subsets* of a large pool (gap_factor × max_seq), so the network
+//! only relies on position *order*. At inference we can then assign initial
+//! positions with gaps, insert new tokens into gaps, and only *reindex*
+//! ("defragment") when a gap is exhausted — an event this module counts so
+//! the coordinator can report its amortized cost.
+
+use crate::util::Rng;
+
+/// Outcome of an insertion attempt.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InsertOutcome {
+    /// Position allocated in an existing gap; only the new row is fresh.
+    InGap(u32),
+    /// No gap available — the whole document was reindexed; every row's
+    /// position changed (downstream caches are invalid).
+    Defragged(u32),
+}
+
+/// Allocator of strictly-increasing position ids over a fixed pool.
+#[derive(Clone, Debug)]
+pub struct PositionAllocator {
+    pool: usize,
+    /// Current position ids, strictly increasing, one per token row.
+    ids: Vec<u32>,
+    /// Number of defragmentation events since creation.
+    pub defrag_count: u64,
+}
+
+impl PositionAllocator {
+    /// Evenly-spread initial assignment for `n` rows (deterministic):
+    /// ids ≈ (i + 0.5) · pool / n, guaranteeing maximal initial gaps.
+    pub fn spread(pool: usize, n: usize) -> PositionAllocator {
+        assert!(n <= pool, "{n} rows exceed position pool {pool}");
+        let ids = Self::spread_ids(pool, n);
+        PositionAllocator {
+            pool,
+            ids,
+            defrag_count: 0,
+        }
+    }
+
+    /// Random sorted-subset assignment — the *training-time* distribution
+    /// (App. B); used by tests to mirror the Python data pipeline.
+    pub fn sampled(pool: usize, n: usize, rng: &mut Rng) -> PositionAllocator {
+        let ids = rng
+            .sorted_subset(pool, n)
+            .into_iter()
+            .map(|x| x as u32)
+            .collect();
+        PositionAllocator {
+            pool,
+            ids,
+            defrag_count: 0,
+        }
+    }
+
+    fn spread_ids(pool: usize, n: usize) -> Vec<u32> {
+        (0..n)
+            .map(|i| (((2 * i + 1) * pool) / (2 * n.max(1))) as u32)
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    pub fn pool(&self) -> usize {
+        self.pool
+    }
+
+    /// Current ids (strictly increasing).
+    pub fn ids(&self) -> &[u32] {
+        &self.ids
+    }
+
+    /// Insert a token row before index `at` (`at == len` appends). Picks the
+    /// midpoint of the surrounding gap; defragments when the gap is empty.
+    pub fn insert(&mut self, at: usize) -> InsertOutcome {
+        assert!(at <= self.ids.len(), "insert index out of bounds");
+        assert!(
+            self.ids.len() < self.pool,
+            "position pool exhausted ({} rows)",
+            self.ids.len()
+        );
+        let lo: i64 = if at == 0 { -1 } else { self.ids[at - 1] as i64 };
+        let hi: i64 = if at == self.ids.len() {
+            self.pool as i64
+        } else {
+            self.ids[at] as i64
+        };
+        if hi - lo >= 2 {
+            let mid = ((lo + hi) / 2) as u32;
+            debug_assert!((lo as i64) < mid as i64 && (mid as i64) < hi);
+            self.ids.insert(at, mid);
+            InsertOutcome::InGap(mid)
+        } else {
+            // Gap exhausted: reindex everything evenly, then insert.
+            self.defrag_count += 1;
+            let n = self.ids.len() + 1;
+            let fresh = Self::spread_ids(self.pool, n);
+            self.ids = fresh.clone();
+            // Row `at` now owns fresh[at]; the rest shift by construction.
+            InsertOutcome::Defragged(fresh[at])
+        }
+    }
+
+    /// Remove the row at `at` (its position id returns to the gap pool
+    /// implicitly).
+    pub fn remove(&mut self, at: usize) -> u32 {
+        self.ids.remove(at)
+    }
+
+    /// Invariant check: strictly increasing and within pool.
+    pub fn check(&self) -> bool {
+        self.ids.windows(2).all(|w| w[0] < w[1])
+            && self.ids.iter().all(|&p| (p as usize) < self.pool)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spread_is_strictly_increasing_with_gaps() {
+        let a = PositionAllocator::spread(4096, 512);
+        assert!(a.check());
+        assert_eq!(a.len(), 512);
+        // Every adjacent pair should leave at least a gap of ~pool/n − 1.
+        assert!(a.ids().windows(2).all(|w| w[1] - w[0] >= 7));
+    }
+
+    #[test]
+    fn insert_in_gap_keeps_order_and_neighbors() {
+        let mut a = PositionAllocator::spread(1024, 10);
+        let before = a.ids().to_vec();
+        match a.insert(5) {
+            InsertOutcome::InGap(p) => {
+                assert!(before[4] < p && p < before[5]);
+            }
+            InsertOutcome::Defragged(_) => panic!("huge gaps: no defrag expected"),
+        }
+        assert!(a.check());
+        assert_eq!(a.len(), 11);
+        assert_eq!(a.defrag_count, 0);
+    }
+
+    #[test]
+    fn insert_at_ends() {
+        let mut a = PositionAllocator::spread(1024, 4);
+        let first = a.ids()[0];
+        if let InsertOutcome::InGap(p) = a.insert(0) {
+            assert!(p < first);
+        } else {
+            panic!();
+        }
+        let last = *a.ids().last().unwrap();
+        if let InsertOutcome::InGap(p) = a.insert(a.len()) {
+            assert!(p > last);
+        } else {
+            panic!();
+        }
+        assert!(a.check());
+    }
+
+    #[test]
+    fn exhausted_gap_triggers_defrag() {
+        // Tiny pool: repeatedly insert at index 1 until the local gap dies.
+        let mut a = PositionAllocator::spread(16, 2);
+        let mut defragged = false;
+        for _ in 0..10 {
+            if let InsertOutcome::Defragged(_) = a.insert(1) {
+                defragged = true;
+                break;
+            }
+        }
+        assert!(defragged, "expected a defrag in a tiny pool");
+        assert!(a.defrag_count >= 1);
+        assert!(a.check());
+    }
+
+    #[test]
+    fn defrag_rate_low_with_paper_gap_factor() {
+        // With the paper's recommendation (pool ≫ max length), random
+        // insertion workloads should defrag rarely.
+        let mut rng = Rng::new(17);
+        let mut a = PositionAllocator::spread(8 * 512, 256);
+        let mut inserts = 0u64;
+        while a.len() < 512 {
+            let at = rng.below(a.len() + 1);
+            a.insert(at);
+            inserts += 1;
+        }
+        assert!(inserts >= 256);
+        assert!(
+            a.defrag_count * 20 <= inserts,
+            "defrag rate too high: {}/{}",
+            a.defrag_count,
+            inserts
+        );
+    }
+
+    #[test]
+    fn remove_then_insert_reuses_space() {
+        let mut a = PositionAllocator::spread(64, 8);
+        let removed = a.remove(3);
+        assert_eq!(a.len(), 7);
+        if let InsertOutcome::InGap(p) = a.insert(3) {
+            // The reopened gap contains the old id's neighborhood.
+            assert!((p as i64 - removed as i64).abs() <= 8);
+        }
+        assert!(a.check());
+    }
+
+    #[test]
+    fn sampled_matches_training_distribution_shape() {
+        let mut rng = Rng::new(3);
+        let a = PositionAllocator::sampled(1000, 100, &mut rng);
+        assert!(a.check());
+        assert_eq!(a.len(), 100);
+    }
+
+    #[test]
+    #[should_panic]
+    fn pool_exhaustion_panics() {
+        let mut a = PositionAllocator::spread(4, 4);
+        a.insert(0);
+    }
+}
+
+impl PositionAllocator {
+    /// Restore from checkpointed ids (must be strictly increasing and
+    /// within the pool).
+    pub fn restore(pool: usize, ids: Vec<u32>, defrag_count: u64) -> anyhow::Result<Self> {
+        let a = PositionAllocator {
+            pool,
+            ids,
+            defrag_count,
+        };
+        anyhow::ensure!(a.check(), "invalid checkpointed position ids");
+        Ok(a)
+    }
+}

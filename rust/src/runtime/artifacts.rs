@@ -1,0 +1,271 @@
+//! Artifact registry: manifest parsing, lazy PJRT compilation, execution.
+
+use crate::config::ModelConfig;
+use crate::util::{Json, TensorFile};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::cell::RefCell;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct ArtifactManifest {
+    pub preset: String,
+    /// Model-weight tensor names in artifact argument order.
+    pub param_order: Vec<String>,
+    /// Sequence-length buckets with a compiled forward.
+    pub buckets: Vec<usize>,
+    /// Logical name → file name.
+    pub artifacts: HashMap<String, String>,
+    /// Serving model configuration mirrored from Python.
+    pub config: ModelConfig,
+}
+
+impl ArtifactManifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<ArtifactManifest> {
+        let path = dir.as_ref().join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let param_order = j
+            .get("param_order")
+            .as_arr()
+            .context("manifest: param_order")?
+            .iter()
+            .map(|v| v.as_str().unwrap_or_default().to_string())
+            .collect();
+        let buckets = j
+            .get("buckets")
+            .as_arr()
+            .context("manifest: buckets")?
+            .iter()
+            .filter_map(|v| v.as_usize())
+            .collect();
+        let artifacts = j
+            .get("artifacts")
+            .as_obj()
+            .context("manifest: artifacts")?
+            .iter()
+            .map(|(k, v)| (k.clone(), v.as_str().unwrap_or_default().to_string()))
+            .collect();
+        let config = ModelConfig::from_json(j.get("config")).context("manifest: config")?;
+        Ok(ArtifactManifest {
+            preset: j.get("preset").as_str().unwrap_or("?").to_string(),
+            param_order,
+            buckets,
+            artifacts,
+            config,
+        })
+    }
+
+    /// Smallest bucket that fits a document of `n` tokens.
+    pub fn bucket_for(&self, n: usize) -> Result<usize> {
+        self.buckets
+            .iter()
+            .copied()
+            .filter(|&b| b >= n)
+            .min()
+            .with_context(|| format!("no artifact bucket fits sequence length {n}"))
+    }
+}
+
+/// Lazily-compiled PJRT executables over the artifact directory.
+pub struct ArtifactRuntime {
+    dir: PathBuf,
+    pub manifest: ArtifactManifest,
+    client: xla::PjRtClient,
+    /// Weight literals in `param_order`, prepared once at load.
+    param_literals: Vec<xla::Literal>,
+    /// Layer-0 VQ (books, bias) literals for the standalone L1 artifact.
+    vq_literals: Option<(xla::Literal, xla::Literal)>,
+    /// Logical artifact name → compiled executable (lazy).
+    ///
+    /// NOTE: the `xla` crate's PJRT handles are `Rc`-based (not `Send`),
+    /// so an `ArtifactRuntime` lives on one thread; the coordinator owns
+    /// it on its worker thread and fronts it with channels.
+    compiled: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl ArtifactRuntime {
+    /// Open the artifact directory: parse the manifest, load weights,
+    /// create the PJRT CPU client.
+    pub fn open(dir: impl AsRef<Path>) -> Result<ArtifactRuntime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = ArtifactManifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let weights = TensorFile::load(dir.join("weights_serve.bin"))?;
+        let mut param_literals = Vec::with_capacity(manifest.param_order.len());
+        for name in &manifest.param_order {
+            let t = weights.get(name)?;
+            let lit = match t {
+                crate::util::Tensor::F32 { dims, data } => {
+                    let l = xla::Literal::vec1(data);
+                    if dims.is_empty() {
+                        l
+                    } else {
+                        let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                        l.reshape(&dims)?
+                    }
+                }
+                crate::util::Tensor::I32 { dims, data } => {
+                    let l = xla::Literal::vec1(data);
+                    let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                    l.reshape(&dims)?
+                }
+            };
+            param_literals.push(lit);
+        }
+        log::info!(
+            "artifact runtime: preset={} buckets={:?} params={} ({} artifacts)",
+            manifest.preset,
+            manifest.buckets,
+            param_literals.len(),
+            manifest.artifacts.len()
+        );
+        // Layer-0 codebooks + biases (b = −‖c‖²/2) for the standalone
+        // vq_assign artifact.
+        let vq_literals = if manifest.config.vq_heads > 0 {
+            let (dims, data) = weights.get("layers.0.vq.book")?.as_f32()?;
+            let (h, q, chunk) = (dims[0], dims[1], dims[2]);
+            let books = xla::Literal::vec1(data).reshape(&[h as i64, q as i64, chunk as i64])?;
+            let mut bias = vec![0f32; h * q];
+            for hh in 0..h {
+                for qq in 0..q {
+                    let row = &data[(hh * q + qq) * chunk..(hh * q + qq + 1) * chunk];
+                    bias[hh * q + qq] = -0.5 * row.iter().map(|x| x * x).sum::<f32>();
+                }
+            }
+            let bias = xla::Literal::vec1(&bias).reshape(&[h as i64, q as i64])?;
+            Some((books, bias))
+        } else {
+            None
+        };
+        Ok(ArtifactRuntime {
+            dir,
+            manifest,
+            client,
+            param_literals,
+            vq_literals,
+            compiled: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// The serving model's weights file (for building the in-process
+    /// engine against the same parameters the artifacts use).
+    pub fn weights_path(&self) -> PathBuf {
+        self.dir.join("weights_serve.bin")
+    }
+
+    /// Compile (or fetch cached) a logical artifact.
+    fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.compiled.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let file = self
+            .manifest
+            .artifacts
+            .get(name)
+            .with_context(|| format!("unknown artifact '{name}'"))?;
+        let path = self.dir.join(file);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("PJRT compile of {name}"))?;
+        log::info!("compiled artifact {name} in {:.2}s", t0.elapsed().as_secs_f64());
+        let exe = Rc::new(exe);
+        self.compiled
+            .borrow_mut()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Warm the compile cache for every bucket (server startup).
+    pub fn warmup(&self) -> Result<()> {
+        for &b in &self.manifest.buckets.clone() {
+            self.executable(&format!("model_fwd_n{b}"))?;
+        }
+        Ok(())
+    }
+
+    /// Dense forward through the AOT model: pad to a bucket, execute,
+    /// return logits. This is the L2 path the incremental engine is
+    /// validated against (and the "dense baseline" serving mode).
+    pub fn dense_logits(&self, tokens: &[u32], pos_ids: &[u32]) -> Result<Vec<f32>> {
+        let n = tokens.len();
+        anyhow::ensure!(n == pos_ids.len(), "tokens/pos length mismatch");
+        let bucket = self.manifest.bucket_for(n)?;
+        let exe = self.executable(&format!("model_fwd_n{bucket}"))?;
+        let cfg = &self.manifest.config;
+        let pad_tok = (cfg.vocab_size - 1) as i32;
+        let mut toks: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        let mut pos: Vec<i32> = pos_ids.iter().map(|&p| p as i32).collect();
+        // Pad rows: PAD token. Pad positions are masked out of attention
+        // columns and pooling, so any in-pool id works (wrap past the last
+        // real position; collisions with real ids are harmless).
+        let last = pos.last().copied().unwrap_or(-1);
+        for i in 0..(bucket - n) {
+            toks.push(pad_tok);
+            pos.push(((last as i64 + 1 + i as i64) % cfg.pos_pool as i64) as i32);
+        }
+        let tail = [
+            xla::Literal::vec1(&toks),
+            xla::Literal::vec1(&pos),
+            xla::Literal::scalar(n as i32),
+        ];
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(self.param_literals.len() + 3);
+        args.extend(self.param_literals.iter());
+        args.extend(tail.iter());
+        let result = exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let tuple = result.to_tuple1()?;
+        Ok(tuple.to_vec::<f32>()?)
+    }
+
+    /// Execute the standalone L1 VQ-assignment artifact (microbench/tests).
+    pub fn vq_assign(&self, x: &crate::tensor::Matrix) -> Result<Vec<i32>> {
+        let n = x.rows;
+        let name = self
+            .manifest
+            .artifacts
+            .keys()
+            .find(|k| k.starts_with("vq_assign_n"))
+            .cloned()
+            .context("no vq_assign artifact")?;
+        let want_n: usize = name.trim_start_matches("vq_assign_n").parse()?;
+        anyhow::ensure!(n == want_n, "vq_assign artifact expects n={want_n}, got {n}");
+        let exe = self.executable(&name)?;
+        let lit = super::matrix_to_literal(x)?;
+        let (books, bias) = self.vq_literals.as_ref().context("no VQ literals")?;
+        let args = [&lit, books, bias];
+        let result = exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let tuple = result.to_tuple1()?;
+        Ok(tuple.to_vec::<i32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_selection() {
+        let m = ArtifactManifest {
+            preset: "t".into(),
+            param_order: vec![],
+            buckets: vec![32, 64, 128],
+            artifacts: HashMap::new(),
+            config: ModelConfig::vqt_tiny(),
+        };
+        assert_eq!(m.bucket_for(1).unwrap(), 32);
+        assert_eq!(m.bucket_for(32).unwrap(), 32);
+        assert_eq!(m.bucket_for(33).unwrap(), 64);
+        assert_eq!(m.bucket_for(128).unwrap(), 128);
+        assert!(m.bucket_for(129).is_err());
+    }
+}

@@ -1,0 +1,43 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts (built once by
+//! `make artifacts` from the L2 JAX model) and execute them from the Rust
+//! request path. Python never runs here.
+//!
+//! Pattern (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. Artifacts are compiled lazily on first
+//! use and cached for the lifetime of the runtime.
+
+pub mod artifacts;
+
+pub use artifacts::{ArtifactManifest, ArtifactRuntime};
+
+use crate::tensor::Matrix;
+use anyhow::Result;
+
+/// Convert a Matrix to a 2-D f32 literal.
+pub fn matrix_to_literal(m: &Matrix) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(&m.data).reshape(&[m.rows as i64, m.cols as i64])?)
+}
+
+/// Convert a flat i32 slice to a 1-D literal.
+pub fn i32_literal(xs: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(xs)
+}
+
+/// Extract an f32 vector from a literal.
+pub fn literal_to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let m = Matrix::from_fn(2, 3, |i, j| (i * 3 + j) as f32);
+        let lit = matrix_to_literal(&m).unwrap();
+        let back = literal_to_f32(&lit).unwrap();
+        assert_eq!(back, m.data);
+    }
+}

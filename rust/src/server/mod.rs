@@ -1,0 +1,69 @@
+//! TCP JSON server: newline-delimited JSON requests over TCP, one
+//! connection per client thread, all inference routed through the
+//! coordinator's channel client.
+//!
+//! Wire protocol (one JSON object per line):
+//! ```text
+//! → {"op":"open","session":"s1","tokens":[10,20,30]}
+//! ← {"ok":true,"logits":[...],"predicted":1,"flops":123,"speedup":9.7}
+//! → {"op":"edit","session":"s1","kind":"replace","at":1,"tok":99}
+//! → {"op":"edit","session":"s1","kind":"insert","at":0,"tok":5}
+//! → {"op":"edit","session":"s1","kind":"delete","at":2}
+//! → {"op":"revision","session":"s1","tokens":[...]}
+//! → {"op":"dense","tokens":[...]}
+//! → {"op":"stats"}   |   {"op":"close","session":"s1"}
+//! ```
+
+pub mod protocol;
+
+use crate::coordinator::Client;
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+
+pub use protocol::{parse_request, response_to_json};
+
+/// Serve forever on `bind`, handling each connection on its own thread.
+pub fn serve(bind: &str, client: Client) -> Result<()> {
+    let listener = TcpListener::bind(bind).with_context(|| format!("binding {bind}"))?;
+    log::info!("vqt server listening on {bind}");
+    for conn in listener.incoming() {
+        match conn {
+            Ok(stream) => {
+                let c = client.clone();
+                std::thread::spawn(move || {
+                    if let Err(e) = handle_conn(stream, c) {
+                        log::debug!("connection ended: {e:#}");
+                    }
+                });
+            }
+            Err(e) => log::warn!("accept failed: {e}"),
+        }
+    }
+    Ok(())
+}
+
+/// Handle one connection: line in → request → coordinator → line out.
+pub fn handle_conn(stream: TcpStream, client: Client) -> Result<()> {
+    let peer = stream.peer_addr()?;
+    log::debug!("connection from {peer}");
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let out = match parse_request(&line) {
+            Ok(req) => match client.request(req) {
+                Ok(resp) => response_to_json(&resp),
+                Err(e) => protocol::error_json(&format!("{e:#}")),
+            },
+            Err(e) => protocol::error_json(&format!("{e:#}")),
+        };
+        writer.write_all(out.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+    Ok(())
+}

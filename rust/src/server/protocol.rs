@@ -1,0 +1,245 @@
+//! Wire protocol: JSON ↔ coordinator request/response mapping.
+
+use crate::coordinator::{Request, Response};
+use crate::edits::Edit;
+use crate::util::Json;
+use anyhow::{bail, Context, Result};
+
+fn tokens_field(j: &Json, key: &str) -> Result<Vec<u32>> {
+    j.get(key)
+        .as_arr()
+        .with_context(|| format!("missing '{key}' array"))?
+        .iter()
+        .map(|v| {
+            v.as_usize()
+                .map(|u| u as u32)
+                .with_context(|| format!("'{key}' must hold non-negative integers"))
+        })
+        .collect()
+}
+
+fn session_field(j: &Json) -> Result<String> {
+    Ok(j.get("session")
+        .as_str()
+        .context("missing 'session'")?
+        .to_string())
+}
+
+/// Parse one request line.
+pub fn parse_request(line: &str) -> Result<Request> {
+    let j = Json::parse(line).context("invalid JSON")?;
+    let op = j.get("op").as_str().context("missing 'op'")?;
+    Ok(match op {
+        "open" => Request::Open {
+            session: session_field(&j)?,
+            tokens: tokens_field(&j, "tokens")?,
+        },
+        "edit" => {
+            let at = j.get("at").as_usize().context("missing 'at'")?;
+            let edit = match j.get("kind").as_str().context("missing 'kind'")? {
+                "replace" => Edit::Replace {
+                    at,
+                    tok: j.get("tok").as_usize().context("missing 'tok'")? as u32,
+                },
+                "insert" => Edit::Insert {
+                    at,
+                    tok: j.get("tok").as_usize().context("missing 'tok'")? as u32,
+                },
+                "delete" => Edit::Delete { at },
+                k => bail!("unknown edit kind '{k}'"),
+            };
+            Request::Edit {
+                session: session_field(&j)?,
+                edit,
+            }
+        }
+        "revision" => Request::Revision {
+            session: session_field(&j)?,
+            tokens: tokens_field(&j, "tokens")?,
+        },
+        "batch_revisions" => {
+            let base = tokens_field(&j, "base")?;
+            let revisions = j
+                .get("revisions")
+                .as_arr()
+                .context("missing 'revisions'")?
+                .iter()
+                .map(|r| {
+                    r.as_arr()
+                        .context("revision must be an array")?
+                        .iter()
+                        .map(|v| Ok(v.as_usize().context("token must be an int")? as u32))
+                        .collect::<Result<Vec<u32>>>()
+                })
+                .collect::<Result<Vec<_>>>()?;
+            Request::BatchRevisions { base, revisions }
+        }
+        "dense" => Request::Dense {
+            tokens: tokens_field(&j, "tokens")?,
+        },
+        "suggest" => Request::Suggest {
+            session: session_field(&j)?,
+            k: j.get("k").as_usize().unwrap_or(5),
+        },
+        "checkpoint" => Request::Checkpoint {
+            session: session_field(&j)?,
+            path: j.get("path").as_str().context("missing 'path'")?.to_string(),
+        },
+        "restore" => Request::Restore {
+            session: session_field(&j)?,
+            path: j.get("path").as_str().context("missing 'path'")?.to_string(),
+        },
+        "close" => Request::Close {
+            session: session_field(&j)?,
+        },
+        "stats" => Request::Stats,
+        op => bail!("unknown op '{op}'"),
+    })
+}
+
+/// Serialize a response line.
+pub fn response_to_json(resp: &Response) -> Json {
+    match resp {
+        Response::Logits {
+            logits,
+            predicted,
+            flops,
+            dense_equiv_flops,
+            defragged,
+        } => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            (
+                "logits",
+                Json::Arr(logits.iter().map(|&x| Json::num(x as f64)).collect()),
+            ),
+            ("predicted", Json::num(*predicted as f64)),
+            ("flops", Json::num(*flops as f64)),
+            ("dense_equiv_flops", Json::num(*dense_equiv_flops as f64)),
+            (
+                "speedup",
+                Json::num(if *flops > 0 {
+                    *dense_equiv_flops as f64 / *flops as f64
+                } else {
+                    0.0
+                }),
+            ),
+            ("defragged", Json::Bool(*defragged)),
+        ]),
+        Response::BatchLogits {
+            each,
+            flops,
+            dense_equiv_flops,
+            storage,
+        } => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            (
+                "each",
+                Json::Arr(
+                    each.iter()
+                        .map(|l| Json::Arr(l.iter().map(|&x| Json::num(x as f64)).collect()))
+                        .collect(),
+                ),
+            ),
+            ("flops", Json::num(*flops as f64)),
+            ("dense_equiv_flops", Json::num(*dense_equiv_flops as f64)),
+            ("storage_compressed", Json::num(storage.0 as f64)),
+            ("storage_dense", Json::num(storage.1 as f64)),
+        ]),
+        Response::Stats(j) => Json::obj(vec![("ok", Json::Bool(true)), ("stats", j.clone())]),
+        Response::Suggestions(top) => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            (
+                "suggestions",
+                Json::Arr(
+                    top.iter()
+                        .map(|(t, s)| {
+                            Json::obj(vec![
+                                ("tok", Json::num(*t as f64)),
+                                ("score", Json::num(*s as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]),
+        Response::Done => Json::obj(vec![("ok", Json::Bool(true))]),
+        Response::Closed { existed } => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("existed", Json::Bool(*existed)),
+        ]),
+        Response::Err(e) => error_json(e),
+    }
+}
+
+pub fn error_json(msg: &str) -> Json {
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(msg))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_open_and_edits() {
+        let r = parse_request(r#"{"op":"open","session":"s","tokens":[1,2,3]}"#).unwrap();
+        assert!(matches!(r, Request::Open { ref session, ref tokens } if session == "s" && tokens == &[1,2,3]));
+        let r = parse_request(r#"{"op":"edit","session":"s","kind":"replace","at":1,"tok":9}"#)
+            .unwrap();
+        assert!(matches!(
+            r,
+            Request::Edit {
+                edit: Edit::Replace { at: 1, tok: 9 },
+                ..
+            }
+        ));
+        let r = parse_request(r#"{"op":"edit","session":"s","kind":"delete","at":0}"#).unwrap();
+        assert!(matches!(
+            r,
+            Request::Edit {
+                edit: Edit::Delete { at: 0 },
+                ..
+            }
+        ));
+    }
+
+    #[test]
+    fn parse_batch() {
+        let r = parse_request(
+            r#"{"op":"batch_revisions","base":[1,2],"revisions":[[1,3],[2,2]]}"#,
+        )
+        .unwrap();
+        match r {
+            Request::BatchRevisions { base, revisions } => {
+                assert_eq!(base, vec![1, 2]);
+                assert_eq!(revisions.len(), 2);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request(r#"{"op":"zap"}"#).is_err());
+        assert!(parse_request(r#"{"op":"open","tokens":[1]}"#).is_err());
+        assert!(parse_request(r#"{"op":"edit","session":"s","kind":"warp","at":0}"#).is_err());
+        assert!(parse_request(r#"{"op":"open","session":"s","tokens":[-1]}"#).is_err());
+    }
+
+    #[test]
+    fn response_roundtrip_shape() {
+        let resp = Response::Logits {
+            logits: vec![0.5, -0.5],
+            predicted: 0,
+            flops: 100,
+            dense_equiv_flops: 1000,
+            defragged: false,
+        };
+        let j = response_to_json(&resp);
+        assert_eq!(j.get("ok").as_bool(), Some(true));
+        assert_eq!(j.get("speedup").as_f64(), Some(10.0));
+        let err = error_json("boom");
+        assert_eq!(err.get("ok").as_bool(), Some(false));
+        assert_eq!(err.get("error").as_str(), Some("boom"));
+    }
+}

@@ -1,0 +1,282 @@
+//! Dense f32 primitives used by the oracle forward pass and the incremental
+//! engine's hot path. All routines are allocation-conscious: the hot-path
+//! variants write into caller-provided buffers.
+
+use super::Matrix;
+
+/// `C = A · B` — blocked row-major matmul. `A: (m,k)`, `B: (k,n)`.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "matmul shape mismatch");
+    let mut c = Matrix::zeros(a.rows, b.cols);
+    matmul_into(a, b, &mut c);
+    c
+}
+
+/// `C = A · B` into an existing buffer (zeroed here).
+pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols));
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    c.data.iter_mut().for_each(|x| *x = 0.0);
+    // i-k-j loop order: unit-stride access on B and C rows; the inner loop
+    // auto-vectorizes.
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let crow = &mut c.data[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b.data[p * n..(p + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// `y = x · W` for a single row vector. `x: (k)`, `w: (k,n)`, `y: (n)`.
+#[inline]
+pub fn vec_matmul_into(x: &[f32], w: &Matrix, y: &mut [f32]) {
+    assert_eq!(x.len(), w.rows);
+    assert_eq!(y.len(), w.cols);
+    y.iter_mut().for_each(|v| *v = 0.0);
+    let cols = w.cols;
+    // Two-row unrolling halves the passes over `y` (the write stream is
+    // the bottleneck for 128-512-wide rows; measured best vs 1- and 4-row
+    // variants on this host — see EXPERIMENTS.md §Perf).
+    let pairs = x.len() / 2;
+    for pp in 0..pairs {
+        let p = pp * 2;
+        let (x0, x1) = (x[p], x[p + 1]);
+        let w0 = &w.data[p * cols..(p + 1) * cols];
+        let w1 = &w.data[(p + 1) * cols..(p + 2) * cols];
+        for ((yv, &a), &b) in y.iter_mut().zip(w0).zip(w1) {
+            *yv += x0 * a + x1 * b;
+        }
+    }
+    if x.len() % 2 == 1 {
+        let p = x.len() - 1;
+        let xv = x[p];
+        let wrow = &w.data[p * cols..(p + 1) * cols];
+        for (yv, &wv) in y.iter_mut().zip(wrow) {
+            *yv += xv * wv;
+        }
+    }
+}
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled accumulators help the single-core autovectorizer.
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// `y += alpha * x` (axpy).
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yv, &xv) in y.iter_mut().zip(x) {
+        *yv += alpha * xv;
+    }
+}
+
+/// In-place bias add over every row.
+pub fn add_bias(m: &mut Matrix, bias: &[f32]) {
+    assert_eq!(m.cols, bias.len());
+    for i in 0..m.rows {
+        for (v, &b) in m.row_mut(i).iter_mut().zip(bias) {
+            *v += b;
+        }
+    }
+}
+
+/// GELU, tanh approximation — matches `jax.nn.gelu(x, approximate=True)`,
+/// which is what the L2 model uses, so L2/L3 parity holds bit-for-bit at the
+/// formula level.
+#[inline]
+pub fn gelu_scalar(x: f32) -> f32 {
+    const C: f32 = 0.7978845608028654; // sqrt(2/pi)
+    0.5 * x * (1.0 + ((C * (x + 0.044715 * x * x * x)).tanh()))
+}
+
+/// Element-wise GELU over a slice.
+pub fn gelu_slice(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        *x = gelu_scalar(*x);
+    }
+}
+
+/// Layer normalization of a single row into `out`.
+#[inline]
+pub fn layernorm_into(x: &[f32], gamma: &[f32], beta: &[f32], eps: f32, out: &mut [f32]) {
+    let n = x.len() as f32;
+    let mean = x.iter().sum::<f32>() / n;
+    let var = x.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n;
+    let inv = 1.0 / (var + eps).sqrt();
+    for i in 0..x.len() {
+        out[i] = (x[i] - mean) * inv * gamma[i] + beta[i];
+    }
+}
+
+/// Row-wise softmax in place (baseline attention only).
+pub fn softmax_row(xs: &mut [f32]) {
+    let max = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0;
+    for x in xs.iter_mut() {
+        *x = (*x - max).exp();
+        sum += *x;
+    }
+    let inv = 1.0 / sum;
+    for x in xs.iter_mut() {
+        *x *= inv;
+    }
+}
+
+/// `out = a + b` element-wise.
+pub fn add(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+    Matrix {
+        rows: a.rows,
+        cols: a.cols,
+        data: a.data.iter().zip(&b.data).map(|(x, y)| x + y).collect(),
+    }
+}
+
+/// Squared Euclidean norm.
+#[inline]
+pub fn norm_sq(x: &[f32]) -> f32 {
+    dot(x, x)
+}
+
+/// Argmax index of a slice (first maximal element).
+#[inline]
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    let mut bv = xs[0];
+    for (i, &v) in xs.iter().enumerate().skip(1) {
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for p in 0..a.cols {
+                    s += a.get(i, p) * b.get(p, j);
+                }
+                c.set(i, j, s);
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        use crate::util::Rng;
+        let mut r = Rng::new(1);
+        for _ in 0..20 {
+            let (m, k, n) = (r.range(1, 17), r.range(1, 17), r.range(1, 17));
+            let a = Matrix::from_fn(m, k, |_, _| r.normal());
+            let b = Matrix::from_fn(k, n, |_, _| r.normal());
+            let c1 = matmul(&a, &b);
+            let c2 = naive_matmul(&a, &b);
+            assert!(c1.max_abs_diff(&c2) < 1e-4);
+        }
+    }
+
+    #[test]
+    fn vec_matmul_matches_matmul() {
+        use crate::util::Rng;
+        let mut r = Rng::new(2);
+        let w = Matrix::from_fn(8, 5, |_, _| r.normal());
+        let x: Vec<f32> = (0..8).map(|_| r.normal()).collect();
+        let a = Matrix::from_vec(1, 8, x.clone());
+        let full = matmul(&a, &w);
+        let mut y = vec![0.0; 5];
+        vec_matmul_into(&x, &w, &mut y);
+        // Row-pair fusion reassociates additions: allow fp slack.
+        for (a, b) in full.data.iter().zip(&y) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut xs = vec![1.0, 2.0, 3.0, -5.0];
+        softmax_row(&mut xs);
+        let s: f32 = xs.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(xs.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn softmax_stable_for_large_inputs() {
+        let mut xs = vec![1000.0, 1001.0];
+        softmax_row(&mut xs);
+        assert!(xs.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn gelu_known_values() {
+        assert!((gelu_scalar(0.0)).abs() < 1e-7);
+        assert!((gelu_scalar(10.0) - 10.0).abs() < 1e-4);
+        assert!(gelu_scalar(-10.0).abs() < 1e-4);
+        // gelu(1) ≈ 0.841192 (tanh approx)
+        assert!((gelu_scalar(1.0) - 0.841192).abs() < 1e-4);
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let gamma = vec![1.0; 4];
+        let beta = vec![0.0; 4];
+        let mut out = vec![0.0; 4];
+        layernorm_into(&x, &gamma, &beta, 1e-5, &mut out);
+        let mean: f32 = out.iter().sum::<f32>() / 4.0;
+        let var: f32 = out.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-6);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn dot_and_axpy() {
+        let a = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        let b = vec![5.0, 4.0, 3.0, 2.0, 1.0];
+        assert_eq!(dot(&a, &b), 35.0);
+        let mut y = vec![1.0; 5];
+        axpy(2.0, &a, &mut y);
+        assert_eq!(y, vec![3.0, 5.0, 7.0, 9.0, 11.0]);
+    }
+
+    #[test]
+    fn argmax_first_max() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[-1.0]), 0);
+    }
+}

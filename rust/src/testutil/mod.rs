@@ -1,0 +1,90 @@
+//! Mini property-testing framework (proptest is not in the offline crate
+//! set). Seeded generators + a fixed case budget + failure reporting with
+//! the offending seed, so failures reproduce deterministically.
+
+use crate::util::Rng;
+
+/// Run `f` over `cases` generated inputs; panics with the failing seed.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut f: impl FnMut(&T),
+) {
+    for case in 0..cases {
+        let seed = 0x5EED_0000 + case as u64;
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&input)));
+        if let Err(e) = result {
+            eprintln!("property '{name}' failed on case {case} (seed {seed:#x});\ninput: {input:?}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Generate a random token document.
+pub fn gen_doc(rng: &mut Rng, min_len: usize, max_len: usize, vocab: usize) -> Vec<u32> {
+    let n = rng.range(min_len, max_len);
+    (0..n).map(|_| rng.below(vocab) as u32).collect()
+}
+
+/// Generate a random valid edit for a document of length `len`.
+pub fn gen_edit(rng: &mut Rng, len: usize, vocab: usize, max_seq: usize) -> crate::edits::Edit {
+    use crate::edits::Edit;
+    loop {
+        match rng.below(3) {
+            0 if len > 0 => {
+                return Edit::Replace {
+                    at: rng.below(len),
+                    tok: rng.below(vocab) as u32,
+                }
+            }
+            1 if len < max_seq => {
+                return Edit::Insert {
+                    at: rng.below(len + 1),
+                    tok: rng.below(vocab) as u32,
+                }
+            }
+            2 if len > 1 => return Edit::Delete { at: rng.below(len) },
+            _ => continue,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut count = 0;
+        check("count", 10, |r| r.below(100), |_| {});
+        check("side", 3, |r| r.below(5), |_| count += 1);
+        assert_eq!(count, 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn check_propagates_failure() {
+        check("fail", 5, |r| r.below(10), |&x| assert!(x > 100));
+    }
+
+    #[test]
+    fn gen_edit_always_valid() {
+        let mut rng = Rng::new(1);
+        for _ in 0..500 {
+            let len = rng.range(1, 20);
+            let e = gen_edit(&mut rng, len, 50, 64);
+            match e {
+                crate::edits::Edit::Replace { at, tok } => {
+                    assert!(at < len && tok < 50);
+                }
+                crate::edits::Edit::Insert { at, .. } => assert!(at <= len),
+                crate::edits::Edit::Delete { at } => {
+                    assert!(len > 1 && at < len);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,254 @@
+//! Binary tensor container — the weight/data interchange format between the
+//! Python build path (`python/compile/export_weights.py`) and the Rust
+//! runtime.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic  "VQTB"            4 bytes
+//! version u32              (currently 1)
+//! count   u32              number of entries
+//! entries:
+//!   name_len u32, name utf-8 bytes
+//!   dtype    u8            0 = f32, 1 = i32
+//!   ndim     u8
+//!   dims     u32 × ndim
+//!   data     dtype × prod(dims)
+//! ```
+//! Deliberately simple: no alignment games, no compression — the artifacts
+//! are built once per `make artifacts` and loaded once at startup.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"VQTB";
+const VERSION: u32 = 1;
+
+/// One named tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32 { dims: Vec<usize>, data: Vec<f32> },
+    I32 { dims: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { dims, .. } | Tensor::I32 { dims, .. } => dims,
+        }
+    }
+
+    pub fn f32(dims: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        Tensor::F32 { dims, data }
+    }
+
+    pub fn i32(dims: Vec<usize>, data: Vec<i32>) -> Tensor {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        Tensor::I32 { dims, data }
+    }
+
+    pub fn as_f32(&self) -> Result<(&[usize], &[f32])> {
+        match self {
+            Tensor::F32 { dims, data } => Ok((dims, data)),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<(&[usize], &[i32])> {
+        match self {
+            Tensor::I32 { dims, data } => Ok((dims, data)),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+}
+
+/// A named collection of tensors (deterministic iteration order).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TensorFile {
+    pub entries: BTreeMap<String, Tensor>,
+}
+
+impl TensorFile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: impl Into<String>, t: Tensor) {
+        self.entries.insert(name.into(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.entries
+            .get(name)
+            .with_context(|| format!("missing tensor '{name}'"))
+    }
+
+    /// Fetch an f32 tensor, checking its shape.
+    pub fn f32_shaped(&self, name: &str, dims: &[usize]) -> Result<&[f32]> {
+        let (d, data) = self.get(name)?.as_f32()?;
+        if d != dims {
+            bail!("tensor '{name}' has dims {d:?}, expected {dims:?}");
+        }
+        Ok(data)
+    }
+
+    pub fn write_to(&self, w: &mut impl Write) -> Result<()> {
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&(self.entries.len() as u32).to_le_bytes())?;
+        for (name, t) in &self.entries {
+            w.write_all(&(name.len() as u32).to_le_bytes())?;
+            w.write_all(name.as_bytes())?;
+            match t {
+                Tensor::F32 { dims, data } => {
+                    w.write_all(&[0u8, dims.len() as u8])?;
+                    for &d in dims {
+                        w.write_all(&(d as u32).to_le_bytes())?;
+                    }
+                    for &x in data {
+                        w.write_all(&x.to_le_bytes())?;
+                    }
+                }
+                Tensor::I32 { dims, data } => {
+                    w.write_all(&[1u8, dims.len() as u8])?;
+                    for &d in dims {
+                        w.write_all(&(d as u32).to_le_bytes())?;
+                    }
+                    for &x in data {
+                        w.write_all(&x.to_le_bytes())?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn read_from(r: &mut impl Read) -> Result<TensorFile> {
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic).context("reading magic")?;
+        if &magic != MAGIC {
+            bail!("bad magic {magic:?}: not a VQTB tensor file");
+        }
+        let version = read_u32(r)?;
+        if version != VERSION {
+            bail!("unsupported VQTB version {version}");
+        }
+        let count = read_u32(r)? as usize;
+        if count > 1_000_000 {
+            bail!("implausible entry count {count}");
+        }
+        let mut entries = BTreeMap::new();
+        for _ in 0..count {
+            let name_len = read_u32(r)? as usize;
+            if name_len > 4096 {
+                bail!("implausible name length {name_len}");
+            }
+            let mut name = vec![0u8; name_len];
+            r.read_exact(&mut name)?;
+            let name = String::from_utf8(name).context("tensor name not utf-8")?;
+            let mut hdr = [0u8; 2];
+            r.read_exact(&mut hdr)?;
+            let (dtype, ndim) = (hdr[0], hdr[1] as usize);
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(read_u32(r)? as usize);
+            }
+            let n: usize = dims.iter().product();
+            if n > 1 << 30 {
+                bail!("implausible tensor size {n} for '{name}'");
+            }
+            let t = match dtype {
+                0 => {
+                    let mut buf = vec![0u8; n * 4];
+                    r.read_exact(&mut buf)
+                        .with_context(|| format!("reading data of '{name}'"))?;
+                    let data = buf
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect();
+                    Tensor::F32 { dims, data }
+                }
+                1 => {
+                    let mut buf = vec![0u8; n * 4];
+                    r.read_exact(&mut buf)
+                        .with_context(|| format!("reading data of '{name}'"))?;
+                    let data = buf
+                        .chunks_exact(4)
+                        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect();
+                    Tensor::I32 { dims, data }
+                }
+                d => bail!("unknown dtype {d} for '{name}'"),
+            };
+            entries.insert(name, t);
+        }
+        Ok(TensorFile { entries })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path.as_ref())
+                .with_context(|| format!("creating {}", path.as_ref().display()))?,
+        );
+        self.write_to(&mut f)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<TensorFile> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path.as_ref())
+                .with_context(|| format!("opening {}", path.as_ref().display()))?,
+        );
+        Self::read_from(&mut f)
+    }
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut tf = TensorFile::new();
+        tf.insert("w1", Tensor::f32(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]));
+        tf.insert("ids", Tensor::i32(vec![4], vec![-1, 0, 7, 42]));
+        tf.insert("scalar", Tensor::f32(vec![], vec![3.5]));
+        let mut buf = Vec::new();
+        tf.write_to(&mut buf).unwrap();
+        let back = TensorFile::read_from(&mut &buf[..]).unwrap();
+        assert_eq!(back, tf);
+    }
+
+    #[test]
+    fn shaped_accessor() {
+        let mut tf = TensorFile::new();
+        tf.insert("w", Tensor::f32(vec![2, 2], vec![1.0; 4]));
+        assert!(tf.f32_shaped("w", &[2, 2]).is_ok());
+        assert!(tf.f32_shaped("w", &[4]).is_err());
+        assert!(tf.f32_shaped("nope", &[2, 2]).is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(TensorFile::read_from(&mut &b"NOPE"[..]).is_err());
+        let mut buf = Vec::new();
+        TensorFile::new().write_to(&mut buf).unwrap();
+        buf[4] = 9; // version
+        assert!(TensorFile::read_from(&mut &buf[..]).is_err());
+    }
+
+    #[test]
+    fn empty_file_ok() {
+        let mut buf = Vec::new();
+        TensorFile::new().write_to(&mut buf).unwrap();
+        let back = TensorFile::read_from(&mut &buf[..]).unwrap();
+        assert!(back.entries.is_empty());
+    }
+}

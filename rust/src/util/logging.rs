@@ -1,0 +1,68 @@
+//! Tiny leveled logger backing the `log` crate facade.
+//!
+//! `env_logger` is not in the offline crate set; this is a minimal stderr
+//! logger honouring `VQT_LOG` (error|warn|info|debug|trace, default info).
+
+use log::{Level, LevelFilter, Metadata, Record};
+use std::time::Instant;
+
+struct StderrLogger {
+    start: Instant,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, _m: &Metadata) -> bool {
+        true
+    }
+
+    fn log(&self, record: &Record) {
+        if self.enabled(record.metadata()) {
+            let t = self.start.elapsed();
+            let lvl = match record.level() {
+                Level::Error => "ERROR",
+                Level::Warn => "WARN ",
+                Level::Info => "INFO ",
+                Level::Debug => "DEBUG",
+                Level::Trace => "TRACE",
+            };
+            eprintln!(
+                "[{:>8.3}s {} {}] {}",
+                t.as_secs_f64(),
+                lvl,
+                record.target(),
+                record.args()
+            );
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the global logger (idempotent; later calls are no-ops).
+pub fn init() {
+    static INIT: std::sync::Once = std::sync::Once::new();
+    INIT.call_once(|| {
+        let level = match std::env::var("VQT_LOG").as_deref() {
+            Ok("error") => LevelFilter::Error,
+            Ok("warn") => LevelFilter::Warn,
+            Ok("debug") => LevelFilter::Debug,
+            Ok("trace") => LevelFilter::Trace,
+            _ => LevelFilter::Info,
+        };
+        let logger = Box::leak(Box::new(StderrLogger {
+            start: Instant::now(),
+        }));
+        let _ = log::set_logger(logger);
+        log::set_max_level(level);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logging smoke test");
+    }
+}

@@ -1,0 +1,350 @@
+//! Multi-head vector quantization (paper §3, §4 and App. A.2).
+//!
+//! Each d-dimensional vector is split into `heads` contiguous chunks; each
+//! chunk is matched against that head's codebook of `codes` vectors. The
+//! effective codebook is therefore `codes^heads` without the storage cost.
+//!
+//! Assignment uses the inner-product form from App. A.2:
+//! `argmin_i ‖x − c_i‖² = argmax_i (x·c_i + b_i)` with `b_i = −‖c_i‖²/2` —
+//! a matmul + argmax, which is also how the L1 Pallas kernel formulates it
+//! for the MXU (see `python/compile/kernels/vq_assign.py`).
+
+use crate::flops::{Cat, FlopLedger, MULADD};
+use crate::tensor::{argmax, dot, Matrix};
+
+/// Maximum supported VQ heads (codes are stored inline in `CodeTuple`).
+pub const MAX_VQ_HEADS: usize = 8;
+
+/// A per-head code index.
+pub type Code = u16;
+
+/// The joint code of one vector across all VQ heads. Compact, hashable —
+/// used as the identity of quantized activations everywhere downstream.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct CodeTuple {
+    len: u8,
+    codes: [Code; MAX_VQ_HEADS],
+}
+
+impl CodeTuple {
+    pub fn new(codes: &[Code]) -> CodeTuple {
+        assert!(codes.len() <= MAX_VQ_HEADS, "too many VQ heads");
+        let mut arr = [0; MAX_VQ_HEADS];
+        arr[..codes.len()].copy_from_slice(codes);
+        CodeTuple {
+            len: codes.len() as u8,
+            codes: arr,
+        }
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[Code] {
+        &self.codes[..self.len as usize]
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len as usize
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Pack into a u64 for fast interner keys (supports ≤ 4 heads of ≤ 2^16
+    /// codes, or up to 8 heads of ≤ 256 codes; asserts on overflow).
+    pub fn pack(&self) -> u64 {
+        let mut v: u64 = self.len as u64;
+        if self.len <= 4 {
+            for &c in self.as_slice() {
+                v = (v << 15) | ((c as u64) & 0x7FFF);
+            }
+        } else {
+            for &c in self.as_slice() {
+                assert!(c < 256, "code {} too large to pack with {} heads", c, self.len);
+                v = (v << 7) | ((c as u64) & 0x7F);
+            }
+        }
+        v
+    }
+}
+
+/// The per-layer multi-head codebooks.
+#[derive(Clone, Debug)]
+pub struct VqCodebooks {
+    pub heads: usize,
+    pub codes: usize,
+    pub dim: usize,
+    /// One `(codes, dim/heads)` matrix per head.
+    pub books: Vec<Matrix>,
+    /// `b_i = −‖c_i‖²/2` per head, per code (App. A.2).
+    pub bias: Vec<Vec<f32>>,
+}
+
+impl VqCodebooks {
+    /// Build from per-head codebook matrices; computes biases.
+    pub fn new(books: Vec<Matrix>, dim: usize) -> VqCodebooks {
+        assert!(!books.is_empty() && books.len() <= MAX_VQ_HEADS);
+        let heads = books.len();
+        let codes = books[0].rows;
+        let chunk = dim / heads;
+        for b in &books {
+            assert_eq!(b.rows, codes, "uneven codebook sizes");
+            assert_eq!(b.cols, chunk, "codebook chunk width mismatch");
+        }
+        let bias = books
+            .iter()
+            .map(|b| {
+                (0..b.rows)
+                    .map(|i| -0.5 * dot(b.row(i), b.row(i)))
+                    .collect()
+            })
+            .collect();
+        VqCodebooks {
+            heads,
+            codes,
+            dim,
+            books,
+            bias,
+        }
+    }
+
+    /// Deterministic random codebooks (tests / random-weight models).
+    pub fn random(heads: usize, codes: usize, dim: usize, rng: &mut crate::util::Rng) -> Self {
+        let chunk = dim / heads;
+        let scale = 1.0 / (chunk as f32).sqrt();
+        let books = (0..heads)
+            .map(|_| Matrix::from_fn(codes, chunk, |_, _| rng.normal() * scale))
+            .collect();
+        VqCodebooks::new(books, dim)
+    }
+
+    #[inline]
+    pub fn chunk(&self) -> usize {
+        self.dim / self.heads
+    }
+
+    /// Total score-vector width (`heads × codes`).
+    #[inline]
+    pub fn score_width(&self) -> usize {
+        self.heads * self.codes
+    }
+
+    /// Compute the full score vector `s[h·codes + i] = x_h · c_i + b_i` for
+    /// one input vector. `out` must have `score_width()` elements.
+    pub fn scores_into(&self, x: &[f32], out: &mut [f32], ledger: &mut FlopLedger) {
+        assert_eq!(x.len(), self.dim);
+        assert_eq!(out.len(), self.score_width());
+        let chunk = self.chunk();
+        for h in 0..self.heads {
+            let xh = &x[h * chunk..(h + 1) * chunk];
+            let book = &self.books[h];
+            let bias = &self.bias[h];
+            let so = &mut out[h * self.codes..(h + 1) * self.codes];
+            for i in 0..self.codes {
+                so[i] = dot(xh, book.row(i)) + bias[i];
+            }
+        }
+        ledger.add(Cat::Vq, MULADD * (self.dim * self.codes) as u64 + self.score_width() as u64);
+    }
+
+    /// Argmax each head's score segment into a `CodeTuple`.
+    pub fn codes_from_scores(&self, scores: &[f32], ledger: &mut FlopLedger) -> CodeTuple {
+        assert_eq!(scores.len(), self.score_width());
+        let mut cs = [0 as Code; MAX_VQ_HEADS];
+        for h in 0..self.heads {
+            cs[h] = argmax(&scores[h * self.codes..(h + 1) * self.codes]) as Code;
+        }
+        ledger.add(Cat::Vq, self.score_width() as u64);
+        CodeTuple::new(&cs[..self.heads])
+    }
+
+    /// Full assignment: scores + argmax.
+    pub fn assign(&self, x: &[f32], ledger: &mut FlopLedger) -> CodeTuple {
+        let mut s = vec![0.0; self.score_width()];
+        self.scores_into(x, &mut s, ledger);
+        self.codes_from_scores(&s, ledger)
+    }
+
+    /// Decode a code tuple into `out` (concatenated per-head codewords).
+    pub fn decode_into(&self, code: CodeTuple, out: &mut [f32]) {
+        assert_eq!(code.len(), self.heads);
+        assert_eq!(out.len(), self.dim);
+        let chunk = self.chunk();
+        for (h, &c) in code.as_slice().iter().enumerate() {
+            out[h * chunk..(h + 1) * chunk].copy_from_slice(self.books[h].row(c as usize));
+        }
+    }
+
+    /// Decode into a fresh vector.
+    pub fn decode(&self, code: CodeTuple) -> Vec<f32> {
+        let mut out = vec![0.0; self.dim];
+        self.decode_into(code, &mut out);
+        out
+    }
+
+    /// Project a value vector onto all codebooks: `vc[h·codes+i] = v_h · c_i`
+    /// — the ⟨v, C⟩ precomputation of App. A.2 that lets attention
+    /// corrections update VQ *scores* directly instead of touching the
+    /// d-dimensional accumulator.
+    pub fn project_into(&self, v: &[f32], out: &mut [f32], ledger: &mut FlopLedger) {
+        assert_eq!(v.len(), self.dim);
+        assert_eq!(out.len(), self.score_width());
+        let chunk = self.chunk();
+        for h in 0..self.heads {
+            let vh = &v[h * chunk..(h + 1) * chunk];
+            let book = &self.books[h];
+            let so = &mut out[h * self.codes..(h + 1) * self.codes];
+            for i in 0..self.codes {
+                so[i] = dot(vh, book.row(i));
+            }
+        }
+        ledger.add(Cat::Vq, MULADD * (self.dim * self.codes) as u64);
+    }
+
+    /// Quantize: assignment followed by decode — `VQ(x)` in eq. (1).
+    pub fn quantize_into(
+        &self,
+        x: &[f32],
+        out: &mut [f32],
+        ledger: &mut FlopLedger,
+    ) -> CodeTuple {
+        let code = self.assign(x, ledger);
+        self.decode_into(code, out);
+        code
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn books(seed: u64) -> VqCodebooks {
+        let mut r = Rng::new(seed);
+        VqCodebooks::random(2, 16, 32, &mut r)
+    }
+
+    /// Brute-force nearest-codeword per head by Euclidean distance.
+    fn brute_assign(vq: &VqCodebooks, x: &[f32]) -> Vec<usize> {
+        let chunk = vq.chunk();
+        (0..vq.heads)
+            .map(|h| {
+                let xh = &x[h * chunk..(h + 1) * chunk];
+                let mut best = 0;
+                let mut bd = f32::INFINITY;
+                for i in 0..vq.codes {
+                    let c = vq.books[h].row(i);
+                    let d: f32 = xh.iter().zip(c).map(|(a, b)| (a - b) * (a - b)).sum();
+                    if d < bd {
+                        bd = d;
+                        best = i;
+                    }
+                }
+                best
+            })
+            .collect()
+    }
+
+    #[test]
+    fn inner_product_form_matches_euclidean_nearest() {
+        let vq = books(1);
+        let mut r = Rng::new(2);
+        let mut led = FlopLedger::new();
+        for _ in 0..200 {
+            let x: Vec<f32> = (0..32).map(|_| r.normal()).collect();
+            let code = vq.assign(&x, &mut led);
+            let brute = brute_assign(&vq, &x);
+            let got: Vec<usize> = code.as_slice().iter().map(|&c| c as usize).collect();
+            assert_eq!(got, brute);
+        }
+    }
+
+    #[test]
+    fn decode_roundtrip_of_codewords() {
+        // Quantizing an exact codeword must return that codeword.
+        let vq = books(3);
+        let mut led = FlopLedger::new();
+        for c0 in [0u16, 5, 15] {
+            for c1 in [1u16, 7, 14] {
+                let code = CodeTuple::new(&[c0, c1]);
+                let x = vq.decode(code);
+                let back = vq.assign(&x, &mut led);
+                assert_eq!(back, code);
+            }
+        }
+    }
+
+    #[test]
+    fn scores_are_linear_in_input() {
+        // s(x + y) + b = s(x) + s(y) + 2b − wait: s(x) = x·c + b, so
+        // s(x+y) − b = (s(x) − b) + (s(y) − b). Verify linearity of x·c.
+        let vq = books(4);
+        let mut r = Rng::new(5);
+        let mut led = FlopLedger::new();
+        let x: Vec<f32> = (0..32).map(|_| r.normal()).collect();
+        let y: Vec<f32> = (0..32).map(|_| r.normal()).collect();
+        let xy: Vec<f32> = x.iter().zip(&y).map(|(a, b)| a + b).collect();
+        let w = vq.score_width();
+        let (mut sx, mut sy, mut sxy) = (vec![0.0; w], vec![0.0; w], vec![0.0; w]);
+        vq.scores_into(&x, &mut sx, &mut led);
+        vq.scores_into(&y, &mut sy, &mut led);
+        vq.scores_into(&xy, &mut sxy, &mut led);
+        for h in 0..vq.heads {
+            for i in 0..vq.codes {
+                let k = h * vq.codes + i;
+                let b = vq.bias[h][i];
+                assert!(
+                    ((sxy[k] - b) - ((sx[k] - b) + (sy[k] - b))).abs() < 1e-4,
+                    "score linearity violated"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn project_matches_scores_minus_bias() {
+        let vq = books(6);
+        let mut r = Rng::new(7);
+        let mut led = FlopLedger::new();
+        let v: Vec<f32> = (0..32).map(|_| r.normal()).collect();
+        let w = vq.score_width();
+        let (mut s, mut p) = (vec![0.0; w], vec![0.0; w]);
+        vq.scores_into(&v, &mut s, &mut led);
+        vq.project_into(&v, &mut p, &mut led);
+        for h in 0..vq.heads {
+            for i in 0..vq.codes {
+                let k = h * vq.codes + i;
+                assert!((s[k] - vq.bias[h][i] - p[k]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn code_tuple_pack_unique() {
+        use std::collections::HashSet;
+        let mut seen = HashSet::new();
+        for a in 0..16u16 {
+            for b in 0..16u16 {
+                assert!(seen.insert(CodeTuple::new(&[a, b]).pack()));
+            }
+        }
+        // Different lengths never collide.
+        assert_ne!(
+            CodeTuple::new(&[3]).pack(),
+            CodeTuple::new(&[3, 0]).pack()
+        );
+    }
+
+    #[test]
+    fn ledger_counts_vq_work() {
+        let vq = books(8);
+        let mut led = FlopLedger::new();
+        let x = vec![0.5; 32];
+        vq.assign(&x, &mut led);
+        // dim × codes muladds = 32 × 16 × 2 ops minimum.
+        assert!(led.vq >= 1024);
+        assert_eq!(led.linear, 0);
+    }
+}

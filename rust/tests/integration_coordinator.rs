@@ -1,0 +1,350 @@
+//! Coordinator integration: sessions, edits, revisions, batch processing,
+//! backpressure, eviction, and the TCP server end-to-end.
+
+use std::sync::Arc;
+use vqt::config::{ModelConfig, ServeConfig};
+use vqt::coordinator::{Backend, Coordinator, Request, Response};
+use vqt::edits::Edit;
+use vqt::incremental::EngineOptions;
+use vqt::model::ModelWeights;
+use vqt::util::Rng;
+
+fn start(cfg_mut: impl FnOnce(&mut ServeConfig)) -> Coordinator {
+    let cfg = ModelConfig::vqt_tiny();
+    let w = Arc::new(ModelWeights::random(&cfg, 5));
+    let mut sc = ServeConfig::default();
+    cfg_mut(&mut sc);
+    Coordinator::start(
+        Backend {
+            weights: w,
+            artifacts_dir: None,
+            engine_opts: EngineOptions::default(),
+        },
+        sc,
+    )
+}
+
+fn doc(seed: u64, n: usize) -> Vec<u32> {
+    let mut r = Rng::new(seed);
+    (0..n).map(|_| r.below(60) as u32).collect()
+}
+
+#[test]
+fn open_edit_close_lifecycle() {
+    let c = start(|_| {});
+    let client = c.client();
+    let r = client
+        .request(Request::Open {
+            session: "s1".into(),
+            tokens: doc(1, 20),
+        })
+        .unwrap();
+    assert!(r.logits().is_ok());
+    let r = client
+        .request(Request::Edit {
+            session: "s1".into(),
+            edit: Edit::Replace { at: 2, tok: 9 },
+        })
+        .unwrap();
+    match &r {
+        Response::Logits {
+            flops,
+            dense_equiv_flops,
+            ..
+        } => assert!(flops < dense_equiv_flops),
+        other => panic!("{other:?}"),
+    }
+    match client
+        .request(Request::Close {
+            session: "s1".into(),
+        })
+        .unwrap()
+    {
+        Response::Closed { existed } => assert!(existed),
+        other => panic!("{other:?}"),
+    }
+    let r = client
+        .request(Request::Edit {
+            session: "s1".into(),
+            edit: Edit::Delete { at: 0 },
+        })
+        .unwrap();
+    assert!(matches!(r, Response::Err(_)));
+}
+
+#[test]
+fn revision_request_diffs_and_saves_flops() {
+    let c = start(|_| {});
+    let client = c.client();
+    let base = doc(2, 24);
+    client
+        .request(Request::Open {
+            session: "r".into(),
+            tokens: base.clone(),
+        })
+        .unwrap();
+    let mut rev = base.clone();
+    rev[3] = 59;
+    rev.insert(10, 7);
+    rev.remove(20);
+    let r = client
+        .request(Request::Revision {
+            session: "r".into(),
+            tokens: rev.clone(),
+        })
+        .unwrap();
+    let incr_logits = r.logits().unwrap().to_vec();
+    assert!(incr_logits.iter().all(|x| x.is_finite()));
+    match r {
+        Response::Logits {
+            flops,
+            dense_equiv_flops,
+            ..
+        } => assert!(flops < dense_equiv_flops, "{flops} !< {dense_equiv_flops}"),
+        _ => unreachable!(),
+    }
+    // Dense path still works alongside.
+    let d = client.request(Request::Dense { tokens: rev }).unwrap();
+    assert_eq!(d.logits().unwrap().len(), incr_logits.len());
+}
+
+#[test]
+fn batch_revisions_storage_compression() {
+    let c = start(|_| {});
+    let client = c.client();
+    let base = doc(3, 32);
+    let mut rng = Rng::new(9);
+    let revisions: Vec<Vec<u32>> = (0..6)
+        .map(|_| {
+            let mut r = base.clone();
+            let at = rng.below(r.len());
+            r[at] = rng.below(60) as u32;
+            r
+        })
+        .collect();
+    let resp = client
+        .request(Request::BatchRevisions {
+            base: base.clone(),
+            revisions: revisions.clone(),
+        })
+        .unwrap();
+    match resp {
+        Response::BatchLogits {
+            each,
+            flops,
+            dense_equiv_flops,
+            storage,
+        } => {
+            assert_eq!(each.len(), 6);
+            assert!(flops < dense_equiv_flops);
+            // §3.1: compressed storage ≪ dense for a revision batch.
+            assert!(
+                storage.0 * 2 < storage.1,
+                "storage {} vs dense {}",
+                storage.0,
+                storage.1
+            );
+        }
+        other => panic!("{other:?}"),
+    }
+}
+
+#[test]
+fn lru_eviction_under_session_pressure() {
+    let c = start(|sc| sc.max_sessions = 2);
+    let client = c.client();
+    for i in 0..4 {
+        client
+            .request(Request::Open {
+                session: format!("s{i}"),
+                tokens: doc(i as u64, 12),
+            })
+            .unwrap();
+    }
+    let r = client
+        .request(Request::Edit {
+            session: "s0".into(),
+            edit: Edit::Replace { at: 0, tok: 1 },
+        })
+        .unwrap();
+    assert!(matches!(r, Response::Err(_)), "s0 must be evicted");
+    let r = client
+        .request(Request::Edit {
+            session: "s3".into(),
+            edit: Edit::Replace { at: 0, tok: 1 },
+        })
+        .unwrap();
+    assert!(r.logits().is_ok(), "s3 must be live");
+}
+
+#[test]
+fn invalid_requests_surface_errors_not_panics() {
+    let c = start(|_| {});
+    let client = c.client();
+    let r = client
+        .request(Request::Open {
+            session: "x".into(),
+            tokens: vec![],
+        })
+        .unwrap();
+    assert!(matches!(r, Response::Err(_)));
+    let r = client
+        .request(Request::Revision {
+            session: "nope".into(),
+            tokens: doc(1, 5),
+        })
+        .unwrap();
+    assert!(matches!(r, Response::Err(_)));
+    let r = client
+        .request(Request::Open {
+            session: "y".into(),
+            tokens: doc(2, ModelConfig::vqt_tiny().max_seq + 1),
+        })
+        .unwrap();
+    assert!(matches!(r, Response::Err(_)));
+}
+
+#[test]
+fn stats_track_speedup() {
+    let c = start(|_| {});
+    let client = c.client();
+    client
+        .request(Request::Open {
+            session: "m".into(),
+            tokens: doc(4, 40),
+        })
+        .unwrap();
+    for i in 0..5 {
+        client
+            .request(Request::Edit {
+                session: "m".into(),
+                edit: Edit::Replace {
+                    at: 30 + i,
+                    tok: i as u32,
+                },
+            })
+            .unwrap();
+    }
+    match client.request(Request::Stats).unwrap() {
+        Response::Stats(j) => {
+            let speedup = j.get("speedup").as_f64().unwrap();
+            assert!(speedup > 1.0, "aggregate speedup {speedup}");
+            assert_eq!(j.get("edits").as_usize(), Some(5));
+            assert_eq!(j.get("live_sessions").as_usize(), Some(1));
+        }
+        other => panic!("{other:?}"),
+    }
+}
+
+#[test]
+fn tcp_server_end_to_end() {
+    use std::io::{BufRead, BufReader, Write};
+    let c = start(|_| {});
+    let client = c.client();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        let _ = vqt::server::handle_conn(stream, client);
+    });
+    let mut conn = std::net::TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut send = |line: &str| -> vqt::util::Json {
+        conn.write_all(line.as_bytes()).unwrap();
+        conn.write_all(b"\n").unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        vqt::util::Json::parse(&resp).unwrap()
+    };
+    let j = send(r#"{"op":"open","session":"t","tokens":[1,2,3,4,5,6,7,8]}"#);
+    assert_eq!(j.get("ok").as_bool(), Some(true));
+    let j = send(r#"{"op":"edit","session":"t","kind":"replace","at":2,"tok":40}"#);
+    assert_eq!(j.get("ok").as_bool(), Some(true));
+    assert!(j.get("speedup").as_f64().unwrap() > 1.0);
+    let j = send(r#"{"op":"edit","session":"t","kind":"insert","at":0,"tok":1}"#);
+    assert_eq!(j.get("ok").as_bool(), Some(true));
+    let j = send(r#"{"op":"stats"}"#);
+    assert_eq!(j.get("stats").get("edits").as_usize(), Some(2));
+    let j = send(r#"{"op":"oops"}"#);
+    assert_eq!(j.get("ok").as_bool(), Some(false));
+}
+
+#[test]
+fn suggest_checkpoint_restore_cycle() {
+    let c = start(|_| {});
+    let client = c.client();
+    let tokens = doc(20, 24);
+    client
+        .request(Request::Open {
+            session: "cp".into(),
+            tokens: tokens.clone(),
+        })
+        .unwrap();
+    // Suggestions come back sorted.
+    match client
+        .request(Request::Suggest {
+            session: "cp".into(),
+            k: 4,
+        })
+        .unwrap()
+    {
+        Response::Suggestions(top) => {
+            assert_eq!(top.len(), 4);
+            assert!(top.windows(2).all(|p| p[0].1 >= p[1].1));
+        }
+        other => panic!("{other:?}"),
+    }
+    // Edit, checkpoint, close, restore, and verify state carried over.
+    let r = client
+        .request(Request::Edit {
+            session: "cp".into(),
+            edit: Edit::Replace { at: 3, tok: 7 },
+        })
+        .unwrap();
+    let logits_before = r.logits().unwrap().to_vec();
+    let path = std::env::temp_dir().join(format!("vqt_ckpt_{}.bin", std::process::id()));
+    let path_s = path.to_str().unwrap().to_string();
+    assert!(matches!(
+        client
+            .request(Request::Checkpoint {
+                session: "cp".into(),
+                path: path_s.clone(),
+            })
+            .unwrap(),
+        Response::Done
+    ));
+    client
+        .request(Request::Close {
+            session: "cp".into(),
+        })
+        .unwrap();
+    assert!(matches!(
+        client
+            .request(Request::Restore {
+                session: "cp2".into(),
+                path: path_s.clone(),
+            })
+            .unwrap(),
+        Response::Done
+    ));
+    // The restored session continues from the same state.
+    let r = client
+        .request(Request::Edit {
+            session: "cp2".into(),
+            edit: Edit::Replace { at: 3, tok: 7 }, // no-op value change? same token: engine treats as modified
+        })
+        .unwrap();
+    let logits_after = r.logits().unwrap();
+    for (a, b) in logits_before.iter().zip(logits_after) {
+        assert!((a - b).abs() < 1e-4, "restored state diverged: {a} vs {b}");
+    }
+    let _ = std::fs::remove_file(path);
+    // Path traversal rejected.
+    let r = client
+        .request(Request::Checkpoint {
+            session: "cp2".into(),
+            path: "../evil.bin".into(),
+        })
+        .unwrap();
+    assert!(matches!(r, Response::Err(_)));
+}

