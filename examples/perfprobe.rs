@@ -1,11 +1,17 @@
-use std::sync::Arc;
+//! Minimal latency probe for the early-edit worst case (all later rows
+//! receive corrections). Uses trained serving weights when `make train`
+//! ran, deterministic random init otherwise.
+//!
+//! Run: `cargo run --release --example perfprobe`
+
+use vqt::bench::serving_weights;
 use vqt::config::ModelConfig;
 use vqt::edits::Edit;
 use vqt::incremental::{EngineOptions, IncrementalEngine};
-use vqt::model::ModelWeights;
+
 fn main() {
     let cfg = ModelConfig::vqt_mini();
-    let w = Arc::new(ModelWeights::load("artifacts/weights_trained_serve.bin", &cfg).unwrap_or_else(|_| ModelWeights::random(&cfg, 7)));
+    let (w, _trained) = serving_weights(&cfg, "weights_trained_serve.bin");
     let tokens: Vec<u32> = (0..512).map(|i| (i * 37 % 256) as u32).collect();
     let mut eng = IncrementalEngine::new(w, &tokens, EngineOptions::default());
     let mut best = f64::INFINITY;

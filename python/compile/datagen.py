@@ -1,4 +1,4 @@
-"""Synthetic sentiment corpus — the IMDB substitute (DESIGN.md §1).
+"""Synthetic sentiment corpus — the IMDB substitute (docs/ARCHITECTURE.md).
 
 Documents are byte-token sequences. Sentiment is carried by two small
 lexicons of "positive" and "negative" tokens sprinkled through neutral

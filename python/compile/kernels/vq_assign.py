@@ -1,6 +1,6 @@
 """Pallas kernel: multi-head VQ assignment (L1 hot-spot #1).
 
-TPU adaptation of the paper's VQ layer (DESIGN.md §2): assignment uses the
+TPU adaptation of the paper's VQ layer (docs/ARCHITECTURE.md): assignment uses the
 inner-product form  argmin‖x−c‖ = argmax(x·c + b)  from App. A.2, so each
 head's scoring is a single `(block_n, chunk) × (chunk, q)` matmul — an
 MXU-shaped contraction — followed by a row argmax (VPU reduction).
@@ -12,7 +12,7 @@ across the whole grid). This replaces what a CUDA port would do with one
 threadblock per row.
 
 Always lowered with `interpret=True`: the CPU PJRT plugin cannot execute
-Mosaic custom-calls; real-TPU estimates are reported in DESIGN.md §Perf.
+Mosaic custom-calls; real-TPU estimates are reported in docs/ARCHITECTURE.md.
 """
 
 from __future__ import annotations

@@ -1,7 +1,7 @@
 """Training — regenerates Table 1 (document classification) at laptop scale.
 
 The paper distills OPT-125M on the Pile, then fine-tunes on IMDB. Neither is
-tractable here (DESIGN.md §1), so each variant trains from scratch on the
+tractable here (docs/ARCHITECTURE.md), so each variant trains from scratch on the
 synthetic sentiment corpus; what Table 1 tests — that the VQ bottleneck
 retains most of the baseline's accuracy, with h=4 above h=2 — is preserved.
 
@@ -16,7 +16,7 @@ trained weights exist).
 VQ pseudo-gradient: straight-through estimator with VQ-VAE commitment and
 codebook losses. (The paper used a Gumbel-Softmax variant; STE is the
 standard alternative and trains stably at this scale — recorded in
-EXPERIMENTS.md.)
+the module docs.)
 
 Optimizer: hand-rolled Adam (optax is not in the offline image).
 """

@@ -1,4 +1,4 @@
-//! Ablations over the design choices DESIGN.md calls out:
+//! Ablations over the design choices docs/ARCHITECTURE.md calls out:
 //!   A. App-A.2 score trick ON vs OFF — FLOPs and wallclock per edit.
 //!   B. VQ codebook size (q = 16 / 64 / 256) — speedup vs code-flip rate.
 //!   C. Position-pool gap factor — defrag rate under insertion workloads

@@ -80,8 +80,19 @@ fn main() {
 
     // --- AOT dense path (L2 through PJRT) --------------------------------
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if dir.join("manifest.json").exists() {
-        let rt = ArtifactRuntime::open(&dir).expect("artifact runtime");
+    let runtime = if dir.join("manifest.json").exists() {
+        match ArtifactRuntime::open(&dir) {
+            Ok(rt) => Some(rt),
+            Err(e) => {
+                println!("(artifact runtime unavailable — {e:#})");
+                None
+            }
+        }
+    } else {
+        println!("(no artifacts/ — run `make artifacts` for the L2 rows)");
+        None
+    };
+    if let Some(rt) = runtime {
         rt.warmup().expect("warmup");
         let mut rows = Vec::new();
         for &n in &[32usize, 128, 512] {
@@ -98,8 +109,6 @@ fn main() {
             ]);
         }
         print_table("L2 AOT path (PJRT CPU)", &["op", "p50 (ms)", "mean (ms)"], &rows);
-    } else {
-        println!("(no artifacts/ — run `make artifacts` for the L2 rows)");
     }
 
     // --- sustained online throughput --------------------------------------

@@ -1,7 +1,7 @@
 //! **Table 2** — theoretical speedups for processing edit sequences.
 //!
 //! Paper protocol: 500 revision pairs scraped from Wikipedia (we use the
-//! synthetic trace generator, DESIGN.md §1), three measurements:
+//! synthetic trace generator, docs/ARCHITECTURE.md), three measurements:
 //!   Atomic          — one sampled atomic edit per pair (online),
 //!   Entire Revision — the whole diff applied at once (offline),
 //!   First 5 %       — atomic edits restricted to the first 5 % of tokens.
@@ -104,6 +104,6 @@ fn main() {
     println!(
         "\nPaper (OPT-125M scale): Distil 2×; VQ h=2 12.1×/4.7×/4.8×; VQ h=4 5.2×/2.5×/2.2×.\n\
          Expected to hold in *shape* (VQ ≫ Distil on atomic; offline < atomic;\n\
-         h=2 > h=4): absolute factors scale with depth/width — see EXPERIMENTS.md."
+         h=2 > h=4): absolute factors scale with depth/width (see docs/ARCHITECTURE.md §3)."
     );
 }

@@ -60,7 +60,7 @@ pub struct ModelConfig {
 
 impl ModelConfig {
     /// The VQT-mini preset — the trained/served model (substitute for
-    /// VQ-OPT-125M at laptop scale; see DESIGN.md §1).
+    /// VQ-OPT-125M at laptop scale; see docs/ARCHITECTURE.md).
     pub fn vqt_mini() -> ModelConfig {
         ModelConfig {
             vocab_size: 257, // 256 bytes + PAD

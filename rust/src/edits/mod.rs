@@ -1,6 +1,6 @@
 //! Document edits: atomic operations, diffing, and synthetic revision
 //! traces (the substitute for the paper's scraped Wikipedia edit
-//! histories — see DESIGN.md §1).
+//! histories — see docs/ARCHITECTURE.md).
 
 pub mod diff;
 pub mod trace;

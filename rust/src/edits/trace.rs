@@ -1,5 +1,5 @@
 //! Synthetic revision-trace generator — the stand-in for the paper's
-//! scraped Wikipedia edit histories (DESIGN.md §1).
+//! scraped Wikipedia edit histories (docs/ARCHITECTURE.md).
 //!
 //! The paper's evaluation needs, per Table 2 / Figs. 3–4:
 //! - pairs of consecutive revisions of long documents (1536–2048 tokens in

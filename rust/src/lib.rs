@@ -14,8 +14,40 @@
 //! - **L1 (Pallas, build time)** — VQ-assignment and GELU-attention kernels
 //!   validated against pure-jnp references.
 //!
+//! The incremental dataflow (edit → diff → VQ code comparison → row
+//! reuse), the monotonic-reuse argument, and the FLOP-accounting model are
+//! documented in `docs/ARCHITECTURE.md` at the repository root; the build
+//! and artifact pipeline is in `README.md`.
+//!
+//! ## Quickstart
+//!
+//! Open a session on a document, apply an edit, and verify that the
+//! incrementally-maintained state matches a from-scratch dense recompute
+//! (the paper's exactness claim):
+//!
+//! ```
+//! use std::sync::Arc;
+//! use vqt::config::ModelConfig;
+//! use vqt::edits::Edit;
+//! use vqt::incremental::{EngineOptions, IncrementalEngine};
+//! use vqt::model::ModelWeights;
+//!
+//! let cfg = ModelConfig::vqt_tiny();
+//! let weights = Arc::new(ModelWeights::random(&cfg, 7));
+//! let tokens: Vec<u32> = (0..12).map(|i| i % 60).collect();
+//!
+//! let mut engine = IncrementalEngine::new(weights, &tokens, EngineOptions::default());
+//! let report = engine.apply_edit(Edit::Replace { at: 3, tok: 9 });
+//! assert_eq!(report.logits.len(), cfg.n_classes);
+//! assert!(report.flops > 0);
+//!
+//! let verify = engine.verify();
+//! assert!(verify.is_exact(1e-3), "incremental state must match dense");
+//! ```
+//!
 //! Start with [`config::ModelConfig`], [`model::ModelWeights`], and
-//! `incremental::IncrementalEngine`; see `examples/quickstart.rs`.
+//! [`incremental::IncrementalEngine`]; `examples/quickstart.rs` is the
+//! runnable version of the snippet above.
 
 pub mod bench;
 pub mod compressed;

@@ -49,6 +49,12 @@ fn flag(args: &[String], name: &str) -> Option<String> {
         .and_then(|i| args.get(i + 1).cloned())
 }
 
+/// Default artifact directory: `rust/artifacts/` (where `make artifacts`
+/// writes), resolved via the crate manifest so it works from any cwd.
+fn default_artifacts_dir() -> String {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string()
+}
+
 fn serve(args: &[String]) -> Result<()> {
     let (model_cfg, mut serve_cfg) = match flag(args, "--config") {
         Some(path) => load_config_file(&path)?,
@@ -57,15 +63,17 @@ fn serve(args: &[String]) -> Result<()> {
     if let Some(bind) = flag(args, "--bind") {
         serve_cfg.bind = bind;
     }
-    let artifacts = flag(args, "--artifacts").unwrap_or_else(|| "artifacts".into());
+    let artifacts = flag(args, "--artifacts").unwrap_or_else(default_artifacts_dir);
     let dir = std::path::PathBuf::from(&artifacts);
 
     // Prefer the artifact bundle's weights + config so the engine and the
-    // AOT dense path agree; fall back to random weights for bring-up.
+    // AOT dense path agree; fall back to random weights for bring-up. The
+    // manifest + weights load without PJRT — the coordinator probes the
+    // execution backend itself and falls back to the oracle if needed.
     let (cfg, weights) = if dir.join("manifest.json").exists() {
-        let rt = ArtifactRuntime::open(&dir)?;
-        let cfg = rt.manifest.config.clone();
-        let w = ModelWeights::load(rt.weights_path(), &cfg)?;
+        let manifest = vqt::runtime::ArtifactManifest::load(&dir)?;
+        let cfg = manifest.config.clone();
+        let w = ModelWeights::load(vqt::runtime::ArtifactManifest::weights_path(&dir), &cfg)?;
         (cfg, w)
     } else {
         log::warn!(
@@ -94,7 +102,7 @@ fn serve(args: &[String]) -> Result<()> {
 
 fn validate(args: &[String]) -> Result<()> {
     let dir = std::path::PathBuf::from(
-        flag(args, "--artifacts").unwrap_or_else(|| "artifacts".into()),
+        flag(args, "--artifacts").unwrap_or_else(default_artifacts_dir),
     );
     if !dir.join("manifest.json").exists() {
         bail!("no artifacts at {} — run `make artifacts`", dir.display());

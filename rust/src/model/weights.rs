@@ -1,5 +1,6 @@
 //! Model weights: container, deterministic random init (tests), and loading
-//! from the `VQTB` tensor files produced by `python/compile/export_weights.py`.
+//! from the `VQTB` tensor files exported by `python/compile/aot.py`
+//! (`make artifacts`) and `python/compile/train.py` (`make train`).
 //!
 //! Naming convention in the tensor file (all f32):
 //! ```text

@@ -1,5 +1,6 @@
 //! Artifact registry: manifest parsing, lazy PJRT compilation, execution.
 
+use super::xla;
 use crate::config::ModelConfig;
 use crate::util::{Json, TensorFile};
 use anyhow::{Context, Result};
@@ -22,7 +23,18 @@ pub struct ArtifactManifest {
     pub config: ModelConfig,
 }
 
+/// File name of the serving weights inside an artifact directory (the
+/// bundle layout is fixed by `python/compile/aot.py`).
+pub const WEIGHTS_FILE: &str = "weights_serve.bin";
+
 impl ArtifactManifest {
+    /// Path of the serving weights inside an artifact directory. Needs no
+    /// PJRT — callers that only want weights + config use this instead of
+    /// opening an [`ArtifactRuntime`].
+    pub fn weights_path(dir: impl AsRef<Path>) -> PathBuf {
+        dir.as_ref().join(WEIGHTS_FILE)
+    }
+
     pub fn load(dir: impl AsRef<Path>) -> Result<ArtifactManifest> {
         let path = dir.as_ref().join("manifest.json");
         let text = std::fs::read_to_string(&path)
@@ -94,7 +106,7 @@ impl ArtifactRuntime {
         let dir = dir.as_ref().to_path_buf();
         let manifest = ArtifactManifest::load(&dir)?;
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let weights = TensorFile::load(dir.join("weights_serve.bin"))?;
+        let weights = TensorFile::load(ArtifactManifest::weights_path(&dir))?;
         let mut param_literals = Vec::with_capacity(manifest.param_order.len());
         for name in &manifest.param_order {
             let t = weights.get(name)?;
@@ -154,7 +166,7 @@ impl ArtifactRuntime {
     /// The serving model's weights file (for building the in-process
     /// engine against the same parameters the artifacts use).
     pub fn weights_path(&self) -> PathBuf {
-        self.dir.join("weights_serve.bin")
+        ArtifactManifest::weights_path(&self.dir)
     }
 
     /// Compile (or fetch cached) a logical artifact.

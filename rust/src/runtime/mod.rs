@@ -2,12 +2,19 @@
 //! `make artifacts` from the L2 JAX model) and execute them from the Rust
 //! request path. Python never runs here.
 //!
-//! Pattern (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
-//! `client.compile` → `execute`. Artifacts are compiled lazily on first
-//! use and cached for the lifetime of the runtime.
+//! Pattern: `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`. Artifacts
+//! are compiled lazily on first use and cached for the lifetime of the
+//! runtime.
+//!
+//! The `xla` binding crate is not in the offline crate set, so [`xla`]
+//! here is an in-crate stub: [`Literal`](xla::Literal) is fully
+//! functional host data, while device entry points report "PJRT backend
+//! unavailable" and every caller falls back to the in-process oracle.
+//! See the [`xla`] module docs for the swap-in path to a real binding.
 
 pub mod artifacts;
+pub mod xla;
 
 pub use artifacts::{ArtifactManifest, ArtifactRuntime};
 

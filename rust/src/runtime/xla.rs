@@ -1,0 +1,233 @@
+//! In-crate stand-in for the `xla` PJRT binding crate.
+//!
+//! The offline crate set ships only `anyhow` and `log` (see
+//! `util/mod.rs`), so the real `xla` crate — Rust FFI over
+//! `xla_extension` / PJRT — cannot be a dependency yet. This module
+//! mirrors exactly the API surface [`super::artifacts`] is written
+//! against:
+//!
+//! - [`Literal`] is **fully functional**: it is plain host data
+//!   (dims + typed buffer) and is exercised by the literal round-trip
+//!   tests in `runtime/mod.rs`.
+//! - The device entry points ([`PjRtClient::cpu`],
+//!   [`HloModuleProto::from_text_file`], compile/execute) return a clean
+//!   "PJRT backend unavailable" error. `ArtifactRuntime::open` therefore
+//!   fails fast, the coordinator logs a warning, and dense requests fall
+//!   back to the in-process oracle (`model::dense_forward`) — every
+//!   caller degrades gracefully and no test depends on a live PJRT.
+//!
+//! Swapping in the real binding later is local to `runtime/mod.rs`
+//! (re-export the external crate instead of this module); the call sites
+//! in `artifacts.rs` already use the real crate's method names and
+//! signatures.
+
+use std::fmt;
+
+/// Error type for all fallible stub operations.
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+/// Result alias matching the real crate's.
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+const UNAVAILABLE: &str = "PJRT backend unavailable: the `xla` binding crate is not in the \
+     offline crate set; dense requests use the in-process oracle";
+
+fn unavailable<T>() -> Result<T> {
+    Err(XlaError(UNAVAILABLE.to_string()))
+}
+
+/// Typed storage of a [`Literal`]. Public only because it appears in the
+/// [`NativeType`] trait signature; construct literals via
+/// [`Literal::vec1`] / [`Literal::scalar`].
+#[doc(hidden)]
+#[derive(Clone, Debug, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for i32 {}
+}
+
+/// Element types a [`Literal`] can hold (`f32`, `i32`). Sealed.
+pub trait NativeType: sealed::Sealed + Copy {
+    #[doc(hidden)]
+    fn wrap(data: Vec<Self>) -> Data
+    where
+        Self: Sized;
+    #[doc(hidden)]
+    fn unwrap(data: &Data) -> Result<Vec<Self>>
+    where
+        Self: Sized;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<f32>) -> Data {
+        Data::F32(data)
+    }
+    fn unwrap(data: &Data) -> Result<Vec<f32>> {
+        match data {
+            Data::F32(v) => Ok(v.clone()),
+            Data::I32(_) => Err(XlaError("literal is i32, asked for f32".into())),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<i32>) -> Data {
+        Data::I32(data)
+    }
+    fn unwrap(data: &Data) -> Result<Vec<i32>> {
+        match data {
+            Data::I32(v) => Ok(v.clone()),
+            Data::F32(_) => Err(XlaError("literal is f32, asked for i32".into())),
+        }
+    }
+}
+
+/// Host tensor literal: dims + typed data (mirrors `xla::Literal`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Data,
+}
+
+impl Literal {
+    /// 1-D literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            dims: vec![data.len() as i64],
+            data: T::wrap(data.to_vec()),
+        }
+    }
+
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal {
+            dims: vec![],
+            data: T::wrap(vec![v]),
+        }
+    }
+
+    fn len(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+
+    /// Reinterpret with new dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want as usize != self.len() {
+            return Err(XlaError(format!(
+                "reshape to {dims:?} ({want} elems) from {} elems",
+                self.len()
+            )));
+        }
+        Ok(Literal {
+            dims: dims.to_vec(),
+            data: self.data.clone(),
+        })
+    }
+
+    /// Copy out the host data.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data)
+    }
+
+    /// Unwrap a 1-element tuple result (the artifacts are lowered with
+    /// `return_tuple=True`). The stub has no device results to unwrap;
+    /// kept for API parity.
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Ok(self.clone())
+    }
+}
+
+/// Parsed HLO module (device-only in the real crate; opaque here).
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+/// Computation wrapper (opaque).
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// PJRT client handle. [`PjRtClient::cpu`] always errors in the stub.
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+/// Compiled executable handle (unreachable in the stub).
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// Device buffer handle (unreachable in the stub).
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_holds_real_data() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 3]).is_err());
+        assert!(l.to_vec::<i32>().is_err());
+        let s = Literal::scalar(7i32);
+        assert_eq!(s.to_vec::<i32>().unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn device_paths_error_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("/nope.hlo.txt").is_err());
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("PJRT backend unavailable"));
+    }
+}

@@ -44,7 +44,7 @@ pub fn vec_matmul_into(x: &[f32], w: &Matrix, y: &mut [f32]) {
     let cols = w.cols;
     // Two-row unrolling halves the passes over `y` (the write stream is
     // the bottleneck for 128-512-wide rows; measured best vs 1- and 4-row
-    // variants on this host — see EXPERIMENTS.md §Perf).
+    // variants on this host — measured on this host).
     let pairs = x.len() / 2;
     for pp in 0..pairs {
         let p = pp * 2;

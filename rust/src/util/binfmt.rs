@@ -1,6 +1,6 @@
 //! Binary tensor container — the weight/data interchange format between the
-//! Python build path (`python/compile/export_weights.py`) and the Rust
-//! runtime.
+//! Python build path (`python/compile/binfmt.py`, written by
+//! `python/compile/aot.py` via `make artifacts`) and the Rust runtime.
 //!
 //! Layout (little-endian):
 //! ```text
