@@ -1,7 +1,12 @@
 //! Micro-benchmarks over the serving hot paths (wallclock — the §Perf
-//! layer-3 profile targets). Reports per-edit latency by document length
-//! and edit position, engine rebuild cost, the AOT dense path, and
-//! sustained online throughput.
+//! layer-3 profile targets). Reports the tiled kernels against the exact
+//! pre-tiling kernels they replaced (the regression guard for
+//! `tensor/ops.rs`), per-edit latency by document length and edit
+//! position, engine rebuild cost, the AOT dense path, and sustained
+//! online throughput.
+//!
+//! Set `VQT_BENCH_SMOKE=1` for a one-iteration smoke run (CI): every
+//! section executes, nothing is timed long enough to matter.
 
 use std::sync::Arc;
 use vqt::bench::{print_table, serving_weights, time_it};
@@ -9,21 +14,117 @@ use vqt::config::ModelConfig;
 use vqt::edits::Edit;
 use vqt::incremental::{EngineOptions, IncrementalEngine};
 use vqt::runtime::ArtifactRuntime;
+use vqt::tensor::{self, Matrix};
 use vqt::util::Rng;
 
+/// The exact pre-tiling `matmul_into` (i-k-j, unit stride, zero-row
+/// skip) — the honest baseline the tiled kernel must beat, NOT a
+/// cache-hostile strawman.
+fn baseline_matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    c.data.iter_mut().for_each(|x| *x = 0.0);
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let crow = &mut c.data[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b.data[p * n..(p + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// The exact pre-tiling `vec_matmul_into` (two-row unroll) for the GEMV
+/// hot path — same honesty argument as above.
+fn baseline_vec_matmul_into(x: &[f32], w: &Matrix, y: &mut [f32]) {
+    y.iter_mut().for_each(|v| *v = 0.0);
+    let cols = w.cols;
+    let pairs = x.len() / 2;
+    for pp in 0..pairs {
+        let p = pp * 2;
+        let (x0, x1) = (x[p], x[p + 1]);
+        let w0 = &w.data[p * cols..(p + 1) * cols];
+        let w1 = &w.data[(p + 1) * cols..(p + 2) * cols];
+        for ((yv, &a), &b) in y.iter_mut().zip(w0).zip(w1) {
+            *yv += x0 * a + x1 * b;
+        }
+    }
+    if x.len() % 2 == 1 {
+        let p = x.len() - 1;
+        let xv = x[p];
+        let wrow = &w.data[p * cols..(p + 1) * cols];
+        for (yv, &wv) in y.iter_mut().zip(wrow) {
+            *yv += xv * wv;
+        }
+    }
+}
+
 fn main() {
+    let smoke = std::env::var("VQT_BENCH_SMOKE").is_ok();
     let cfg = ModelConfig::vqt_mini();
     let (w, trained) = serving_weights(&cfg, "weights_trained_serve.bin");
     println!(
-        "# micro_hotpath ({}) — vqt_mini d={} L={} seq≤{}",
+        "# micro_hotpath ({}{}) — vqt_mini d={} L={} seq≤{}",
         if trained { "trained" } else { "random-init" },
+        if smoke { ", smoke" } else { "" },
         cfg.d_model,
         cfg.n_layers,
         cfg.max_seq
     );
     let mut rng = Rng::new(1);
 
+    // --- tiled kernels vs the pre-tiling kernels ------------------------
+    // Regression guard: the tiled implementations must not lose to the
+    // kernels they replaced at any shape here.
+    let (kw, ki) = if smoke { (0, 1) } else { (1, 5) };
+    let mut rows = Vec::new();
+    for &(m, k, n) in &[
+        (8usize, 128usize, 128usize),
+        (64, 128, 512),
+        (16, 768, 768),
+        (64, 768, 768),
+    ] {
+        let a = Matrix::from_fn(m, k, |_, _| rng.normal());
+        let b = Matrix::from_fn(k, n, |_, _| rng.normal());
+        let mut c = Matrix::zeros(m, n);
+        let tn = time_it(kw, ki, || baseline_matmul_into(&a, &b, &mut c));
+        std::hint::black_box(c.data[0]);
+        let tt = time_it(kw, ki, || tensor::matmul_into(&a, &b, &mut c));
+        std::hint::black_box(c.data[0]);
+        rows.push(vec![
+            format!("matmul {m}x{k}x{n}"),
+            format!("{:.3}", tn.p50.as_secs_f64() * 1e3),
+            format!("{:.3}", tt.p50.as_secs_f64() * 1e3),
+            format!("{:.2}x", tn.p50.as_secs_f64() / tt.p50.as_secs_f64().max(1e-9)),
+        ]);
+    }
+    for &(k, n) in &[(128usize, 512usize), (768, 768), (768, 3072)] {
+        let wmat = Matrix::from_fn(k, n, |_, _| rng.normal());
+        let x: Vec<f32> = (0..k).map(|_| rng.normal()).collect();
+        let mut y = vec![0.0; n];
+        let tn = time_it(kw, ki, || baseline_vec_matmul_into(&x, &wmat, &mut y));
+        std::hint::black_box(y[0]);
+        let tt = time_it(kw, ki, || tensor::vec_matmul_into(&x, &wmat, &mut y));
+        std::hint::black_box(y[0]);
+        rows.push(vec![
+            format!("vec_matmul {k}x{n}"),
+            format!("{:.3}", tn.p50.as_secs_f64() * 1e3),
+            format!("{:.3}", tt.p50.as_secs_f64() * 1e3),
+            format!("{:.2}x", tn.p50.as_secs_f64() / tt.p50.as_secs_f64().max(1e-9)),
+        ]);
+    }
+    print_table(
+        "tiled kernels vs pre-tiling kernels (speedup must be ≥1.0)",
+        &["shape", "baseline p50 (ms)", "tiled p50 (ms)", "speedup"],
+        &rows,
+    );
+
     // --- per-edit latency by length × position --------------------------
+    let (ew, ei) = if smoke { (0, 1) } else { (2, 12) };
     let mut rows = Vec::new();
     for &n in &[64usize, 128, 256, 512] {
         let tokens: Vec<u32> = (0..n).map(|_| rng.below(256) as u32).collect();
@@ -32,7 +133,7 @@ fn main() {
             let mut eng = IncrementalEngine::new(w.clone(), &tokens, EngineOptions::default());
             let mut tok = 0u32;
             let mut flops = 0u64;
-            let t = time_it(2, 12, || {
+            let t = time_it(ew, ei, || {
                 tok = (tok + 1) % 255;
                 flops = eng.apply_edit(Edit::Replace { at, tok }).flops;
             });
@@ -49,7 +150,7 @@ fn main() {
         let n = 256;
         let tokens: Vec<u32> = (0..n).map(|_| rng.below(256) as u32).collect();
         let mut eng = IncrementalEngine::new(w.clone(), &tokens, EngineOptions::default());
-        let t = time_it(2, 12, || {
+        let t = time_it(ew, ei, || {
             eng.apply_edit(Edit::Insert { at: 128, tok: 7 });
             eng.apply_edit(Edit::Delete { at: 128 });
         });
@@ -64,7 +165,9 @@ fn main() {
     for &n in &[128usize, 512] {
         let tokens: Vec<u32> = (0..n).map(|_| rng.below(256) as u32).collect();
         let mut eng = IncrementalEngine::new(w.clone(), &tokens, EngineOptions::default());
-        let t = time_it(1, 5, || eng.rebuild());
+        let t = time_it(if smoke { 0 } else { 1 }, if smoke { 1 } else { 5 }, || {
+            eng.rebuild()
+        });
         rows.push(vec![
             format!("full rebuild n={n}"),
             format!("{:.2}", t.p50.as_secs_f64() * 1e3),
@@ -99,7 +202,7 @@ fn main() {
             let tokens: Vec<u32> = (0..n).map(|_| rng.below(256) as u32).collect();
             let pool = rt.manifest.config.pos_pool;
             let pos: Vec<u32> = (0..n).map(|i| (((2 * i + 1) * pool) / (2 * n)) as u32).collect();
-            let t = time_it(2, 10, || {
+            let t = time_it(ew, ei.min(10), || {
                 rt.dense_logits(&tokens, &pos).expect("dense");
             });
             rows.push(vec![
@@ -115,7 +218,7 @@ fn main() {
     let n = 384;
     let tokens: Vec<u32> = (0..n).map(|_| rng.below(256) as u32).collect();
     let mut eng = IncrementalEngine::new(w.clone(), &tokens, EngineOptions::default());
-    let edits = 300;
+    let edits = if smoke { 20 } else { 300 };
     let t0 = std::time::Instant::now();
     for i in 0..edits {
         let at = rng.below(eng.len());

@@ -208,18 +208,24 @@ impl ModelConfig {
 pub struct ServeConfig {
     /// TCP bind address for the JSON server.
     pub bind: String,
-    /// Worker threads executing inference.
+    /// Worker shards executing inference. Sessions are hash-routed to a
+    /// fixed shard so each engine keeps single-threaded ownership (no
+    /// locks on the hot path); throughput scales with this up to the core
+    /// count. `queue_capacity` and `max_sessions` are pool-wide and split
+    /// evenly across shards. Clamped to ≥ 1.
     pub workers: usize,
-    /// Max requests batched together (offline batch path).
+    /// Max requests batched together (offline batch path), per shard.
     pub max_batch: usize,
     /// Batching deadline: flush a partial batch after this many ms.
     pub batch_deadline_ms: u64,
-    /// Queue capacity before backpressure rejects new requests.
+    /// Pool-wide queue capacity before backpressure rejects new requests
+    /// (each shard gets `queue_capacity / workers`, at least 1).
     pub queue_capacity: usize,
     /// Periodically verify incremental state against a dense recompute
     /// every N edits (0 disables) — failure-detection knob.
     pub verify_every: usize,
-    /// Max live sessions before LRU eviction.
+    /// Pool-wide max live sessions before LRU eviction (each shard caps
+    /// at `max_sessions / workers`, at least 1).
     pub max_sessions: usize,
 }
 
@@ -242,7 +248,7 @@ impl ServeConfig {
         let d = ServeConfig::default();
         Ok(ServeConfig {
             bind: j.get("bind").as_str().unwrap_or(&d.bind).to_string(),
-            workers: j.get("workers").as_usize().unwrap_or(d.workers),
+            workers: j.get("workers").as_usize().unwrap_or(d.workers).max(1),
             max_batch: j.get("max_batch").as_usize().unwrap_or(d.max_batch),
             batch_deadline_ms: j
                 .get("batch_deadline_ms")
@@ -371,6 +377,14 @@ mod file_tests {
         assert_eq!(model, ModelConfig::vqt_mini());
         assert_eq!(serve.verify_every, 256);
         assert_eq!(serve.bind, "127.0.0.1:7478");
+        // The shipped config serves from a 4-shard pool.
+        assert_eq!(serve.workers, 4);
+    }
+
+    #[test]
+    fn zero_workers_clamped_to_one() {
+        let j = Json::parse(r#"{"workers": 0}"#).unwrap();
+        assert_eq!(ServeConfig::from_json(&j).unwrap().workers, 1);
     }
 
     #[test]

@@ -1,10 +1,32 @@
-//! Batching policy: the worker drains the request queue up to
-//! `max_batch` jobs (bounded by a deadline) and reorders them for session
-//! locality before execution.
+//! Request-planning policy for the shard pool.
+//!
+//! Two layers of planning keep the hot path lock-free and cache-friendly:
+//!
+//! 1. **Routing** ([`shard_of`]): a session id is hashed to a fixed shard,
+//!    so exactly one worker thread ever touches that session's
+//!    `IncrementalEngine` — single-threaded ownership, no locks.
+//! 2. **Batching** ([`plan`]): each shard drains its queue up to
+//!    `max_batch` jobs (bounded by a deadline) and reorders them for
+//!    session locality before execution.
 //!
 //! Invariant (property-tested): the relative order of jobs belonging to
 //! the same session is preserved — reordering across sessions is free,
-//! reordering within a session would corrupt edit scripts.
+//! reordering within a session would corrupt edit scripts. Routing
+//! preserves the same invariant globally because a session's jobs all
+//! land in one shard's FIFO queue.
+
+/// Shard index a session id is pinned to: FNV-1a 64-bit over the id bytes,
+/// reduced mod the shard count. Deterministic and platform-independent, so
+/// routing is stable across restarts and the tests can predict placement.
+pub fn shard_of(session: &str, shards: usize) -> usize {
+    debug_assert!(shards > 0);
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in session.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    (h % shards as u64) as usize
+}
 
 /// Minimal view of a queued job for planning purposes.
 pub trait SessionKeyed {
@@ -82,5 +104,31 @@ mod tests {
     fn single_job_untouched() {
         let planned = plan(vec![J(Some("x"), 9)]);
         assert_eq!(planned, vec![J(Some("x"), 9)]);
+    }
+
+    #[test]
+    fn shard_of_is_deterministic_and_in_range() {
+        for shards in 1..9 {
+            for i in 0..64 {
+                let sid = format!("session-{i}");
+                let s = shard_of(&sid, shards);
+                assert!(s < shards);
+                assert_eq!(s, shard_of(&sid, shards), "stable for {sid}");
+            }
+        }
+        // Single shard: everything routes to 0.
+        assert_eq!(shard_of("anything", 1), 0);
+    }
+
+    #[test]
+    fn shard_of_spreads_sessions() {
+        // Not a statistical test — just pin that FNV doesn't collapse a
+        // realistic id population onto one shard.
+        let shards = 4;
+        let mut hit = [false; 4];
+        for i in 0..64 {
+            hit[shard_of(&format!("user-{i}-doc"), shards)] = true;
+        }
+        assert!(hit.iter().all(|&h| h), "all shards used: {hit:?}");
     }
 }

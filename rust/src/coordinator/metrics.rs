@@ -42,6 +42,20 @@ impl Histogram {
         }
     }
 
+    /// Fold another histogram into this one (shard-snapshot merge: bucket
+    /// counts and sums add, the max is the max of maxes — percentiles of
+    /// the merge are percentiles of the union).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, &b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        if other.max > self.max {
+            self.max = other.max;
+        }
+    }
+
     pub fn count(&self) -> u64 {
         self.count
     }
@@ -85,8 +99,9 @@ impl Histogram {
     }
 }
 
-/// Aggregated serving metrics (owned by the worker thread; snapshotted on
-/// request).
+/// Aggregated serving metrics. Each coordinator shard owns its own
+/// `Metrics` (no locks on the hot path); a `Stats` request snapshots every
+/// shard and merges them with [`Metrics::merge`].
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
     /// Per-request wall latency in microseconds, by op kind.
@@ -100,14 +115,37 @@ pub struct Metrics {
     pub edits: u64,
     pub revisions: u64,
     pub dense_calls: u64,
+    /// Total defragmentations (position-pool rebuilds) served — additive
+    /// across edits, sessions, and shards.
     pub defrags: u64,
     pub sessions_opened: u64,
     pub sessions_evicted: u64,
     pub rejected_backpressure: u64,
     pub errors: u64,
+    /// Requests that panicked inside a shard (caught; the session was
+    /// dropped and an error surfaced to the caller).
+    pub panics: u64,
 }
 
 impl Metrics {
+    /// Fold another shard's metrics into this one — the pool-wide snapshot
+    /// a `Stats` request reports.
+    pub fn merge(&mut self, o: &Metrics) {
+        self.lat_edit_us.merge(&o.lat_edit_us);
+        self.lat_revision_us.merge(&o.lat_revision_us);
+        self.lat_dense_us.merge(&o.lat_dense_us);
+        self.flops_incremental += o.flops_incremental;
+        self.flops_dense_equiv += o.flops_dense_equiv;
+        self.edits += o.edits;
+        self.revisions += o.revisions;
+        self.dense_calls += o.dense_calls;
+        self.defrags += o.defrags;
+        self.sessions_opened += o.sessions_opened;
+        self.sessions_evicted += o.sessions_evicted;
+        self.rejected_backpressure += o.rejected_backpressure;
+        self.errors += o.errors;
+        self.panics += o.panics;
+    }
     /// The aggregate speedup the engine achieved (paper's headline ratio).
     pub fn speedup(&self) -> f64 {
         if self.flops_incremental == 0 {
@@ -136,6 +174,7 @@ impl Metrics {
                 Json::num(self.rejected_backpressure as f64),
             ),
             ("errors", Json::num(self.errors as f64)),
+            ("panics", Json::num(self.panics as f64)),
         ])
     }
 }
@@ -162,6 +201,47 @@ mod tests {
         let h = Histogram::new();
         assert_eq!(h.percentile(99.0), 0.0);
         assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn histogram_merge_is_union() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for v in [1.0, 8.0] {
+            a.record(v);
+        }
+        for v in [2.0, 4.0, 1000.0] {
+            b.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 5);
+        assert_eq!(a.max(), 1000.0);
+        assert!((a.mean() - 203.0).abs() < 1e-9);
+        assert!(a.percentile(99.0) >= 1000.0);
+    }
+
+    #[test]
+    fn metrics_merge_adds_counters() {
+        let mut a = Metrics {
+            edits: 3,
+            flops_incremental: 10,
+            flops_dense_equiv: 100,
+            ..Default::default()
+        };
+        a.lat_edit_us.record(4.0);
+        let mut b = Metrics {
+            edits: 5,
+            flops_incremental: 10,
+            flops_dense_equiv: 300,
+            panics: 1,
+            ..Default::default()
+        };
+        b.lat_edit_us.record(16.0);
+        a.merge(&b);
+        assert_eq!(a.edits, 8);
+        assert_eq!(a.panics, 1);
+        assert_eq!(a.speedup(), 20.0);
+        assert_eq!(a.lat_edit_us.count(), 2);
     }
 
     #[test]

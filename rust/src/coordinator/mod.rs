@@ -1,6 +1,9 @@
-//! The serving coordinator (L3): session management, request routing,
-//! batching, metrics, backpressure. The paper's incremental engine is the
-//! execution backend; the AOT L2 artifact is the dense baseline path.
+//! The serving coordinator (L3): a sharded worker pool with hash-routed
+//! session ownership, per-shard batching and metrics (merged on
+//! snapshot), backpressure, and panic isolation. The paper's incremental
+//! engine is the execution backend; the AOT L2 artifact is the dense
+//! baseline path. See `docs/ARCHITECTURE.md` §"Serving" for the shard
+//! model.
 
 pub mod batcher;
 pub mod metrics;

@@ -1,7 +1,20 @@
-//! The coordinator service: a worker thread owning all inference state
-//! (sessions, engines, PJRT runtime — none of which are `Send`-friendly or
-//! cheap to share), fronted by a bounded channel. Clients are cheap
-//! clonable handles.
+//! The coordinator service: a **sharded worker pool**. `ServeConfig::
+//! workers` threads each own a disjoint set of sessions (engines, metrics,
+//! PJRT runtime — none of which are cheap to share), fronted by one
+//! bounded channel per shard. Sessions are hash-routed to a fixed shard
+//! ([`super::batcher::shard_of`]), so the engine hot path stays
+//! single-threaded and lock-free while throughput scales with cores.
+//! Clients are cheap clonable handles that route by session id:
+//!
+//! - session-addressed requests go to the owning shard's FIFO queue;
+//! - session-less work (`Dense`, `BatchRevisions`) is spread round-robin;
+//! - `Stats` fans out to every shard and merges the per-shard
+//!   [`Metrics`] snapshots into one pool-wide view.
+//!
+//! A request that panics inside a shard is caught, the (possibly
+//! half-updated) session is dropped, and the caller gets an error — a
+//! poisoned session never takes down the shard, the pool, or a blocked
+//! caller.
 
 use crate::compressed::CompressedBatch;
 use crate::config::ServeConfig;
@@ -11,12 +24,13 @@ use crate::incremental::{EngineOptions, IncrementalEngine};
 use crate::model::{dense_forward, ModelWeights};
 use crate::runtime::ArtifactRuntime;
 use crate::util::Json;
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
 
-use super::batcher::{plan, SessionKeyed};
+use super::batcher::{plan, shard_of, SessionKeyed};
 use super::metrics::Metrics;
 use super::session::SessionStore;
 
@@ -54,6 +68,23 @@ pub enum Request {
 }
 
 impl Request {
+    /// Session key this request is pinned to. `None` ⇒ not
+    /// session-addressed: routed round-robin (`Dense`, `BatchRevisions`)
+    /// or fanned out to every shard (`Stats`).
+    pub fn session(&self) -> Option<&str> {
+        match self {
+            Request::Open { session, .. }
+            | Request::Edit { session, .. }
+            | Request::EditScript { session, .. }
+            | Request::Revision { session, .. }
+            | Request::Suggest { session, .. }
+            | Request::Checkpoint { session, .. }
+            | Request::Restore { session, .. }
+            | Request::Close { session } => Some(session),
+            Request::BatchRevisions { .. } | Request::Dense { .. } | Request::Stats => None,
+        }
+    }
+
     fn kind(&self) -> &'static str {
         match self {
             Request::Open { .. } => "open",
@@ -92,6 +123,13 @@ pub enum Response {
         storage: (usize, usize),
     },
     Stats(Json),
+    /// One shard's raw metrics snapshot. Internal plumbing: the client
+    /// fans a `Stats` request out to every shard and merges these into a
+    /// single [`Response::Stats`] before the caller sees anything.
+    ShardStats {
+        metrics: Box<Metrics>,
+        live_sessions: usize,
+    },
     Suggestions(Vec<(u32, f32)>),
     Done,
     Closed {
@@ -118,61 +156,146 @@ struct Job {
 
 impl SessionKeyed for Job {
     fn session_key(&self) -> Option<&str> {
-        match &self.req {
-            Request::Open { session, .. }
-            | Request::Edit { session, .. }
-            | Request::EditScript { session, .. }
-            | Request::Revision { session, .. }
-            | Request::Suggest { session, .. }
-            | Request::Checkpoint { session, .. }
-            | Request::Restore { session, .. }
-            | Request::Close { session } => Some(session),
-            _ => None,
-        }
+        self.req.session()
     }
 }
 
-/// Clonable client handle to a running coordinator.
+/// Where a request goes in the pool.
+enum Route {
+    /// Session-addressed: the owning shard.
+    Pinned(usize),
+    /// Session-less one-shot work: any shard (round-robin).
+    Any,
+    /// Pool-wide snapshot: every shard, merged by the client.
+    FanOut,
+}
+
+fn route(req: &Request, shards: usize) -> Route {
+    match req.session() {
+        Some(s) => Route::Pinned(shard_of(s, shards)),
+        None if matches!(req, Request::Stats) => Route::FanOut,
+        None => Route::Any,
+    }
+}
+
+/// Clonable client handle to a running coordinator pool. Routing happens
+/// here: one bounded sender per shard, shared by all clones.
 #[derive(Clone)]
 pub struct Client {
-    tx: mpsc::SyncSender<Job>,
+    shards: Arc<[mpsc::SyncSender<Job>]>,
+    /// Round-robin cursor for session-less requests.
+    rr: Arc<AtomicUsize>,
 }
 
 impl Client {
-    /// Blocking request (waits for queue space — natural backpressure).
-    pub fn request(&self, req: Request) -> Result<Response> {
-        let (rtx, rrx) = mpsc::channel();
-        self.tx
-            .send(Job {
-                req,
-                reply: rtx,
-                enqueued: Instant::now(),
-            })
-            .map_err(|_| anyhow::anyhow!("coordinator stopped"))?;
-        Ok(rrx.recv()?)
+    /// Number of worker shards behind this client.
+    pub fn shards(&self) -> usize {
+        self.shards.len()
     }
 
-    /// Non-blocking request: fails fast when the queue is full
-    /// (backpressure surfaces to the caller).
+    /// Blocking request (waits for queue space — natural backpressure).
+    pub fn request(&self, req: Request) -> Result<Response> {
+        self.dispatch(req, true)
+    }
+
+    /// Non-blocking request: fails fast when the target shard's queue is
+    /// full (backpressure surfaces to the caller).
     pub fn try_request(&self, req: Request) -> Result<Response> {
+        self.dispatch(req, false)
+    }
+
+    fn enqueue(
+        &self,
+        shard: usize,
+        req: Request,
+        blocking: bool,
+    ) -> Result<mpsc::Receiver<Response>> {
         let (rtx, rrx) = mpsc::channel();
-        match self.tx.try_send(Job {
+        let job = Job {
             req,
             reply: rtx,
             enqueued: Instant::now(),
-        }) {
-            Ok(()) => Ok(rrx.recv()?),
-            Err(mpsc::TrySendError::Full(_)) => bail!("queue full (backpressure)"),
-            Err(mpsc::TrySendError::Disconnected(_)) => bail!("coordinator stopped"),
+        };
+        if blocking {
+            self.shards[shard]
+                .send(job)
+                .map_err(|_| anyhow!("coordinator stopped"))?;
+        } else {
+            match self.shards[shard].try_send(job) {
+                Ok(()) => {}
+                Err(mpsc::TrySendError::Full(_)) => bail!("queue full (backpressure)"),
+                Err(mpsc::TrySendError::Disconnected(_)) => bail!("coordinator stopped"),
+            }
+        }
+        Ok(rrx)
+    }
+
+    /// Wait for a shard's reply. A dropped reply channel means the shard
+    /// died before answering — surfaced as an error, never a hang.
+    fn recv(rrx: mpsc::Receiver<Response>) -> Result<Response> {
+        rrx.recv()
+            .map_err(|_| anyhow!("coordinator shard terminated before replying"))
+    }
+
+    fn dispatch(&self, req: Request, blocking: bool) -> Result<Response> {
+        match route(&req, self.shards.len()) {
+            Route::Pinned(s) => Self::recv(self.enqueue(s, req, blocking)?),
+            Route::Any => {
+                let s = self.rr.fetch_add(1, Ordering::Relaxed) % self.shards.len();
+                Self::recv(self.enqueue(s, req, blocking)?)
+            }
+            Route::FanOut => {
+                // Enqueue on every shard first, then collect, so the
+                // snapshots are taken concurrently.
+                let rxs: Vec<_> = (0..self.shards.len())
+                    .map(|s| self.enqueue(s, req.clone(), blocking))
+                    .collect::<Result<_>>()?;
+                let mut merged = Metrics::default();
+                let mut live = 0usize;
+                let mut per_shard = Vec::with_capacity(self.shards.len());
+                for rrx in rxs {
+                    match Self::recv(rrx)? {
+                        Response::ShardStats {
+                            metrics,
+                            live_sessions,
+                        } => {
+                            // Compact per-shard breakdown (shard order):
+                            // makes routing spread observable — load skew
+                            // and the round-robin path are testable and
+                            // debuggable from one snapshot.
+                            per_shard.push(Json::obj(vec![
+                                ("live_sessions", Json::num(live_sessions as f64)),
+                                ("edits", Json::num(metrics.edits as f64)),
+                                ("dense_calls", Json::num(metrics.dense_calls as f64)),
+                                ("errors", Json::num(metrics.errors as f64)),
+                                ("panics", Json::num(metrics.panics as f64)),
+                            ]));
+                            merged.merge(&metrics);
+                            live += live_sessions;
+                        }
+                        Response::Err(e) => bail!("stats fan-out failed: {e}"),
+                        other => bail!("unexpected shard stats response {other:?}"),
+                    }
+                }
+                let mut j = merged.to_json();
+                if let Json::Obj(map) = &mut j {
+                    map.insert("live_sessions".into(), Json::num(live as f64));
+                    map.insert("shards".into(), Json::num(self.shards.len() as f64));
+                    map.insert("per_shard".into(), Json::Arr(per_shard));
+                }
+                Ok(Response::Stats(j))
+            }
         }
     }
 }
 
-/// Running coordinator (worker thread + client factory). The worker exits
-/// when every `Client` handle (including the coordinator's own) is gone.
+/// Running coordinator pool (N shard threads + client factory). The shards
+/// exit when every `Client` handle (including the coordinator's own) is
+/// gone; each drains the jobs already in its queue before exiting, so
+/// shutdown never abandons an in-flight caller.
 pub struct Coordinator {
     client: Option<Client>,
-    handle: Option<std::thread::JoinHandle<()>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
 }
 
 /// What the worker serves from.
@@ -184,17 +307,36 @@ pub struct Backend {
 }
 
 impl Coordinator {
-    /// Spawn the worker thread and return the handle.
+    /// Spawn `cfg.workers` shard threads and return the pool handle.
+    /// `queue_capacity` and `max_sessions` are split evenly across shards
+    /// (ceil division), so the config keeps its pool-wide meaning.
     pub fn start(backend: Backend, cfg: ServeConfig) -> Coordinator {
-        let (tx, rx) = mpsc::sync_channel::<Job>(cfg.queue_capacity);
-        let client = Client { tx: tx.clone() };
-        let handle = std::thread::Builder::new()
-            .name("vqt-coordinator".into())
-            .spawn(move || worker_loop(backend, cfg, rx))
-            .expect("spawn coordinator");
+        let shards = cfg.workers.max(1);
+        let queue_cap = cfg.queue_capacity.div_ceil(shards).max(1);
+        let sessions_cap = cfg.max_sessions.div_ceil(shards).max(1);
+        let mut txs = Vec::with_capacity(shards);
+        let mut handles = Vec::with_capacity(shards);
+        for shard in 0..shards {
+            let (tx, rx) = mpsc::sync_channel::<Job>(queue_cap);
+            let weights = backend.weights.clone();
+            let artifacts_dir = backend.artifacts_dir.clone();
+            let engine_opts = backend.engine_opts;
+            let cfg = cfg.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("vqt-shard-{shard}"))
+                .spawn(move || {
+                    worker_loop(shard, weights, artifacts_dir, engine_opts, cfg, sessions_cap, rx)
+                })
+                .expect("spawn coordinator shard");
+            txs.push(tx);
+            handles.push(handle);
+        }
         Coordinator {
-            client: Some(client),
-            handle: Some(handle),
+            client: Some(Client {
+                shards: txs.into(),
+                rr: Arc::new(AtomicUsize::new(0)),
+            }),
+            handles,
         }
     }
 
@@ -202,40 +344,63 @@ impl Coordinator {
         self.client.as_ref().expect("coordinator running").clone()
     }
 
-    /// Drop our client handle and wait for the worker to drain and exit.
-    /// (Outstanding client clones keep the worker alive until dropped.)
+    /// Drop our client handle and wait for every shard to drain and exit.
+    /// (Outstanding client clones keep the shards alive until dropped.)
     pub fn shutdown(mut self) {
+        self.join_all();
+    }
+
+    fn join_all(&mut self) {
         self.client = None;
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
+        for h in self.handles.drain(..) {
+            if h.join().is_err() {
+                log::error!("coordinator shard panicked during shutdown");
+            }
         }
     }
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        self.client = None;
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
+        self.join_all();
     }
 }
 
-fn worker_loop(backend: Backend, cfg: ServeConfig, rx: mpsc::Receiver<Job>) {
-    let runtime = backend.artifacts_dir.as_ref().and_then(|d| {
+/// Best-effort panic payload stringification for the per-request guard.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    payload
+        .downcast_ref::<&'static str>()
+        .copied()
+        .or_else(|| payload.downcast_ref::<String>().map(String::as_str))
+        .unwrap_or("non-string panic payload")
+}
+
+fn worker_loop(
+    shard: usize,
+    weights: Arc<ModelWeights>,
+    artifacts_dir: Option<std::path::PathBuf>,
+    engine_opts: EngineOptions,
+    cfg: ServeConfig,
+    sessions_cap: usize,
+    rx: mpsc::Receiver<Job>,
+) {
+    let runtime = artifacts_dir.as_ref().and_then(|d| {
         match ArtifactRuntime::open(d) {
             Ok(rt) => Some(rt),
             Err(e) => {
-                log::warn!("artifact runtime unavailable ({e:#}); dense requests use the in-process oracle");
+                // One warning for the pool, not one per shard.
+                if shard == 0 {
+                    log::warn!("artifact runtime unavailable ({e:#}); dense requests use the in-process oracle");
+                }
                 None
             }
         }
     });
     let mut state = Worker {
-        weights: backend.weights,
-        engine_opts: backend.engine_opts,
+        weights,
+        engine_opts,
         runtime,
-        sessions: SessionStore::new(cfg.max_sessions),
+        sessions: SessionStore::new(sessions_cap),
         metrics: Metrics::default(),
         verify_every: cfg.verify_every,
     };
@@ -262,10 +427,33 @@ fn worker_loop(backend: Backend, cfg: ServeConfig, rx: mpsc::Receiver<Job>) {
             }
         }
         for job in plan(batch) {
-            let kind = job.req.kind();
+            let Job {
+                req,
+                reply,
+                enqueued,
+            } = job;
+            let kind = req.kind();
+            let session = req.session().map(str::to_string);
             let t0 = Instant::now();
-            let resp = state.handle(job.req);
-            let wait_us = job.enqueued.elapsed().as_micros() as f64;
+            let guarded = std::panic::AssertUnwindSafe(|| state.handle(req));
+            let resp = match std::panic::catch_unwind(guarded) {
+                Ok(r) => r,
+                Err(payload) => {
+                    // A panicking request must not take the shard (or a
+                    // blocked caller) down with it. The session that
+                    // panicked mid-update may hold half-applied state, so
+                    // it is dropped rather than served corrupt.
+                    if let Some(s) = &session {
+                        state.sessions.remove(s);
+                    }
+                    state.metrics.panics += 1;
+                    Response::Err(format!(
+                        "request '{kind}' panicked: {} (session dropped)",
+                        panic_message(payload.as_ref())
+                    ))
+                }
+            };
+            let wait_us = enqueued.elapsed().as_micros() as f64;
             let us = t0.elapsed().as_micros() as f64;
             match kind {
                 "edit" | "edit_script" => state.metrics.lat_edit_us.record(us),
@@ -273,14 +461,14 @@ fn worker_loop(backend: Backend, cfg: ServeConfig, rx: mpsc::Receiver<Job>) {
                 "dense" => state.metrics.lat_dense_us.record(us),
                 _ => {}
             }
-            log::debug!("{kind}: {us:.0}µs (+{wait_us:.0}µs queued)");
+            log::debug!("shard {shard} {kind}: {us:.0}µs (+{wait_us:.0}µs queued)");
             if matches!(resp, Response::Err(_)) {
                 state.metrics.errors += 1;
             }
-            let _ = job.reply.send(resp);
+            let _ = reply.send(resp);
         }
     }
-    log::info!("coordinator worker exiting");
+    log::debug!("coordinator shard {shard} exiting");
 }
 
 struct Worker {
@@ -341,12 +529,14 @@ impl Worker {
                     .get_mut(&session)
                     .ok_or_else(|| anyhow::anyhow!("unknown session '{session}'"))?;
                 let script = diff_tokens(s.engine.tokens(), &tokens);
+                let defrags_before = s.engine.stats.defrags;
                 let rep = s.engine.apply_revision(&script);
                 s.edits += script.len() as u64;
                 let n = s.engine.len();
                 let predicted = s.engine.predict();
                 self.metrics.revisions += 1;
                 self.metrics.edits += script.len() as u64;
+                self.metrics.defrags += s.engine.stats.defrags - defrags_before;
                 self.metrics.flops_incremental += rep.flops;
                 let dense_equiv = self.dense_equiv(n);
                 self.metrics.flops_dense_equiv += dense_equiv;
@@ -426,16 +616,10 @@ impl Worker {
                 let existed = self.sessions.remove(&session).is_some();
                 Ok(Response::Closed { existed })
             }
-            Request::Stats => {
-                let mut j = self.metrics.to_json();
-                if let Json::Obj(map) = &mut j {
-                    map.insert(
-                        "live_sessions".into(),
-                        Json::num(self.sessions.len() as f64),
-                    );
-                }
-                Ok(Response::Stats(j))
-            }
+            Request::Stats => Ok(Response::ShardStats {
+                metrics: Box::new(self.metrics.clone()),
+                live_sessions: self.sessions.len(),
+            }),
         }
     }
 
@@ -444,13 +628,15 @@ impl Worker {
             .sessions
             .get_mut(session)
             .ok_or_else(|| anyhow::anyhow!("unknown session '{session}'"))?;
+        let defrags_before = s.engine.stats.defrags;
         let rep = s.engine.apply_edits(edits);
         s.edits += edits.len() as u64;
         let n = s.engine.len();
         let predicted = s.engine.predict();
-        let defrags = s.engine.stats.defrags;
         self.metrics.edits += edits.len() as u64;
-        self.metrics.defrags = self.metrics.defrags.max(defrags);
+        // Additive counter (not a gauge) so the cross-shard merge sums
+        // correctly regardless of session placement.
+        self.metrics.defrags += s.engine.stats.defrags - defrags_before;
         self.metrics.flops_incremental += rep.flops;
         // Dense equivalent: one from-scratch pass per edit (the online
         // comparison the paper makes for atomic edits).

@@ -1,5 +1,7 @@
 //! Document sessions: one incremental engine per live document, with LRU
-//! eviction. Owned by the coordinator worker thread.
+//! eviction. Each coordinator shard owns one `SessionStore` for the
+//! sessions hash-routed to it — single-threaded access by construction,
+//! so no interior locking is needed.
 
 use crate::incremental::IncrementalEngine;
 use std::collections::HashMap;

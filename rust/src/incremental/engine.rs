@@ -545,10 +545,7 @@ impl IncrementalEngine {
         }
         tensor::layernorm_into(&sc.c, &layer.ln2_g, &layer.ln2_b, cfg.ln_eps, &mut sc.a);
         tensor::vec_matmul_into(&sc.a, &layer.w_ff1, &mut sc.mid);
-        for (m, &b) in sc.mid.iter_mut().zip(&layer.b_ff1) {
-            *m += b;
-        }
-        tensor::gelu_slice(&mut sc.mid);
+        tensor::bias_gelu(&mut sc.mid, &layer.b_ff1);
         let mut out = vec![0.0; d];
         tensor::vec_matmul_into(&sc.mid, &layer.w_ff2, &mut out);
         for i in 0..d {

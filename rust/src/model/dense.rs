@@ -98,10 +98,7 @@ pub fn dense_forward(
             // LN2 → FFN → residual 2
             tensor::layernorm_into(x.row(i), &layer.ln2_g, &layer.ln2_b, cfg.ln_eps, &mut h2);
             tensor::vec_matmul_into(&h2, &layer.w_ff1, &mut ff_mid);
-            for (v, &b) in ff_mid.iter_mut().zip(&layer.b_ff1) {
-                *v += b;
-            }
-            tensor::gelu_slice(&mut ff_mid);
+            tensor::bias_gelu(&mut ff_mid, &layer.b_ff1);
             tensor::vec_matmul_into(&ff_mid, &layer.w_ff2, &mut ff_out);
             for (v, &b) in ff_out.iter_mut().zip(&layer.b_ff2) {
                 *v += b;

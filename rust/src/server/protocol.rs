@@ -146,6 +146,18 @@ pub fn response_to_json(resp: &Response) -> Json {
             ("storage_dense", Json::num(storage.1 as f64)),
         ]),
         Response::Stats(j) => Json::obj(vec![("ok", Json::Bool(true)), ("stats", j.clone())]),
+        // Normally merged into `Stats` by the client before reaching the
+        // wire; serialized directly if a raw shard snapshot ever escapes.
+        Response::ShardStats {
+            metrics,
+            live_sessions,
+        } => {
+            let mut stats = metrics.to_json();
+            if let Json::Obj(map) = &mut stats {
+                map.insert("live_sessions".into(), Json::num(*live_sessions as f64));
+            }
+            Json::obj(vec![("ok", Json::Bool(true)), ("stats", stats)])
+        }
         Response::Suggestions(top) => Json::obj(vec![
             ("ok", Json::Bool(true)),
             (

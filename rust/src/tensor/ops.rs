@@ -12,77 +12,103 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
     c
 }
 
-/// `C = A · B` into an existing buffer (zeroed here).
+/// Column-tile width for the blocked GEMM/GEMV core: a 64-float strip of
+/// the output row (256 B) plus the four active `W` row segments fit
+/// comfortably in L1, so every float of the strip is touched once per
+/// 4-row k-step instead of once per k-step.
+const N_TILE: usize = 64;
+
+/// `y += x · W` — the shared tiled core behind [`matmul_into`] and
+/// [`vec_matmul_into`]. Columns are processed in `N_TILE`-wide strips;
+/// `x` is consumed four entries at a time so the write stream over the
+/// strip (the bottleneck at 128–3072-wide rows) is quartered. All inner
+/// loops are exact-length slice zips, which the autovectorizer lowers to
+/// SIMD without bounds checks.
+fn accum_row_tiled(x: &[f32], w: &Matrix, y: &mut [f32]) {
+    debug_assert_eq!(x.len(), w.rows);
+    debug_assert_eq!(y.len(), w.cols);
+    let n = w.cols;
+    let k = x.len();
+    let k4 = k - k % 4;
+    let mut j0 = 0;
+    while j0 < n {
+        let jw = (n - j0).min(N_TILE);
+        let ytile = &mut y[j0..j0 + jw];
+        let mut p = 0;
+        while p < k4 {
+            let (x0, x1, x2, x3) = (x[p], x[p + 1], x[p + 2], x[p + 3]);
+            if x0 == 0.0 && x1 == 0.0 && x2 == 0.0 && x3 == 0.0 {
+                p += 4;
+                continue; // sparse-row fast path (zero-padded inputs)
+            }
+            let w0 = &w.data[p * n + j0..p * n + j0 + jw];
+            let w1 = &w.data[(p + 1) * n + j0..(p + 1) * n + j0 + jw];
+            let w2 = &w.data[(p + 2) * n + j0..(p + 2) * n + j0 + jw];
+            let w3 = &w.data[(p + 3) * n + j0..(p + 3) * n + j0 + jw];
+            for ((((yv, &a0), &a1), &a2), &a3) in
+                ytile.iter_mut().zip(w0).zip(w1).zip(w2).zip(w3)
+            {
+                *yv += x0 * a0 + x1 * a1 + x2 * a2 + x3 * a3;
+            }
+            p += 4;
+        }
+        for (pp, &xv) in x.iter().enumerate().skip(k4) {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w.data[pp * n + j0..pp * n + j0 + jw];
+            for (yv, &wv) in ytile.iter_mut().zip(wrow) {
+                *yv += xv * wv;
+            }
+        }
+        j0 += jw;
+    }
+}
+
+/// `C = A · B` into an existing buffer (zeroed here). Tiled: each output
+/// row goes through the blocked [`accum_row_tiled`] core.
 pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     assert_eq!(a.cols, b.rows);
     assert_eq!((c.rows, c.cols), (a.rows, b.cols));
     let (m, k, n) = (a.rows, a.cols, b.cols);
     c.data.iter_mut().for_each(|x| *x = 0.0);
-    // i-k-j loop order: unit-stride access on B and C rows; the inner loop
-    // auto-vectorizes.
     for i in 0..m {
         let arow = &a.data[i * k..(i + 1) * k];
         let crow = &mut c.data[i * n..(i + 1) * n];
-        for (p, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b.data[p * n..(p + 1) * n];
-            for (cv, &bv) in crow.iter_mut().zip(brow) {
-                *cv += av * bv;
-            }
-        }
+        accum_row_tiled(arow, b, crow);
     }
 }
 
 /// `y = x · W` for a single row vector. `x: (k)`, `w: (k,n)`, `y: (n)`.
+/// This is THE serving hot path (QKV, mix, FFN, classifier are all row ×
+/// matrix); it runs on the tiled core.
 #[inline]
 pub fn vec_matmul_into(x: &[f32], w: &Matrix, y: &mut [f32]) {
     assert_eq!(x.len(), w.rows);
     assert_eq!(y.len(), w.cols);
     y.iter_mut().for_each(|v| *v = 0.0);
-    let cols = w.cols;
-    // Two-row unrolling halves the passes over `y` (the write stream is
-    // the bottleneck for 128-512-wide rows; measured best vs 1- and 4-row
-    // variants on this host — measured on this host).
-    let pairs = x.len() / 2;
-    for pp in 0..pairs {
-        let p = pp * 2;
-        let (x0, x1) = (x[p], x[p + 1]);
-        let w0 = &w.data[p * cols..(p + 1) * cols];
-        let w1 = &w.data[(p + 1) * cols..(p + 2) * cols];
-        for ((yv, &a), &b) in y.iter_mut().zip(w0).zip(w1) {
-            *yv += x0 * a + x1 * b;
-        }
-    }
-    if x.len() % 2 == 1 {
-        let p = x.len() - 1;
-        let xv = x[p];
-        let wrow = &w.data[p * cols..(p + 1) * cols];
-        for (yv, &wv) in y.iter_mut().zip(wrow) {
-            *yv += xv * wv;
-        }
-    }
+    accum_row_tiled(x, w, y);
 }
 
-/// Dot product.
+/// Dot product — 8-wide chunks feeding 4 independent accumulators, so the
+/// autovectorizer can keep two FMA pipes busy without a reduction
+/// dependency chain.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
-    // 4-way unrolled accumulators help the single-core autovectorizer.
-    let n = a.len();
-    let chunks = n / 4;
+    let ca = a.chunks_exact(8);
+    let cb = b.chunks_exact(8);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
     let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
-    for c in 0..chunks {
-        let i = c * 4;
-        s0 += a[i] * b[i];
-        s1 += a[i + 1] * b[i + 1];
-        s2 += a[i + 2] * b[i + 2];
-        s3 += a[i + 3] * b[i + 3];
+    for (x, y) in ca.zip(cb) {
+        s0 += x[0] * y[0] + x[1] * y[1];
+        s1 += x[2] * y[2] + x[3] * y[3];
+        s2 += x[4] * y[4] + x[5] * y[5];
+        s3 += x[6] * y[6] + x[7] * y[7];
     }
-    let mut s = s0 + s1 + s2 + s3;
-    for i in chunks * 4..n {
-        s += a[i] * b[i];
+    let mut s = (s0 + s1) + (s2 + s3);
+    for (x, y) in ra.iter().zip(rb) {
+        s += x * y;
     }
     s
 }
@@ -119,6 +145,18 @@ pub fn gelu_scalar(x: f32) -> f32 {
 pub fn gelu_slice(xs: &mut [f32]) {
     for x in xs.iter_mut() {
         *x = gelu_scalar(*x);
+    }
+}
+
+/// Fused `x = GELU(x + b)` — one pass over the FFN mid-layer row instead
+/// of a bias pass followed by an activation pass. Bit-identical to the
+/// unfused sequence (same scalar ops in the same order), so swapping it
+/// into the engine/oracle cannot move numerics.
+#[inline]
+pub fn bias_gelu(xs: &mut [f32], bias: &[f32]) {
+    debug_assert_eq!(xs.len(), bias.len());
+    for (x, &b) in xs.iter_mut().zip(bias) {
+        *x = gelu_scalar(*x + b);
     }
 }
 
@@ -196,6 +234,23 @@ mod tests {
         c
     }
 
+    fn naive_vec_matmul(x: &[f32], w: &Matrix) -> Vec<f32> {
+        let mut y = vec![0.0; w.cols];
+        for (p, &xv) in x.iter().enumerate() {
+            for (j, yv) in y.iter_mut().enumerate() {
+                *yv += xv * w.get(p, j);
+            }
+        }
+        y
+    }
+
+    /// The 4-row k-unroll reassociates the k-sum; the reference sums
+    /// sequentially. With N(0,1) entries the drift is ~√k·ε, so the bound
+    /// is 1e-5 scaled by the reduction depth.
+    fn reassoc_tol(k: usize) -> f32 {
+        1e-5 * (1.0 + k as f32 / 64.0)
+    }
+
     #[test]
     fn matmul_matches_naive() {
         use crate::util::Rng;
@@ -211,6 +266,64 @@ mod tests {
     }
 
     #[test]
+    fn tiled_matmul_matches_naive_at_ragged_shapes() {
+        use crate::util::Rng;
+        let mut r = Rng::new(7);
+        // Every boundary case of the tiling: k not a multiple of the
+        // 4-row unroll, n not a multiple of N_TILE (64), both straddling
+        // one and two tiles, plus degenerate 1-sized dims.
+        let shapes = [
+            (1usize, 1usize, 1usize),
+            (3, 5, 7),
+            (4, 8, 64),
+            (5, 63, 65),
+            (7, 64, 64),
+            (2, 129, 31),
+            (17, 96, 130),
+            (9, 130, 129),
+        ];
+        for &(m, k, n) in &shapes {
+            let a = Matrix::from_fn(m, k, |_, _| r.normal());
+            let b = Matrix::from_fn(k, n, |_, _| r.normal());
+            let c1 = matmul(&a, &b);
+            let c2 = naive_matmul(&a, &b);
+            let d = c1.max_abs_diff(&c2);
+            assert!(d < reassoc_tol(k), "({m},{k},{n}): diff {d}");
+        }
+        // And a randomized sweep for shapes nobody thought of.
+        for _ in 0..12 {
+            let (m, k, n) = (r.range(1, 20), r.range(1, 70), r.range(1, 70));
+            let a = Matrix::from_fn(m, k, |_, _| r.normal());
+            let b = Matrix::from_fn(k, n, |_, _| r.normal());
+            let d = matmul(&a, &b).max_abs_diff(&naive_matmul(&a, &b));
+            assert!(d < reassoc_tol(k), "({m},{k},{n}): diff {d}");
+        }
+    }
+
+    #[test]
+    fn tiled_vec_matmul_matches_naive_at_ragged_shapes() {
+        use crate::util::Rng;
+        let mut r = Rng::new(8);
+        for &(k, n) in &[
+            (1usize, 1usize),
+            (5, 3),
+            (63, 65),
+            (64, 64),
+            (129, 100),
+            (130, 131),
+        ] {
+            let w = Matrix::from_fn(k, n, |_, _| r.normal());
+            let x: Vec<f32> = (0..k).map(|_| r.normal()).collect();
+            let mut y = vec![0.0; n];
+            vec_matmul_into(&x, &w, &mut y);
+            let yref = naive_vec_matmul(&x, &w);
+            for (j, (a, b)) in y.iter().zip(&yref).enumerate() {
+                assert!((a - b).abs() < reassoc_tol(k), "({k},{n}) col {j}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
     fn vec_matmul_matches_matmul() {
         use crate::util::Rng;
         let mut r = Rng::new(2);
@@ -220,9 +333,58 @@ mod tests {
         let full = matmul(&a, &w);
         let mut y = vec![0.0; 5];
         vec_matmul_into(&x, &w, &mut y);
-        // Row-pair fusion reassociates additions: allow fp slack.
+        // Both run the same tiled core, but keep fp slack for safety.
         for (a, b) in full.data.iter().zip(&y) {
             assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn zero_rows_skipped_without_changing_result() {
+        use crate::util::Rng;
+        let mut r = Rng::new(9);
+        let k = 23;
+        let w = Matrix::from_fn(k, 40, |_, _| r.normal());
+        let mut x: Vec<f32> = (0..k).map(|_| r.normal()).collect();
+        for i in (0..k).step_by(3) {
+            x[i] = 0.0; // exercise the sparse fast path
+        }
+        let mut y = vec![0.0; 40];
+        vec_matmul_into(&x, &w, &mut y);
+        let yref = naive_vec_matmul(&x, &w);
+        for (a, b) in y.iter().zip(&yref) {
+            assert!((a - b).abs() < reassoc_tol(k), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn bias_gelu_matches_unfused_exactly() {
+        use crate::util::Rng;
+        let mut r = Rng::new(10);
+        for n in [1usize, 7, 64, 130] {
+            let bias: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+            let xs: Vec<f32> = (0..n).map(|_| r.normal() * 2.0).collect();
+            let mut fused = xs.clone();
+            bias_gelu(&mut fused, &bias);
+            let mut unfused = xs.clone();
+            for (x, &b) in unfused.iter_mut().zip(&bias) {
+                *x += b;
+            }
+            gelu_slice(&mut unfused);
+            // Same scalar ops in the same order ⇒ bitwise equal.
+            assert_eq!(fused, unfused, "n={n}");
+        }
+    }
+
+    #[test]
+    fn dot_matches_sequential_reference() {
+        use crate::util::Rng;
+        let mut r = Rng::new(11);
+        for k in [1usize, 4, 7, 8, 9, 15, 16, 64, 129] {
+            let a: Vec<f32> = (0..k).map(|_| r.normal()).collect();
+            let b: Vec<f32> = (0..k).map(|_| r.normal()).collect();
+            let refv: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - refv).abs() < reassoc_tol(k), "k={k}");
         }
     }
 

@@ -1,0 +1,200 @@
+//! Concurrency suite for the sharded coordinator pool: many client
+//! threads hammering many sessions must leave every session in exactly
+//! the state a serial replay of that session's edits produces, and
+//! shutdown must drain cleanly.
+//!
+//! Determinism argument: each session is owned by one client thread
+//! (blocking request/reply, so one in-flight op per session) and routed
+//! to one fixed shard, whose queue is FIFO and whose batch planner
+//! preserves intra-session order. The engine is deterministic, so the
+//! coordinator's logits must equal a single-threaded replay bit-for-bit
+//! (asserted with a 1e-6 slack for paranoia).
+
+use std::sync::Arc;
+use vqt::config::{ModelConfig, ServeConfig};
+use vqt::coordinator::{Backend, Coordinator, Request, Response};
+use vqt::edits::Edit;
+use vqt::incremental::{EngineOptions, IncrementalEngine};
+use vqt::model::ModelWeights;
+use vqt::testutil::gen_edit;
+use vqt::util::Rng;
+
+const THREADS: usize = 8;
+const SESSIONS_PER_THREAD: usize = 4; // 32 sessions total
+const EDITS_PER_THREAD: usize = 24;
+
+fn sid(thread: usize, s: usize) -> String {
+    format!("t{thread}-doc{s}")
+}
+
+fn make_doc(thread: usize, s: usize, vocab: usize) -> Vec<u32> {
+    let mut rng = Rng::new(1000 + (thread * SESSIONS_PER_THREAD + s) as u64);
+    let n = rng.range(10, 24);
+    (0..n).map(|_| rng.below(vocab) as u32).collect()
+}
+
+#[test]
+fn sharded_pool_matches_serial_replay_per_session() {
+    let cfg = ModelConfig::vqt_tiny();
+    let w = Arc::new(ModelWeights::random(&cfg, 23));
+    let sc = ServeConfig {
+        workers: 4,
+        max_sessions: 128, // no eviction even if hashing clusters sessions
+        ..ServeConfig::default()
+    };
+    let coordinator = Coordinator::start(
+        Backend {
+            weights: w.clone(),
+            artifacts_dir: None,
+            engine_opts: EngineOptions::default(),
+        },
+        sc,
+    );
+    let client = coordinator.client();
+    assert_eq!(client.shards(), 4);
+
+    let mut joins = Vec::new();
+    for t in 0..THREADS {
+        let c = client.clone();
+        let cfg = cfg.clone();
+        joins.push(std::thread::spawn(move || {
+            let docs: Vec<Vec<u32>> = (0..SESSIONS_PER_THREAD)
+                .map(|s| make_doc(t, s, cfg.vocab_size))
+                .collect();
+            for (s, doc) in docs.iter().enumerate() {
+                c.request(Request::Open {
+                    session: sid(t, s),
+                    tokens: doc.clone(),
+                })
+                .unwrap()
+                .logits()
+                .unwrap();
+            }
+            // Interleave edits across this thread's sessions, recording
+            // the per-session script for the serial replay.
+            let mut rng = Rng::new(5000 + t as u64);
+            let mut lens: Vec<usize> = docs.iter().map(Vec::len).collect();
+            let mut scripts: Vec<Vec<Edit>> = vec![Vec::new(); SESSIONS_PER_THREAD];
+            for _ in 0..EDITS_PER_THREAD {
+                let s = rng.below(SESSIONS_PER_THREAD);
+                let e = gen_edit(&mut rng, lens[s], cfg.vocab_size, cfg.max_seq);
+                lens[s] = (lens[s] as isize + e.len_delta()) as usize;
+                scripts[s].push(e);
+                let r = c
+                    .request(Request::Edit {
+                        session: sid(t, s),
+                        edit: e,
+                    })
+                    .unwrap();
+                assert!(r.logits().is_ok(), "t{t} s{s}: {r:?}");
+            }
+            // Final logits via an empty edit script (a read, in effect).
+            let finals: Vec<Vec<f32>> = (0..SESSIONS_PER_THREAD)
+                .map(|s| {
+                    c.request(Request::EditScript {
+                        session: sid(t, s),
+                        edits: Vec::new(),
+                    })
+                    .unwrap()
+                    .logits()
+                    .unwrap()
+                    .to_vec()
+                })
+                .collect();
+            (t, docs, scripts, finals)
+        }));
+    }
+
+    let results: Vec<_> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+
+    // Serial replay: one fresh engine per session, same doc, same script,
+    // single-threaded.
+    for (t, docs, scripts, finals) in &results {
+        for s in 0..SESSIONS_PER_THREAD {
+            let mut eng =
+                IncrementalEngine::new(w.clone(), &docs[s], EngineOptions::default());
+            eng.apply_edits(&scripts[s]);
+            assert_eq!(eng.logits().len(), finals[s].len());
+            for (i, (a, b)) in eng.logits().iter().zip(&finals[s]).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-6,
+                    "t{t} session {s} logit {i}: serial {a} vs pool {b}"
+                );
+            }
+        }
+    }
+
+    // Pool-wide stats merged across shards: every session and edit
+    // accounted for exactly once.
+    match client.request(Request::Stats).unwrap() {
+        Response::Stats(j) => {
+            assert_eq!(j.get("shards").as_usize(), Some(4));
+            assert_eq!(
+                j.get("live_sessions").as_usize(),
+                Some(THREADS * SESSIONS_PER_THREAD)
+            );
+            assert_eq!(
+                j.get("edits").as_usize(),
+                Some(THREADS * EDITS_PER_THREAD)
+            );
+            assert_eq!(
+                j.get("sessions_opened").as_usize(),
+                Some(THREADS * SESSIONS_PER_THREAD)
+            );
+            assert_eq!(j.get("errors").as_usize(), Some(0));
+        }
+        other => panic!("{other:?}"),
+    }
+
+    // Drain/shutdown: all clients dropped, every shard must exit cleanly
+    // (shutdown joins all shard threads; a hang here is a test timeout).
+    drop(client);
+    coordinator.shutdown();
+}
+
+#[test]
+fn round_robin_spreads_sessionless_work_and_stats_merge() {
+    let cfg = ModelConfig::vqt_tiny();
+    let w = Arc::new(ModelWeights::random(&cfg, 29));
+    let sc = ServeConfig {
+        workers: 3,
+        ..ServeConfig::default()
+    };
+    let coordinator = Coordinator::start(
+        Backend {
+            weights: w,
+            artifacts_dir: None,
+            engine_opts: EngineOptions::default(),
+        },
+        sc,
+    );
+    let client = coordinator.client();
+    let tokens: Vec<u32> = (0..12).map(|i| (i % 60) as u32).collect();
+    // 6 session-less dense calls from one client round-robin across 3
+    // shards deterministically: each shard must serve exactly 2.
+    for _ in 0..6 {
+        client
+            .request(Request::Dense {
+                tokens: tokens.clone(),
+            })
+            .unwrap()
+            .logits()
+            .unwrap();
+    }
+    match client.request(Request::Stats).unwrap() {
+        Response::Stats(j) => {
+            assert_eq!(j.get("dense_calls").as_usize(), Some(6));
+            assert_eq!(j.get("shards").as_usize(), Some(3));
+            let per_shard = j.get("per_shard").as_arr().expect("per_shard array");
+            assert_eq!(per_shard.len(), 3);
+            for (i, sj) in per_shard.iter().enumerate() {
+                assert_eq!(
+                    sj.get("dense_calls").as_usize(),
+                    Some(2),
+                    "shard {i} did not get its round-robin share"
+                );
+            }
+        }
+        other => panic!("{other:?}"),
+    }
+}

@@ -1,0 +1,160 @@
+//! Differential test suite for the incremental engine: randomized edit
+//! streams (insert/delete/replace at random positions) driven through
+//! `IncrementalEngine::apply_edits`, checked after every edit against
+//! BOTH exactness oracles:
+//!
+//! 1. `verify()` — the dense from-scratch forward pass over the same
+//!    tokens/positions (logits, final hidden states, every per-layer VQ
+//!    code);
+//! 2. a `rebuild()` peer — a fork of the engine whose state is recomputed
+//!    from scratch, row stores and all, which must agree on codes exactly
+//!    and on logits within fp-accumulation slack.
+//!
+//! This is the lock that lets the kernel/coordinator refactors move fast:
+//! any divergence between the tiled kernels, the incremental update path,
+//! and the dense oracle fails here with the offending (config, seed,
+//! step) triple.
+
+use std::sync::Arc;
+use vqt::config::ModelConfig;
+use vqt::incremental::{EngineOptions, IncrementalEngine};
+use vqt::model::ModelWeights;
+use vqt::testutil::gen_edit;
+use vqt::util::Rng;
+
+/// Model configs exercised by the fast suite — distinct depths, widths,
+/// and VQ-head layouts.
+fn configs() -> Vec<(&'static str, ModelConfig)> {
+    let tiny = ModelConfig::vqt_tiny();
+    let deep = ModelConfig {
+        n_layers: 3,
+        d_ff: 48,
+        ..ModelConfig::vqt_tiny()
+    };
+    let single_head = ModelConfig {
+        vq_heads: 1,
+        ..ModelConfig::vqt_tiny()
+    };
+    let wide = ModelConfig::table1("vq_h2").unwrap();
+    let out = vec![
+        ("tiny", tiny),
+        ("tiny-3layer", deep),
+        ("tiny-vq1", single_head),
+        ("table1-vq_h2", wide),
+    ];
+    for (name, cfg) in &out {
+        cfg.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+    }
+    out
+}
+
+/// Drive one randomized edit stream, checking both oracles every
+/// `check_every` edits and at the end.
+fn drive(name: &str, cfg: &ModelConfig, seed: u64, n_edits: usize, check_every: usize) {
+    let w = Arc::new(ModelWeights::random(cfg, seed));
+    let mut rng = Rng::new(seed ^ 0xD1FF_E4E2);
+    let n0 = rng.range(8, cfg.max_seq.min(26));
+    let tokens: Vec<u32> = (0..n0).map(|_| rng.below(cfg.vocab_size) as u32).collect();
+    let mut eng = IncrementalEngine::new(w, &tokens, EngineOptions::default());
+    for step in 0..n_edits {
+        let e = gen_edit(&mut rng, eng.len(), cfg.vocab_size, cfg.max_seq);
+        eng.apply_edits(&[e]);
+        if (step + 1) % check_every == 0 || step + 1 == n_edits {
+            check_exact(name, &eng, cfg, seed, step);
+        }
+    }
+}
+
+fn check_exact(name: &str, eng: &IncrementalEngine, cfg: &ModelConfig, seed: u64, step: usize) {
+    let ctx = format!("{name} seed {seed} step {step}");
+    // Oracle 1: dense from-scratch forward pass.
+    let rep = eng.verify();
+    assert!(
+        rep.is_exact(1e-3),
+        "{ctx}: dense divergence {rep:?} after {} edits",
+        step + 1
+    );
+    assert_eq!(rep.code_mismatches, 0, "{ctx}: code drift {rep:?}");
+    // Oracle 2: a from-scratch rebuild peer over the same tokens and
+    // positions (fork shares both; rebuild recomputes all cached state).
+    let mut peer = eng.fork();
+    peer.rebuild();
+    assert_eq!(peer.tokens(), eng.tokens(), "{ctx}: token divergence");
+    for li in 0..cfg.n_layers {
+        assert_eq!(
+            peer.layer_codes(li),
+            eng.layer_codes(li),
+            "{ctx}: layer {li} codes diverge from rebuild peer"
+        );
+    }
+    for (i, (a, b)) in eng.logits().iter().zip(peer.logits()).enumerate() {
+        assert!(
+            (a - b).abs() < 1e-3,
+            "{ctx}: logit {i} {a} vs rebuilt {b}"
+        );
+    }
+}
+
+#[test]
+fn differential_edit_streams_stay_exact() {
+    for (name, cfg) in configs() {
+        for seed in [41u64, 42, 43] {
+            drive(name, &cfg, seed, 10, 1);
+        }
+    }
+}
+
+#[test]
+fn differential_streams_survive_defrag() {
+    // Hammer inserts at one position so the positional gap pool exhausts
+    // and the engine defragments (full rebuild) mid-stream — the
+    // worst-case structural path must stay exact too.
+    let cfg = ModelConfig::vqt_tiny();
+    let w = Arc::new(ModelWeights::random(&cfg, 77));
+    let mut rng = Rng::new(78);
+    let tokens: Vec<u32> = (0..12).map(|_| rng.below(cfg.vocab_size) as u32).collect();
+    let mut eng = IncrementalEngine::new(w, &tokens, EngineOptions::default());
+    let mut defrags = 0u32;
+    for step in 0..40 {
+        if eng.len() >= cfg.max_seq {
+            break;
+        }
+        let rep = eng.apply_edits(&[vqt::edits::Edit::Insert {
+            at: 6,
+            tok: rng.below(cfg.vocab_size) as u32,
+        }]);
+        defrags += rep.defragged as u32;
+        if rep.defragged || step % 8 == 7 {
+            check_exact("defrag-stream", &eng, &cfg, 77, step);
+        }
+    }
+    assert!(defrags > 0, "stream never defragged — workload too gentle");
+}
+
+/// Larger-config tier, run by CI as `cargo test --release -- --ignored`:
+/// the serving-scale presets with longer documents and streams.
+#[test]
+#[ignore = "release-mode differential tier (CI runs with --ignored)"]
+fn differential_edit_streams_serving_scale() {
+    for (name, cfg) in [
+        ("vqt_mini", ModelConfig::vqt_mini()),
+        ("vqt_mini_h4", ModelConfig::vqt_mini_h4()),
+    ] {
+        cfg.validate().unwrap();
+        for seed in [7u64, 8, 9] {
+            let w = Arc::new(ModelWeights::random(&cfg, seed));
+            let mut rng = Rng::new(seed ^ 0xBEEF);
+            let n0 = rng.range(96, 160);
+            let tokens: Vec<u32> =
+                (0..n0).map(|_| rng.below(cfg.vocab_size) as u32).collect();
+            let mut eng = IncrementalEngine::new(w, &tokens, EngineOptions::default());
+            for step in 0..40 {
+                let e = gen_edit(&mut rng, eng.len(), cfg.vocab_size, cfg.max_seq);
+                eng.apply_edits(&[e]);
+                if step % 8 == 7 || step == 39 {
+                    check_exact(name, &eng, &cfg, seed, step);
+                }
+            }
+        }
+    }
+}

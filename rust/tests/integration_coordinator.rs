@@ -178,6 +178,61 @@ fn lru_eviction_under_session_pressure() {
 }
 
 #[test]
+fn worker_panic_surfaces_error_and_pool_survives() {
+    let c = start(|sc| sc.workers = 2);
+    let client = c.client();
+    client
+        .request(Request::Open {
+            session: "a".into(),
+            tokens: doc(1, 16),
+        })
+        .unwrap();
+    client
+        .request(Request::Open {
+            session: "b".into(),
+            tokens: doc(2, 16),
+        })
+        .unwrap();
+    // An out-of-bounds edit panics inside the engine (assert). The shard
+    // must catch it, surface an error, and drop the poisoned session —
+    // not hang the caller or kill the pool.
+    let r = client
+        .request(Request::Edit {
+            session: "a".into(),
+            edit: Edit::Replace { at: 10_000, tok: 1 },
+        })
+        .unwrap();
+    match &r {
+        Response::Err(e) => assert!(e.contains("panicked"), "error lacks cause: {e}"),
+        other => panic!("expected Err, got {other:?}"),
+    }
+    // The panicking session is gone (its state can't be trusted)...
+    let r = client
+        .request(Request::Edit {
+            session: "a".into(),
+            edit: Edit::Replace { at: 0, tok: 1 },
+        })
+        .unwrap();
+    assert!(matches!(r, Response::Err(_)), "poisoned session must be dropped");
+    // ...but other sessions and further requests keep being served.
+    let r = client
+        .request(Request::Edit {
+            session: "b".into(),
+            edit: Edit::Replace { at: 0, tok: 1 },
+        })
+        .unwrap();
+    assert!(r.logits().is_ok(), "{r:?}");
+    // The merged snapshot records the panic.
+    match client.request(Request::Stats).unwrap() {
+        Response::Stats(j) => {
+            assert_eq!(j.get("panics").as_usize(), Some(1));
+            assert_eq!(j.get("live_sessions").as_usize(), Some(1));
+        }
+        other => panic!("{other:?}"),
+    }
+}
+
+#[test]
 fn invalid_requests_surface_errors_not_panics() {
     let c = start(|_| {});
     let client = c.client();
