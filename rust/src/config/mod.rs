@@ -224,9 +224,25 @@ pub struct ServeConfig {
     /// Periodically verify incremental state against a dense recompute
     /// every N edits (0 disables) — failure-detection knob.
     pub verify_every: usize,
-    /// Pool-wide max live sessions before LRU eviction (each shard caps
-    /// at `max_sessions / workers`, at least 1).
+    /// Pool-wide max live sessions — resident *plus* suspended — before
+    /// the globally least-recently-used session is dropped entirely (each
+    /// shard caps at `max_sessions / workers`, at least 1).
     pub max_sessions: usize,
+    /// Pool-wide cap on sessions resident in RAM. Beyond it, cold sessions
+    /// are suspended: snapshotted to `spill_dir` (or dropped when no spill
+    /// dir is configured) and transparently resumed on their next request.
+    /// 0 ⇒ same as `max_sessions` (count pressure never suspends).
+    pub max_resident_sessions: usize,
+    /// Pool-wide budget for resident session state, in MiB, measured by
+    /// byte-level accounting of each engine's row stores and bookkeeping.
+    /// LRU sessions are suspended until the measured total fits. 0 ⇒
+    /// unlimited.
+    pub memory_budget_mb: usize,
+    /// Directory session snapshots spill to (the coordinator creates a
+    /// per-instance `instance-<pid>` subdirectory inside it, so multiple
+    /// server instances can share the path). Empty ⇒ spilling disabled:
+    /// over-cap sessions are dropped (the pre-lifecycle behavior).
+    pub spill_dir: String,
 }
 
 impl Default for ServeConfig {
@@ -239,6 +255,9 @@ impl Default for ServeConfig {
             queue_capacity: 256,
             verify_every: 0,
             max_sessions: 64,
+            max_resident_sessions: 0,
+            memory_budget_mb: 0,
+            spill_dir: String::new(),
         }
     }
 }
@@ -257,6 +276,15 @@ impl ServeConfig {
             queue_capacity: j.get("queue_capacity").as_usize().unwrap_or(d.queue_capacity),
             verify_every: j.get("verify_every").as_usize().unwrap_or(d.verify_every),
             max_sessions: j.get("max_sessions").as_usize().unwrap_or(d.max_sessions),
+            max_resident_sessions: j
+                .get("max_resident_sessions")
+                .as_usize()
+                .unwrap_or(d.max_resident_sessions),
+            memory_budget_mb: j
+                .get("memory_budget_mb")
+                .as_usize()
+                .unwrap_or(d.memory_budget_mb),
+            spill_dir: j.get("spill_dir").as_str().unwrap_or(&d.spill_dir).to_string(),
         })
     }
 }
@@ -379,6 +407,19 @@ mod file_tests {
         assert_eq!(serve.bind, "127.0.0.1:7478");
         // The shipped config serves from a 4-shard pool.
         assert_eq!(serve.workers, 4);
+        // Session-lifecycle knobs: spill cold sessions under pressure.
+        assert_eq!(serve.max_resident_sessions, 32);
+        assert_eq!(serve.memory_budget_mb, 512);
+        assert_eq!(serve.spill_dir, "/tmp/vqt-sessions");
+    }
+
+    #[test]
+    fn lifecycle_knobs_default_off() {
+        let j = Json::parse(r#"{}"#).unwrap();
+        let sc = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(sc.max_resident_sessions, 0);
+        assert_eq!(sc.memory_budget_mb, 0);
+        assert!(sc.spill_dir.is_empty());
     }
 
     #[test]

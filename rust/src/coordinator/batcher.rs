@@ -20,12 +20,7 @@
 /// routing is stable across restarts and the tests can predict placement.
 pub fn shard_of(session: &str, shards: usize) -> usize {
     debug_assert!(shards > 0);
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for &b in session.as_bytes() {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x0100_0000_01b3);
-    }
-    (h % shards as u64) as usize
+    (crate::util::fnv1a64(session.as_bytes()) % shards as u64) as usize
 }
 
 /// Minimal view of a queued job for planning purposes.

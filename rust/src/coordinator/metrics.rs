@@ -119,7 +119,15 @@ pub struct Metrics {
     /// across edits, sessions, and shards.
     pub defrags: u64,
     pub sessions_opened: u64,
+    /// Sessions dropped outright (no spill dir, total-cap eviction, or a
+    /// failed spill write).
     pub sessions_evicted: u64,
+    /// Sessions suspended: snapshotted to the spill dir and released from
+    /// RAM (LRU pressure, byte budget, or the `Suspend` verb).
+    pub suspends: u64,
+    /// Suspended sessions restored from disk (explicitly or transparently
+    /// on their next request).
+    pub resumes: u64,
     pub rejected_backpressure: u64,
     pub errors: u64,
     /// Requests that panicked inside a shard (caught; the session was
@@ -142,6 +150,8 @@ impl Metrics {
         self.defrags += o.defrags;
         self.sessions_opened += o.sessions_opened;
         self.sessions_evicted += o.sessions_evicted;
+        self.suspends += o.suspends;
+        self.resumes += o.resumes;
         self.rejected_backpressure += o.rejected_backpressure;
         self.errors += o.errors;
         self.panics += o.panics;
@@ -169,6 +179,8 @@ impl Metrics {
             ("defrags", Json::num(self.defrags as f64)),
             ("sessions_opened", Json::num(self.sessions_opened as f64)),
             ("sessions_evicted", Json::num(self.sessions_evicted as f64)),
+            ("suspends", Json::num(self.suspends as f64)),
+            ("resumes", Json::num(self.resumes as f64)),
             (
                 "rejected_backpressure",
                 Json::num(self.rejected_backpressure as f64),
@@ -234,12 +246,15 @@ mod tests {
             flops_incremental: 10,
             flops_dense_equiv: 300,
             panics: 1,
+            suspends: 2,
+            resumes: 1,
             ..Default::default()
         };
         b.lat_edit_us.record(16.0);
         a.merge(&b);
         assert_eq!(a.edits, 8);
         assert_eq!(a.panics, 1);
+        assert_eq!((a.suspends, a.resumes), (2, 1));
         assert_eq!(a.speedup(), 20.0);
         assert_eq!(a.lat_edit_us.count(), 2);
     }

@@ -1,9 +1,10 @@
 //! The serving coordinator (L3): a sharded worker pool with hash-routed
-//! session ownership, per-shard batching and metrics (merged on
-//! snapshot), backpressure, and panic isolation. The paper's incremental
-//! engine is the execution backend; the AOT L2 artifact is the dense
-//! baseline path. See `docs/ARCHITECTURE.md` §"Serving" for the shard
-//! model.
+//! session ownership, byte-accounted session lifecycle (LRU spill-to-disk
+//! under a memory budget, transparent resume), per-shard batching and
+//! metrics (merged on snapshot), backpressure, and panic isolation. The
+//! paper's incremental engine is the execution backend; the AOT L2
+//! artifact is the dense baseline path. See `docs/ARCHITECTURE.md` §5
+//! (shard model) and §6 (session lifecycle).
 
 pub mod batcher;
 pub mod metrics;
@@ -12,4 +13,4 @@ pub mod session;
 
 pub use metrics::{Histogram, Metrics};
 pub use service::{Backend, Client, Coordinator, Request, Response};
-pub use session::SessionStore;
+pub use session::{Prepared, SessionInfo, SessionStore, StorePolicy};

@@ -32,7 +32,7 @@ use std::time::Instant;
 
 use super::batcher::{plan, shard_of, SessionKeyed};
 use super::metrics::Metrics;
-use super::session::SessionStore;
+use super::session::{Prepared, SessionStore, StorePolicy};
 
 /// Requests accepted by the coordinator.
 #[derive(Clone, Debug)]
@@ -57,10 +57,18 @@ pub enum Request {
     /// Top-k next-token suggestions for a session (the writing-assistant
     /// payload; tied-embedding LM head over the last row).
     Suggest { session: String, k: usize },
-    /// Persist a session's full state to a checkpoint file.
+    /// Persist a session's full state to a snapshot file (the versioned,
+    /// checksummed `VQSS` format — counters included).
     Checkpoint { session: String, path: String },
-    /// Restore a session from a checkpoint file (no recompute).
+    /// Restore a session from a snapshot file (no recompute).
     Restore { session: String, path: String },
+    /// Suspend a session: snapshot it to the spill dir and release its RAM.
+    /// Its next request resumes it transparently.
+    Suspend { session: String },
+    /// Eagerly resume a suspended session (requests do this lazily anyway).
+    Resume { session: String },
+    /// Lifecycle introspection: state, measured bytes, edits, length.
+    SessionInfo { session: String },
     /// Close a session.
     Close { session: String },
     /// Metrics snapshot.
@@ -80,6 +88,9 @@ impl Request {
             | Request::Suggest { session, .. }
             | Request::Checkpoint { session, .. }
             | Request::Restore { session, .. }
+            | Request::Suspend { session }
+            | Request::Resume { session }
+            | Request::SessionInfo { session }
             | Request::Close { session } => Some(session),
             Request::BatchRevisions { .. } | Request::Dense { .. } | Request::Stats => None,
         }
@@ -96,6 +107,9 @@ impl Request {
             Request::Suggest { .. } => "suggest",
             Request::Checkpoint { .. } => "checkpoint",
             Request::Restore { .. } => "restore",
+            Request::Suspend { .. } => "suspend",
+            Request::Resume { .. } => "resume",
+            Request::SessionInfo { .. } => "session_info",
             Request::Close { .. } => "close",
             Request::Stats => "stats",
         }
@@ -129,6 +143,18 @@ pub enum Response {
     ShardStats {
         metrics: Box<Metrics>,
         live_sessions: usize,
+        /// Suspended (spilled-to-disk) sessions on this shard — a gauge.
+        spilled_sessions: usize,
+        /// Measured bytes of resident session state — the budget gauge.
+        resident_bytes: u64,
+    },
+    /// Lifecycle introspection for one session.
+    SessionInfo {
+        state: &'static str,
+        resident_bytes: u64,
+        spill_bytes: u64,
+        edits: u64,
+        doc_len: usize,
     },
     Suggestions(Vec<(u32, f32)>),
     Done,
@@ -252,12 +278,16 @@ impl Client {
                     .collect::<Result<_>>()?;
                 let mut merged = Metrics::default();
                 let mut live = 0usize;
+                let mut spilled = 0usize;
+                let mut res_bytes = 0u64;
                 let mut per_shard = Vec::with_capacity(self.shards.len());
                 for rrx in rxs {
                     match Self::recv(rrx)? {
                         Response::ShardStats {
                             metrics,
                             live_sessions,
+                            spilled_sessions,
+                            resident_bytes,
                         } => {
                             // Compact per-shard breakdown (shard order):
                             // makes routing spread observable — load skew
@@ -265,6 +295,8 @@ impl Client {
                             // debuggable from one snapshot.
                             per_shard.push(Json::obj(vec![
                                 ("live_sessions", Json::num(live_sessions as f64)),
+                                ("spilled_sessions", Json::num(spilled_sessions as f64)),
+                                ("resident_bytes", Json::num(resident_bytes as f64)),
                                 ("edits", Json::num(metrics.edits as f64)),
                                 ("dense_calls", Json::num(metrics.dense_calls as f64)),
                                 ("errors", Json::num(metrics.errors as f64)),
@@ -272,6 +304,8 @@ impl Client {
                             ]));
                             merged.merge(&metrics);
                             live += live_sessions;
+                            spilled += spilled_sessions;
+                            res_bytes += resident_bytes;
                         }
                         Response::Err(e) => bail!("stats fan-out failed: {e}"),
                         other => bail!("unexpected shard stats response {other:?}"),
@@ -280,6 +314,8 @@ impl Client {
                 let mut j = merged.to_json();
                 if let Json::Obj(map) = &mut j {
                     map.insert("live_sessions".into(), Json::num(live as f64));
+                    map.insert("spilled_sessions".into(), Json::num(spilled as f64));
+                    map.insert("resident_bytes".into(), Json::num(res_bytes as f64));
                     map.insert("shards".into(), Json::num(self.shards.len() as f64));
                     map.insert("per_shard".into(), Json::Arr(per_shard));
                 }
@@ -314,6 +350,38 @@ impl Coordinator {
         let shards = cfg.workers.max(1);
         let queue_cap = cfg.queue_capacity.div_ceil(shards).max(1);
         let sessions_cap = cfg.max_sessions.div_ceil(shards).max(1);
+        // Lifecycle policy, split across shards like the other pool-wide
+        // knobs. `max_resident_sessions == 0` means "no count pressure"
+        // (resident cap = total cap); `memory_budget_mb == 0` disables the
+        // byte budget; an empty spill dir means eviction drops sessions.
+        let resident_cap = if cfg.max_resident_sessions == 0 {
+            sessions_cap
+        } else {
+            cfg.max_resident_sessions
+                .div_ceil(shards)
+                .clamp(1, sessions_cap)
+        };
+        let budget_bytes = (cfg.memory_budget_mb * (1 << 20)) / shards;
+        // Spill into a per-instance subdirectory: spill files are keyed by
+        // session id, so two coordinators sharing the shipped spill_dir
+        // would otherwise overwrite (and on resume, consume) each other's
+        // suspended sessions. Clearing the subdirectory up front also
+        // prevents a recycled pid from resuming stale snapshots of a dead
+        // instance. (Suspended sessions intentionally do not outlive the
+        // coordinator: the store's index is in-memory; `checkpoint` is the
+        // durable-persistence verb.)
+        let spill_dir = (!cfg.spill_dir.is_empty()).then(|| {
+            let dir = std::path::Path::new(&cfg.spill_dir)
+                .join(format!("instance-{}", std::process::id()));
+            let _ = std::fs::remove_dir_all(&dir);
+            dir
+        });
+        let policy = StorePolicy {
+            max_resident: resident_cap,
+            max_total: sessions_cap,
+            memory_budget_bytes: budget_bytes,
+            spill_dir,
+        };
         let mut txs = Vec::with_capacity(shards);
         let mut handles = Vec::with_capacity(shards);
         for shard in 0..shards {
@@ -322,10 +390,11 @@ impl Coordinator {
             let artifacts_dir = backend.artifacts_dir.clone();
             let engine_opts = backend.engine_opts;
             let cfg = cfg.clone();
+            let policy = policy.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("vqt-shard-{shard}"))
                 .spawn(move || {
-                    worker_loop(shard, weights, artifacts_dir, engine_opts, cfg, sessions_cap, rx)
+                    worker_loop(shard, weights, artifacts_dir, engine_opts, cfg, policy, rx)
                 })
                 .expect("spawn coordinator shard");
             txs.push(tx);
@@ -381,7 +450,7 @@ fn worker_loop(
     artifacts_dir: Option<std::path::PathBuf>,
     engine_opts: EngineOptions,
     cfg: ServeConfig,
-    sessions_cap: usize,
+    policy: StorePolicy,
     rx: mpsc::Receiver<Job>,
 ) {
     let runtime = artifacts_dir.as_ref().and_then(|d| {
@@ -396,11 +465,15 @@ fn worker_loop(
             }
         }
     });
+    // The store restores spilled sessions itself, so it owns the same
+    // (weights, effective engine options) the Open path constructs with.
+    let mut effective_opts = engine_opts;
+    effective_opts.verify_every = cfg.verify_every;
     let mut state = Worker {
-        weights,
+        weights: weights.clone(),
         engine_opts,
         runtime,
-        sessions: SessionStore::new(sessions_cap),
+        sessions: SessionStore::new(weights, effective_opts, policy),
         metrics: Metrics::default(),
         verify_every: cfg.verify_every,
     };
@@ -492,6 +565,16 @@ impl Worker {
         dense_forward_flops(&self.weights.cfg, n)
     }
 
+    /// Fault a session in (transparently resuming it from its spill
+    /// snapshot if suspended) or fail with the canonical unknown-session
+    /// error. Every session-state-touching verb funnels through here.
+    fn ensure_resident(&mut self, session: &str) -> Result<()> {
+        match self.sessions.prepare(session)? {
+            Prepared::Resident | Prepared::Resumed => Ok(()),
+            Prepared::Missing => anyhow::bail!("unknown session '{session}'"),
+        }
+    }
+
     fn handle_inner(&mut self, req: Request) -> Result<Response> {
         match req {
             Request::Open { session, tokens } => {
@@ -506,9 +589,7 @@ impl Worker {
                 let flops = engine.ledger.total();
                 let logits = engine.logits().to_vec();
                 let predicted = engine.predict();
-                if self.sessions.insert(session, engine).is_some() {
-                    self.metrics.sessions_evicted += 1;
-                }
+                self.sessions.insert(session, engine);
                 self.metrics.sessions_opened += 1;
                 let n = tokens.len();
                 self.metrics.flops_incremental += flops;
@@ -524,19 +605,19 @@ impl Worker {
             Request::Edit { session, edit } => self.apply_edits(&session, &[edit]),
             Request::EditScript { session, edits } => self.apply_edits(&session, &edits),
             Request::Revision { session, tokens } => {
-                let s = self
-                    .sessions
-                    .get_mut(&session)
-                    .ok_or_else(|| anyhow::anyhow!("unknown session '{session}'"))?;
+                self.ensure_resident(&session)?;
+                let s = self.sessions.get_mut(&session).expect("resident");
                 let script = diff_tokens(s.engine.tokens(), &tokens);
                 let defrags_before = s.engine.stats.defrags;
                 let rep = s.engine.apply_revision(&script);
                 s.edits += script.len() as u64;
                 let n = s.engine.len();
                 let predicted = s.engine.predict();
+                let defrags_after = s.engine.stats.defrags;
+                self.sessions.reaccount(&session);
                 self.metrics.revisions += 1;
                 self.metrics.edits += script.len() as u64;
-                self.metrics.defrags += s.engine.stats.defrags - defrags_before;
+                self.metrics.defrags += defrags_after - defrags_before;
                 self.metrics.flops_incremental += rep.flops;
                 let dense_equiv = self.dense_equiv(n);
                 self.metrics.flops_dense_equiv += dense_equiv;
@@ -581,10 +662,8 @@ impl Worker {
                 })
             }
             Request::Suggest { session, k } => {
-                let s = self
-                    .sessions
-                    .get_mut(&session)
-                    .ok_or_else(|| anyhow::anyhow!("unknown session '{session}'"))?;
+                self.ensure_resident(&session)?;
+                let s = self.sessions.get_mut(&session).expect("resident");
                 Ok(Response::Suggestions(s.engine.suggest_topk(k.clamp(1, 64))))
             }
             Request::Checkpoint { session, path } => {
@@ -592,51 +671,79 @@ impl Worker {
                     !path.contains(".."),
                     "checkpoint path must not contain '..'"
                 );
-                let s = self
-                    .sessions
-                    .get_mut(&session)
-                    .ok_or_else(|| anyhow::anyhow!("unknown session '{session}'"))?;
-                s.engine.to_tensor_file().save(&path)?;
+                self.ensure_resident(&session)?;
+                let s = self.sessions.get_mut(&session).expect("resident");
+                s.engine.snapshot_to_file(&path)?;
                 Ok(Response::Done)
             }
             Request::Restore { session, path } => {
                 anyhow::ensure!(!path.contains(".."), "checkpoint path must not contain '..'");
-                let tf = crate::util::TensorFile::load(&path)?;
                 let mut opts = self.engine_opts;
                 opts.verify_every = self.verify_every;
                 let engine =
-                    IncrementalEngine::from_tensor_file(self.weights.clone(), &tf, opts)?;
-                if self.sessions.insert(session, engine).is_some() {
-                    self.metrics.sessions_evicted += 1;
-                }
+                    IncrementalEngine::restore_from_file(self.weights.clone(), &path, opts)?;
+                self.sessions.insert(session, engine);
                 self.metrics.sessions_opened += 1;
                 Ok(Response::Done)
             }
+            Request::Suspend { session } => {
+                let known = self.sessions.suspend(&session)?;
+                anyhow::ensure!(known, "unknown session '{session}'");
+                Ok(Response::Done)
+            }
+            Request::Resume { session } => {
+                self.ensure_resident(&session)?;
+                Ok(Response::Done)
+            }
+            Request::SessionInfo { session } => {
+                let info = self
+                    .sessions
+                    .info(&session)
+                    .ok_or_else(|| anyhow::anyhow!("unknown session '{session}'"))?;
+                Ok(Response::SessionInfo {
+                    state: info.state,
+                    resident_bytes: info.resident_bytes as u64,
+                    spill_bytes: info.spill_bytes,
+                    edits: info.edits,
+                    doc_len: info.doc_len,
+                })
+            }
             Request::Close { session } => {
-                let existed = self.sessions.remove(&session).is_some();
+                let existed = self.sessions.remove(&session);
                 Ok(Response::Closed { existed })
             }
-            Request::Stats => Ok(Response::ShardStats {
-                metrics: Box::new(self.metrics.clone()),
-                live_sessions: self.sessions.len(),
-            }),
+            Request::Stats => {
+                // Lifecycle counters live in the store (the single writer);
+                // surface them through the shard's metrics snapshot so the
+                // cross-shard merge sums them like every other counter.
+                let mut m = self.metrics.clone();
+                m.sessions_evicted = self.sessions.evictions;
+                m.suspends = self.sessions.suspends;
+                m.resumes = self.sessions.resumes;
+                Ok(Response::ShardStats {
+                    metrics: Box::new(m),
+                    live_sessions: self.sessions.resident_len(),
+                    spilled_sessions: self.sessions.spilled_len(),
+                    resident_bytes: self.sessions.resident_bytes() as u64,
+                })
+            }
         }
     }
 
     fn apply_edits(&mut self, session: &str, edits: &[Edit]) -> Result<Response> {
-        let s = self
-            .sessions
-            .get_mut(session)
-            .ok_or_else(|| anyhow::anyhow!("unknown session '{session}'"))?;
+        self.ensure_resident(session)?;
+        let s = self.sessions.get_mut(session).expect("resident");
         let defrags_before = s.engine.stats.defrags;
         let rep = s.engine.apply_edits(edits);
         s.edits += edits.len() as u64;
         let n = s.engine.len();
         let predicted = s.engine.predict();
+        let defrags_after = s.engine.stats.defrags;
+        self.sessions.reaccount(session);
         self.metrics.edits += edits.len() as u64;
         // Additive counter (not a gauge) so the cross-shard merge sums
         // correctly regardless of session placement.
-        self.metrics.defrags += s.engine.stats.defrags - defrags_before;
+        self.metrics.defrags += defrags_after - defrags_before;
         self.metrics.flops_incremental += rep.flops;
         // Dense equivalent: one from-scratch pass per edit (the online
         // comparison the paper makes for atomic edits).

@@ -1,10 +1,35 @@
-//! Document sessions: one incremental engine per live document, with LRU
-//! eviction. Each coordinator shard owns one `SessionStore` for the
-//! sessions hash-routed to it — single-threaded access by construction,
-//! so no interior locking is needed.
+//! Session lifecycle: one incremental engine per live document, with
+//! byte-accounted LRU **spill-to-disk** under a memory budget.
+//!
+//! Each coordinator shard owns one `SessionStore` for the sessions
+//! hash-routed to it — single-threaded access by construction, so no
+//! interior locking is needed. A session moves through three states:
+//!
+//! ```text
+//!            open / Restore                  suspend (LRU, budget, verb)
+//!   (none) ───────────────▶ RESIDENT ─────────────────────▶ SUSPENDED
+//!                              ▲                                │
+//!                              └── resume (next request / verb) ┘
+//!            close / global-LRU drop: either state ─▶ (none)
+//! ```
+//!
+//! *Resident* sessions are charged their measured
+//! [`IncrementalEngine::resident_bytes`]. Whenever the shard is over its
+//! resident-count cap or its byte budget, least-recently-used sessions are
+//! **suspended**: snapshotted to the spill directory (the versioned,
+//! checksummed [`crate::incremental::snapshot`] format) and dropped from
+//! RAM. The next request addressed to a suspended session transparently
+//! resumes it — bit-exact, counters included, so the caller cannot tell the
+//! session ever left memory. With no spill directory configured, eviction
+//! falls back to dropping sessions outright (the pre-lifecycle behavior).
 
-use crate::incremental::IncrementalEngine;
+use crate::incremental::{EngineOptions, IncrementalEngine};
+use crate::model::ModelWeights;
+use crate::util::fnv1a64;
+use anyhow::{Context, Result};
 use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
 
 /// One live editing session.
 pub struct Session {
@@ -13,85 +38,404 @@ pub struct Session {
     pub last_access: u64,
     /// Total edits served.
     pub edits: u64,
+    /// Bytes this session is currently charged for (recomputed by
+    /// [`SessionStore::reaccount`] after each mutating request).
+    bytes: usize,
 }
 
-/// Session store with capacity-bounded LRU eviction.
+/// A suspended session: its snapshot lives on disk, not in RAM.
+struct SpillEntry {
+    path: PathBuf,
+    /// Snapshot file size (reported via [`SessionInfo`]).
+    file_bytes: u64,
+    last_access: u64,
+    edits: u64,
+    doc_len: usize,
+}
+
+/// Store limits and spill policy (per shard — the coordinator divides the
+/// pool-wide `ServeConfig` knobs across shards).
+#[derive(Clone, Debug)]
+pub struct StorePolicy {
+    /// Max sessions in RAM (≥ 1).
+    pub max_resident: usize,
+    /// Max sessions total, resident + suspended (≥ max_resident).
+    pub max_total: usize,
+    /// Resident-state byte budget; 0 ⇒ unlimited.
+    pub memory_budget_bytes: usize,
+    /// Where snapshots spill; `None` ⇒ eviction drops sessions.
+    pub spill_dir: Option<PathBuf>,
+}
+
+/// Outcome of [`SessionStore::prepare`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Prepared {
+    /// Already in RAM.
+    Resident,
+    /// Was suspended; has been restored from its spill snapshot.
+    Resumed,
+    /// Not known to this store.
+    Missing,
+}
+
+/// Point-in-time description of one session (the `SessionInfo` verb).
+#[derive(Clone, Debug)]
+pub struct SessionInfo {
+    /// "resident" or "suspended".
+    pub state: &'static str,
+    /// Bytes charged against the memory budget (0 while suspended).
+    pub resident_bytes: usize,
+    /// Snapshot file size on disk (0 while resident).
+    pub spill_bytes: u64,
+    pub edits: u64,
+    pub doc_len: usize,
+}
+
+/// Session store with byte-accounted LRU suspension.
 pub struct SessionStore {
-    map: HashMap<String, Session>,
+    resident: HashMap<String, Session>,
+    spilled: HashMap<String, SpillEntry>,
     clock: u64,
-    capacity: usize,
+    policy: StorePolicy,
+    weights: Arc<ModelWeights>,
+    engine_opts: EngineOptions,
+    resident_bytes: usize,
+    /// Sessions dropped outright (no spill dir, or global-LRU total-cap
+    /// eviction, or spill failure).
     pub evictions: u64,
+    /// Sessions snapshotted to disk.
+    pub suspends: u64,
+    /// Sessions restored from disk.
+    pub resumes: u64,
+}
+
+/// Spill file name: a short sanitized prefix of the session id (debugging
+/// aid) plus the full FNV-1a 64 of the id (uniqueness), so arbitrary
+/// client-chosen ids — path separators, unicode, 4 KiB monsters — map to
+/// safe, distinct file names.
+fn spill_filename(id: &str) -> String {
+    let prefix: String = id
+        .chars()
+        .take(32)
+        .map(|c| if c.is_ascii_alphanumeric() || c == '-' { c } else { '_' })
+        .collect();
+    format!("{prefix}-{:016x}.vqss", fnv1a64(id.as_bytes()))
 }
 
 impl SessionStore {
-    pub fn new(capacity: usize) -> SessionStore {
-        assert!(capacity > 0);
+    pub fn new(
+        weights: Arc<ModelWeights>,
+        engine_opts: EngineOptions,
+        policy: StorePolicy,
+    ) -> SessionStore {
+        assert!(policy.max_resident > 0, "resident capacity must be ≥ 1");
+        assert!(
+            policy.max_total >= policy.max_resident,
+            "total capacity below resident capacity"
+        );
         SessionStore {
-            map: HashMap::new(),
+            resident: HashMap::new(),
+            spilled: HashMap::new(),
             clock: 0,
-            capacity,
+            policy,
+            weights,
+            engine_opts,
+            resident_bytes: 0,
             evictions: 0,
+            suspends: 0,
+            resumes: 0,
         }
+    }
+
+    // -- introspection ----------------------------------------------------
+
+    pub fn resident_len(&self) -> usize {
+        self.resident.len()
+    }
+
+    pub fn spilled_len(&self) -> usize {
+        self.spilled.len()
     }
 
     pub fn len(&self) -> usize {
-        self.map.len()
+        self.resident.len() + self.spilled.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.map.is_empty()
+        self.resident.is_empty() && self.spilled.is_empty()
     }
 
     pub fn contains(&self, id: &str) -> bool {
-        self.map.contains_key(id)
+        self.resident.contains_key(id) || self.spilled.contains_key(id)
     }
 
-    /// Insert (or replace) a session; evicts the least-recently-used entry
-    /// when at capacity. Returns the evicted session id, if any.
+    pub fn is_resident(&self, id: &str) -> bool {
+        self.resident.contains_key(id)
+    }
+
+    pub fn is_suspended(&self, id: &str) -> bool {
+        self.spilled.contains_key(id)
+    }
+
+    /// Measured bytes of resident session state (the budget gauge).
+    pub fn resident_bytes(&self) -> usize {
+        self.resident_bytes
+    }
+
+    /// All known session ids (resident and suspended), sorted.
+    pub fn ids(&self) -> Vec<String> {
+        let mut v: Vec<String> = self
+            .resident
+            .keys()
+            .chain(self.spilled.keys())
+            .cloned()
+            .collect();
+        v.sort();
+        v
+    }
+
+    pub fn info(&self, id: &str) -> Option<SessionInfo> {
+        if let Some(s) = self.resident.get(id) {
+            return Some(SessionInfo {
+                state: "resident",
+                resident_bytes: s.bytes,
+                spill_bytes: 0,
+                edits: s.edits,
+                doc_len: s.engine.len(),
+            });
+        }
+        self.spilled.get(id).map(|e| SessionInfo {
+            state: "suspended",
+            resident_bytes: 0,
+            spill_bytes: e.file_bytes,
+            edits: e.edits,
+            doc_len: e.doc_len,
+        })
+    }
+
+    // -- lifecycle operations ---------------------------------------------
+
+    /// Insert (or replace) a resident session, then enforce capacity and
+    /// budget. Returns the id of a session *dropped* to make room under the
+    /// total cap, if any (suspensions are not drops and are only counted).
     pub fn insert(&mut self, id: String, engine: IncrementalEngine) -> Option<String> {
         self.clock += 1;
-        let mut evicted = None;
-        if !self.map.contains_key(&id) && self.map.len() >= self.capacity {
-            if let Some(oldest) = self
-                .map
-                .iter()
-                .min_by_key(|(_, s)| s.last_access)
-                .map(|(k, _)| k.clone())
-            {
-                self.map.remove(&oldest);
+        if let Some(old) = self.resident.remove(&id) {
+            self.resident_bytes -= old.bytes;
+        }
+        if let Some(old) = self.spilled.remove(&id) {
+            let _ = std::fs::remove_file(&old.path);
+        }
+        // Total cap: drop the globally least-recently-used session.
+        let mut dropped = None;
+        if self.len() >= self.policy.max_total {
+            if let Some(oldest) = self.global_lru() {
+                self.drop_session(&oldest);
                 self.evictions += 1;
-                evicted = Some(oldest);
+                dropped = Some(oldest);
             }
         }
-        self.map.insert(
-            id,
+        let bytes = engine.resident_bytes();
+        self.resident_bytes += bytes;
+        self.resident.insert(
+            id.clone(),
             Session {
                 engine,
                 last_access: self.clock,
                 edits: 0,
+                bytes,
             },
         );
-        evicted
+        self.enforce(Some(&id));
+        dropped
     }
 
-    /// Mutable access, refreshing LRU recency.
+    /// Make `id` resident (resuming from its spill snapshot if suspended),
+    /// so a following [`Self::get_mut`] succeeds. Transparent
+    /// resume-on-next-request is this method called on the request path.
+    pub fn prepare(&mut self, id: &str) -> Result<Prepared> {
+        if self.resident.contains_key(id) {
+            return Ok(Prepared::Resident);
+        }
+        let Some(entry) = self.spilled.remove(id) else {
+            return Ok(Prepared::Missing);
+        };
+        let restored = IncrementalEngine::restore_from_file(
+            self.weights.clone(),
+            &entry.path,
+            self.engine_opts,
+        )
+        .with_context(|| format!("resuming suspended session '{id}'"));
+        // Whether or not the restore succeeds, the snapshot file is
+        // consumed: a corrupt spill must not be retried forever.
+        let _ = std::fs::remove_file(&entry.path);
+        let engine = restored?;
+        self.clock += 1;
+        let bytes = engine.resident_bytes();
+        self.resident_bytes += bytes;
+        self.resident.insert(
+            id.to_string(),
+            Session {
+                engine,
+                last_access: self.clock,
+                edits: entry.edits,
+                bytes,
+            },
+        );
+        self.resumes += 1;
+        self.enforce(Some(id));
+        Ok(Prepared::Resumed)
+    }
+
+    /// Mutable access to a *resident* session, refreshing LRU recency.
+    /// (Call [`Self::prepare`] first to fault a suspended session in.)
     pub fn get_mut(&mut self, id: &str) -> Option<&mut Session> {
         self.clock += 1;
         let clock = self.clock;
-        self.map.get_mut(id).map(|s| {
+        self.resident.get_mut(id).map(|s| {
             s.last_access = clock;
             s
         })
     }
 
-    pub fn remove(&mut self, id: &str) -> Option<Session> {
-        self.map.remove(id)
+    /// Re-measure a session after a mutating request (edits grow and shrink
+    /// engine state) and re-enforce the budget against the new total.
+    pub fn reaccount(&mut self, id: &str) {
+        if let Some(s) = self.resident.get_mut(id) {
+            let bytes = s.engine.resident_bytes();
+            self.resident_bytes = self.resident_bytes - s.bytes + bytes;
+            s.bytes = bytes;
+        }
+        self.enforce(Some(id));
     }
 
-    pub fn ids(&self) -> Vec<String> {
-        let mut v: Vec<String> = self.map.keys().cloned().collect();
-        v.sort();
-        v
+    /// Explicitly suspend a session (the `Suspend` verb). Idempotent for
+    /// already-suspended sessions; `Ok(false)` for unknown ids; an error if
+    /// no spill directory is configured.
+    pub fn suspend(&mut self, id: &str) -> Result<bool> {
+        if self.spilled.contains_key(id) {
+            return Ok(true);
+        }
+        if !self.resident.contains_key(id) {
+            return Ok(false);
+        }
+        anyhow::ensure!(
+            self.policy.spill_dir.is_some(),
+            "suspend requires a configured spill_dir"
+        );
+        self.spill_one(id)?;
+        Ok(true)
+    }
+
+    /// Close a session in either state. Returns whether it existed.
+    pub fn remove(&mut self, id: &str) -> bool {
+        if let Some(s) = self.resident.remove(id) {
+            self.resident_bytes -= s.bytes;
+            return true;
+        }
+        if let Some(e) = self.spilled.remove(id) {
+            let _ = std::fs::remove_file(&e.path);
+            return true;
+        }
+        false
+    }
+
+    // -- internals --------------------------------------------------------
+
+    /// Id of the globally least-recently-used session across both states.
+    fn global_lru(&self) -> Option<String> {
+        let r = self
+            .resident
+            .iter()
+            .map(|(k, s)| (s.last_access, k))
+            .min();
+        let sp = self
+            .spilled
+            .iter()
+            .map(|(k, e)| (e.last_access, k))
+            .min();
+        match (r, sp) {
+            (Some(a), Some(b)) => Some(if a.0 <= b.0 { a.1.clone() } else { b.1.clone() }),
+            (Some(a), None) => Some(a.1.clone()),
+            (None, Some(b)) => Some(b.1.clone()),
+            (None, None) => None,
+        }
+    }
+
+    fn drop_session(&mut self, id: &str) {
+        if let Some(s) = self.resident.remove(id) {
+            self.resident_bytes -= s.bytes;
+        }
+        if let Some(e) = self.spilled.remove(id) {
+            let _ = std::fs::remove_file(&e.path);
+        }
+    }
+
+    /// Suspend (or, without a spill dir, drop) LRU residents until both the
+    /// resident-count cap and the byte budget hold. `keep` — normally the
+    /// session the current request addresses — is never chosen, so a
+    /// session larger than the whole budget still serves (the budget then
+    /// holds all-but-this-session; there is nothing left to evict).
+    fn enforce(&mut self, keep: Option<&str>) {
+        loop {
+            let over_count = self.resident.len() > self.policy.max_resident;
+            let over_bytes = self.policy.memory_budget_bytes > 0
+                && self.resident_bytes > self.policy.memory_budget_bytes;
+            if !over_count && !over_bytes {
+                return;
+            }
+            let Some(victim) = self
+                .resident
+                .iter()
+                .filter(|(k, _)| Some(k.as_str()) != keep)
+                .min_by_key(|(_, s)| s.last_access)
+                .map(|(k, _)| k.clone())
+            else {
+                return; // only `keep` remains — nothing more to shed
+            };
+            if self.policy.spill_dir.is_some() {
+                if let Err(e) = self.spill_one(&victim) {
+                    // A failed spill (disk full, permissions) must not wedge
+                    // the shard: fall back to dropping the victim.
+                    log::warn!("spill of session '{victim}' failed ({e:#}); dropping it");
+                    self.drop_session(&victim);
+                    self.evictions += 1;
+                }
+            } else {
+                self.drop_session(&victim);
+                self.evictions += 1;
+            }
+        }
+    }
+
+    /// Snapshot one resident session to disk and forget its RAM state.
+    fn spill_one(&mut self, id: &str) -> Result<()> {
+        let dir = self
+            .policy
+            .spill_dir
+            .as_ref()
+            .context("no spill_dir configured")?
+            .clone();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating spill dir {}", dir.display()))?;
+        let s = self.resident.get(id).context("session not resident")?;
+        let path = dir.join(spill_filename(id));
+        s.engine.snapshot_to_file(&path)?;
+        let file_bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+        let s = self.resident.remove(id).expect("checked above");
+        self.resident_bytes -= s.bytes;
+        self.spilled.insert(
+            id.to_string(),
+            SpillEntry {
+                path,
+                file_bytes,
+                last_access: s.last_access,
+                edits: s.edits,
+                doc_len: s.engine.len(),
+            },
+        );
+        self.suspends += 1;
+        Ok(())
     }
 }
 
@@ -108,11 +452,30 @@ mod tests {
         IncrementalEngine::new(w.clone(), &tokens, EngineOptions::default())
     }
 
+    fn store(w: &Arc<ModelWeights>, policy: StorePolicy) -> SessionStore {
+        SessionStore::new(w.clone(), EngineOptions::default(), policy)
+    }
+
+    fn drop_policy(max_resident: usize) -> StorePolicy {
+        StorePolicy {
+            max_resident,
+            max_total: max_resident,
+            memory_budget_bytes: 0,
+            spill_dir: None,
+        }
+    }
+
+    fn tempdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("vqt_spill_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
     #[test]
-    fn lru_eviction_order() {
+    fn lru_eviction_order_without_spill() {
         let cfg = ModelConfig::vqt_tiny();
         let w = Arc::new(ModelWeights::random(&cfg, 1));
-        let mut store = SessionStore::new(2);
+        let mut store = store(&w, drop_policy(2));
         assert_eq!(store.insert("a".into(), engine(&w, 1)), None);
         assert_eq!(store.insert("b".into(), engine(&w, 2)), None);
         // Touch "a" so "b" is the LRU.
@@ -121,13 +484,14 @@ mod tests {
         assert_eq!(evicted.as_deref(), Some("b"));
         assert!(store.contains("a") && store.contains("c"));
         assert_eq!(store.evictions, 1);
+        assert_eq!(store.suspends, 0, "no spill dir ⇒ drops, not suspensions");
     }
 
     #[test]
     fn replace_does_not_evict() {
         let cfg = ModelConfig::vqt_tiny();
         let w = Arc::new(ModelWeights::random(&cfg, 1));
-        let mut store = SessionStore::new(1);
+        let mut store = store(&w, drop_policy(1));
         store.insert("a".into(), engine(&w, 1));
         assert_eq!(store.insert("a".into(), engine(&w, 2)), None);
         assert_eq!(store.len(), 1);
@@ -138,12 +502,178 @@ mod tests {
     fn remove_and_ids() {
         let cfg = ModelConfig::vqt_tiny();
         let w = Arc::new(ModelWeights::random(&cfg, 1));
-        let mut store = SessionStore::new(4);
+        let mut store = store(&w, drop_policy(4));
         store.insert("x".into(), engine(&w, 1));
         store.insert("y".into(), engine(&w, 2));
         assert_eq!(store.ids(), vec!["x".to_string(), "y".to_string()]);
-        assert!(store.remove("x").is_some());
-        assert!(store.remove("x").is_none());
+        assert!(store.remove("x"));
+        assert!(!store.remove("x"));
         assert_eq!(store.len(), 1);
+    }
+
+    #[test]
+    fn count_pressure_spills_and_resumes_bit_exact() {
+        let cfg = ModelConfig::vqt_tiny();
+        let w = Arc::new(ModelWeights::random(&cfg, 2));
+        let dir = tempdir("count");
+        let mut store = store(
+            &w,
+            StorePolicy {
+                max_resident: 1,
+                max_total: 8,
+                memory_budget_bytes: 0,
+                spill_dir: Some(dir.clone()),
+            },
+        );
+        store.insert("a".into(), engine(&w, 1));
+        let logits_a: Vec<u32> = store.get_mut("a").unwrap().engine.logits()
+            .iter().map(|x| x.to_bits()).collect();
+        store.insert("b".into(), engine(&w, 2));
+        // "a" was suspended, not dropped.
+        assert!(store.is_suspended("a") && store.is_resident("b"));
+        assert_eq!(store.suspends, 1);
+        assert_eq!(store.evictions, 0);
+        assert_eq!(store.info("a").unwrap().state, "suspended");
+        assert!(store.info("a").unwrap().spill_bytes > 0);
+        // Transparent resume restores bit-identical state (and suspends
+        // "b" in turn under the resident cap of 1).
+        assert_eq!(store.prepare("a").unwrap(), Prepared::Resumed);
+        assert_eq!(store.resumes, 1);
+        let back: Vec<u32> = store.get_mut("a").unwrap().engine.logits()
+            .iter().map(|x| x.to_bits()).collect();
+        assert_eq!(back, logits_a);
+        assert!(store.is_suspended("b"));
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn byte_budget_keeps_resident_bytes_bounded() {
+        let cfg = ModelConfig::vqt_tiny();
+        let w = Arc::new(ModelWeights::random(&cfg, 3));
+        let one = engine(&w, 1).resident_bytes();
+        let dir = tempdir("budget");
+        // Budget for about two engines.
+        let budget = one * 2 + one / 2;
+        let mut store = store(
+            &w,
+            StorePolicy {
+                max_resident: 64,
+                max_total: 64,
+                memory_budget_bytes: budget,
+                spill_dir: Some(dir.clone()),
+            },
+        );
+        for i in 0..6 {
+            store.insert(format!("s{i}"), engine(&w, i));
+            assert!(
+                store.resident_bytes() <= budget,
+                "after insert {i}: {} > budget {budget}",
+                store.resident_bytes()
+            );
+        }
+        assert_eq!(store.len(), 6, "budget suspends, never loses sessions");
+        assert!(store.suspends >= 4);
+        // Every session remains reachable.
+        for i in 0..6 {
+            assert_ne!(store.prepare(&format!("s{i}")).unwrap(), Prepared::Missing);
+            assert!(store.resident_bytes() <= budget);
+        }
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn explicit_suspend_is_idempotent_and_needs_spill_dir() {
+        let cfg = ModelConfig::vqt_tiny();
+        let w = Arc::new(ModelWeights::random(&cfg, 4));
+        let mut no_spill = store(&w, drop_policy(4));
+        no_spill.insert("a".into(), engine(&w, 1));
+        assert!(no_spill.suspend("a").is_err(), "no spill dir configured");
+        let dir = tempdir("suspend");
+        let mut s = store(
+            &w,
+            StorePolicy {
+                max_resident: 4,
+                max_total: 8,
+                memory_budget_bytes: 0,
+                spill_dir: Some(dir.clone()),
+            },
+        );
+        s.insert("a".into(), engine(&w, 1));
+        assert!(s.suspend("a").unwrap());
+        assert!(s.suspend("a").unwrap(), "idempotent");
+        assert!(!s.suspend("ghost").unwrap());
+        assert_eq!(s.suspends, 1);
+        // Closing a suspended session deletes its snapshot file.
+        let path = dir.join(spill_filename("a"));
+        assert!(path.exists());
+        assert!(s.remove("a"));
+        assert!(!path.exists());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn total_cap_drops_global_lru_even_if_suspended() {
+        let cfg = ModelConfig::vqt_tiny();
+        let w = Arc::new(ModelWeights::random(&cfg, 5));
+        let dir = tempdir("total");
+        let mut s = store(
+            &w,
+            StorePolicy {
+                max_resident: 1,
+                max_total: 2,
+                memory_budget_bytes: 0,
+                spill_dir: Some(dir.clone()),
+            },
+        );
+        s.insert("a".into(), engine(&w, 1)); // a resident
+        s.insert("b".into(), engine(&w, 2)); // a suspended, b resident
+        assert_eq!(s.len(), 2);
+        let dropped = s.insert("c".into(), engine(&w, 3));
+        assert_eq!(dropped.as_deref(), Some("a"), "oldest (suspended) dropped");
+        assert_eq!(s.len(), 2);
+        assert!(!s.contains("a"));
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn spill_filenames_are_safe_and_distinct() {
+        let a = spill_filename("user/../../etc/passwd");
+        assert!(!a.contains('/') && !a.contains(".."));
+        assert_ne!(spill_filename("s1"), spill_filename("s2"));
+        let long = "x".repeat(4096);
+        assert!(spill_filename(&long).len() < 64);
+    }
+
+    #[test]
+    fn corrupt_spill_surfaces_error_and_forgets_session() {
+        let cfg = ModelConfig::vqt_tiny();
+        let w = Arc::new(ModelWeights::random(&cfg, 6));
+        let dir = tempdir("corrupt");
+        let mut s = store(
+            &w,
+            StorePolicy {
+                max_resident: 4,
+                max_total: 8,
+                memory_budget_bytes: 0,
+                spill_dir: Some(dir.clone()),
+            },
+        );
+        s.insert("a".into(), engine(&w, 1));
+        s.suspend("a").unwrap();
+        let path = dir.join(spill_filename("a"));
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        std::fs::write(&path, bytes).unwrap();
+        assert!(s.prepare("a").is_err(), "corrupt snapshot must error");
+        // The broken session is gone — a retry reports Missing, not a hang.
+        assert_eq!(s.prepare("a").unwrap(), Prepared::Missing);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn sanitized_prefix_check() {
+        // Spaces and non-ASCII map to '_'; the FNV suffix disambiguates.
+        assert!(spill_filename("weird id ☃").starts_with("weird_id__"));
     }
 }

@@ -59,7 +59,7 @@ impl Default for EngineOptions {
 }
 
 /// Lifetime statistics.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct EngineStats {
     pub edits_applied: u64,
     pub defrags: u64,
@@ -989,6 +989,26 @@ impl IncrementalEngine {
     /// coordinator's §3.1 storage measurement and by state-parity tests.
     pub fn layer_codes(&self, li: usize) -> &[CodeTuple] {
         &self.layers[li].codes
+    }
+
+    /// Bytes of per-session reuse state held in RAM: every per-layer row
+    /// store, the VQ code vectors, the classifier caches, and the
+    /// token/position bookkeeping. This is what the coordinator's
+    /// memory-budget accountant charges a resident session for (weights are
+    /// shared across sessions and excluded; allocator overhead and scratch
+    /// buffers are not, so the figure is a tight lower bound).
+    pub fn resident_bytes(&self) -> usize {
+        let mut b = 0usize;
+        for l in &self.layers {
+            b += l.x.bytes() + l.q.bytes() + l.k.bytes() + l.v.bytes();
+            b += l.vc.bytes() + l.acc.bytes();
+            b += l.codes.len() * std::mem::size_of::<CodeTuple>();
+        }
+        b += self.final_hidden.bytes();
+        b += (self.pooled_sum.len() + self.logits.len()) * std::mem::size_of::<f32>();
+        b += self.tokens.len() * std::mem::size_of::<u32>();
+        b += self.positions.ids().len() * std::mem::size_of::<u32>();
+        b
     }
 }
 

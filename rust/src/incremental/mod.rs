@@ -3,8 +3,10 @@
 
 pub mod engine;
 pub mod rowstore;
+pub mod snapshot;
 
 pub use engine::{EditReport, EngineOptions, EngineStats, IncrementalEngine, VerifyReport};
+pub use snapshot::{config_fingerprint, SNAPSHOT_MAGIC, SNAPSHOT_VERSION};
 
 #[cfg(test)]
 mod tests {

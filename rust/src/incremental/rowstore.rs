@@ -80,6 +80,12 @@ impl RowStore {
     pub fn clear(&mut self) {
         self.data.clear();
     }
+
+    /// Resident payload size in bytes (the data slab only — the session
+    /// memory accountant sums these across all per-layer stores).
+    pub fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
 }
 
 #[cfg(test)]

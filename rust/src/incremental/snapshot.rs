@@ -1,0 +1,325 @@
+//! Versioned, checksummed session snapshots — the serialization layer of
+//! the session lifecycle subsystem.
+//!
+//! A snapshot captures the FULL per-document reuse state of an
+//! [`IncrementalEngine`] (row stores, VQ code assignments, position
+//! bookkeeping, classifier caches) **plus** its FLOP ledger and lifetime
+//! statistics, so that a restored engine is *indistinguishable* from one
+//! that never left memory: subsequent edits produce bit-identical logits,
+//! identical `EditReport::flops`, and identical reuse counters. That
+//! invariant is what makes LRU spill-to-disk transparent (and what the
+//! `differential_lifecycle` suite locks).
+//!
+//! On-disk layout (little-endian):
+//! ```text
+//! magic   "VQSS"          4 bytes
+//! version u8              (currently 1)
+//! len     u64             payload byte count
+//! payload [len]           a util::binfmt TensorFile (state + counters)
+//! check   u64             FNV-1a 64 over payload
+//! ```
+//! The envelope makes corruption failure modes *clean*: a bad magic,
+//! unknown version, short read, or checksum mismatch each produce a
+//! descriptive `Err` from [`IncrementalEngine::restore`] — never a panic
+//! and never a partially-restored session (the engine is only constructed
+//! after every field validates).
+//!
+//! The payload embeds a fingerprint of the model configuration; restoring
+//! against different weights geometry is rejected up front rather than
+//! producing silently-wrong state.
+
+use crate::flops::FlopLedger;
+use crate::incremental::{EngineOptions, IncrementalEngine};
+use crate::model::ModelWeights;
+use crate::util::{fnv1a64, Tensor, TensorFile};
+use anyhow::{bail, ensure, Context, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+/// Snapshot container magic ("VQ Session Snapshot").
+pub const SNAPSHOT_MAGIC: &[u8; 4] = b"VQSS";
+/// Current snapshot format version. Bump on any payload schema change.
+pub const SNAPSHOT_VERSION: u8 = 1;
+/// Envelope overhead: magic + version + payload length + checksum.
+const HEADER_LEN: usize = 4 + 1 + 8;
+const FOOTER_LEN: usize = 8;
+
+/// Pack a u64 counter into two i32 lanes (binfmt carries f32/i32 only).
+fn u64_lanes(x: u64) -> [i32; 2] {
+    [(x & 0xffff_ffff) as u32 as i32, (x >> 32) as u32 as i32]
+}
+
+fn lanes_u64(lanes: &[i32]) -> u64 {
+    (lanes[0] as u32 as u64) | ((lanes[1] as u32 as u64) << 32)
+}
+
+/// Stable fingerprint of the model geometry a snapshot was taken under.
+/// Hashes the deterministic JSON form of the config, so any dimension or
+/// attention-kind change invalidates old snapshots.
+pub fn config_fingerprint(cfg: &crate::config::ModelConfig) -> u64 {
+    fnv1a64(cfg.to_json().to_string().as_bytes())
+}
+
+impl IncrementalEngine {
+    /// Serialize the full session — reuse state AND counters — into the
+    /// versioned, checksummed snapshot format.
+    pub fn snapshot(&self) -> Vec<u8> {
+        let mut tf = self.to_tensor_file();
+        tf.insert(
+            "model_fp",
+            Tensor::i32(vec![2], u64_lanes(config_fingerprint(&self.weights().cfg)).to_vec()),
+        );
+        let led = &self.ledger;
+        let counters: Vec<u64> = vec![
+            led.linear,
+            led.attention,
+            led.vq,
+            led.elementwise,
+            led.embed,
+            led.bookkeeping,
+        ];
+        tf.insert(
+            "ledger",
+            Tensor::i32(
+                vec![counters.len(), 2],
+                counters.iter().flat_map(|&x| u64_lanes(x)).collect(),
+            ),
+        );
+        let s = &self.stats;
+        let stats: Vec<u64> = vec![
+            s.edits_applied,
+            s.defrags,
+            s.full_rebuilds,
+            s.rows_recomputed,
+            s.corrections,
+            s.code_flips,
+            s.outputs_recomputed,
+            s.verifications,
+        ];
+        tf.insert(
+            "stats",
+            Tensor::i32(
+                vec![stats.len(), 2],
+                stats.iter().flat_map(|&x| u64_lanes(x)).collect(),
+            ),
+        );
+        let mut payload = Vec::new();
+        tf.write_to(&mut payload)
+            .expect("in-memory tensor write cannot fail");
+        let mut out = Vec::with_capacity(HEADER_LEN + payload.len() + FOOTER_LEN);
+        out.extend_from_slice(SNAPSHOT_MAGIC);
+        out.push(SNAPSHOT_VERSION);
+        out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        out.extend_from_slice(&payload);
+        out.extend_from_slice(&fnv1a64(&payload).to_le_bytes());
+        out
+    }
+
+    /// Restore a session from [`Self::snapshot`] bytes. Validates the
+    /// envelope (magic, version, length, checksum) and the model
+    /// fingerprint before touching any engine state; every failure mode is
+    /// a clean `Err` with no partial session constructed.
+    pub fn restore(
+        w: Arc<ModelWeights>,
+        bytes: &[u8],
+        opts: EngineOptions,
+    ) -> Result<IncrementalEngine> {
+        ensure!(
+            bytes.len() >= HEADER_LEN + FOOTER_LEN,
+            "truncated snapshot: {} bytes is shorter than the envelope",
+            bytes.len()
+        );
+        ensure!(
+            &bytes[..4] == SNAPSHOT_MAGIC,
+            "bad magic {:?}: not a VQSS session snapshot",
+            &bytes[..4]
+        );
+        let version = bytes[4];
+        ensure!(
+            version == SNAPSHOT_VERSION,
+            "unsupported snapshot version {version} (this build reads version {SNAPSHOT_VERSION})"
+        );
+        let len = u64::from_le_bytes(bytes[5..13].try_into().unwrap()) as usize;
+        let have = bytes.len() - HEADER_LEN - FOOTER_LEN;
+        if have < len {
+            bail!("truncated snapshot: payload has {have} of {len} bytes");
+        }
+        if have > len {
+            bail!("oversized snapshot: {} trailing bytes", have - len);
+        }
+        let payload = &bytes[HEADER_LEN..HEADER_LEN + len];
+        let want = u64::from_le_bytes(bytes[HEADER_LEN + len..].try_into().unwrap());
+        let got = fnv1a64(payload);
+        ensure!(
+            got == want,
+            "snapshot checksum mismatch (stored {want:#018x}, computed {got:#018x}) — file corrupted"
+        );
+        let tf = TensorFile::read_from(&mut &payload[..]).context("parsing snapshot payload")?;
+        let (_, fp) = tf.get("model_fp")?.as_i32()?;
+        let snap_fp = lanes_u64(fp);
+        let our_fp = config_fingerprint(&w.cfg);
+        ensure!(
+            snap_fp == our_fp,
+            "snapshot was taken under a different model configuration \
+             (fingerprint {snap_fp:#018x}, serving {our_fp:#018x})"
+        );
+        let mut eng = IncrementalEngine::from_tensor_file(w, &tf, opts)?;
+        let (dims, led) = tf.get("ledger")?.as_i32()?;
+        ensure!(dims == [6, 2], "ledger dims {dims:?}");
+        eng.ledger = FlopLedger {
+            linear: lanes_u64(&led[0..2]),
+            attention: lanes_u64(&led[2..4]),
+            vq: lanes_u64(&led[4..6]),
+            elementwise: lanes_u64(&led[6..8]),
+            embed: lanes_u64(&led[8..10]),
+            bookkeeping: lanes_u64(&led[10..12]),
+        };
+        let (dims, st) = tf.get("stats")?.as_i32()?;
+        ensure!(dims == [8, 2], "stats dims {dims:?}");
+        eng.stats.edits_applied = lanes_u64(&st[0..2]);
+        eng.stats.defrags = lanes_u64(&st[2..4]);
+        eng.stats.full_rebuilds = lanes_u64(&st[4..6]);
+        eng.stats.rows_recomputed = lanes_u64(&st[6..8]);
+        eng.stats.corrections = lanes_u64(&st[8..10]);
+        eng.stats.code_flips = lanes_u64(&st[10..12]);
+        eng.stats.outputs_recomputed = lanes_u64(&st[12..14]);
+        eng.stats.verifications = lanes_u64(&st[14..16]);
+        Ok(eng)
+    }
+
+    /// Write a snapshot to `path` atomically (temp file + rename), so a
+    /// crash mid-spill never leaves a half-written snapshot where the
+    /// resume path will find it.
+    pub fn snapshot_to_file(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, self.snapshot())
+            .with_context(|| format!("writing snapshot {}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("publishing snapshot {}", path.display()))
+    }
+
+    /// Load a snapshot written by [`Self::snapshot_to_file`].
+    pub fn restore_from_file(
+        w: Arc<ModelWeights>,
+        path: impl AsRef<Path>,
+        opts: EngineOptions,
+    ) -> Result<IncrementalEngine> {
+        let bytes = std::fs::read(path.as_ref())
+            .with_context(|| format!("reading snapshot {}", path.as_ref().display()))?;
+        Self::restore(w, &bytes, opts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::edits::Edit;
+    use crate::util::Rng;
+
+    fn built_engine(seed: u64) -> (Arc<ModelWeights>, IncrementalEngine) {
+        let cfg = ModelConfig::vqt_tiny();
+        let w = Arc::new(ModelWeights::random(&cfg, seed));
+        let mut r = Rng::new(seed ^ 0x5A5A);
+        let tokens: Vec<u32> = (0..14).map(|_| r.below(cfg.vocab_size) as u32).collect();
+        let mut eng = IncrementalEngine::new(w.clone(), &tokens, EngineOptions::default());
+        eng.apply_edit(Edit::Replace { at: 2, tok: 7 });
+        eng.apply_edit(Edit::Insert { at: 5, tok: 11 });
+        eng.apply_edit(Edit::Delete { at: 0 });
+        (w, eng)
+    }
+
+    #[test]
+    fn roundtrip_is_indistinguishable() {
+        let (w, eng) = built_engine(1);
+        let bytes = eng.snapshot();
+        let back = IncrementalEngine::restore(w, &bytes, EngineOptions::default()).unwrap();
+        assert_eq!(back.tokens(), eng.tokens());
+        assert_eq!(back.position_ids(), eng.position_ids());
+        // Bit-exact logits, carried-over counters.
+        for (a, b) in eng.logits().iter().zip(back.logits()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(back.ledger, eng.ledger, "ledger must survive the cycle");
+        assert_eq!(back.stats, eng.stats, "stats must survive the cycle");
+    }
+
+    #[test]
+    fn roundtrip_through_file() {
+        let (w, eng) = built_engine(2);
+        let path = std::env::temp_dir().join(format!("vqss_rt_{}.vqss", std::process::id()));
+        eng.snapshot_to_file(&path).unwrap();
+        let back =
+            IncrementalEngine::restore_from_file(w, &path, EngineOptions::default()).unwrap();
+        assert_eq!(back.tokens(), eng.tokens());
+        assert_eq!(back.ledger, eng.ledger);
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn corrupted_checksum_rejected() {
+        let (w, eng) = built_engine(3);
+        let mut bytes = eng.snapshot();
+        // Flip one payload byte: the checksum no longer matches.
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        let err = IncrementalEngine::restore(w, &bytes, EngineOptions::default())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn truncated_snapshot_rejected() {
+        let (w, eng) = built_engine(4);
+        let bytes = eng.snapshot();
+        // Every truncation point must fail cleanly (spot-check a spread).
+        for cut in [0, 3, 4, 5, 12, 13, bytes.len() / 2, bytes.len() - 1] {
+            let err = IncrementalEngine::restore(w.clone(), &bytes[..cut], EngineOptions::default());
+            assert!(err.is_err(), "cut at {cut} must be rejected");
+        }
+    }
+
+    #[test]
+    fn bumped_version_rejected() {
+        let (w, eng) = built_engine(5);
+        let mut bytes = eng.snapshot();
+        bytes[4] = SNAPSHOT_VERSION + 1;
+        let err = IncrementalEngine::restore(w, &bytes, EngineOptions::default())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn bad_magic_and_trailing_garbage_rejected() {
+        let (w, eng) = built_engine(6);
+        let mut bad = eng.snapshot();
+        bad[0] = b'X';
+        assert!(IncrementalEngine::restore(w.clone(), &bad, EngineOptions::default()).is_err());
+        let mut long = eng.snapshot();
+        long.extend_from_slice(&[0u8; 16]);
+        assert!(IncrementalEngine::restore(w, &long, EngineOptions::default()).is_err());
+    }
+
+    #[test]
+    fn wrong_model_fingerprint_rejected() {
+        let (_, eng) = built_engine(7);
+        let bytes = eng.snapshot();
+        let mut cfg2 = ModelConfig::vqt_tiny();
+        cfg2.d_ff += 16; // same layer count, different geometry
+        let w2 = Arc::new(ModelWeights::random(&cfg2, 7));
+        let err = IncrementalEngine::restore(w2, &bytes, EngineOptions::default())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("configuration"), "{err}");
+    }
+
+    #[test]
+    fn counter_lane_packing_roundtrips() {
+        for x in [0u64, 1, 0xffff_ffff, 0x1_0000_0000, u64::MAX, 0xdead_beef_cafe_f00d] {
+            assert_eq!(lanes_u64(&u64_lanes(x)), x);
+        }
+    }
+}

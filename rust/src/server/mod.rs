@@ -12,13 +12,20 @@
 //! → {"op":"revision","session":"s1","tokens":[...]}
 //! → {"op":"dense","tokens":[...]}
 //! → {"op":"stats"}   |   {"op":"close","session":"s1"}
+//! → {"op":"suspend","session":"s1"}      spill the session to disk
+//! → {"op":"resume","session":"s1"}       eager resume (requests also
+//!                                        resume suspended sessions lazily)
+//! → {"op":"session_info","session":"s1"}
+//! ← {"ok":true,"state":"resident","resident_bytes":123,...}
+//! → {"op":"checkpoint","session":"s1","path":"s1.vqss"}
+//! → {"op":"restore","session":"s1","path":"s1.vqss"}
 //! ```
 
 pub mod protocol;
 
 use crate::coordinator::Client;
 use anyhow::{Context, Result};
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 
 pub use protocol::{parse_request, response_to_json};
@@ -44,26 +51,50 @@ pub fn serve(bind: &str, client: Client) -> Result<()> {
 }
 
 /// Handle one connection: line in → request → coordinator → line out.
+///
+/// The read itself is capped at [`protocol::MAX_REQUEST_BYTES`] (plus
+/// newline slack): a client streaming an endless line never makes the
+/// server buffer more than the cap — the connection is answered with the
+/// oversized-request error and dropped (the rest of the line cannot be
+/// resynced to a message boundary).
 pub fn handle_conn(stream: TcpStream, client: Client) -> Result<()> {
     let peer = stream.peer_addr()?;
     log::debug!("connection from {peer}");
     let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
+    let mut reader = BufReader::new(stream);
+    let mut buf = Vec::new();
+    let limit = protocol::MAX_REQUEST_BYTES as u64 + 2;
+    loop {
+        buf.clear();
+        let n = Read::by_ref(&mut reader)
+            .take(limit)
+            .read_until(b'\n', &mut buf)?;
+        if n == 0 {
+            return Ok(()); // clean EOF
         }
-        let out = match parse_request(&line) {
-            Ok(req) => match client.request(req) {
-                Ok(resp) => response_to_json(&resp),
+        if buf.last() != Some(&b'\n') && n as u64 == limit {
+            let out = protocol::error_json(&format!(
+                "oversized request: line exceeds {} bytes",
+                protocol::MAX_REQUEST_BYTES
+            ));
+            writer.write_all(out.to_string().as_bytes())?;
+            writer.write_all(b"\n")?;
+            writer.flush()?;
+            anyhow::bail!("oversized request line from {peer}");
+        }
+        let out = match std::str::from_utf8(&buf) {
+            Ok(line) if line.trim().is_empty() => continue,
+            Ok(line) => match parse_request(line.trim()) {
+                Ok(req) => match client.request(req) {
+                    Ok(resp) => response_to_json(&resp),
+                    Err(e) => protocol::error_json(&format!("{e:#}")),
+                },
                 Err(e) => protocol::error_json(&format!("{e:#}")),
             },
-            Err(e) => protocol::error_json(&format!("{e:#}")),
+            Err(_) => protocol::error_json("request line is not valid UTF-8"),
         };
         writer.write_all(out.to_string().as_bytes())?;
         writer.write_all(b"\n")?;
         writer.flush()?;
     }
-    Ok(())
 }

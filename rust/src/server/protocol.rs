@@ -5,16 +5,28 @@ use crate::edits::Edit;
 use crate::util::Json;
 use anyhow::{bail, Context, Result};
 
+/// Maximum accepted request-line length. A line past this is rejected up
+/// front — before JSON parsing allocates anything proportional to it — so
+/// an oversized payload costs the server one length check, not a parse.
+pub const MAX_REQUEST_BYTES: usize = 1 << 20;
+
+/// A token id: a non-negative integer that fits u32 (silent `as u32`
+/// truncation of a huge number would corrupt the document instead of
+/// erroring).
+fn token_value(v: &Json, key: &str) -> Result<u32> {
+    let u = v
+        .as_usize()
+        .with_context(|| format!("'{key}' must hold non-negative integers"))?;
+    anyhow::ensure!(u <= u32::MAX as usize, "'{key}' token {u} exceeds u32 range");
+    Ok(u as u32)
+}
+
 fn tokens_field(j: &Json, key: &str) -> Result<Vec<u32>> {
     j.get(key)
         .as_arr()
         .with_context(|| format!("missing '{key}' array"))?
         .iter()
-        .map(|v| {
-            v.as_usize()
-                .map(|u| u as u32)
-                .with_context(|| format!("'{key}' must hold non-negative integers"))
-        })
+        .map(|v| token_value(v, key))
         .collect()
 }
 
@@ -27,6 +39,12 @@ fn session_field(j: &Json) -> Result<String> {
 
 /// Parse one request line.
 pub fn parse_request(line: &str) -> Result<Request> {
+    if line.len() > MAX_REQUEST_BYTES {
+        bail!(
+            "oversized request: {} bytes (limit {MAX_REQUEST_BYTES})",
+            line.len()
+        );
+    }
     let j = Json::parse(line).context("invalid JSON")?;
     let op = j.get("op").as_str().context("missing 'op'")?;
     Ok(match op {
@@ -39,11 +57,11 @@ pub fn parse_request(line: &str) -> Result<Request> {
             let edit = match j.get("kind").as_str().context("missing 'kind'")? {
                 "replace" => Edit::Replace {
                     at,
-                    tok: j.get("tok").as_usize().context("missing 'tok'")? as u32,
+                    tok: token_value(j.get("tok"), "tok")?,
                 },
                 "insert" => Edit::Insert {
                     at,
-                    tok: j.get("tok").as_usize().context("missing 'tok'")? as u32,
+                    tok: token_value(j.get("tok"), "tok")?,
                 },
                 "delete" => Edit::Delete { at },
                 k => bail!("unknown edit kind '{k}'"),
@@ -68,7 +86,7 @@ pub fn parse_request(line: &str) -> Result<Request> {
                     r.as_arr()
                         .context("revision must be an array")?
                         .iter()
-                        .map(|v| Ok(v.as_usize().context("token must be an int")? as u32))
+                        .map(|v| token_value(v, "revisions"))
                         .collect::<Result<Vec<u32>>>()
                 })
                 .collect::<Result<Vec<_>>>()?;
@@ -88,6 +106,15 @@ pub fn parse_request(line: &str) -> Result<Request> {
         "restore" => Request::Restore {
             session: session_field(&j)?,
             path: j.get("path").as_str().context("missing 'path'")?.to_string(),
+        },
+        "suspend" => Request::Suspend {
+            session: session_field(&j)?,
+        },
+        "resume" => Request::Resume {
+            session: session_field(&j)?,
+        },
+        "session_info" => Request::SessionInfo {
+            session: session_field(&j)?,
         },
         "close" => Request::Close {
             session: session_field(&j)?,
@@ -151,13 +178,34 @@ pub fn response_to_json(resp: &Response) -> Json {
         Response::ShardStats {
             metrics,
             live_sessions,
+            spilled_sessions,
+            resident_bytes,
         } => {
             let mut stats = metrics.to_json();
             if let Json::Obj(map) = &mut stats {
                 map.insert("live_sessions".into(), Json::num(*live_sessions as f64));
+                map.insert(
+                    "spilled_sessions".into(),
+                    Json::num(*spilled_sessions as f64),
+                );
+                map.insert("resident_bytes".into(), Json::num(*resident_bytes as f64));
             }
             Json::obj(vec![("ok", Json::Bool(true)), ("stats", stats)])
         }
+        Response::SessionInfo {
+            state,
+            resident_bytes,
+            spill_bytes,
+            edits,
+            doc_len,
+        } => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("state", Json::str(*state)),
+            ("resident_bytes", Json::num(*resident_bytes as f64)),
+            ("spill_bytes", Json::num(*spill_bytes as f64)),
+            ("edits", Json::num(*edits as f64)),
+            ("len", Json::num(*doc_len as f64)),
+        ]),
         Response::Suggestions(top) => Json::obj(vec![
             ("ok", Json::Bool(true)),
             (
@@ -236,6 +284,48 @@ mod tests {
         assert!(parse_request(r#"{"op":"open","tokens":[1]}"#).is_err());
         assert!(parse_request(r#"{"op":"edit","session":"s","kind":"warp","at":0}"#).is_err());
         assert!(parse_request(r#"{"op":"open","session":"s","tokens":[-1]}"#).is_err());
+        // Token values past u32 must be rejected, not silently truncated.
+        assert!(parse_request(r#"{"op":"open","session":"s","tokens":[4294967296]}"#).is_err());
+        assert!(
+            parse_request(r#"{"op":"edit","session":"s","kind":"insert","at":0,"tok":1e18}"#)
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn parse_lifecycle_verbs() {
+        let r = parse_request(r#"{"op":"suspend","session":"s"}"#).unwrap();
+        assert!(matches!(r, Request::Suspend { ref session } if session == "s"));
+        let r = parse_request(r#"{"op":"resume","session":"s"}"#).unwrap();
+        assert!(matches!(r, Request::Resume { ref session } if session == "s"));
+        let r = parse_request(r#"{"op":"session_info","session":"s"}"#).unwrap();
+        assert!(matches!(r, Request::SessionInfo { ref session } if session == "s"));
+        assert!(parse_request(r#"{"op":"suspend"}"#).is_err(), "missing session");
+    }
+
+    #[test]
+    fn session_info_response_shape() {
+        let j = response_to_json(&Response::SessionInfo {
+            state: "suspended",
+            resident_bytes: 0,
+            spill_bytes: 1234,
+            edits: 7,
+            doc_len: 42,
+        });
+        assert_eq!(j.get("ok").as_bool(), Some(true));
+        assert_eq!(j.get("state").as_str(), Some("suspended"));
+        assert_eq!(j.get("spill_bytes").as_usize(), Some(1234));
+        assert_eq!(j.get("len").as_usize(), Some(42));
+    }
+
+    #[test]
+    fn oversized_line_rejected_cheaply() {
+        let huge = format!(
+            r#"{{"op":"open","session":"s","tokens":[{}1]}}"#,
+            "1,".repeat(MAX_REQUEST_BYTES / 2)
+        );
+        let err = parse_request(&huge).unwrap_err().to_string();
+        assert!(err.contains("oversized"), "{err}");
     }
 
     #[test]

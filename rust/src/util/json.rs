@@ -40,6 +40,7 @@ impl Json {
         let mut p = Parser {
             b: s.as_bytes(),
             i: 0,
+            depth: 0,
         };
         p.skip_ws();
         let v = p.value()?;
@@ -181,9 +182,16 @@ impl fmt::Display for Json {
     }
 }
 
+/// Maximum container nesting depth. The parser recurses per `[`/`{`, so
+/// unbounded depth would let a hostile wire payload (`[[[[…`) overflow the
+/// stack — an abort, not a catchable error. 128 is far beyond any legitimate
+/// config or protocol message.
+const MAX_DEPTH: usize = 128;
+
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -243,12 +251,22 @@ impl<'a> Parser<'a> {
         }
     }
 
+    fn enter(&mut self) -> Result<(), JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        Ok(())
+    }
+
     fn object(&mut self) -> Result<Json, JsonError> {
+        self.enter()?;
         self.expect(b'{')?;
         let mut m = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(m));
         }
         loop {
@@ -262,18 +280,23 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             match self.bump() {
                 Some(b',') => continue,
-                Some(b'}') => return Ok(Json::Obj(m)),
+                Some(b'}') => {
+                    self.depth -= 1;
+                    return Ok(Json::Obj(m));
+                }
                 _ => return Err(self.err("expected ',' or '}'")),
             }
         }
     }
 
     fn array(&mut self) -> Result<Json, JsonError> {
+        self.enter()?;
         self.expect(b'[')?;
         let mut a = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(a));
         }
         loop {
@@ -282,7 +305,10 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             match self.bump() {
                 Some(b',') => continue,
-                Some(b']') => return Ok(Json::Arr(a)),
+                Some(b']') => {
+                    self.depth -= 1;
+                    return Ok(Json::Arr(a));
+                }
                 _ => return Err(self.err("expected ',' or ']'")),
             }
         }
@@ -434,6 +460,19 @@ mod tests {
         assert!(Json::parse("{\"a\" 1}").is_err());
         assert!(Json::parse("12 34").is_err());
         assert!(Json::parse("").is_err());
+    }
+
+    #[test]
+    fn deep_nesting_rejected_cleanly() {
+        // Within the limit: fine.
+        let ok = format!("{}1{}", "[".repeat(100), "]".repeat(100));
+        assert!(Json::parse(&ok).is_ok());
+        // Far past the limit: a clean error, not a stack overflow.
+        let deep = format!("{}1{}", "[".repeat(100_000), "]".repeat(100_000));
+        let e = Json::parse(&deep).unwrap_err();
+        assert!(e.msg.contains("nesting"), "{e}");
+        let deep_obj = format!("{}\"k\":1{}", "{\"k\":".repeat(50_000), "}".repeat(50_000));
+        assert!(Json::parse(&deep_obj).is_err());
     }
 
     #[test]

@@ -11,6 +11,20 @@ pub use binfmt::{Tensor, TensorFile};
 pub use json::Json;
 pub use rng::Rng;
 
+/// FNV-1a 64-bit hash — the repo's one stable hash, shared by session→shard
+/// routing ([`crate::coordinator::batcher::shard_of`]), snapshot checksums
+/// ([`crate::incremental::snapshot`]), and spill-file naming. Deterministic
+/// and platform-independent, so routing and on-disk formats are stable
+/// across restarts and architectures.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    h
+}
+
 /// Compute the median of a slice (copies + sorts; fine for reporting paths).
 pub fn median(xs: &[f64]) -> f64 {
     assert!(!xs.is_empty(), "median of empty slice");
@@ -61,5 +75,15 @@ mod tests {
     #[test]
     fn mean_simple() {
         assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+    }
+
+    #[test]
+    fn fnv1a64_known_vectors() {
+        // Standard FNV-1a 64 test vectors — pins the constants so routing
+        // and snapshot checksums never silently change.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+        assert_ne!(fnv1a64(b"session-1"), fnv1a64(b"session-2"));
     }
 }

@@ -1,0 +1,364 @@
+//! Differential suite for the session lifecycle subsystem: the invariant
+//! it locks is that **a restored engine is indistinguishable from one that
+//! never left memory**.
+//!
+//! Engine tier: every randomized edit stream is driven through a pair of
+//! engines — one always resident, one forked through a snapshot→restore
+//! cycle at random points (sometimes via an on-disk spill file). After
+//! EVERY edit the pair must agree on:
+//!   - logits, **bit for bit** (`f32::to_bits` equality, not a tolerance),
+//!   - `EditReport::flops` (exact arithmetic-op counts),
+//!   - the cumulative FLOP ledger and reuse statistics,
+//! and both must stay exact against the dense from-scratch oracle.
+//!
+//! Coordinator tier: a 64-session load test under a deliberately tiny
+//! memory budget proves byte-accounted LRU spilling keeps the measured
+//! resident bytes under the configured budget while every session keeps
+//! serving bit-exact results through suspend/resume cycles it never sees.
+
+use std::sync::Arc;
+use vqt::config::{ModelConfig, ServeConfig};
+use vqt::coordinator::{Backend, Coordinator, Request, Response};
+use vqt::edits::Edit;
+use vqt::incremental::{EngineOptions, IncrementalEngine};
+use vqt::model::ModelWeights;
+use vqt::testutil::gen_edit;
+use vqt::util::Rng;
+
+/// Distinct depths, widths, and VQ-head layouts (mirrors the engine
+/// differential suite).
+fn configs() -> Vec<(&'static str, ModelConfig)> {
+    let tiny = ModelConfig::vqt_tiny();
+    let deep = ModelConfig {
+        n_layers: 3,
+        d_ff: 48,
+        ..ModelConfig::vqt_tiny()
+    };
+    let single_head = ModelConfig {
+        vq_heads: 1,
+        ..ModelConfig::vqt_tiny()
+    };
+    let out = vec![("tiny", tiny), ("tiny-3layer", deep), ("tiny-vq1", single_head)];
+    for (name, cfg) in &out {
+        cfg.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+    }
+    out
+}
+
+/// Assert the cycled engine is indistinguishable from the resident one.
+fn assert_indistinguishable(
+    ctx: &str,
+    resident: &IncrementalEngine,
+    cycled: &IncrementalEngine,
+) {
+    assert_eq!(cycled.tokens(), resident.tokens(), "{ctx}: tokens");
+    assert_eq!(
+        cycled.position_ids(),
+        resident.position_ids(),
+        "{ctx}: position ids"
+    );
+    for (i, (a, b)) in resident.logits().iter().zip(cycled.logits()).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "{ctx}: logit {i} not bit-exact ({a} vs {b})"
+        );
+    }
+    assert_eq!(cycled.ledger, resident.ledger, "{ctx}: FLOP ledger");
+    assert_eq!(cycled.stats, resident.stats, "{ctx}: reuse statistics");
+}
+
+fn drive(name: &str, cfg: &ModelConfig, seed: u64, n_edits: usize) {
+    let w = Arc::new(ModelWeights::random(cfg, seed));
+    let mut rng = Rng::new(seed ^ 0x11FE_C0DE);
+    let n0 = rng.range(8, cfg.max_seq.min(26));
+    let tokens: Vec<u32> = (0..n0).map(|_| rng.below(cfg.vocab_size) as u32).collect();
+    let mut resident = IncrementalEngine::new(w.clone(), &tokens, EngineOptions::default());
+    // The cycled peer starts from one snapshot of the resident engine, so
+    // the pair begins with identical state AND identical counters.
+    let mut cycled =
+        IncrementalEngine::restore(w.clone(), &resident.snapshot(), EngineOptions::default())
+            .unwrap();
+    let spill_path = std::env::temp_dir().join(format!(
+        "vqt_lifecycle_{name}_{seed}_{}.vqss",
+        std::process::id()
+    ));
+    let mut cycles = 0u32;
+    for step in 0..n_edits {
+        let ctx = format!("{name} seed {seed} step {step}");
+        // Suspend/resume the cycled engine at random points (plus one
+        // forced mid-stream cycle so every stream exercises it),
+        // alternating in-memory and on-disk round trips.
+        if step == n_edits / 2 || rng.chance(0.34) {
+            cycles += 1;
+            cycled = if rng.chance(0.5) {
+                cycled.snapshot_to_file(&spill_path).unwrap();
+                IncrementalEngine::restore_from_file(
+                    w.clone(),
+                    &spill_path,
+                    EngineOptions::default(),
+                )
+                .unwrap_or_else(|e| panic!("{ctx}: resume from file: {e:#}"))
+            } else {
+                IncrementalEngine::restore(
+                    w.clone(),
+                    &cycled.snapshot(),
+                    EngineOptions::default(),
+                )
+                .unwrap_or_else(|e| panic!("{ctx}: resume from bytes: {e:#}"))
+            };
+        }
+        let e = gen_edit(&mut rng, resident.len(), cfg.vocab_size, cfg.max_seq);
+        let rep_r = resident.apply_edit(e);
+        let rep_c = cycled.apply_edit(e);
+        assert_eq!(
+            rep_r.flops, rep_c.flops,
+            "{ctx}: per-edit FLOP count diverged after a suspend/resume cycle"
+        );
+        assert_eq!(rep_r.defragged, rep_c.defragged, "{ctx}: defrag divergence");
+        assert_indistinguishable(&ctx, &resident, &cycled);
+        if (step + 1) % 5 == 0 || step + 1 == n_edits {
+            // Both sides must also stay exact against the dense oracle.
+            let v = cycled.verify();
+            assert!(v.is_exact(1e-3), "{ctx}: cycled engine drifted: {v:?}");
+            assert_eq!(v.code_mismatches, 0, "{ctx}");
+        }
+    }
+    assert!(cycles > 0, "{name} seed {seed}: stream never cycled");
+    let _ = std::fs::remove_file(spill_path);
+}
+
+#[test]
+fn suspend_resume_streams_are_bit_exact() {
+    for (name, cfg) in configs() {
+        for seed in [61u64, 62, 63] {
+            drive(name, &cfg, seed, 12);
+        }
+    }
+}
+
+#[test]
+fn suspend_resume_survives_defrag_boundary() {
+    // Cycle immediately after a defragmentation (full rebuild) — the
+    // worst-case structural path — and keep going.
+    let cfg = ModelConfig::vqt_tiny();
+    let w = Arc::new(ModelWeights::random(&cfg, 91));
+    let mut rng = Rng::new(92);
+    let tokens: Vec<u32> = (0..12).map(|_| rng.below(cfg.vocab_size) as u32).collect();
+    let mut resident = IncrementalEngine::new(w.clone(), &tokens, EngineOptions::default());
+    let mut cycled =
+        IncrementalEngine::restore(w.clone(), &resident.snapshot(), EngineOptions::default())
+            .unwrap();
+    let mut defrags = 0u32;
+    for step in 0..40 {
+        if resident.len() >= cfg.max_seq {
+            break;
+        }
+        let e = Edit::Insert {
+            at: 6,
+            tok: rng.below(cfg.vocab_size) as u32,
+        };
+        let rep_r = resident.apply_edit(e);
+        let rep_c = cycled.apply_edit(e);
+        assert_eq!(rep_r.flops, rep_c.flops, "step {step}");
+        if rep_r.defragged {
+            defrags += 1;
+            // Cycle right on the defrag boundary.
+            cycled = IncrementalEngine::restore(
+                w.clone(),
+                &cycled.snapshot(),
+                EngineOptions::default(),
+            )
+            .unwrap();
+            assert_indistinguishable(&format!("post-defrag step {step}"), &resident, &cycled);
+        }
+    }
+    assert!(defrags > 0, "stream never defragged — workload too gentle");
+    assert_indistinguishable("final", &resident, &cycled);
+    assert!(cycled.verify().is_exact(1e-3));
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator tier: eviction under a byte budget, 64 sessions.
+// ---------------------------------------------------------------------------
+
+const LOAD_SESSIONS: usize = 64;
+const LOAD_WAVES: usize = 3;
+const BUDGET_MB: usize = 1;
+
+fn load_test_spill_dir() -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("vqt_load_spill_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+#[test]
+fn sixty_four_session_load_stays_under_memory_budget() {
+    let cfg = ModelConfig::vqt_tiny();
+    let w = Arc::new(ModelWeights::random(&cfg, 7));
+    let spill = load_test_spill_dir();
+    let budget_bytes = BUDGET_MB << 20;
+    let sc = ServeConfig {
+        workers: 4,
+        max_sessions: 256, // total cap never drops a session in this test
+        max_resident_sessions: 0,
+        memory_budget_mb: BUDGET_MB,
+        spill_dir: spill.to_str().unwrap().to_string(),
+        ..ServeConfig::default()
+    };
+    let coordinator = Coordinator::start(
+        Backend {
+            weights: w.clone(),
+            artifacts_dir: None,
+            engine_opts: EngineOptions::default(),
+        },
+        sc,
+    );
+    let client = coordinator.client();
+
+    // Open 64 sessions and keep a serial reference script per session.
+    let mut docs: Vec<Vec<u32>> = Vec::new();
+    let mut scripts: Vec<Vec<Edit>> = vec![Vec::new(); LOAD_SESSIONS];
+    for i in 0..LOAD_SESSIONS {
+        let mut r = Rng::new(4000 + i as u64);
+        let n = r.range(10, 20);
+        let doc: Vec<u32> = (0..n).map(|_| r.below(cfg.vocab_size) as u32).collect();
+        client
+            .request(Request::Open {
+                session: format!("load-{i}"),
+                tokens: doc.clone(),
+            })
+            .unwrap()
+            .logits()
+            .unwrap();
+        docs.push(doc);
+    }
+
+    let budget_gauge = |client: &vqt::coordinator::Client| -> (usize, usize, usize, u64, u64) {
+        match client.request(Request::Stats).unwrap() {
+            Response::Stats(j) => (
+                j.get("resident_bytes").as_usize().unwrap(),
+                j.get("live_sessions").as_usize().unwrap(),
+                j.get("spilled_sessions").as_usize().unwrap(),
+                j.get("suspends").as_usize().unwrap() as u64,
+                j.get("resumes").as_usize().unwrap() as u64,
+            ),
+            other => panic!("{other:?}"),
+        }
+    };
+
+    // The budget must hold from the very first snapshot on.
+    let (bytes, live, spilled, suspends, _) = budget_gauge(&client);
+    assert!(
+        bytes <= budget_bytes,
+        "resident bytes {bytes} over budget {budget_bytes} after opens"
+    );
+    assert_eq!(live + spilled, LOAD_SESSIONS, "no session may be lost");
+    assert!(suspends > 0, "64 tiny sessions must overflow a 1 MiB budget");
+
+    // Waves of edits touch every session in turn — each touch of a cold
+    // session transparently resumes it (and pushes another one out).
+    let mut rng = Rng::new(31337);
+    let mut lens: Vec<usize> = docs.iter().map(Vec::len).collect();
+    for wave in 0..LOAD_WAVES {
+        for i in 0..LOAD_SESSIONS {
+            let e = gen_edit(&mut rng, lens[i], cfg.vocab_size, cfg.max_seq);
+            lens[i] = (lens[i] as isize + e.len_delta()) as usize;
+            scripts[i].push(e);
+            let r = client
+                .request(Request::Edit {
+                    session: format!("load-{i}"),
+                    edit: e,
+                })
+                .unwrap();
+            assert!(r.logits().is_ok(), "wave {wave} session {i}: {r:?}");
+        }
+        let (bytes, live, spilled, _, resumes) = budget_gauge(&client);
+        assert!(
+            bytes <= budget_bytes,
+            "wave {wave}: resident bytes {bytes} over budget {budget_bytes}"
+        );
+        assert_eq!(live + spilled, LOAD_SESSIONS, "wave {wave}: session lost");
+        assert!(resumes > 0, "wave {wave}: cold sessions must have resumed");
+    }
+
+    // Every session's final logits must be bit-identical to a serial
+    // replay on an always-resident engine — suspension was invisible.
+    for i in 0..LOAD_SESSIONS {
+        let served = client
+            .request(Request::EditScript {
+                session: format!("load-{i}"),
+                edits: Vec::new(),
+            })
+            .unwrap()
+            .logits()
+            .unwrap()
+            .to_vec();
+        let mut reference =
+            IncrementalEngine::new(w.clone(), &docs[i], EngineOptions::default());
+        reference.apply_edits(&scripts[i]);
+        assert_eq!(reference.logits().len(), served.len());
+        for (k, (a, b)) in reference.logits().iter().zip(&served).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "session {i} logit {k}: resident {a} vs served-through-spill {b}"
+            );
+        }
+    }
+
+    drop(client);
+    coordinator.shutdown();
+    let _ = std::fs::remove_dir_all(spill);
+}
+
+/// Serving-scale lifecycle tier, run by CI as `cargo test --release --
+/// --ignored` alongside the engine differential tier: the vqt_mini presets
+/// with longer documents, cycling through snapshot/restore mid-stream.
+#[test]
+#[ignore = "release-mode lifecycle tier (CI runs with --ignored)"]
+fn suspend_resume_streams_serving_scale() {
+    for (name, cfg) in [
+        ("vqt_mini", ModelConfig::vqt_mini()),
+        ("vqt_mini_h4", ModelConfig::vqt_mini_h4()),
+    ] {
+        cfg.validate().unwrap();
+        for seed in [71u64, 72, 73] {
+            let w = Arc::new(ModelWeights::random(&cfg, seed));
+            let mut rng = Rng::new(seed ^ 0xFACE);
+            let n0 = rng.range(96, 160);
+            let tokens: Vec<u32> =
+                (0..n0).map(|_| rng.below(cfg.vocab_size) as u32).collect();
+            let mut resident =
+                IncrementalEngine::new(w.clone(), &tokens, EngineOptions::default());
+            let mut cycled = IncrementalEngine::restore(
+                w.clone(),
+                &resident.snapshot(),
+                EngineOptions::default(),
+            )
+            .unwrap();
+            for step in 0..30 {
+                if rng.chance(0.25) {
+                    cycled = IncrementalEngine::restore(
+                        w.clone(),
+                        &cycled.snapshot(),
+                        EngineOptions::default(),
+                    )
+                    .unwrap();
+                }
+                let e = gen_edit(&mut rng, resident.len(), cfg.vocab_size, cfg.max_seq);
+                let rep_r = resident.apply_edit(e);
+                let rep_c = cycled.apply_edit(e);
+                assert_eq!(rep_r.flops, rep_c.flops, "{name} seed {seed} step {step}");
+                if step % 10 == 9 {
+                    assert_indistinguishable(
+                        &format!("{name} seed {seed} step {step}"),
+                        &resident,
+                        &cycled,
+                    );
+                    assert!(cycled.verify().is_exact(1e-3));
+                }
+            }
+        }
+    }
+}

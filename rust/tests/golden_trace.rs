@@ -1,0 +1,219 @@
+//! Golden-trace regression lock: a pinned edit trace (committed under
+//! `tests/data/golden_trace.json`) is replayed on a fixed-seed model, and
+//! the per-step FLOP counts, logits (as exact f32 bit patterns), reuse
+//! statistics, and final ledger are compared against
+//! `tests/data/golden_expected.json`.
+//!
+//! Any kernel or engine refactor that silently changes numerics — a
+//! reordered accumulation, a different tile width, a miscounted ledger
+//! tick — fails this test loudly with the first diverging step.
+//!
+//! Blessing protocol: when the expected file is ABSENT the test computes
+//! it, writes it next to the trace, prints a notice, and passes — commit
+//! the generated file to lock the numerics. (Bless-on-absence rather than
+//! an env-var flag so the lock bootstraps on machines where the repo
+//! author cannot run cargo; regeneration after an *intentional* numerics
+//! change is `rm tests/data/golden_expected.json && cargo test --test
+//! golden_trace`.) When the file exists, the comparison is exact — no
+//! tolerances anywhere.
+//!
+//! Independent of the golden file, every replay is cross-checked against
+//! the dense from-scratch oracle, so even an unblessed first run verifies
+//! exactness. With `VQT_BENCH_SMOKE=1` (the CI smoke job) the oracle
+//! cross-check runs only at the end, keeping the job well under a minute.
+
+use std::sync::Arc;
+use vqt::config::ModelConfig;
+use vqt::edits::Edit;
+use vqt::incremental::{EngineOptions, IncrementalEngine};
+use vqt::model::ModelWeights;
+use vqt::util::Json;
+
+fn data_path(name: &str) -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/data")
+        .join(name)
+}
+
+fn load_trace() -> (ModelConfig, u64, Vec<u32>, Vec<Edit>) {
+    let text = std::fs::read_to_string(data_path("golden_trace.json")).expect("trace file");
+    let j = Json::parse(&text).expect("trace JSON");
+    let cfg = ModelConfig::from_json(j.get("model")).expect("trace model config");
+    let seed = j.get("weights_seed").as_usize().expect("weights_seed") as u64;
+    let initial: Vec<u32> = j
+        .get("initial")
+        .as_arr()
+        .expect("initial")
+        .iter()
+        .map(|v| v.as_usize().unwrap() as u32)
+        .collect();
+    let edits: Vec<Edit> = j
+        .get("edits")
+        .as_arr()
+        .expect("edits")
+        .iter()
+        .map(|e| {
+            let at = e.get("at").as_usize().unwrap();
+            match e.get("kind").as_str().unwrap() {
+                "replace" => Edit::Replace {
+                    at,
+                    tok: e.get("tok").as_usize().unwrap() as u32,
+                },
+                "insert" => Edit::Insert {
+                    at,
+                    tok: e.get("tok").as_usize().unwrap() as u32,
+                },
+                "delete" => Edit::Delete { at },
+                k => panic!("unknown kind {k}"),
+            }
+        })
+        .collect();
+    (cfg, seed, initial, edits)
+}
+
+/// One replay step's observable outputs, exactly.
+struct Step {
+    flops: u64,
+    logit_bits: Vec<u32>,
+}
+
+fn replay() -> (Vec<Step>, IncrementalEngine) {
+    let (cfg, seed, initial, edits) = load_trace();
+    let smoke = std::env::var("VQT_BENCH_SMOKE").is_ok();
+    let w = Arc::new(ModelWeights::random(&cfg, seed));
+    let mut eng = IncrementalEngine::new(w, &initial, EngineOptions::default());
+    let mut steps = Vec::with_capacity(edits.len());
+    for (i, &e) in edits.iter().enumerate() {
+        let rep = eng.apply_edit(e);
+        steps.push(Step {
+            flops: rep.flops,
+            logit_bits: rep.logits.iter().map(|x| x.to_bits()).collect(),
+        });
+        // The oracle cross-check keeps even an unblessed run honest.
+        if !smoke || i + 1 == edits.len() {
+            let v = eng.verify();
+            assert!(v.is_exact(1e-3), "step {i}: dense divergence {v:?}");
+        }
+    }
+    (steps, eng)
+}
+
+fn expected_json(steps: &[Step], eng: &IncrementalEngine) -> Json {
+    let s = &eng.stats;
+    let led = &eng.ledger;
+    Json::obj(vec![
+        (
+            "steps",
+            Json::Arr(
+                steps
+                    .iter()
+                    .map(|st| {
+                        Json::obj(vec![
+                            ("flops", Json::num(st.flops as f64)),
+                            (
+                                "logit_bits",
+                                Json::Arr(
+                                    st.logit_bits
+                                        .iter()
+                                        .map(|&b| Json::num(b as f64))
+                                        .collect(),
+                                ),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "final_stats",
+            Json::obj(vec![
+                ("edits_applied", Json::num(s.edits_applied as f64)),
+                ("defrags", Json::num(s.defrags as f64)),
+                ("full_rebuilds", Json::num(s.full_rebuilds as f64)),
+                ("rows_recomputed", Json::num(s.rows_recomputed as f64)),
+                ("corrections", Json::num(s.corrections as f64)),
+                ("code_flips", Json::num(s.code_flips as f64)),
+                ("outputs_recomputed", Json::num(s.outputs_recomputed as f64)),
+            ]),
+        ),
+        (
+            "final_ledger",
+            Json::obj(vec![
+                ("linear", Json::num(led.linear as f64)),
+                ("attention", Json::num(led.attention as f64)),
+                ("vq", Json::num(led.vq as f64)),
+                ("elementwise", Json::num(led.elementwise as f64)),
+                ("embed", Json::num(led.embed as f64)),
+                ("bookkeeping", Json::num(led.bookkeeping as f64)),
+            ]),
+        ),
+    ])
+}
+
+#[test]
+fn golden_trace_replay_matches_expected() {
+    let (steps, eng) = replay();
+    let computed = expected_json(&steps, &eng);
+    let expected_path = data_path("golden_expected.json");
+    if !expected_path.exists() {
+        std::fs::write(&expected_path, format!("{computed}\n")).expect("bless golden file");
+        eprintln!(
+            "golden_trace: blessed {} — commit this file to lock engine numerics",
+            expected_path.display()
+        );
+        return;
+    }
+    let text = std::fs::read_to_string(&expected_path).expect("expected file");
+    let expected = Json::parse(&text).expect("expected JSON");
+    // Compare step-by-step for a pinpointed failure before the full check.
+    let exp_steps = expected.get("steps").as_arr().expect("steps");
+    assert_eq!(exp_steps.len(), steps.len(), "trace length changed");
+    for (i, (exp, got)) in exp_steps.iter().zip(&steps).enumerate() {
+        assert_eq!(
+            exp.get("flops").as_usize(),
+            Some(got.flops as usize),
+            "step {i}: FLOP count changed"
+        );
+        let exp_bits: Vec<u32> = exp
+            .get("logit_bits")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_usize().unwrap() as u32)
+            .collect();
+        assert_eq!(
+            exp_bits, got.logit_bits,
+            "step {i}: logits changed at the bit level"
+        );
+    }
+    assert_eq!(
+        expected, computed,
+        "reuse statistics or ledger categories changed"
+    );
+}
+
+/// The trace itself must stay structurally valid (lengths in bounds at
+/// every step) — guards against hand-edits to the JSON breaking the lock
+/// silently.
+#[test]
+fn golden_trace_is_well_formed() {
+    let (cfg, _, initial, edits) = load_trace();
+    let mut len = initial.len();
+    assert!(len > 0 && len <= cfg.max_seq);
+    for (i, e) in edits.iter().enumerate() {
+        match *e {
+            Edit::Replace { at, tok } => {
+                assert!(at < len && (tok as usize) < cfg.vocab_size, "edit {i}")
+            }
+            Edit::Insert { at, tok } => {
+                assert!(at <= len && (tok as usize) < cfg.vocab_size, "edit {i}");
+                len += 1;
+            }
+            Edit::Delete { at } => {
+                assert!(at < len && len > 1, "edit {i}");
+                len -= 1;
+            }
+        }
+        assert!(len <= cfg.max_seq, "edit {i} overflows max_seq");
+    }
+}

@@ -24,6 +24,12 @@ fn start(cfg_mut: impl FnOnce(&mut ServeConfig)) -> Coordinator {
     )
 }
 
+fn temp_spill_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("vqt_itest_spill_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
 fn doc(seed: u64, n: usize) -> Vec<u32> {
     let mut r = Rng::new(seed);
     (0..n).map(|_| r.below(60) as u32).collect()
@@ -402,4 +408,175 @@ fn suggest_checkpoint_restore_cycle() {
         })
         .unwrap();
     assert!(matches!(r, Response::Err(_)));
+}
+
+#[test]
+fn suspend_resume_and_session_info_verbs() {
+    let spill = temp_spill_dir("verbs");
+    let c = start(|sc| {
+        sc.spill_dir = spill.to_str().unwrap().to_string();
+        sc.workers = 2;
+    });
+    let client = c.client();
+    let tokens = doc(30, 20);
+    client
+        .request(Request::Open {
+            session: "lv".into(),
+            tokens: tokens.clone(),
+        })
+        .unwrap()
+        .logits()
+        .unwrap();
+    let r = client
+        .request(Request::Edit {
+            session: "lv".into(),
+            edit: Edit::Replace { at: 4, tok: 11 },
+        })
+        .unwrap();
+    let logits_resident: Vec<u32> = r.logits().unwrap().iter().map(|x| x.to_bits()).collect();
+
+    // Resident info reports measured bytes and the edit count.
+    match client
+        .request(Request::SessionInfo { session: "lv".into() })
+        .unwrap()
+    {
+        Response::SessionInfo {
+            state,
+            resident_bytes,
+            edits,
+            doc_len,
+            ..
+        } => {
+            assert_eq!(state, "resident");
+            assert!(resident_bytes > 0);
+            assert_eq!(edits, 1);
+            assert_eq!(doc_len, tokens.len());
+        }
+        other => panic!("{other:?}"),
+    }
+
+    // Suspend (idempotent), observe the state flip and the spill file.
+    assert!(matches!(
+        client.request(Request::Suspend { session: "lv".into() }).unwrap(),
+        Response::Done
+    ));
+    assert!(matches!(
+        client.request(Request::Suspend { session: "lv".into() }).unwrap(),
+        Response::Done
+    ));
+    match client
+        .request(Request::SessionInfo { session: "lv".into() })
+        .unwrap()
+    {
+        Response::SessionInfo {
+            state,
+            resident_bytes,
+            spill_bytes,
+            ..
+        } => {
+            assert_eq!(state, "suspended");
+            assert_eq!(resident_bytes, 0);
+            assert!(spill_bytes > 0);
+        }
+        other => panic!("{other:?}"),
+    }
+    match client.request(Request::Stats).unwrap() {
+        Response::Stats(j) => {
+            assert_eq!(j.get("suspends").as_usize(), Some(1));
+            assert_eq!(j.get("spilled_sessions").as_usize(), Some(1));
+            assert_eq!(j.get("live_sessions").as_usize(), Some(0));
+        }
+        other => panic!("{other:?}"),
+    }
+
+    // An edit on a suspended session transparently resumes it — and the
+    // result is bit-identical to an always-resident engine replaying the
+    // same edit sequence (same weights seed as `start()` uses).
+    let r = client
+        .request(Request::Edit {
+            session: "lv".into(),
+            edit: Edit::Replace { at: 9, tok: 3 },
+        })
+        .unwrap();
+    let logits_resumed: Vec<u32> = r.logits().unwrap().iter().map(|x| x.to_bits()).collect();
+    let w = Arc::new(ModelWeights::random(&ModelConfig::vqt_tiny(), 5));
+    let mut reference =
+        vqt::incremental::IncrementalEngine::new(w, &tokens, EngineOptions::default());
+    reference.apply_edits(&[Edit::Replace { at: 4, tok: 11 }]);
+    let ref_after_first: Vec<u32> = reference.logits().iter().map(|x| x.to_bits()).collect();
+    assert_eq!(ref_after_first, logits_resident, "pre-suspend determinism");
+    reference.apply_edits(&[Edit::Replace { at: 9, tok: 3 }]);
+    let ref_after_second: Vec<u32> = reference.logits().iter().map(|x| x.to_bits()).collect();
+    assert_eq!(
+        logits_resumed, ref_after_second,
+        "suspend/resume must be invisible at the bit level"
+    );
+    match client.request(Request::Stats).unwrap() {
+        Response::Stats(j) => {
+            assert_eq!(j.get("resumes").as_usize(), Some(1));
+            assert_eq!(j.get("spilled_sessions").as_usize(), Some(0));
+            assert_eq!(j.get("live_sessions").as_usize(), Some(1));
+            assert!(j.get("resident_bytes").as_usize().unwrap() > 0);
+        }
+        other => panic!("{other:?}"),
+    }
+
+    // Explicit Resume on a resident session is a cheap no-op; on an
+    // unknown session it errors.
+    assert!(matches!(
+        client.request(Request::Resume { session: "lv".into() }).unwrap(),
+        Response::Done
+    ));
+    assert!(matches!(
+        client.request(Request::Resume { session: "ghost".into() }).unwrap(),
+        Response::Err(_)
+    ));
+    assert!(matches!(
+        client.request(Request::SessionInfo { session: "ghost".into() }).unwrap(),
+        Response::Err(_)
+    ));
+
+    // Without a spill dir, Suspend is a clean error.
+    let c2 = start(|_| {});
+    let cl2 = c2.client();
+    cl2.request(Request::Open {
+        session: "nospill".into(),
+        tokens: doc(1, 8),
+    })
+    .unwrap();
+    match cl2
+        .request(Request::Suspend { session: "nospill".into() })
+        .unwrap()
+    {
+        Response::Err(e) => assert!(e.contains("spill_dir"), "{e}"),
+        other => panic!("{other:?}"),
+    }
+
+    // Closing a suspended session removes its spill file.
+    client
+        .request(Request::Suspend { session: "lv".into() })
+        .unwrap();
+    match client.request(Request::Close { session: "lv".into() }).unwrap() {
+        Response::Closed { existed } => assert!(existed),
+        other => panic!("{other:?}"),
+    }
+    // No snapshot may be left anywhere under the spill root (the
+    // coordinator spills into a per-instance subdirectory).
+    fn vqss_files(dir: &std::path::Path) -> Vec<std::path::PathBuf> {
+        let mut out = Vec::new();
+        if let Ok(rd) = std::fs::read_dir(dir) {
+            for e in rd.flatten() {
+                let p = e.path();
+                if p.is_dir() {
+                    out.extend(vqss_files(&p));
+                } else if p.extension().is_some_and(|x| x == "vqss") {
+                    out.push(p);
+                }
+            }
+        }
+        out
+    }
+    let leftovers = vqss_files(&spill);
+    assert!(leftovers.is_empty(), "spill files leaked: {leftovers:?}");
+    let _ = std::fs::remove_dir_all(spill);
 }

@@ -1,0 +1,181 @@
+//! Property tests for `edits/diff.rs` (the offline revision-alignment
+//! path): on random token sequences, applying the diff always reproduces
+//! the target, and for single-splice edits the script is minimal.
+//!
+//! Uses the in-crate seeded property harness (`vqt::testutil::check`), so
+//! every failure reports the generating seed and reproduces exactly.
+
+use vqt::edits::{apply_edits, diff_tokens, edit_distance, Edit};
+use vqt::testutil::{check, gen_doc};
+use vqt::util::Rng;
+
+/// `apply(a, diff(a, b)) == b` for arbitrary (a, b), including empty and
+/// wildly different lengths.
+#[test]
+fn prop_apply_diff_roundtrips() {
+    check(
+        "apply∘diff = id",
+        300,
+        |r: &mut Rng| {
+            let a = gen_doc(r, 0, 48, 12); // small vocab ⇒ many repeats
+            let b = gen_doc(r, 0, 48, 12);
+            (a, b)
+        },
+        |(a, b)| {
+            let script = diff_tokens(a, b);
+            assert_eq!(&apply_edits(a, &script), b, "script {script:?}");
+        },
+    );
+}
+
+/// Identical sequences produce the empty script, and the script length is
+/// always sandwiched by the LCS distance: `dist/2 ≤ len ≤ dist`
+/// (replacements count 2 in the distance but 1 in the script).
+#[test]
+fn prop_script_length_tracks_distance() {
+    check(
+        "len vs distance",
+        300,
+        |r: &mut Rng| {
+            let a = gen_doc(r, 0, 40, 8);
+            let b = gen_doc(r, 0, 40, 8);
+            (a, b)
+        },
+        |(a, b)| {
+            let dist = edit_distance(a, b);
+            let len = diff_tokens(a, b).len();
+            assert!(len <= dist, "script {len} > distance {dist}");
+            assert!(2 * len >= dist, "script {len} impossibly short for {dist}");
+            if a == b {
+                assert_eq!(len, 0);
+            }
+        },
+    );
+}
+
+/// Single-splice minimality, insertion flavor: splicing `m` fresh tokens
+/// (disjoint vocab, so nothing accidentally matches) into `a` yields
+/// exactly `m` inserts — no spurious deletes, no detours.
+#[test]
+fn prop_single_splice_insert_is_minimal() {
+    check(
+        "splice-insert minimal",
+        200,
+        |r: &mut Rng| {
+            let a = gen_doc(r, 1, 40, 30);
+            let at = r.below(a.len() + 1);
+            let m = r.range(1, 6);
+            // Fresh tokens from a disjoint range: a uses [0,30), these use
+            // [100,130).
+            let fresh: Vec<u32> = (0..m).map(|_| 100 + r.below(30) as u32).collect();
+            (a, at, fresh)
+        },
+        |(a, at, fresh)| {
+            let mut b = a.clone();
+            for (k, &t) in fresh.iter().enumerate() {
+                b.insert(at + k, t);
+            }
+            assert_eq!(edit_distance(a, &b), fresh.len(), "distance must be m");
+            let script = diff_tokens(a, &b);
+            assert_eq!(script.len(), fresh.len(), "minimal script is m inserts");
+            assert!(
+                script.iter().all(|e| matches!(e, Edit::Insert { .. })),
+                "{script:?}"
+            );
+            assert_eq!(&apply_edits(a, &script), &b);
+        },
+    );
+}
+
+/// Single-splice minimality, deletion flavor: removing a contiguous run of
+/// `k` tokens yields exactly `k` deletes.
+#[test]
+fn prop_single_splice_delete_is_minimal() {
+    check(
+        "splice-delete minimal",
+        200,
+        |r: &mut Rng| {
+            let a = gen_doc(r, 2, 40, 30);
+            let k = r.range(1, a.len().min(6));
+            let at = r.below(a.len() - k + 1);
+            (a, at, k)
+        },
+        |(a, at, k)| {
+            let (at, k) = (*at, *k);
+            let mut b = a.clone();
+            b.drain(at..at + k);
+            // The run's tokens may also occur elsewhere, so distance is at
+            // MOST k — and a length difference of k means at LEAST k.
+            assert_eq!(edit_distance(a, &b), k);
+            let script = diff_tokens(a, &b);
+            assert_eq!(script.len(), k, "minimal script is k deletes: {script:?}");
+            assert!(script.iter().all(|e| matches!(e, Edit::Delete { .. })));
+            assert_eq!(&apply_edits(a, &script), &b);
+        },
+    );
+}
+
+/// A document of distinct tokens (values < 80, disjoint from the fresh
+/// range [100, 130)). Distinctness makes the optimal LCS alignment unique,
+/// which is what makes the exact-fusion claims below provable; with
+/// repeated neighbors the diff is still correct and minimal in *distance*,
+/// but may legitimately choose a non-fused del+ins pair.
+fn gen_distinct(r: &mut Rng, min_len: usize, max_len: usize) -> Vec<u32> {
+    let n = r.range(min_len, max_len);
+    let off = r.below(40) as u32;
+    (0..n as u32).map(|i| off + i).collect()
+}
+
+/// Single-token replacement with a fresh value fuses into exactly one
+/// `Replace` (the engine-cheap form — no position-pool traffic).
+#[test]
+fn prop_single_replace_fuses() {
+    check(
+        "replace fuses",
+        200,
+        |r: &mut Rng| {
+            let a = gen_distinct(r, 1, 40);
+            let at = r.below(a.len());
+            let tok = 100 + r.below(30) as u32;
+            (a, at, tok)
+        },
+        |(a, at, tok)| {
+            let (at, tok) = (*at, *tok);
+            let mut b = a.clone();
+            b[at] = tok;
+            let script = diff_tokens(a, &b);
+            assert_eq!(script, vec![Edit::Replace { at, tok }], "exact fusion");
+            assert_eq!(edit_distance(a, &b), 2, "LCS counts replace as del+ins");
+        },
+    );
+}
+
+/// Replacing a contiguous run of k distinct tokens with k fresh tokens:
+/// distance is exactly 2k, and the boundary Replace fusion brings the
+/// script to at most 2k−1 edits (k of them at least).
+#[test]
+fn prop_block_replace_bounds() {
+    check(
+        "block replace bounds",
+        200,
+        |r: &mut Rng| {
+            let a = gen_distinct(r, 2, 40);
+            let k = r.range(1, a.len().min(5));
+            let at = r.below(a.len() - k + 1);
+            let fresh: Vec<u32> = (0..k).map(|_| 100 + r.below(30) as u32).collect();
+            (a, at, fresh)
+        },
+        |(a, at, fresh)| {
+            let k = fresh.len();
+            let mut b = a.clone();
+            b[*at..*at + k].copy_from_slice(fresh);
+            assert_eq!(edit_distance(a, &b), 2 * k);
+            let script = diff_tokens(a, &b);
+            assert!(
+                script.len() >= k && script.len() < 2 * k,
+                "k={k}: script {script:?}"
+            );
+            assert_eq!(&apply_edits(a, &script), &b);
+        },
+    );
+}
