@@ -23,6 +23,7 @@ fn mini_with(q: usize, heads: usize) -> ModelConfig {
 }
 
 fn main() {
+    let bench_t0 = std::time::Instant::now();
     println!("# ablations (vqt_mini scale, deterministic random weights)");
     let mut rng = Rng::new(31);
     let n = 256;
@@ -144,5 +145,10 @@ fn main() {
         (dense_forward_flops(&softmax, 512) as f64 / dense_forward_flops(&gelu, 512) as f64
             - 1.0)
             * 100.0
+    );
+
+    vqt::bench::emit_json(
+        "ablations",
+        &[("total_wall_ns", bench_t0.elapsed().as_nanos() as f64)],
     );
 }

@@ -12,6 +12,7 @@ use vqt::edits::trace::TraceConfig;
 use vqt::incremental::EngineOptions;
 
 fn main() {
+    let bench_t0 = std::time::Instant::now();
     let n_pairs = bench_pairs();
     let tcfg = TraceConfig::mini();
     let pairs = gen_pairs(&tcfg, n_pairs, 3);
@@ -68,6 +69,13 @@ fn main() {
         "Fig 3 (bucketed): speedup by fraction modified",
         &["fraction", "pairs", "median speedup"],
         &rows,
+    );
+    vqt::bench::emit_json(
+        "fig3_offline",
+        &[
+            ("total_wall_ns", bench_t0.elapsed().as_nanos() as f64),
+            ("median_speedup_ratio", vqt::util::median(&speedups)),
+        ],
     );
 }
 

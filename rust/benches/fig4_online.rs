@@ -12,6 +12,7 @@ use vqt::incremental::EngineOptions;
 use vqt::util::Rng;
 
 fn main() {
+    let bench_t0 = std::time::Instant::now();
     let n_pairs = bench_pairs();
     let tcfg = TraceConfig::mini();
     let pairs = gen_pairs(&tcfg, n_pairs, 4);
@@ -68,4 +69,13 @@ fn main() {
             l / e
         );
     }
+
+    let mut metrics = vec![("total_wall_ns", bench_t0.elapsed().as_nanos() as f64)];
+    let late_over_early = if early.is_empty() || late.is_empty() {
+        0.0
+    } else {
+        vqt::util::median(&late) / vqt::util::median(&early)
+    };
+    metrics.push(("late_over_early_ratio", late_over_early));
+    vqt::bench::emit_json("fig4_online", &metrics);
 }

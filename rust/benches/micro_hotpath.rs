@@ -9,10 +9,10 @@
 //! section executes, nothing is timed long enough to matter.
 
 use std::sync::Arc;
-use vqt::bench::{print_table, serving_weights, time_it};
+use vqt::bench::{emit_json, print_table, serving_weights, time_it};
 use vqt::config::ModelConfig;
 use vqt::edits::Edit;
-use vqt::incremental::{EngineOptions, IncrementalEngine};
+use vqt::incremental::{apply_scripts_batched, EngineOptions, IncrementalEngine};
 use vqt::runtime::ArtifactRuntime;
 use vqt::tensor::{self, Matrix};
 use vqt::util::Rng;
@@ -214,6 +214,69 @@ fn main() {
         print_table("L2 AOT path (PJRT CPU)", &["op", "p50 (ms)", "mean (ms)"], &rows);
     }
 
+    // --- cross-session batched vs per-session execution -------------------
+    // The PR-5 serving lever: S sessions each apply one mid-document
+    // replace; unbatched walks the layer weights once per session, the
+    // batched path pools every session's block-tail rows into stacked
+    // GEMMs and streams each weight matrix once per wave. Bit-exact by
+    // construction (differential_batch.rs); this table shows the
+    // amortization is also a wall-clock win that grows with S.
+    let (bw, bi) = if smoke { (0, 1) } else { (1, 8) };
+    let mut rows = Vec::new();
+    let mut amortized_ratio_s8 = 1.0f64;
+    let base_doc: Vec<u32> = (0..256).map(|_| rng.below(256) as u32).collect();
+    for &s in &[2usize, 4, 8, 16] {
+        let mk = |count: usize| -> Vec<IncrementalEngine> {
+            (0..count)
+                .map(|i| {
+                    let mut d = base_doc.clone();
+                    d[i % d.len()] = (i % 251) as u32; // distinct docs
+                    IncrementalEngine::new(w.clone(), &d, EngineOptions::default())
+                })
+                .collect()
+        };
+        let mut unb = mk(s);
+        let mut tok = 1u32;
+        let tu = time_it(bw, bi, || {
+            tok = (tok + 1) % 255;
+            for e in unb.iter_mut() {
+                e.apply_edit(Edit::Replace { at: 128, tok });
+            }
+        });
+        let mut bat = mk(s);
+        let mut tok2 = 1u32;
+        let tb = time_it(bw, bi, || {
+            tok2 = (tok2 + 1) % 255;
+            let scripts: Vec<[Edit; 1]> =
+                (0..s).map(|_| [Edit::Replace { at: 128, tok: tok2 }]).collect();
+            let script_refs: Vec<&[Edit]> = scripts.iter().map(|a| a.as_slice()).collect();
+            let mut refs: Vec<&mut IncrementalEngine> = bat.iter_mut().collect();
+            apply_scripts_batched(&mut refs, &script_refs, 1024);
+        });
+        let ratio = tu.p50.as_secs_f64() / tb.p50.as_secs_f64().max(1e-9);
+        if s == 8 {
+            amortized_ratio_s8 = ratio;
+        }
+        rows.push(vec![
+            format!("replace ×{s} sessions (n=256)"),
+            format!("{:.2}", tu.p50.as_secs_f64() * 1e3),
+            format!("{:.2}", tb.p50.as_secs_f64() * 1e3),
+            format!("{:.2}x", ratio),
+            format!("{:.3}", tb.p50.as_secs_f64() * 1e3 / s as f64),
+        ]);
+    }
+    print_table(
+        "cross-session batched block tails vs per-session execution",
+        &[
+            "workload",
+            "unbatched p50 (ms)",
+            "batched p50 (ms)",
+            "speedup",
+            "batched ms/session",
+        ],
+        &rows,
+    );
+
     // --- sustained online throughput --------------------------------------
     let n = 384;
     let tokens: Vec<u32> = (0..n).map(|_| rng.below(256) as u32).collect();
@@ -250,6 +313,24 @@ fn main() {
         eng.stats.defrags,
         vqt::flops::dense_forward_flops(&cfg, n) as f64 * edits as f64
             / eng.ledger.total() as f64
+    );
+
+    emit_json(
+        "micro_hotpath",
+        &[
+            (
+                "sustained_edit_wall_ns",
+                dt.as_nanos() as f64 / edits as f64,
+            ),
+            ("sustained_edits_per_s_ops", edits as f64 / dt.as_secs_f64()),
+            (
+                "ledger_speedup_ratio",
+                vqt::flops::dense_forward_flops(&cfg, n) as f64 * edits as f64
+                    / eng.ledger.total() as f64,
+            ),
+            ("batched_x8_speedup_ratio", amortized_ratio_s8),
+            ("engine_flops", eng.ledger.total() as f64),
+        ],
     );
 
     let _ = Arc::strong_count(&w);

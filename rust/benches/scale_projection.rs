@@ -88,6 +88,7 @@ fn projected_edit_cost(cfg: &ModelConfig, n: usize, r: &Rates, flip_mult: f64) -
 }
 
 fn main() {
+    let bench_t0 = std::time::Instant::now();
     let n_pairs = bench_pairs().min(150);
     let tcfg = TraceConfig::mini();
     let pairs = gen_pairs(&tcfg, n_pairs, 9);
@@ -130,4 +131,15 @@ fn main() {
         &rows,
     );
     println!("\npaper's measured value at this scale: 12.1× (median)");
+
+    vqt::bench::emit_json(
+        "scale_projection",
+        &[
+            ("total_wall_ns", bench_t0.elapsed().as_nanos() as f64),
+            (
+                "projected_speedup_1x_ratio",
+                dense / projected_edit_cost(&opt, n, &rates, 1.0),
+            ),
+        ],
+    );
 }

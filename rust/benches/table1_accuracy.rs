@@ -27,10 +27,20 @@ fn spread_positions(len: usize, seq: usize, pool: usize) -> Vec<u32> {
 }
 
 fn main() {
+    let bench_t0 = std::time::Instant::now();
     let dir = artifacts();
     let eval_path = dir.join("table1_eval.bin");
     if !eval_path.exists() {
         println!("Table 1 requires trained checkpoints: run `make train` first.");
+        // Emit anyway (with a skip marker): BENCH_*.json presence proves the
+        // bench runs, and CI's bench-smoke job never has trained checkpoints.
+        vqt::bench::emit_json(
+            "table1_accuracy",
+            &[
+                ("skipped_ops", 1.0),
+                ("total_wall_ns", bench_t0.elapsed().as_nanos() as f64),
+            ],
+        );
         return;
     }
     let eval = TensorFile::load(&eval_path).expect("eval set");
@@ -122,4 +132,9 @@ fn main() {
             mismatches
         );
     }
+
+    vqt::bench::emit_json(
+        "table1_accuracy",
+        &[("total_wall_ns", bench_t0.elapsed().as_nanos() as f64)],
+    );
 }

@@ -19,6 +19,7 @@ use vqt::incremental::EngineOptions;
 use vqt::util::Rng;
 
 fn main() {
+    let bench_t0 = std::time::Instant::now();
     let n_pairs = bench_pairs();
     let tcfg = TraceConfig::mini();
     let pairs = gen_pairs(&tcfg, n_pairs, 20260710);
@@ -105,5 +106,10 @@ fn main() {
         "\nPaper (OPT-125M scale): Distil 2×; VQ h=2 12.1×/4.7×/4.8×; VQ h=4 5.2×/2.5×/2.2×.\n\
          Expected to hold in *shape* (VQ ≫ Distil on atomic; offline < atomic;\n\
          h=2 > h=4): absolute factors scale with depth/width (see docs/ARCHITECTURE.md §3)."
+    );
+
+    vqt::bench::emit_json(
+        "table2_speedups",
+        &[("total_wall_ns", bench_t0.elapsed().as_nanos() as f64)],
     );
 }

@@ -77,6 +77,68 @@ pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
     }
 }
 
+/// Append a bench's headline metrics to the consolidated JSON file named
+/// by `VQT_BENCH_JSON` (the CI bench-smoke trajectory emitter — see
+/// docs/BENCH_SCHEMA.md). The file is one top-level object keyed by bench
+/// name; each bench read-modify-writes its own entry, so the benches can
+/// run in any order and the union lands in one artifact. No-op when the
+/// env var is unset. Metric-name convention: suffix `_wall_ns` for
+/// wall-clock nanoseconds, `_flops` for ledger ops, `_ops` for op counts,
+/// `_ratio` for dimensionless ratios.
+pub fn emit_json(bench: &str, metrics: &[(&str, f64)]) {
+    let Some(path) = std::env::var_os("VQT_BENCH_JSON") else {
+        return;
+    };
+    emit_json_to(path.as_ref(), bench, metrics);
+}
+
+/// [`emit_json`] with an explicit target path (the env-var-free core —
+/// also what the tests drive, so they never mutate the process
+/// environment under the multithreaded test harness).
+fn emit_json_to(path: &std::path::Path, bench: &str, metrics: &[(&str, f64)]) {
+    // An absent file is the normal first-emitter case; an unparseable or
+    // non-object one means earlier benches' metrics are about to be
+    // discarded — warn rather than silently shipping a partial artifact.
+    let mut root = match std::fs::read_to_string(path) {
+        Err(_) => crate::util::Json::Obj(Default::default()),
+        Ok(t) => match crate::util::Json::parse(&t) {
+            Ok(j) => j,
+            Err(e) => {
+                eprintln!(
+                    "warning: {} held invalid JSON ({e}); resetting it — previously emitted bench metrics are lost",
+                    path.display()
+                );
+                crate::util::Json::Obj(Default::default())
+            }
+        },
+    };
+    if !matches!(root, crate::util::Json::Obj(_)) {
+        eprintln!(
+            "warning: {} did not hold a JSON object; resetting it — previously emitted bench metrics are lost",
+            path.display()
+        );
+        root = crate::util::Json::Obj(Default::default());
+    }
+    let entry = crate::util::Json::obj(
+        metrics
+            .iter()
+            .map(|&(k, v)| (k, crate::util::Json::num(v)))
+            .collect(),
+    );
+    if let crate::util::Json::Obj(map) = &mut root {
+        map.insert(bench.to_string(), entry);
+    }
+    if let Err(e) = std::fs::write(path, format!("{root}\n")) {
+        eprintln!("(emit_json: could not write {}: {e})", path.display());
+    } else {
+        println!(
+            "(emitted {} metrics for '{bench}' to {})",
+            metrics.len(),
+            path.display()
+        );
+    }
+}
+
 /// Environment-tunable workload size: `VQT_BENCH_PAIRS` (default mirrors
 /// the paper's 500, scaled down to keep `cargo bench` under control; set
 /// to 500 for the full protocol).
@@ -265,5 +327,22 @@ mod tests {
         });
         assert_eq!(t.iters, 5);
         assert!(t.min <= t.p50 && t.p50 <= t.max);
+    }
+
+    #[test]
+    fn emit_json_merges_across_benches() {
+        let path = std::env::temp_dir().join(format!("vqt_bench_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        // Drive the env-var-free core directly: mutating the process env
+        // (set_var) races concurrent getenv calls from parallel tests.
+        emit_json_to(&path, "bench_a", &[("x_wall_ns", 123.0), ("y_flops", 4.0)]);
+        emit_json_to(&path, "bench_b", &[("z_ratio", 2.5)]);
+        // Re-emitting a bench replaces its entry, keeps the others.
+        emit_json_to(&path, "bench_a", &[("x_wall_ns", 456.0)]);
+        let j = crate::util::Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.get("bench_a").get("x_wall_ns").as_f64(), Some(456.0));
+        assert!(j.get("bench_a").get("y_flops").as_f64().is_none());
+        assert_eq!(j.get("bench_b").get("z_ratio").as_f64(), Some(2.5));
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -217,7 +217,21 @@ pub struct ServeConfig {
     /// Max requests batched together (offline batch path), per shard.
     pub max_batch: usize,
     /// Batching deadline: flush a partial batch after this many ms.
+    /// Superseded by `batch_window_us` when that is non-zero.
     pub batch_deadline_ms: u64,
+    /// Queue-drain window in µs for the size-or-timeout batcher: after the
+    /// first job arrives, the shard keeps draining its queue until
+    /// `max_batch` jobs are collected or this window elapses, then
+    /// executes the batch (cross-session edit work pooled into stacked
+    /// GEMMs). 0 ⇒ fall back to the coarser `batch_deadline_ms`.
+    pub batch_window_us: u64,
+    /// Cap on rows stacked into one pooled cross-session block-tail GEMM.
+    /// Bounds the GEMM working set — the `rows × d_ff` FFN intermediate is
+    /// the largest per-chunk buffer; the gather/scatter staging itself
+    /// scales with the wave's total changed rows, which `max_batch` (the
+    /// sessions per drain) bounds. 0 disables the batched execution path
+    /// entirely (every request runs the classic per-session path).
+    pub max_batch_rows: usize,
     /// Pool-wide queue capacity before backpressure rejects new requests
     /// (each shard gets `queue_capacity / workers`, at least 1).
     pub queue_capacity: usize,
@@ -252,6 +266,8 @@ impl Default for ServeConfig {
             workers: 1,
             max_batch: 8,
             batch_deadline_ms: 5,
+            batch_window_us: 0,
+            max_batch_rows: 64,
             queue_capacity: 256,
             verify_every: 0,
             max_sessions: 64,
@@ -273,6 +289,14 @@ impl ServeConfig {
                 .get("batch_deadline_ms")
                 .as_usize()
                 .unwrap_or(d.batch_deadline_ms as usize) as u64,
+            batch_window_us: j
+                .get("batch_window_us")
+                .as_usize()
+                .unwrap_or(d.batch_window_us as usize) as u64,
+            max_batch_rows: j
+                .get("max_batch_rows")
+                .as_usize()
+                .unwrap_or(d.max_batch_rows),
             queue_capacity: j.get("queue_capacity").as_usize().unwrap_or(d.queue_capacity),
             verify_every: j.get("verify_every").as_usize().unwrap_or(d.verify_every),
             max_sessions: j.get("max_sessions").as_usize().unwrap_or(d.max_sessions),
@@ -407,6 +431,9 @@ mod file_tests {
         assert_eq!(serve.bind, "127.0.0.1:7478");
         // The shipped config serves from a 4-shard pool.
         assert_eq!(serve.workers, 4);
+        // Cross-session batching: short drain window, pooled GEMMs capped.
+        assert_eq!(serve.batch_window_us, 200);
+        assert_eq!(serve.max_batch_rows, 128);
         // Session-lifecycle knobs: spill cold sessions under pressure.
         assert_eq!(serve.max_resident_sessions, 32);
         assert_eq!(serve.memory_budget_mb, 512);
@@ -420,6 +447,20 @@ mod file_tests {
         assert_eq!(sc.max_resident_sessions, 0);
         assert_eq!(sc.memory_budget_mb, 0);
         assert!(sc.spill_dir.is_empty());
+    }
+
+    #[test]
+    fn batching_knob_defaults_and_overrides() {
+        let j = Json::parse(r#"{}"#).unwrap();
+        let sc = ServeConfig::from_json(&j).unwrap();
+        // Batched execution on by default; window falls back to the ms
+        // deadline until explicitly set.
+        assert_eq!(sc.max_batch_rows, 64);
+        assert_eq!(sc.batch_window_us, 0);
+        let j = Json::parse(r#"{"batch_window_us": 250, "max_batch_rows": 0}"#).unwrap();
+        let sc = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(sc.batch_window_us, 250);
+        assert_eq!(sc.max_batch_rows, 0, "0 disables the batched path");
     }
 
     #[test]

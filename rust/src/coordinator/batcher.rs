@@ -29,6 +29,36 @@ pub trait SessionKeyed {
     fn session_key(&self) -> Option<&str>;
 }
 
+/// Size-or-timeout queue drain: after `first` arrives, keep pulling jobs
+/// off the shard queue until `max` jobs are collected or `window` elapses
+/// (whichever first — a full batch closes the window early, so a loaded
+/// shard never waits). This is the adaptive gathering step in front of
+/// [`plan`] and the cross-session pooled-GEMM executor: the window is the
+/// wait a request may pay to share a weight traversal with its neighbors.
+pub fn drain<J>(
+    rx: &std::sync::mpsc::Receiver<J>,
+    first: J,
+    max: usize,
+    window: std::time::Duration,
+) -> Vec<J> {
+    use std::sync::mpsc::TryRecvError;
+    let mut batch = vec![first];
+    let deadline = std::time::Instant::now() + window;
+    while batch.len() < max {
+        match rx.try_recv() {
+            Ok(j) => batch.push(j),
+            Err(TryRecvError::Empty) => {
+                if std::time::Instant::now() >= deadline {
+                    break;
+                }
+                std::thread::yield_now();
+            }
+            Err(TryRecvError::Disconnected) => break,
+        }
+    }
+    batch
+}
+
 /// Stable-group jobs by session key: all jobs of the first-seen session
 /// first (in arrival order), then the next session, etc. Session-less jobs
 /// keep their arrival positions relative to their own kind at the end.
@@ -102,6 +132,31 @@ mod tests {
     }
 
     #[test]
+    fn drain_is_size_capped_and_keeps_order() {
+        let (tx, rx) = std::sync::mpsc::channel::<u32>();
+        for i in 1..6 {
+            tx.send(i).unwrap();
+        }
+        // Size cap closes the window immediately — no timeout wait.
+        let batch = drain(&rx, 0, 4, std::time::Duration::from_secs(60));
+        assert_eq!(batch, vec![0, 1, 2, 3]);
+        // Remaining jobs are still queued, in order.
+        let rest = drain(&rx, rx.recv().unwrap(), 8, std::time::Duration::ZERO);
+        assert_eq!(rest, vec![4, 5]);
+    }
+
+    #[test]
+    fn drain_returns_at_least_first_on_empty_queue() {
+        let (tx, rx) = std::sync::mpsc::channel::<u32>();
+        let batch = drain(&rx, 9, 8, std::time::Duration::from_micros(50));
+        assert_eq!(batch, vec![9]);
+        drop(tx);
+        // Disconnected sender: returns what it has, never hangs.
+        let batch = drain(&rx, 7, 8, std::time::Duration::from_secs(60));
+        assert_eq!(batch, vec![7]);
+    }
+
+    #[test]
     fn shard_of_is_deterministic_and_in_range() {
         for shards in 1..9 {
             for i in 0..64 {
@@ -113,6 +168,59 @@ mod tests {
         }
         // Single shard: everything routes to 0.
         assert_eq!(shard_of("anything", 1), 0);
+    }
+
+    /// Satellite coverage: adversarial session-id shapes must stay in
+    /// range, hash distinctly where it matters, and not collapse realistic
+    /// id families onto one shard.
+    #[test]
+    fn shard_of_sane_over_adversarial_id_shapes() {
+        let shards = 4;
+        // Degenerate and hostile shapes: all in range, all deterministic.
+        let nasty = [
+            "",
+            " ",
+            "\n",
+            "a",
+            "☃ unicode ☃",
+            "../../etc/passwd",
+            "\u{0}\u{1}\u{2}",
+            "🦀🦀🦀🦀",
+        ];
+        for id in nasty {
+            let s = shard_of(id, shards);
+            assert!(s < shards, "{id:?}");
+            assert_eq!(s, shard_of(id, shards), "{id:?} unstable");
+            assert_eq!(shard_of(id, 1), 0, "{id:?} single shard");
+        }
+        // 4 KiB monster ids: in range, and a one-byte difference at the
+        // END still lands distinct hash inputs (FNV folds every byte).
+        let long_a = format!("{}a", "x".repeat(4096));
+        let long_b = format!("{}b", "x".repeat(4096));
+        assert!(shard_of(&long_a, shards) < shards);
+        assert_ne!(
+            crate::util::fnv1a64(long_a.as_bytes()),
+            crate::util::fnv1a64(long_b.as_bytes()),
+            "trailing-byte difference ignored"
+        );
+        // Realistic adversarial families (shared long prefixes, sequential
+        // suffixes — the worst case for weak hashes): every shard used,
+        // and no shard starved below a loose floor.
+        for family in [
+            |i: usize| format!("user-{i}-doc"),
+            |i: usize| format!("{}{i}", "tenant-0000000000000000-session-"),
+            |i: usize| format!("s{i:064}"),
+        ] {
+            let mut counts = [0usize; 4];
+            for i in 0..256 {
+                counts[shard_of(&family(i), shards)] += 1;
+            }
+            // Loose floor (fair share is 64): catches collapse, not skew.
+            assert!(
+                counts.iter().all(|&c| c >= 8),
+                "family collapsed: {counts:?}"
+            );
+        }
     }
 
     #[test]

@@ -133,6 +133,13 @@ pub struct Metrics {
     /// Requests that panicked inside a shard (caught; the session was
     /// dropped and an error surfaced to the caller).
     pub panics: u64,
+    /// Rows executed through pooled cross-session block-tail GEMMs (the
+    /// batched execution path; 0 means every edit ran per-session).
+    pub batched_rows: u64,
+    /// Batch occupancy: rows per pooled GEMM issued. A mean near 1 means
+    /// the window rarely catches concurrent sessions; a high p50 means the
+    /// weight traversal is being amortized well.
+    pub batch_fill: Histogram,
 }
 
 impl Metrics {
@@ -155,6 +162,8 @@ impl Metrics {
         self.rejected_backpressure += o.rejected_backpressure;
         self.errors += o.errors;
         self.panics += o.panics;
+        self.batched_rows += o.batched_rows;
+        self.batch_fill.merge(&o.batch_fill);
     }
     /// The aggregate speedup the engine achieved (paper's headline ratio).
     pub fn speedup(&self) -> f64 {
@@ -187,6 +196,8 @@ impl Metrics {
             ),
             ("errors", Json::num(self.errors as f64)),
             ("panics", Json::num(self.panics as f64)),
+            ("batched_rows", Json::num(self.batched_rows as f64)),
+            ("batch_fill", self.batch_fill.to_json()),
         ])
     }
 }
@@ -257,6 +268,28 @@ mod tests {
         assert_eq!((a.suspends, a.resumes), (2, 1));
         assert_eq!(a.speedup(), 20.0);
         assert_eq!(a.lat_edit_us.count(), 2);
+    }
+
+    #[test]
+    fn merge_folds_batch_occupancy() {
+        let mut a = Metrics {
+            batched_rows: 10,
+            ..Default::default()
+        };
+        a.batch_fill.record(2.0);
+        let mut b = Metrics {
+            batched_rows: 5,
+            ..Default::default()
+        };
+        b.batch_fill.record(8.0);
+        b.batch_fill.record(8.0);
+        a.merge(&b);
+        assert_eq!(a.batched_rows, 15);
+        assert_eq!(a.batch_fill.count(), 3);
+        assert_eq!(a.batch_fill.max(), 8.0);
+        let j = a.to_json();
+        assert_eq!(j.get("batched_rows").as_usize(), Some(15));
+        assert!(j.get("batch_fill").get("p50").as_f64().is_some());
     }
 
     #[test]

@@ -32,7 +32,7 @@ use std::time::Instant;
 
 use super::batcher::{plan, shard_of, SessionKeyed};
 use super::metrics::Metrics;
-use super::session::{Prepared, SessionStore, StorePolicy};
+use super::session::{Prepared, Session, SessionStore, StorePolicy};
 
 /// Requests accepted by the coordinator.
 #[derive(Clone, Debug)]
@@ -301,6 +301,7 @@ impl Client {
                                 ("dense_calls", Json::num(metrics.dense_calls as f64)),
                                 ("errors", Json::num(metrics.errors as f64)),
                                 ("panics", Json::num(metrics.panics as f64)),
+                                ("batched_rows", Json::num(metrics.batched_rows as f64)),
                             ]));
                             merged.merge(&metrics);
                             live += live_sessions;
@@ -477,71 +478,103 @@ fn worker_loop(
         metrics: Metrics::default(),
         verify_every: cfg.verify_every,
     };
+    // Size-or-timeout drain window: `batch_window_us` when set, else the
+    // legacy ms-granular deadline.
+    let window = if cfg.batch_window_us > 0 {
+        std::time::Duration::from_micros(cfg.batch_window_us)
+    } else {
+        std::time::Duration::from_millis(cfg.batch_deadline_ms)
+    };
     loop {
         // Block for the first job, then drain up to max_batch more within
-        // the deadline.
+        // the window (batcher::drain), and group by session (plan).
         let first = match rx.recv() {
             Ok(j) => j,
             Err(_) => break, // all clients gone
         };
-        let mut batch = vec![first];
-        let deadline =
-            Instant::now() + std::time::Duration::from_millis(cfg.batch_deadline_ms);
-        while batch.len() < cfg.max_batch {
-            match rx.try_recv() {
-                Ok(j) => batch.push(j),
-                Err(mpsc::TryRecvError::Empty) => {
-                    if Instant::now() >= deadline {
-                        break;
-                    }
-                    std::thread::yield_now();
-                }
-                Err(mpsc::TryRecvError::Disconnected) => break,
-            }
+        let jobs = plan(super::batcher::drain(&rx, first, cfg.max_batch, window));
+        // Cross-session pooled execution for the leading edit jobs of
+        // every session in the drain; everything else runs classically.
+        let (entries, rest) = split_rounds(jobs, cfg.max_batch_rows > 0);
+        if !entries.is_empty() {
+            state.run_batched(shard, entries, cfg.max_batch_rows);
         }
-        for job in plan(batch) {
-            let Job {
-                req,
-                reply,
-                enqueued,
-            } = job;
-            let kind = req.kind();
-            let session = req.session().map(str::to_string);
-            let t0 = Instant::now();
-            let guarded = std::panic::AssertUnwindSafe(|| state.handle(req));
-            let resp = match std::panic::catch_unwind(guarded) {
-                Ok(r) => r,
-                Err(payload) => {
-                    // A panicking request must not take the shard (or a
-                    // blocked caller) down with it. The session that
-                    // panicked mid-update may hold half-applied state, so
-                    // it is dropped rather than served corrupt.
-                    if let Some(s) = &session {
-                        state.sessions.remove(s);
-                    }
-                    state.metrics.panics += 1;
-                    Response::Err(format!(
-                        "request '{kind}' panicked: {} (session dropped)",
-                        panic_message(payload.as_ref())
-                    ))
-                }
-            };
-            let wait_us = enqueued.elapsed().as_micros() as f64;
-            let us = t0.elapsed().as_micros() as f64;
-            match kind {
-                "edit" | "edit_script" => state.metrics.lat_edit_us.record(us),
-                "revision" | "batch_revisions" => state.metrics.lat_revision_us.record(us),
-                "dense" => state.metrics.lat_dense_us.record(us),
-                _ => {}
-            }
-            log::debug!("shard {shard} {kind}: {us:.0}µs (+{wait_us:.0}µs queued)");
-            if matches!(resp, Response::Err(_)) {
-                state.metrics.errors += 1;
-            }
-            let _ = reply.send(resp);
+        for job in rest {
+            state.execute_job(shard, job);
         }
     }
     log::debug!("coordinator shard {shard} exiting");
+}
+
+/// A session's leading run of poolable (`Edit`/`EditScript`) jobs from
+/// one queue drain — the unit the cross-session batcher consumes.
+struct BatchEntry {
+    session: String,
+    jobs: std::collections::VecDeque<Job>,
+}
+
+/// Split a planned batch into cross-session poolable prefixes and the
+/// rest. Jobs arrive grouped by session (see [`plan`]); each session
+/// contributes its LEADING run of edit jobs. Later jobs — and anything
+/// after a non-edit job — stay on the classic path, so per-session order
+/// is preserved exactly. Pooling needs at least two sessions with edit
+/// heads; otherwise everything keeps the classic path in plan order.
+fn split_rounds(jobs: Vec<Job>, enabled: bool) -> (Vec<BatchEntry>, Vec<Job>) {
+    let is_edit = |r: &Request| matches!(r, Request::Edit { .. } | Request::EditScript { .. });
+    if !enabled {
+        return (Vec::new(), jobs);
+    }
+    // First pass: how many sessions lead with an edit job?
+    let mut heads = 0;
+    let mut prev: Option<&str> = None;
+    for job in &jobs {
+        let s = job.req.session();
+        if let Some(s) = s {
+            if prev != Some(s) && is_edit(&job.req) {
+                heads += 1;
+            }
+        }
+        prev = s;
+    }
+    if heads < 2 {
+        return (Vec::new(), jobs);
+    }
+    let mut entries: Vec<BatchEntry> = Vec::new();
+    let mut rest: Vec<Job> = Vec::new();
+    // (current session group, whether its poolable prefix has ended)
+    let mut cur: Option<(String, bool)> = None;
+    for job in jobs {
+        match job.req.session().map(str::to_string) {
+            Some(s) => {
+                let broken = match &mut cur {
+                    Some((cs, b)) if *cs == s => *b,
+                    _ => {
+                        cur = Some((s.clone(), false));
+                        false
+                    }
+                };
+                if !broken && is_edit(&job.req) {
+                    match entries.iter_mut().find(|e| e.session == s) {
+                        Some(e) => e.jobs.push_back(job),
+                        None => entries.push(BatchEntry {
+                            session: s,
+                            jobs: std::iter::once(job).collect(),
+                        }),
+                    }
+                } else {
+                    if let Some((_, b)) = &mut cur {
+                        *b = true;
+                    }
+                    rest.push(job);
+                }
+            }
+            None => {
+                cur = None;
+                rest.push(job);
+            }
+        }
+    }
+    (entries, rest)
 }
 
 struct Worker {
@@ -558,6 +591,216 @@ impl Worker {
         match self.handle_inner(req) {
             Ok(r) => r,
             Err(e) => Response::Err(format!("{e:#}")),
+        }
+    }
+
+    /// Execute one job on the classic per-session path: panic-guarded
+    /// handle, latency/error accounting, reply.
+    fn execute_job(&mut self, shard: usize, job: Job) {
+        let Job {
+            req,
+            reply,
+            enqueued,
+        } = job;
+        let kind = req.kind();
+        let session = req.session().map(str::to_string);
+        let t0 = Instant::now();
+        let guarded = std::panic::AssertUnwindSafe(|| self.handle(req));
+        let resp = match std::panic::catch_unwind(guarded) {
+            Ok(r) => r,
+            Err(payload) => {
+                // A panicking request must not take the shard (or a
+                // blocked caller) down with it. The session that
+                // panicked mid-update may hold half-applied state, so
+                // it is dropped rather than served corrupt.
+                if let Some(s) = &session {
+                    self.sessions.remove(s);
+                }
+                self.metrics.panics += 1;
+                Response::Err(format!(
+                    "request '{kind}' panicked: {} (session dropped)",
+                    panic_message(payload.as_ref())
+                ))
+            }
+        };
+        let wait_us = enqueued.elapsed().as_micros() as f64;
+        let us = t0.elapsed().as_micros() as f64;
+        match kind {
+            "edit" | "edit_script" => self.metrics.lat_edit_us.record(us),
+            "revision" | "batch_revisions" => self.metrics.lat_revision_us.record(us),
+            "dense" => self.metrics.lat_dense_us.record(us),
+            _ => {}
+        }
+        log::debug!("shard {shard} {kind}: {us:.0}µs (+{wait_us:.0}µs queued)");
+        if matches!(resp, Response::Err(_)) {
+            self.metrics.errors += 1;
+        }
+        let _ = reply.send(resp);
+    }
+
+    /// Cross-session pooled execution over the batchable prefixes of one
+    /// queue drain. Wave by wave, the next queued edit job of every
+    /// session runs concurrently: each engine's per-layer block tails are
+    /// pooled into stacked GEMMs of at most `max_batch_rows` rows
+    /// ([`crate::incremental::batch`]), so the layer weights are streamed
+    /// once per pooled wave instead of once per session. Bit-exact with
+    /// the classic path — locked by the unit tests below and
+    /// `tests/differential_batch.rs`.
+    fn run_batched(&mut self, shard: usize, mut entries: Vec<BatchEntry>, max_batch_rows: usize) {
+        loop {
+            let live = entries.iter().filter(|e| !e.jobs.is_empty()).count();
+            if live == 0 {
+                break;
+            }
+            if live < 2 {
+                // A single session's tail cannot pool with anyone — run
+                // its remaining jobs on the classic path directly instead
+                // of paying checkout/checkin (byte re-measure + budget
+                // enforcement) per job for zero batching benefit.
+                for e in entries.iter_mut() {
+                    while let Some(job) = e.jobs.pop_front() {
+                        self.execute_job(shard, job);
+                    }
+                }
+                break;
+            }
+            // Assemble the wave: the next job of every session.
+            let mut wave: Vec<(String, Job)> = Vec::new();
+            for e in entries.iter_mut() {
+                if let Some(job) = e.jobs.pop_front() {
+                    wave.push((e.session.clone(), job));
+                }
+            }
+            // Fault in and check out every wave session. Unknown sessions
+            // fall back to the classic path, which reports the canonical
+            // error. A failed resume must be reported HERE: prepare()
+            // consumes the spill entry on failure, so by the time the
+            // classic path retried, the cause (e.g. a corrupt snapshot)
+            // would have degraded to 'unknown session'. Fault-in time
+            // counts toward the wave's recorded service time, exactly as
+            // ensure_resident's resume does inside the classic path's
+            // latency measurement.
+            let t_prep = Instant::now();
+            let mut pool: Vec<(String, Session, Job)> = Vec::new();
+            let mut fallback: Vec<Job> = Vec::new();
+            for (s, job) in wave {
+                match self.sessions.prepare(&s) {
+                    Ok(Prepared::Resident | Prepared::Resumed) => {
+                        if let Some(sess) = self.sessions.checkout(&s) {
+                            pool.push((s, sess, job));
+                        } else {
+                            fallback.push(job);
+                        }
+                    }
+                    Ok(Prepared::Missing) => fallback.push(job),
+                    Err(e) => {
+                        self.metrics.errors += 1;
+                        let _ = job.reply.send(Response::Err(format!("{e:#}")));
+                    }
+                }
+            }
+            if pool.len() < 2 {
+                // Nothing to pool across sessions — classic path.
+                for (s, sess, job) in pool {
+                    self.sessions.checkin(s, sess);
+                    fallback.push(job);
+                }
+                for job in fallback {
+                    self.execute_job(shard, job);
+                }
+                continue;
+            }
+            let prep_us = t_prep.elapsed().as_micros() as f64;
+            for job in fallback {
+                self.execute_job(shard, job);
+            }
+            // Pooled execution of the wave.
+            let t0 = Instant::now();
+            let scripts: Vec<Vec<Edit>> = pool
+                .iter()
+                .map(|(_, _, job)| match &job.req {
+                    Request::Edit { edit, .. } => vec![*edit],
+                    Request::EditScript { edits, .. } => edits.clone(),
+                    other => unreachable!("non-edit request {other:?} in batch pool"),
+                })
+                .collect();
+            let defrags_before: Vec<u64> = pool
+                .iter()
+                .map(|(_, s, _)| s.engine.stats.defrags)
+                .collect();
+            let outcome = {
+                let script_refs: Vec<&[Edit]> = scripts.iter().map(|s| s.as_slice()).collect();
+                let mut engines: Vec<&mut crate::incremental::IncrementalEngine> =
+                    pool.iter_mut().map(|(_, s, _)| &mut s.engine).collect();
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    crate::incremental::batch::apply_scripts_batched(
+                        &mut engines,
+                        &script_refs,
+                        max_batch_rows,
+                    )
+                }))
+            };
+            match outcome {
+                Err(payload) => {
+                    // Any engine in the wave may hold half-applied state —
+                    // drop them all rather than serve corrupt sessions.
+                    // (Their queued follow-up jobs will get the canonical
+                    // unknown-session error on later waves.)
+                    self.metrics.panics += 1;
+                    let msg = panic_message(payload.as_ref()).to_string();
+                    for (s, sess, job) in pool {
+                        self.sessions.discard(sess);
+                        self.metrics.errors += 1;
+                        let _ = job.reply.send(Response::Err(format!(
+                            "batched edit panicked: {msg} (session '{s}' dropped)"
+                        )));
+                    }
+                }
+                Ok(out) => {
+                    self.metrics.batched_rows += out.batched_rows;
+                    for &f in &out.gemm_fills {
+                        self.metrics.batch_fill.record(f as f64);
+                    }
+                    // One service-time measurement for the whole wave
+                    // (fault-in + pooled execution), taken before the
+                    // reply loop: every pooled session received the same
+                    // service, so recording a value inflated by earlier
+                    // sessions' reply work would skew the histogram by
+                    // reply order.
+                    let us = prep_us + t0.elapsed().as_micros() as f64;
+                    for (i, ((s, mut sess, job), rep)) in
+                        pool.into_iter().zip(out.reports).enumerate()
+                    {
+                        // Identical accounting to the classic apply_edits
+                        // path: per-session edit counters, FLOP ledgers,
+                        // byte re-measurement on check-in.
+                        let nedits = scripts[i].len();
+                        sess.edits += nedits as u64;
+                        let n = sess.engine.len();
+                        let predicted = sess.engine.predict();
+                        let defrag_delta = sess.engine.stats.defrags - defrags_before[i];
+                        self.sessions.checkin(s, sess);
+                        self.metrics.edits += nedits as u64;
+                        self.metrics.defrags += defrag_delta;
+                        self.metrics.flops_incremental += rep.flops;
+                        let dense_equiv = self.dense_equiv(n) * nedits.max(1) as u64;
+                        self.metrics.flops_dense_equiv += dense_equiv;
+                        self.metrics.lat_edit_us.record(us);
+                        let wait_us = (job.enqueued.elapsed().as_micros() as f64 - us).max(0.0);
+                        log::debug!(
+                            "shard {shard} batched {}: {us:.0}µs (+{wait_us:.0}µs queued)",
+                            job.req.kind()
+                        );
+                        let _ = job.reply.send(Response::Logits {
+                            logits: rep.logits,
+                            predicted,
+                            flops: rep.flops,
+                            dense_equiv_flops: dense_equiv,
+                            defragged: rep.defragged,
+                        });
+                    }
+                }
+            }
         }
     }
 
@@ -819,5 +1062,256 @@ impl Worker {
             dense_equiv_flops: dense_equiv,
             storage,
         })
+    }
+}
+
+#[cfg(test)]
+mod batched_round_tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::testutil::gen_edit;
+    use crate::util::Rng;
+
+    fn mk_worker(w: &Arc<ModelWeights>) -> Worker {
+        let policy = StorePolicy {
+            max_resident: 64,
+            max_total: 64,
+            memory_budget_bytes: 0,
+            spill_dir: None,
+        };
+        Worker {
+            weights: w.clone(),
+            engine_opts: EngineOptions::default(),
+            runtime: None,
+            sessions: SessionStore::new(w.clone(), EngineOptions::default(), policy),
+            metrics: Metrics::default(),
+            verify_every: 0,
+        }
+    }
+
+    fn job(req: Request) -> (Job, mpsc::Receiver<Response>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Job {
+                req,
+                reply: tx,
+                enqueued: Instant::now(),
+            },
+            rx,
+        )
+    }
+
+    fn entry(session: &str, jobs: Vec<Job>) -> BatchEntry {
+        BatchEntry {
+            session: session.to_string(),
+            jobs: jobs.into_iter().collect(),
+        }
+    }
+
+    /// The coordinator-level lock: one pooled round produces the same
+    /// replies — logits bits, flops, dense-equivalents, predictions — and
+    /// the same counters as the classic per-session worker.
+    #[test]
+    fn batched_round_bit_exact_vs_classic_worker() {
+        let cfg = ModelConfig::vqt_tiny();
+        let w = Arc::new(ModelWeights::random(&cfg, 41));
+        let mut batched = mk_worker(&w);
+        let mut classic = mk_worker(&w);
+        let mut r = Rng::new(9);
+        let docs: Vec<Vec<u32>> = (0..3)
+            .map(|i| {
+                (0..(8 + i))
+                    .map(|_| r.below(cfg.vocab_size) as u32)
+                    .collect()
+            })
+            .collect();
+        for (i, d) in docs.iter().enumerate() {
+            for wk in [&mut batched, &mut classic] {
+                let resp = wk.handle(Request::Open {
+                    session: format!("s{i}"),
+                    tokens: d.clone(),
+                });
+                assert!(matches!(resp, Response::Logits { .. }), "{resp:?}");
+            }
+        }
+        let mut entries = Vec::new();
+        let mut rxs = Vec::new();
+        let mut classic_resps = Vec::new();
+        let mut lens: Vec<usize> = docs.iter().map(Vec::len).collect();
+        for i in 0..3 {
+            let mut edits = Vec::new();
+            for _ in 0..3 {
+                let e = gen_edit(&mut r, lens[i], cfg.vocab_size, cfg.max_seq);
+                lens[i] = (lens[i] as isize + e.len_delta()) as usize;
+                edits.push(e);
+            }
+            let req = Request::EditScript {
+                session: format!("s{i}"),
+                edits,
+            };
+            classic_resps.push(classic.handle(req.clone()));
+            let (j, rx) = job(req);
+            entries.push(entry(&format!("s{i}"), vec![j]));
+            rxs.push(rx);
+        }
+        batched.run_batched(0, entries, 4);
+        assert!(batched.metrics.batched_rows > 0, "pooled path must run");
+        assert!(batched.metrics.batch_fill.count() > 0);
+        for (i, (rx, want)) in rxs.iter().zip(&classic_resps).enumerate() {
+            let got = rx.try_recv().expect("reply sent");
+            match (got, want) {
+                (
+                    Response::Logits {
+                        logits: a,
+                        predicted: pa,
+                        flops: fa,
+                        dense_equiv_flops: da,
+                        defragged: ga,
+                    },
+                    Response::Logits {
+                        logits: b,
+                        predicted: pb,
+                        flops: fb,
+                        dense_equiv_flops: db,
+                        defragged: gb,
+                    },
+                ) => {
+                    let ab: Vec<u32> = a.iter().map(|x| x.to_bits()).collect();
+                    let bb: Vec<u32> = b.iter().map(|x| x.to_bits()).collect();
+                    assert_eq!(ab, bb, "session {i} logits bits");
+                    assert_eq!(pa, *pb, "session {i} prediction");
+                    assert_eq!(fa, *fb, "session {i} flops");
+                    assert_eq!(da, *db, "session {i} dense equiv");
+                    assert_eq!(ga, *gb, "session {i} defragged");
+                }
+                other => panic!("session {i}: {other:?}"),
+            }
+        }
+        assert_eq!(batched.metrics.edits, classic.metrics.edits);
+        assert_eq!(
+            batched.metrics.flops_incremental,
+            classic.metrics.flops_incremental
+        );
+        assert_eq!(
+            batched.metrics.flops_dense_equiv,
+            classic.metrics.flops_dense_equiv
+        );
+        assert_eq!(batched.metrics.errors, 0);
+    }
+
+    /// A panic mid-wave (out-of-bounds edit) drops every wave session and
+    /// replies Err to each caller — never a hang, never corrupt state.
+    #[test]
+    fn batched_round_panic_drops_wave_and_replies_err() {
+        let cfg = ModelConfig::vqt_tiny();
+        let w = Arc::new(ModelWeights::random(&cfg, 43));
+        let mut wk = mk_worker(&w);
+        let doc: Vec<u32> = (0..10).map(|i| (i % 50) as u32).collect();
+        for s in ["a", "b"] {
+            wk.handle(Request::Open {
+                session: s.into(),
+                tokens: doc.clone(),
+            });
+        }
+        let (ja, rxa) = job(Request::Edit {
+            session: "a".into(),
+            edit: Edit::Replace { at: 2, tok: 3 },
+        });
+        let (jb, rxb) = job(Request::Edit {
+            session: "b".into(),
+            edit: Edit::Replace { at: 9999, tok: 3 }, // out of bounds ⇒ panic
+        });
+        wk.run_batched(0, vec![entry("a", vec![ja]), entry("b", vec![jb])], 8);
+        assert!(matches!(rxa.try_recv(), Ok(Response::Err(_))));
+        assert!(matches!(rxb.try_recv(), Ok(Response::Err(_))));
+        assert_eq!(wk.metrics.panics, 1);
+        assert_eq!(wk.metrics.errors, 2);
+        // Both sessions were dropped; the canonical error follows.
+        for s in ["a", "b"] {
+            match wk.handle(Request::Edit {
+                session: s.into(),
+                edit: Edit::Replace { at: 0, tok: 1 },
+            }) {
+                Response::Err(e) => assert!(e.contains("unknown session"), "{e}"),
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    /// A wave with fewer than two poolable sessions falls back to the
+    /// classic path (same replies, no pooled GEMMs recorded).
+    #[test]
+    fn single_session_wave_falls_back_to_classic() {
+        let cfg = ModelConfig::vqt_tiny();
+        let w = Arc::new(ModelWeights::random(&cfg, 47));
+        let mut wk = mk_worker(&w);
+        let doc: Vec<u32> = (0..12).map(|i| (i % 50) as u32).collect();
+        wk.handle(Request::Open {
+            session: "solo".into(),
+            tokens: doc,
+        });
+        let (j, rx) = job(Request::Edit {
+            session: "solo".into(),
+            edit: Edit::Replace { at: 3, tok: 7 },
+        });
+        // Second entry is an unknown session: it errs via the classic
+        // path, leaving only one poolable session.
+        let (jg, rxg) = job(Request::Edit {
+            session: "ghost".into(),
+            edit: Edit::Replace { at: 0, tok: 1 },
+        });
+        wk.run_batched(0, vec![entry("solo", vec![j]), entry("ghost", vec![jg])], 8);
+        assert!(matches!(rx.try_recv(), Ok(Response::Logits { .. })));
+        match rxg.try_recv() {
+            Ok(Response::Err(e)) => assert!(e.contains("unknown session"), "{e}"),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(wk.metrics.batched_rows, 0, "no pooled GEMMs for a solo wave");
+        assert_eq!(wk.metrics.edits, 1);
+    }
+
+    /// split_rounds takes only each session's LEADING run of edit jobs and
+    /// preserves everything else (order included) for the classic path.
+    #[test]
+    fn split_rounds_takes_leading_edit_runs_only() {
+        let mk = |req: Request| job(req).0;
+        let e = |s: &str| {
+            mk(Request::Edit {
+                session: s.into(),
+                edit: Edit::Replace { at: 0, tok: 1 },
+            })
+        };
+        // Plan order: s1 group [edit, edit, open, edit], s2 group [edit],
+        // then a session-less dense job.
+        let jobs = vec![
+            e("s1"),
+            e("s1"),
+            mk(Request::Open {
+                session: "s1".into(),
+                tokens: vec![1],
+            }),
+            e("s1"),
+            e("s2"),
+            mk(Request::Dense { tokens: vec![1] }),
+        ];
+        let (entries, rest) = split_rounds(jobs, true);
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].session, "s1");
+        assert_eq!(entries[0].jobs.len(), 2, "leading run only");
+        assert_eq!(entries[1].session, "s2");
+        assert_eq!(entries[1].jobs.len(), 1);
+        // Rest: open(s1), edit(s1) after the break, dense — in order.
+        assert_eq!(rest.len(), 3);
+        assert!(matches!(rest[0].req, Request::Open { .. }));
+        assert!(matches!(rest[1].req, Request::Edit { .. }));
+        assert!(matches!(rest[2].req, Request::Dense { .. }));
+        // Disabled or single-headed batches stay classic, order intact.
+        let jobs = vec![e("s1"), e("s1")];
+        let (entries, rest) = split_rounds(jobs, true);
+        assert!(entries.is_empty(), "one session ⇒ no pooling");
+        assert_eq!(rest.len(), 2);
+        let jobs = vec![e("s1"), e("s2")];
+        let (entries, _) = split_rounds(jobs, false);
+        assert!(entries.is_empty(), "max_batch_rows = 0 disables pooling");
     }
 }

@@ -327,6 +327,40 @@ impl SessionStore {
         Ok(true)
     }
 
+    /// Temporarily remove a *resident* session for externally-driven
+    /// execution (the cross-session batched path needs simultaneous
+    /// ownership of several engines). The engine stays live in RAM while
+    /// checked out, so its bytes STAY charged against the budget — a
+    /// resume faulting in mid-wave must make its spill decisions against
+    /// the true resident total, not one understated by the whole wave.
+    /// [`Self::checkin`] settles the charge against the re-measured size;
+    /// a session that will never be returned must release its charge via
+    /// [`Self::discard`].
+    pub fn checkout(&mut self, id: &str) -> Option<Session> {
+        self.clock += 1;
+        self.resident.remove(id)
+    }
+
+    /// Return a checked-out session: re-measures its bytes (the batch may
+    /// have grown or shrunk engine state), refreshes LRU recency, and
+    /// re-enforces capacity and budget against the new total.
+    pub fn checkin(&mut self, id: String, mut s: Session) {
+        self.clock += 1;
+        s.last_access = self.clock;
+        let charged = s.bytes;
+        s.bytes = s.engine.resident_bytes();
+        self.resident_bytes = self.resident_bytes - charged + s.bytes;
+        self.resident.insert(id.clone(), s);
+        self.enforce(Some(&id));
+    }
+
+    /// Drop a checked-out session without returning it (panic recovery
+    /// discards a wave's engines rather than serving possibly-corrupt
+    /// state), releasing the byte charge [`Self::checkout`] kept.
+    pub fn discard(&mut self, s: Session) {
+        self.resident_bytes -= s.bytes;
+    }
+
     /// Close a session in either state. Returns whether it existed.
     pub fn remove(&mut self, id: &str) -> bool {
         if let Some(s) = self.resident.remove(id) {
@@ -632,6 +666,63 @@ mod tests {
         assert_eq!(dropped.as_deref(), Some("a"), "oldest (suspended) dropped");
         assert_eq!(s.len(), 2);
         assert!(!s.contains("a"));
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn checkout_checkin_keeps_byte_accounting_and_lru() {
+        let cfg = ModelConfig::vqt_tiny();
+        let w = Arc::new(ModelWeights::random(&cfg, 7));
+        let mut store = store(&w, drop_policy(4));
+        store.insert("a".into(), engine(&w, 1));
+        store.insert("b".into(), engine(&w, 2));
+        let before = store.resident_bytes();
+        let sess = store.checkout("a").expect("resident");
+        assert_eq!(store.resident_bytes(), before, "checked-out stays charged");
+        assert!(!store.contains("a"), "checked-out session is absent");
+        assert!(store.checkout("a").is_none(), "double checkout");
+        assert!(store.checkout("ghost").is_none());
+        store.checkin("a".into(), sess);
+        assert_eq!(store.resident_bytes(), before, "charge settled");
+        assert!(store.is_resident("a"));
+        // Discard releases the charge of a never-returned checkout.
+        let sess = store.checkout("b").expect("resident");
+        store.discard(sess);
+        assert!(store.resident_bytes() < before, "discard released charge");
+        // Check-in refreshed recency: "b" is now the LRU victim.
+        let mut capped = store(&w, drop_policy(2));
+        capped.insert("a".into(), engine(&w, 1));
+        capped.insert("b".into(), engine(&w, 2));
+        let s = capped.checkout("a").unwrap();
+        capped.checkin("a".into(), s);
+        let evicted = capped.insert("c".into(), engine(&w, 3));
+        assert_eq!(evicted.as_deref(), Some("b"));
+    }
+
+    #[test]
+    fn checkin_reenforces_budget() {
+        let cfg = ModelConfig::vqt_tiny();
+        let w = Arc::new(ModelWeights::random(&cfg, 8));
+        let one = engine(&w, 1).resident_bytes();
+        let dir = tempdir("checkin");
+        let mut store = store(
+            &w,
+            StorePolicy {
+                max_resident: 64,
+                max_total: 64,
+                memory_budget_bytes: one + one / 2,
+                spill_dir: Some(dir.clone()),
+            },
+        );
+        store.insert("a".into(), engine(&w, 1));
+        let sess = store.checkout("a").unwrap();
+        store.insert("b".into(), engine(&w, 2));
+        // Returning "a" puts the store over budget; the LRU ("b") spills,
+        // the just-returned session is protected.
+        store.checkin("a".into(), sess);
+        assert!(store.is_resident("a"));
+        assert!(store.is_suspended("b"));
+        assert!(store.resident_bytes() <= one + one / 2);
         let _ = std::fs::remove_dir_all(dir);
     }
 

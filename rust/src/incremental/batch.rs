@@ -1,0 +1,447 @@
+//! Cross-session batched dense execution — the serving-throughput lever.
+//!
+//! Under load, a coordinator shard holds queued edit requests from many
+//! sessions. Each edit's per-layer dense block tails (decode → mix →
+//! residual → LN2 → FFN → residual; see [`super::engine`]) are row ×
+//! matrix products over the SAME shared weights, so executing them one
+//! session at a time traverses every weight matrix once per session. This
+//! module pools the pending block-tail rows of all queued sessions, layer
+//! by layer, into stacked GEMMs: the weight traversal is amortized over
+//! the pooled rows (the classic dynamic-batching lever), while each
+//! session's orchestration — corrections, code re-assignment, FLOP-ledger
+//! attribution — stays per-engine through the staged hooks.
+//!
+//! **Bit-exactness argument** (docs/ARCHITECTURE.md §7): the tiled GEMM
+//! core (`tensor::accum_row_tiled`) processes each output row
+//! independently with a fixed accumulation order, so a stacked
+//! `matmul_into` over gathered rows is bitwise identical to the per-row
+//! `vec_matmul_into` calls it replaces; every element-wise stage
+//! (residual adds, LN2, fused bias-GELU) is shared scalar code applied
+//! row-wise. Locked by `pooled_block_tail_bitwise_matches_single_row`
+//! below and by `tests/differential_batch.rs`.
+
+use crate::edits::Edit;
+use crate::model::ModelWeights;
+use crate::tensor::{self, Matrix};
+use crate::vq::CodeTuple;
+use std::sync::Arc;
+
+use super::engine::{EditReport, IncrementalEngine, Staged, StagedEdit};
+
+/// Result of one batched multi-session application.
+pub struct BatchOutcome {
+    /// One aggregate report per engine, with `apply_edits` semantics:
+    /// summed flops, last logits, defragged-anywhere.
+    pub reports: Vec<EditReport>,
+    /// Total rows executed through pooled block-tail GEMMs.
+    pub batched_rows: u64,
+    /// Rows per pooled GEMM issued — the batch-occupancy series the
+    /// coordinator folds into its `batch_fill` histogram.
+    pub gemm_fills: Vec<usize>,
+}
+
+/// Reusable intermediate buffers for [`block_tail_batch`]. The single-row
+/// tail runs on the engine's persistent scratch; the pooled path must not
+/// trade that for five heap allocations per chunk per layer. Reuse cannot
+/// move numerics: every buffer is fully overwritten each call
+/// (`matmul_into` zeroes its output, `decode_into` covers every element,
+/// the residual/LN loops write every row).
+struct TailScratch {
+    a: Matrix,
+    mix: Matrix,
+    c: Matrix,
+    mid: Matrix,
+}
+
+impl TailScratch {
+    fn new() -> Self {
+        TailScratch {
+            a: Matrix::zeros(0, 0),
+            mix: Matrix::zeros(0, 0),
+            c: Matrix::zeros(0, 0),
+            mid: Matrix::zeros(0, 0),
+        }
+    }
+
+    /// (Re)allocate only when the chunk shape actually changes — under a
+    /// steady `max_batch_rows` cap that is once per wave at most.
+    fn shape(&mut self, b: usize, d: usize, d_ff: usize) {
+        if self.a.rows != b || self.a.cols != d || self.mid.cols != d_ff {
+            self.a = Matrix::zeros(b, d);
+            self.mix = Matrix::zeros(b, d);
+            self.c = Matrix::zeros(b, d);
+            self.mid = Matrix::zeros(b, d_ff);
+        }
+    }
+}
+
+/// Stacked block tail over pooled rows of layer `li`: bitwise identical
+/// to `IncrementalEngine::block_tail` applied to each row independently
+/// (same kernels, same per-row accumulation order), but each weight
+/// matrix is streamed once for the whole stack. Returns the fresh output
+/// stack (it outlives the chunk loop for the scatter); intermediates live
+/// in `scratch`.
+fn block_tail_batch(
+    w: &ModelWeights,
+    li: usize,
+    xs: &[f32],
+    b: usize,
+    codes: &[CodeTuple],
+    scratch: &mut TailScratch,
+) -> Matrix {
+    let layer = &w.layers[li];
+    let cfg = &w.cfg;
+    let d = cfg.d_model;
+    assert_eq!(xs.len(), b * d);
+    assert_eq!(codes.len(), b);
+    let vq = layer.vq.as_ref().expect("VQ layer");
+    scratch.shape(b, d, cfg.d_ff);
+    let TailScratch { a, mix, c, mid } = scratch;
+
+    // Decoded codewords, stacked.
+    for (i, &code) in codes.iter().enumerate() {
+        vq.decode_into(code, a.row_mut(i));
+    }
+    // Mix: one pass over w_mix for the whole stack.
+    tensor::matmul_into(a, &layer.w_mix, mix);
+    // Residual 1 — identical expression order to the single-row tail.
+    for i in 0..b {
+        let (xr, mr) = (&xs[i * d..(i + 1) * d], mix.row(i));
+        let cr = c.row_mut(i);
+        for j in 0..d {
+            cr[j] = xr[j] + mr[j] + layer.b_mix[j];
+        }
+    }
+    // LN2 rows into the (reused) decode buffer.
+    tensor::layernorm_rows_into(c, &layer.ln2_g, &layer.ln2_b, cfg.ln_eps, a);
+    // FFN: two stacked GEMMs around the fused bias-GELU.
+    tensor::matmul_into(a, &layer.w_ff1, mid);
+    tensor::bias_gelu_rows(mid, &layer.b_ff1);
+    let mut out = Matrix::zeros(b, d);
+    tensor::matmul_into(mid, &layer.w_ff2, &mut out);
+    // Residual 2 — same `o += (b_ff2 + c)` association as the single row.
+    for i in 0..b {
+        let cr = c.row(i);
+        let or = out.row_mut(i);
+        for j in 0..d {
+            or[j] += layer.b_ff2[j] + cr[j];
+        }
+    }
+    out
+}
+
+/// Apply one edit script per engine with the per-layer block tails of ALL
+/// engines pooled into stacked GEMMs of at most `max_batch_rows` rows.
+///
+/// Engines must share one weight set (the coordinator guarantees this per
+/// shard). Scripts advance in lockstep — edit k of every script runs
+/// concurrently layer by layer; scripts shorter than the longest simply
+/// finish early. Per-engine results (logits bits, per-edit FLOP ledger,
+/// reuse statistics) are identical to `apply_edits` on each engine alone:
+/// the orchestration is the same staged code path, and the pooled tails
+/// are bitwise equal to the single-row tails.
+pub fn apply_scripts_batched(
+    engines: &mut [&mut IncrementalEngine],
+    scripts: &[&[Edit]],
+    max_batch_rows: usize,
+) -> BatchOutcome {
+    assert_eq!(engines.len(), scripts.len(), "one script per engine");
+    let cap = max_batch_rows.max(1);
+    let mut reports: Vec<EditReport> = engines
+        .iter()
+        .map(|e| EditReport {
+            flops: 0,
+            logits: e.logits().to_vec(),
+            defragged: false,
+        })
+        .collect();
+    let mut batched_rows = 0u64;
+    let mut gemm_fills = Vec::new();
+    let Some(first) = engines.first() else {
+        return BatchOutcome {
+            reports,
+            batched_rows,
+            gemm_fills,
+        };
+    };
+    let w = first.weights().clone();
+    for e in engines.iter() {
+        assert!(
+            Arc::ptr_eq(e.weights(), &w),
+            "batched engines must share one weight set"
+        );
+    }
+    let d = w.cfg.d_model;
+    let n_layers = w.cfg.n_layers;
+    let max_len = scripts.iter().map(|s| s.len()).max().unwrap_or(0);
+    // Gather buffers and GEMM intermediates persist across layers and
+    // edit cycles — the steady state allocates nothing but the per-chunk
+    // output stacks (which must outlive the scatter).
+    let mut scratch = TailScratch::new();
+    let mut xs: Vec<f32> = Vec::new();
+    let mut codes: Vec<CodeTuple> = Vec::new();
+
+    for k in 0..max_len {
+        // Stage edit k of every engine that still has one. A defrag is
+        // absorbed inside stage_edit (full rebuild) — that engine just
+        // sits this inner cycle's layer loop out.
+        let mut staged: Vec<Option<StagedEdit>> = (0..engines.len()).map(|_| None).collect();
+        for (i, script) in scripts.iter().enumerate() {
+            if let Some(&edit) = script.get(k) {
+                match engines[i].stage_edit(edit) {
+                    Staged::Done(rep) => accumulate(&mut reports[i], rep),
+                    Staged::Pending(st) => staged[i] = Some(st),
+                }
+            }
+        }
+        for li in 0..n_layers {
+            for (i, slot) in staged.iter_mut().enumerate() {
+                if let Some(st) = slot {
+                    engines[i].staged_pre(st);
+                }
+            }
+            // Gather the pending rows of every engine into one stack.
+            xs.clear();
+            codes.clear();
+            for slot in staged.iter().flatten() {
+                for rw in slot.pending() {
+                    xs.extend_from_slice(&rw.x);
+                    codes.push(rw.code);
+                }
+            }
+            let total = codes.len();
+            // Chunked execution straight off the gather buffer: each
+            // chunk's output matrix is kept and scattered from in place,
+            // so no full-stack staging copy on either side of the GEMMs.
+            let mut chunks: Vec<Matrix> = Vec::new();
+            let mut r0 = 0;
+            while r0 < total {
+                let rows = (total - r0).min(cap);
+                let chunk = block_tail_batch(
+                    &w,
+                    li,
+                    &xs[r0 * d..(r0 + rows) * d],
+                    rows,
+                    &codes[r0..r0 + rows],
+                    &mut scratch,
+                );
+                chunks.push(chunk);
+                batched_rows += rows as u64;
+                gemm_fills.push(rows);
+                r0 += rows;
+            }
+            // Scatter back, engine by engine (gather order is preserved;
+            // global row j lives in chunk j / cap at local row j % cap,
+            // since every chunk except the last holds exactly `cap` rows).
+            let mut r = 0;
+            for (i, slot) in staged.iter_mut().enumerate() {
+                if let Some(st) = slot {
+                    let cnt = st.pending().len();
+                    let refs: Vec<&[f32]> =
+                        (r..r + cnt).map(|j| chunks[j / cap].row(j % cap)).collect();
+                    engines[i].staged_post(st, &refs);
+                    r += cnt;
+                }
+            }
+            debug_assert_eq!(r, total, "every pooled row scattered");
+        }
+        for (i, slot) in staged.iter_mut().enumerate() {
+            if let Some(st) = slot.take() {
+                let rep = engines[i].finish_staged(st);
+                accumulate(&mut reports[i], rep);
+            }
+        }
+    }
+    BatchOutcome {
+        reports,
+        batched_rows,
+        gemm_fills,
+    }
+}
+
+/// Fold one edit's report into a script-level aggregate (`apply_edits`
+/// semantics: flops sum, last logits, defragged-anywhere).
+fn accumulate(total: &mut EditReport, rep: EditReport) {
+    total.flops += rep.flops;
+    total.defragged |= rep.defragged;
+    total.logits = rep.logits;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::incremental::EngineOptions;
+    use crate::util::Rng;
+    use crate::vq::Code;
+
+    fn setup(seed: u64, n: usize) -> (Arc<ModelWeights>, Vec<u32>) {
+        let cfg = ModelConfig::vqt_tiny();
+        let w = Arc::new(ModelWeights::random(&cfg, seed));
+        let mut r = Rng::new(seed ^ 0x5A5A);
+        let tokens: Vec<u32> = (0..n).map(|_| r.below(cfg.vocab_size) as u32).collect();
+        (w, tokens)
+    }
+
+    /// The kernel-level lock: the pooled stacked tail equals the single-row
+    /// tail at the BIT level, for every layer, at ragged batch sizes.
+    #[test]
+    fn pooled_block_tail_bitwise_matches_single_row() {
+        let (w, tokens) = setup(3, 10);
+        let mut eng = IncrementalEngine::new(w.clone(), &tokens, EngineOptions::default());
+        let cfg = w.cfg.clone();
+        let mut r = Rng::new(5);
+        let mut scratch = TailScratch::new();
+        for li in 0..cfg.n_layers {
+            for &b in &[1usize, 3, 5] {
+                let xs = Matrix::from_fn(b, cfg.d_model, |_, _| r.normal());
+                let codes: Vec<CodeTuple> = (0..b)
+                    .map(|_| {
+                        let cs: Vec<Code> = (0..cfg.vq_heads)
+                            .map(|_| r.below(cfg.vq_codes) as Code)
+                            .collect();
+                        CodeTuple::new(&cs)
+                    })
+                    .collect();
+                let pooled = block_tail_batch(&w, li, &xs.data, b, &codes, &mut scratch);
+                for i in 0..b {
+                    let single = eng.block_tail(li, xs.row(i), codes[i]);
+                    for (j, (p, s)) in pooled.row(i).iter().zip(&single).enumerate() {
+                        assert_eq!(
+                            p.to_bits(),
+                            s.to_bits(),
+                            "layer {li} batch {b} row {i} col {j}: pooled {p} vs single {s}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// End-to-end: pooling across engines changes nothing observable —
+    /// logits bits, per-script FLOPs, stats, tokens.
+    #[test]
+    fn batched_scripts_bit_exact_vs_unbatched() {
+        let (w, _) = setup(7, 0);
+        let cfg = w.cfg.clone();
+        let mut r = Rng::new(11);
+        let n_engines = 3;
+        let docs: Vec<Vec<u32>> = (0..n_engines)
+            .map(|i| {
+                (0..(10 + 3 * i))
+                    .map(|_| r.below(cfg.vocab_size) as u32)
+                    .collect()
+            })
+            .collect();
+        let mut batched: Vec<IncrementalEngine> = docs
+            .iter()
+            .map(|d| IncrementalEngine::new(w.clone(), d, EngineOptions::default()))
+            .collect();
+        let mut serial: Vec<IncrementalEngine> = docs
+            .iter()
+            .map(|d| IncrementalEngine::new(w.clone(), d, EngineOptions::default()))
+            .collect();
+        let scripts: Vec<Vec<Edit>> = docs
+            .iter()
+            .map(|doc| {
+                let mut len = doc.len();
+                (0..4)
+                    .map(|_| {
+                        let e = crate::testutil::gen_edit(&mut r, len, cfg.vocab_size, cfg.max_seq);
+                        len = (len as isize + e.len_delta()) as usize;
+                        e
+                    })
+                    .collect()
+            })
+            .collect();
+        let script_refs: Vec<&[Edit]> = scripts.iter().map(|s| s.as_slice()).collect();
+        let outcome = {
+            let mut refs: Vec<&mut IncrementalEngine> = batched.iter_mut().collect();
+            apply_scripts_batched(&mut refs, &script_refs, 4)
+        };
+        assert!(outcome.batched_rows > 0, "pooled path must actually run");
+        assert!(outcome.gemm_fills.iter().all(|&f| (1..=4).contains(&f)));
+        for (i, (b, s)) in batched.iter_mut().zip(serial.iter_mut()).enumerate() {
+            let rep = s.apply_edits(&scripts[i]);
+            assert_eq!(b.tokens(), s.tokens(), "engine {i} tokens");
+            assert_eq!(outcome.reports[i].flops, rep.flops, "engine {i} flops");
+            assert_eq!(outcome.reports[i].defragged, rep.defragged, "engine {i}");
+            let bb: Vec<u32> = b.logits().iter().map(|x| x.to_bits()).collect();
+            let sb: Vec<u32> = rep.logits.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(bb, sb, "engine {i} logits bits");
+            assert_eq!(b.ledger.total(), s.ledger.total(), "engine {i} ledger");
+            assert_eq!(b.stats, s.stats, "engine {i} stats");
+            let v = b.verify();
+            assert_eq!(v.code_mismatches, 0, "engine {i} dense parity");
+            assert!(v.max_logit_diff < 1e-3, "engine {i}: {}", v.max_logit_diff);
+        }
+    }
+
+    /// The chunk cap only splits GEMMs, never changes results.
+    #[test]
+    fn chunk_cap_is_numerically_invariant() {
+        let (w, _) = setup(9, 0);
+        let cfg = w.cfg.clone();
+        let mut r = Rng::new(13);
+        let docs: Vec<Vec<u32>> = (0..3)
+            .map(|_| (0..12).map(|_| r.below(cfg.vocab_size) as u32).collect())
+            .collect();
+        let scripts: Vec<Vec<Edit>> = docs
+            .iter()
+            .map(|d| {
+                vec![
+                    Edit::Replace {
+                        at: 2,
+                        tok: r.below(cfg.vocab_size) as u32,
+                    },
+                    Edit::Insert {
+                        at: d.len() / 2,
+                        tok: r.below(cfg.vocab_size) as u32,
+                    },
+                ]
+            })
+            .collect();
+        let script_refs: Vec<&[Edit]> = scripts.iter().map(|s| s.as_slice()).collect();
+        let mut bits_per_cap: Vec<Vec<Vec<u32>>> = Vec::new();
+        for cap in [1usize, 2, 7, 1024] {
+            let mut engines: Vec<IncrementalEngine> = docs
+                .iter()
+                .map(|d| IncrementalEngine::new(w.clone(), d, EngineOptions::default()))
+                .collect();
+            let outcome = {
+                let mut refs: Vec<&mut IncrementalEngine> = engines.iter_mut().collect();
+                apply_scripts_batched(&mut refs, &script_refs, cap)
+            };
+            assert!(outcome.gemm_fills.iter().all(|&f| f <= cap), "cap {cap}");
+            bits_per_cap.push(
+                engines
+                    .iter()
+                    .map(|e| e.logits().iter().map(|x| x.to_bits()).collect())
+                    .collect(),
+            );
+        }
+        for other in &bits_per_cap[1..] {
+            assert_eq!(&bits_per_cap[0], other, "chunk cap moved numerics");
+        }
+    }
+
+    /// Empty scripts are no-ops with current logits and zero flops.
+    #[test]
+    fn empty_scripts_are_noops() {
+        let (w, tokens) = setup(15, 8);
+        let mut e = IncrementalEngine::new(w.clone(), &tokens, EngineOptions::default());
+        let before: Vec<u32> = e.logits().iter().map(|x| x.to_bits()).collect();
+        let outcome = {
+            let mut refs: Vec<&mut IncrementalEngine> = vec![&mut e];
+            apply_scripts_batched(&mut refs, &[&[]], 8)
+        };
+        assert_eq!(outcome.reports[0].flops, 0);
+        assert_eq!(outcome.batched_rows, 0);
+        let after: Vec<u32> = outcome.reports[0]
+            .logits
+            .iter()
+            .map(|x| x.to_bits())
+            .collect();
+        assert_eq!(before, after);
+    }
+}

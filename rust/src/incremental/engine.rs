@@ -523,9 +523,18 @@ impl IncrementalEngine {
 
     /// Block tail for one row: VQ-decode(code) → mix → residual → LN2 →
     /// FFN → residual. Pure function of (x, code) — the paper's reuse unit.
-    /// Scratch-buffered: zero allocations beyond the returned vector.
+    /// Ledger/stats charged via [`Self::charge_row_output`].
     fn row_output(&mut self, li: usize, x: &[f32], code: CodeTuple) -> Vec<f32> {
-        self.stats.outputs_recomputed += 1;
+        self.charge_row_output();
+        self.block_tail(li, x, code)
+    }
+
+    /// The block-tail arithmetic alone — NO ledger or stat side effects.
+    /// The staged (batchable) edit path computes tails externally and
+    /// charges per row on scatter; this is the single-row reference the
+    /// pooled executor ([`super::batch`]) must match bit-for-bit.
+    /// Scratch-buffered: zero allocations beyond the returned vector.
+    pub(crate) fn block_tail(&mut self, li: usize, x: &[f32], code: CodeTuple) -> Vec<f32> {
         let w = Arc::clone(&self.w);
         let layer = &w.layers[li];
         let cfg = &w.cfg;
@@ -537,7 +546,6 @@ impl IncrementalEngine {
         sc.c.resize(d, 0.0);
         sc.mid.resize(cfg.d_ff, 0.0);
         vq.decode_into(code, &mut sc.a);
-        self.ledger.add(Cat::Bookkeeping, d as u64);
         tensor::vec_matmul_into(&sc.a, &layer.w_mix, &mut sc.b);
         // y (residual 1) in sc.c
         for i in 0..d {
@@ -551,13 +559,23 @@ impl IncrementalEngine {
         for i in 0..d {
             out[i] += layer.b_ff2[i] + sc.c[i];
         }
+        out
+    }
+
+    /// The exact ledger/stat cost of one block-tail row — shared by
+    /// [`Self::row_output`] and the staged scatter path so the two charge
+    /// identically by construction.
+    fn charge_row_output(&mut self) {
+        self.stats.outputs_recomputed += 1;
+        let cfg = &self.w.cfg;
+        let d = cfg.d_model;
+        self.ledger.add(Cat::Bookkeeping, d as u64);
         self.ledger
             .add(Cat::Linear, MULADD * (d * d + 2 * d * cfg.d_ff) as u64);
         self.ledger.add(
             Cat::Elementwise,
             flops::layernorm_cost(d) + cfg.d_ff as u64 * TRANSCENDENTAL + 2 * d as u64,
         );
-        out
     }
 
     fn final_row(&mut self, x: &[f32]) -> Vec<f32> {
@@ -591,8 +609,53 @@ impl IncrementalEngine {
     // ------------------------------------------------------------------
 
     /// Apply one edit incrementally. Cost ∝ affected rows, not document
-    /// length (modulo defragmentation).
+    /// length (modulo defragmentation). Runs the staged pipeline with the
+    /// in-process single-row block-tail executor — the batched coordinator
+    /// path drives the same staged hooks with a pooled executor, so the
+    /// two paths share every line of orchestration code.
     pub fn apply_edit(&mut self, edit: Edit) -> EditReport {
+        let mut st = match self.stage_edit(edit) {
+            Staged::Done(rep) => return rep,
+            Staged::Pending(st) => st,
+        };
+        while !self.staged_done(&st) {
+            self.staged_pre(&mut st);
+            let li = st.layer;
+            let mut outs: Vec<Vec<f32>> = Vec::with_capacity(st.pending.len());
+            for rw in &st.pending {
+                outs.push(self.block_tail(li, &rw.x, rw.code));
+            }
+            self.staged_post_owned(&mut st, outs);
+        }
+        self.finish_staged(st)
+    }
+
+    /// Apply a whole edit script.
+    pub fn apply_edits(&mut self, edits: &[Edit]) -> EditReport {
+        let snapshot = self.ledger.clone();
+        let mut defragged = false;
+        for &e in edits {
+            defragged |= self.apply_edit(e).defragged;
+        }
+        EditReport {
+            flops: self.ledger.since(&snapshot).total(),
+            logits: self.logits.clone(),
+            defragged,
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Staged edit application: the per-layer dense block tails are
+    // extracted as row-work units an external executor computes — the
+    // cross-session batcher pools them into stacked GEMMs. The unbatched
+    // path (`apply_edit`) drives the same hooks with the single-row
+    // executor, so orchestration cannot diverge between the two.
+    // ------------------------------------------------------------------
+
+    /// Begin a staged edit: applies the token/position/embedding part.
+    /// `Done` means the edit was fully absorbed internally (a defrag
+    /// rebuilds everything — nothing is left to batch).
+    pub(crate) fn stage_edit(&mut self, edit: Edit) -> Staged {
         let snapshot = self.ledger.clone();
         self.stats.edits_applied += 1;
 
@@ -617,11 +680,11 @@ impl IncrementalEngine {
                         self.tokens.insert(at, tok);
                         self.stats.defrags += 1;
                         self.rebuild();
-                        return EditReport {
+                        return Staged::Done(EditReport {
                             flops: self.ledger.since(&snapshot).total(),
                             logits: self.logits.clone(),
                             defragged: true,
-                        };
+                        });
                     }
                 }
             }
@@ -633,51 +696,36 @@ impl IncrementalEngine {
                 ChangeSet::deleted(at)
             }
         };
-
-        let mut change = change0;
-        for li in 0..self.w.cfg.n_layers {
-            change = self.apply_layer(li, change);
-        }
-        self.apply_classifier(change);
-
-        if self.opts.verify_every > 0
-            && self.stats.edits_applied % self.opts.verify_every as u64 == 0
-        {
-            self.stats.verifications += 1;
-            let rep = self.verify();
-            if !rep.is_exact(1e-3) {
-                log::warn!(
-                    "incremental drift (max logit diff {:.2e}, {} code mismatches) — rebuilding",
-                    rep.max_logit_diff,
-                    rep.code_mismatches
-                );
-                self.rebuild();
-            }
-        }
-
-        EditReport {
-            flops: self.ledger.since(&snapshot).total(),
-            logits: self.logits.clone(),
-            defragged: false,
-        }
+        Staged::Pending(StagedEdit {
+            snapshot,
+            layer: 0,
+            change: Some(change0),
+            pending: Vec::new(),
+            next: None,
+        })
     }
 
-    /// Apply a whole edit script.
-    pub fn apply_edits(&mut self, edits: &[Edit]) -> EditReport {
-        let snapshot = self.ledger.clone();
-        let mut defragged = false;
-        for &e in edits {
-            defragged |= self.apply_edit(e).defragged;
-        }
-        EditReport {
-            flops: self.ledger.since(&snapshot).total(),
-            logits: self.logits.clone(),
-            defragged,
-        }
+    /// Whether every layer of a staged edit has been processed (ready for
+    /// [`Self::finish_staged`]).
+    pub(crate) fn staged_done(&self, st: &StagedEdit) -> bool {
+        st.layer == self.w.cfg.n_layers
     }
 
-    /// One layer's incremental update; returns the next layer's change set.
-    fn apply_layer(&mut self, li: usize, change: ChangeSet) -> ChangeSet {
+    /// Run the non-batchable phases of layer `st.layer()` — structural and
+    /// input updates, attention corrections, VQ re-assignment — and emit
+    /// the layer's block-tail row work into `st.pending()`. The executor
+    /// computes `block_tail(x, code)` for each unit (its numerics must be
+    /// bit-identical to the single-row tail; see [`super::batch`]) and
+    /// hands results back via [`Self::staged_post`].
+    pub(crate) fn staged_pre(&mut self, st: &mut StagedEdit) {
+        assert!(st.layer < self.w.cfg.n_layers, "edit already fully staged");
+        assert!(
+            st.pending.is_empty() && st.next.is_none(),
+            "staged_post for layer {} not called",
+            st.layer
+        );
+        let li = st.layer;
+        let change = st.change.take().expect("staged change set present");
         let score_trick = self.opts.score_trick;
         let mut col_changes: Vec<ColChange> = Vec::new();
 
@@ -801,8 +849,9 @@ impl IncrementalEngine {
             }
         }
 
-        // --- 3. re-assignment + output recompute -----------------------------
-        let mut next = ChangeSet::carry_structural(&change);
+        // --- 3. re-assignment; block tails become pending row work ---------
+        let next = ChangeSet::carry_structural(&change);
+        let mut pending = Vec::new();
         for i in 0..n {
             let input_changed = change.row_changed(i);
             if !acc_touched[i] && !input_changed {
@@ -817,11 +866,70 @@ impl IncrementalEngine {
             }
             if input_changed || code_changed {
                 let x = self.layers[li].x.copy_row(i);
-                let out = self.row_output(li, &x, new_code);
-                next.rows.push((i, out));
+                pending.push(RowWork {
+                    row: i,
+                    x,
+                    code: new_code,
+                });
             }
         }
-        next
+        st.pending = pending;
+        st.next = Some(next);
+    }
+
+    /// Scatter externally computed block-tail outputs back (one slice per
+    /// [`StagedEdit::pending`] entry, same order), charge the ledger and
+    /// stats exactly as the single-row path would, and advance to the
+    /// next layer. The batched executor's outputs live in a stacked
+    /// matrix, so this entry point copies; an executor that owns its row
+    /// vectors should use [`Self::staged_post_owned`] and move them.
+    pub(crate) fn staged_post(&mut self, st: &mut StagedEdit, outs: &[&[f32]]) {
+        self.staged_post_owned(st, outs.iter().map(|o| o.to_vec()).collect());
+    }
+
+    /// [`Self::staged_post`] over owned row outputs — the single-row
+    /// executor in [`Self::apply_edit`] moves each tail result straight
+    /// into the next layer's change set, no per-row copy.
+    pub(crate) fn staged_post_owned(&mut self, st: &mut StagedEdit, outs: Vec<Vec<f32>>) {
+        assert_eq!(outs.len(), st.pending.len(), "one output per pending row");
+        let mut next = st.next.take().expect("staged_pre first");
+        for (rw, out) in st.pending.drain(..).zip(outs) {
+            assert_eq!(out.len(), self.w.cfg.d_model, "row {} output width", rw.row);
+            self.charge_row_output();
+            next.rows.push((rw.row, out));
+        }
+        st.change = Some(next);
+        st.layer += 1;
+    }
+
+    /// Complete a staged edit after every layer's tails have scattered:
+    /// classifier maintenance, periodic self-verification, final report.
+    pub(crate) fn finish_staged(&mut self, st: StagedEdit) -> EditReport {
+        assert!(self.staged_done(&st), "layers remaining in staged edit");
+        assert!(st.pending.is_empty(), "pending rows never scattered");
+        let change = st.change.expect("staged change set present");
+        self.apply_classifier(change);
+
+        if self.opts.verify_every > 0
+            && self.stats.edits_applied % self.opts.verify_every as u64 == 0
+        {
+            self.stats.verifications += 1;
+            let rep = self.verify();
+            if !rep.is_exact(1e-3) {
+                log::warn!(
+                    "incremental drift (max logit diff {:.2e}, {} code mismatches) — rebuilding",
+                    rep.max_logit_diff,
+                    rep.code_mismatches
+                );
+                self.rebuild();
+            }
+        }
+
+        EditReport {
+            flops: self.ledger.since(&st.snapshot).total(),
+            logits: self.logits.clone(),
+            defragged: false,
+        }
     }
 
     // ------------------------------------------------------------------
@@ -935,6 +1043,57 @@ fn apply_term_raw(
             tensor::axpy(sign * c, seg, dst);
         }
     }
+}
+
+/// One externally-executable unit of dense block-tail work emitted by
+/// [`IncrementalEngine::staged_pre`]: row `row`'s block input and its
+/// freshly re-assigned VQ code. The executor computes the block tail for
+/// the unit — by any means bit-identical to the single-row tail — and
+/// returns the result through [`IncrementalEngine::staged_post`].
+pub(crate) struct RowWork {
+    /// Row index within the engine's (current) layout.
+    pub row: usize,
+    /// Residual-stream input to the block for this row.
+    pub x: Vec<f32>,
+    /// VQ code to decode-and-mix.
+    pub code: CodeTuple,
+}
+
+/// An in-flight staged edit: per-layer progress plus the pending
+/// block-tail work between a `staged_pre` and its `staged_post`.
+pub(crate) struct StagedEdit {
+    snapshot: FlopLedger,
+    /// Next layer to process (`== n_layers` ⇒ ready for finish).
+    layer: usize,
+    /// Change set feeding `layer`'s pre phase.
+    change: Option<ChangeSet>,
+    /// Block-tail work emitted by the last `staged_pre`, awaiting results.
+    pending: Vec<RowWork>,
+    /// Next layer's change set under construction (post fills the rows).
+    next: Option<ChangeSet>,
+}
+
+impl StagedEdit {
+    /// Layer the edit is currently staged at.
+    pub fn layer(&self) -> usize {
+        self.layer
+    }
+
+    /// Pending block-tail work for the current layer (valid between
+    /// `staged_pre` and `staged_post`).
+    pub(crate) fn pending(&self) -> &[RowWork] {
+        &self.pending
+    }
+}
+
+/// Outcome of [`IncrementalEngine::stage_edit`].
+pub(crate) enum Staged {
+    /// The edit was fully applied internally (defragmentation rebuilds
+    /// everything; there is nothing left to batch).
+    Done(EditReport),
+    /// Per-layer block tails pending: drive with `staged_pre` /
+    /// `staged_post`, then `finish_staged`.
+    Pending(StagedEdit),
 }
 
 /// Rows whose input hidden vector changed this layer (with new values),

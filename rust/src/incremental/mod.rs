@@ -1,10 +1,12 @@
 //! Incremental inference (the paper's core algorithm). See
 //! [`engine::IncrementalEngine`].
 
+pub mod batch;
 pub mod engine;
 pub mod rowstore;
 pub mod snapshot;
 
+pub use batch::{apply_scripts_batched, BatchOutcome};
 pub use engine::{EditReport, EngineOptions, EngineStats, IncrementalEngine, VerifyReport};
 pub use snapshot::{config_fingerprint, SNAPSHOT_MAGIC, SNAPSHOT_VERSION};
 

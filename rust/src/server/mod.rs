@@ -28,7 +28,14 @@ use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 
-pub use protocol::{parse_request, response_to_json};
+pub use protocol::{parse_request, response_to_json, MAX_REQUEST_BYTES};
+
+/// Socket read cap for one request line: the single shared
+/// [`MAX_REQUEST_BYTES`] plus newline slack (CR+LF). Derived — never
+/// redefined — so the read cap and the parser's cap cannot drift apart;
+/// a line the reader admits is never rejected by the parser as oversized
+/// and vice versa.
+const READ_LIMIT_BYTES: u64 = MAX_REQUEST_BYTES as u64 + 2;
 
 /// Serve forever on `bind`, handling each connection on its own thread.
 pub fn serve(bind: &str, client: Client) -> Result<()> {
@@ -52,30 +59,28 @@ pub fn serve(bind: &str, client: Client) -> Result<()> {
 
 /// Handle one connection: line in → request → coordinator → line out.
 ///
-/// The read itself is capped at [`protocol::MAX_REQUEST_BYTES`] (plus
-/// newline slack): a client streaming an endless line never makes the
-/// server buffer more than the cap — the connection is answered with the
-/// oversized-request error and dropped (the rest of the line cannot be
-/// resynced to a message boundary).
+/// The read itself is capped at `READ_LIMIT_BYTES` (the shared
+/// [`MAX_REQUEST_BYTES`] plus newline slack): a client streaming an
+/// endless line never makes the server buffer more than the cap — the
+/// connection is answered with the oversized-request error and dropped
+/// (the rest of the line cannot be resynced to a message boundary).
 pub fn handle_conn(stream: TcpStream, client: Client) -> Result<()> {
     let peer = stream.peer_addr()?;
     log::debug!("connection from {peer}");
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
     let mut buf = Vec::new();
-    let limit = protocol::MAX_REQUEST_BYTES as u64 + 2;
     loop {
         buf.clear();
         let n = Read::by_ref(&mut reader)
-            .take(limit)
+            .take(READ_LIMIT_BYTES)
             .read_until(b'\n', &mut buf)?;
         if n == 0 {
             return Ok(()); // clean EOF
         }
-        if buf.last() != Some(&b'\n') && n as u64 == limit {
+        if buf.last() != Some(&b'\n') && n as u64 == READ_LIMIT_BYTES {
             let out = protocol::error_json(&format!(
-                "oversized request: line exceeds {} bytes",
-                protocol::MAX_REQUEST_BYTES
+                "oversized request: line exceeds {MAX_REQUEST_BYTES} bytes"
             ));
             writer.write_all(out.to_string().as_bytes())?;
             writer.write_all(b"\n")?;
@@ -96,5 +101,27 @@ pub fn handle_conn(stream: TcpStream, client: Client) -> Result<()> {
         writer.write_all(out.to_string().as_bytes())?;
         writer.write_all(b"\n")?;
         writer.flush()?;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The read cap is DERIVED from the parse cap (one shared constant):
+    /// any line the reader admits whole (≤ cap bytes + newline) is within
+    /// the parser's limit, and the parser's boundary sits exactly at the
+    /// re-exported `MAX_REQUEST_BYTES`.
+    #[test]
+    fn read_cap_and_parse_cap_share_one_constant() {
+        assert_eq!(READ_LIMIT_BYTES, MAX_REQUEST_BYTES as u64 + 2);
+        // At the cap: not "oversized" (it fails later, as invalid JSON).
+        let at_cap = "x".repeat(MAX_REQUEST_BYTES);
+        let err = parse_request(&at_cap).unwrap_err().to_string();
+        assert!(!err.contains("oversized"), "{err}");
+        // One past the cap: rejected up front by the shared constant.
+        let over = "x".repeat(MAX_REQUEST_BYTES + 1);
+        let err = parse_request(&over).unwrap_err().to_string();
+        assert!(err.contains("oversized"), "{err}");
     }
 }

@@ -82,12 +82,39 @@ pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
 /// `y = x · W` for a single row vector. `x: (k)`, `w: (k,n)`, `y: (n)`.
 /// This is THE serving hot path (QKV, mix, FFN, classifier are all row ×
 /// matrix); it runs on the tiled core.
+///
+/// Row-decomposability guarantee (the batched-execution bit-exactness
+/// argument, docs/ARCHITECTURE.md §7): [`matmul_into`] runs this exact
+/// per-row core over each stacked row, so `matmul_into(stack(x₀..xₙ), W)`
+/// is bitwise identical to n independent `vec_matmul_into` calls. The
+/// cross-session batcher leans on this; a kernel change that breaks it
+/// fails `batched_gemm_rows_bitwise_equal_gemv` below.
 #[inline]
 pub fn vec_matmul_into(x: &[f32], w: &Matrix, y: &mut [f32]) {
     assert_eq!(x.len(), w.rows);
     assert_eq!(y.len(), w.cols);
     y.iter_mut().for_each(|v| *v = 0.0);
     accum_row_tiled(x, w, y);
+}
+
+/// Row-wise layer normalization over stacked rows: `out.row(i) =
+/// LN(x.row(i))`. Batched form of [`layernorm_into`] — same scalar code
+/// per row, so the pooled block-tail path cannot drift from the per-row
+/// path.
+pub fn layernorm_rows_into(x: &Matrix, gamma: &[f32], beta: &[f32], eps: f32, out: &mut Matrix) {
+    assert_eq!((x.rows, x.cols), (out.rows, out.cols));
+    for i in 0..x.rows {
+        layernorm_into(x.row(i), gamma, beta, eps, out.row_mut(i));
+    }
+}
+
+/// Fused `row = GELU(row + b)` over every stacked row — batched form of
+/// [`bias_gelu`], same per-row scalar sequence.
+pub fn bias_gelu_rows(m: &mut Matrix, bias: &[f32]) {
+    assert_eq!(m.cols, bias.len());
+    for i in 0..m.rows {
+        bias_gelu(m.row_mut(i), bias);
+    }
 }
 
 /// Dot product — 8-wide chunks feeding 4 independent accumulators, so the
@@ -354,6 +381,71 @@ mod tests {
         let yref = naive_vec_matmul(&x, &w);
         for (a, b) in y.iter().zip(&yref) {
             assert!((a - b).abs() < reassoc_tol(k), "{a} vs {b}");
+        }
+    }
+
+    /// The load-bearing property behind cross-session batching: a stacked
+    /// GEMM equals the per-row GEMVs at the BIT level, not within an fp
+    /// tolerance. If tiling/unrolling ever makes the batched core
+    /// accumulate in a different order than the single-row core, this must
+    /// fail.
+    #[test]
+    fn batched_gemm_rows_bitwise_equal_gemv() {
+        use crate::util::Rng;
+        let mut r = Rng::new(12);
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (3, 63, 65),
+            (5, 64, 64),
+            (4, 130, 129),
+            (2, 8, 256),
+            (7, 128, 512),
+        ] {
+            let a = Matrix::from_fn(m, k, |_, _| r.normal());
+            let w = Matrix::from_fn(k, n, |_, _| r.normal());
+            let mut c = Matrix::zeros(m, n);
+            matmul_into(&a, &w, &mut c);
+            let mut y = vec![0.0; n];
+            for i in 0..m {
+                vec_matmul_into(a.row(i), &w, &mut y);
+                for (j, (cv, yv)) in c.row(i).iter().zip(&y).enumerate() {
+                    assert_eq!(
+                        cv.to_bits(),
+                        yv.to_bits(),
+                        "({m},{k},{n}) row {i} col {j}: batched {cv} vs gemv {yv}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn row_batched_elementwise_kernels_bitwise_equal_per_row() {
+        use crate::util::Rng;
+        let mut r = Rng::new(13);
+        for &(m, n) in &[(1usize, 1usize), (3, 7), (5, 64), (2, 130)] {
+            let x = Matrix::from_fn(m, n, |_, _| r.normal());
+            let gamma: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+            let beta: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+            let mut batched = Matrix::zeros(m, n);
+            layernorm_rows_into(&x, &gamma, &beta, 1e-5, &mut batched);
+            let mut row = vec![0.0; n];
+            for i in 0..m {
+                layernorm_into(x.row(i), &gamma, &beta, 1e-5, &mut row);
+                for (a, b) in batched.row(i).iter().zip(&row) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "layernorm row {i}");
+                }
+            }
+            let bias: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+            let mut bg = x.clone();
+            bias_gelu_rows(&mut bg, &bias);
+            for i in 0..m {
+                let mut single = x.row(i).to_vec();
+                bias_gelu(&mut single, &bias);
+                for (a, b) in bg.row(i).iter().zip(&single) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "bias_gelu row {i}");
+                }
+            }
         }
     }
 

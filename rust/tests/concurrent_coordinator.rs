@@ -152,6 +152,103 @@ fn sharded_pool_matches_serial_replay_per_session() {
     coordinator.shutdown();
 }
 
+/// Satellite coverage: `Metrics::merge` / `per_shard` accounting at worker
+/// counts 1 and 3 with a pool-wide `queue_capacity` (and `max_sessions`)
+/// that does NOT divide evenly across shards — the ceil-split must not
+/// lose or double-count anything, and the merged snapshot must equal the
+/// per-shard sum exactly.
+#[test]
+fn stats_merge_matches_per_shard_sum_at_awkward_splits() {
+    let cfg = ModelConfig::vqt_tiny();
+    for &workers in &[1usize, 3] {
+        let w = Arc::new(ModelWeights::random(&cfg, 61));
+        let sc = ServeConfig {
+            workers,
+            queue_capacity: 7, // ceil(7/3)=3 per shard — non-divisible
+            max_sessions: 10,  // ceil(10/3)=4 per shard — non-divisible
+            ..ServeConfig::default()
+        };
+        let coordinator = Coordinator::start(
+            Backend {
+                weights: w.clone(),
+                artifacts_dir: None,
+                engine_opts: EngineOptions::default(),
+            },
+            sc,
+        );
+        let client = coordinator.client();
+        let mut rng = Rng::new(71);
+        let n_sessions = 6;
+        let mut lens = Vec::new();
+        for s in 0..n_sessions {
+            let doc: Vec<u32> = (0..10).map(|_| rng.below(cfg.vocab_size) as u32).collect();
+            lens.push(doc.len());
+            client
+                .request(Request::Open {
+                    session: format!("m{s}"),
+                    tokens: doc,
+                })
+                .unwrap()
+                .logits()
+                .unwrap();
+        }
+        let mut edits_sent = 0u64;
+        for _round in 0..3 {
+            for s in 0..n_sessions {
+                let e = gen_edit(&mut rng, lens[s], cfg.vocab_size, cfg.max_seq);
+                lens[s] = (lens[s] as isize + e.len_delta()) as usize;
+                client
+                    .request(Request::Edit {
+                        session: format!("m{s}"),
+                        edit: e,
+                    })
+                    .unwrap()
+                    .logits()
+                    .unwrap();
+                edits_sent += 1;
+            }
+        }
+        for _ in 0..4 {
+            client
+                .request(Request::Dense {
+                    tokens: (0..8).map(|i| (i % 50) as u32).collect(),
+                })
+                .unwrap()
+                .logits()
+                .unwrap();
+        }
+        match client.request(Request::Stats).unwrap() {
+            Response::Stats(j) => {
+                assert_eq!(j.get("shards").as_usize(), Some(workers));
+                let per_shard = j.get("per_shard").as_arr().expect("per_shard");
+                assert_eq!(per_shard.len(), workers, "one entry per shard");
+                // The merged counters equal the per-shard sums EXACTLY.
+                for key in ["edits", "dense_calls", "live_sessions", "errors", "batched_rows"] {
+                    let sum: usize = per_shard
+                        .iter()
+                        .map(|sj| sj.get(key).as_usize().unwrap_or(0))
+                        .sum();
+                    assert_eq!(
+                        j.get(key).as_usize(),
+                        Some(sum),
+                        "workers={workers}: merged '{key}' != per-shard sum"
+                    );
+                }
+                assert_eq!(j.get("edits").as_usize(), Some(edits_sent as usize));
+                assert_eq!(j.get("dense_calls").as_usize(), Some(4));
+                assert_eq!(j.get("live_sessions").as_usize(), Some(n_sessions));
+                assert_eq!(j.get("errors").as_usize(), Some(0));
+                // The batch-occupancy histogram is present and coherent
+                // (count may be 0 when no waves overlapped).
+                assert!(j.get("batch_fill").get("count").as_f64().is_some());
+            }
+            other => panic!("workers={workers}: {other:?}"),
+        }
+        drop(client);
+        coordinator.shutdown();
+    }
+}
+
 #[test]
 fn round_robin_spreads_sessionless_work_and_stats_merge() {
     let cfg = ModelConfig::vqt_tiny();

@@ -1,0 +1,275 @@
+//! Differential suite for cross-session batched execution
+//! (`incremental::batch::apply_scripts_batched` — the pooled block-tail
+//! GEMM path the coordinator shards run under load).
+//!
+//! The claim under test is strict BIT-exactness, not tolerance-level
+//! agreement: for randomized multi-session edit streams, the batched path
+//! must produce, per session,
+//!   - identical logits (f32 bit patterns),
+//!   - identical per-script FLOP reports and final ledgers,
+//!   - identical reuse statistics (corrections, code flips, recomputes),
+//!   - identical tokens/positions,
+//! compared against (a) an unbatched `apply_edits` peer engine and (b) the
+//! dense from-scratch oracle (`verify()`), across ≥3 model configs × seeds
+//! × several concurrent sessions, including defrags mid-stream and the
+//! degenerate chunk caps.
+
+use std::sync::Arc;
+use vqt::config::ModelConfig;
+use vqt::edits::Edit;
+use vqt::incremental::{apply_scripts_batched, EngineOptions, IncrementalEngine};
+use vqt::model::ModelWeights;
+use vqt::testutil::gen_edit;
+use vqt::util::Rng;
+
+/// The config axis: three genuinely different geometries.
+fn configs() -> Vec<(&'static str, ModelConfig, EngineOptions)> {
+    let trick_off = EngineOptions {
+        score_trick: false,
+        verify_every: 0,
+    };
+    vec![
+        ("vqt_tiny", ModelConfig::vqt_tiny(), EngineOptions::default()),
+        (
+            "table1_vq_h4",
+            ModelConfig::table1("vq_h4").unwrap(),
+            EngineOptions::default(),
+        ),
+        ("vqt_tiny_naive", ModelConfig::vqt_tiny(), trick_off),
+    ]
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Run one multi-session stream batched and unbatched; assert exhaustive
+/// equality plus dense-oracle parity.
+fn run_stream(
+    label: &str,
+    cfg: &ModelConfig,
+    opts: EngineOptions,
+    seed: u64,
+    sessions: usize,
+    waves: usize,
+    max_batch_rows: usize,
+) {
+    let w = Arc::new(ModelWeights::random(cfg, seed));
+    let mut r = Rng::new(seed ^ 0xD1FF);
+    let docs: Vec<Vec<u32>> = (0..sessions)
+        .map(|i| {
+            let n = r.range(8, 16 + i);
+            (0..n).map(|_| r.below(cfg.vocab_size) as u32).collect()
+        })
+        .collect();
+    let mut batched: Vec<IncrementalEngine> = docs
+        .iter()
+        .map(|d| IncrementalEngine::new(w.clone(), d, opts))
+        .collect();
+    let mut serial: Vec<IncrementalEngine> = docs
+        .iter()
+        .map(|d| IncrementalEngine::new(w.clone(), d, opts))
+        .collect();
+    let mut lens: Vec<usize> = docs.iter().map(Vec::len).collect();
+    for wave in 0..waves {
+        // Random per-session scripts (some empty — sessions idle in and
+        // out of waves, like real queues).
+        let scripts: Vec<Vec<Edit>> = (0..sessions)
+            .map(|i| {
+                let k = r.below(4); // 0..=3 edits this wave
+                (0..k)
+                    .map(|_| {
+                        let e = gen_edit(&mut r, lens[i], cfg.vocab_size, cfg.max_seq);
+                        lens[i] = (lens[i] as isize + e.len_delta()) as usize;
+                        e
+                    })
+                    .collect()
+            })
+            .collect();
+        let script_refs: Vec<&[Edit]> = scripts.iter().map(|s| s.as_slice()).collect();
+        let outcome = {
+            let mut refs: Vec<&mut IncrementalEngine> = batched.iter_mut().collect();
+            apply_scripts_batched(&mut refs, &script_refs, max_batch_rows)
+        };
+        assert!(
+            outcome.gemm_fills.iter().all(|&f| f <= max_batch_rows),
+            "{label} seed {seed} wave {wave}: fill over cap"
+        );
+        for i in 0..sessions {
+            let rep = serial[i].apply_edits(&scripts[i]);
+            assert_eq!(
+                outcome.reports[i].flops, rep.flops,
+                "{label} seed {seed} wave {wave} session {i}: per-script FLOPs"
+            );
+            assert_eq!(
+                outcome.reports[i].defragged, rep.defragged,
+                "{label} seed {seed} wave {wave} session {i}: defrag flag"
+            );
+            assert_eq!(
+                bits(&outcome.reports[i].logits),
+                bits(&rep.logits),
+                "{label} seed {seed} wave {wave} session {i}: report logits bits"
+            );
+        }
+    }
+    // Final-state equality: the two engine populations are
+    // indistinguishable, and both exactly match the dense oracle.
+    for i in 0..sessions {
+        let (b, s) = (&batched[i], &serial[i]);
+        assert_eq!(b.tokens(), s.tokens(), "{label} session {i} tokens");
+        assert_eq!(
+            b.position_ids(),
+            s.position_ids(),
+            "{label} session {i} positions"
+        );
+        assert_eq!(
+            bits(b.logits()),
+            bits(s.logits()),
+            "{label} session {i} final logits bits"
+        );
+        assert_eq!(
+            b.ledger.total(),
+            s.ledger.total(),
+            "{label} session {i} ledger total"
+        );
+        assert_eq!(b.stats, s.stats, "{label} session {i} reuse statistics");
+        let v = batched[i].verify();
+        assert_eq!(
+            v.code_mismatches, 0,
+            "{label} session {i}: dense oracle code parity"
+        );
+        assert!(
+            v.max_logit_diff < 1e-3,
+            "{label} session {i}: oracle logit diff {}",
+            v.max_logit_diff
+        );
+    }
+}
+
+#[test]
+fn batched_streams_bit_exact_across_configs_and_seeds() {
+    for (label, cfg, opts) in configs() {
+        for seed in 0..3u64 {
+            run_stream(label, &cfg, opts, 100 + seed, 4, 4, 8);
+        }
+    }
+}
+
+/// Degenerate and adversarial chunk caps: 1-row GEMMs (pure overhead, no
+/// pooling) and an effectively unbounded cap must both be bit-identical.
+#[test]
+fn chunk_cap_extremes_are_bit_exact() {
+    let cfg = ModelConfig::vqt_tiny();
+    for cap in [1usize, 3, 4096] {
+        run_stream("tiny_cap", &cfg, EngineOptions::default(), 77, 3, 3, cap);
+    }
+}
+
+/// Defrags forced mid-stream (zero position-pool slack): the batched path
+/// must absorb full rebuilds inside a wave and stay exact.
+#[test]
+fn defrag_inside_batched_wave_stays_exact() {
+    let mut cfg = ModelConfig::vqt_tiny();
+    cfg.pos_pool = cfg.max_seq; // zero slack ⇒ inserts defrag often
+    let w = Arc::new(ModelWeights::random(&cfg, 5));
+    let mut r = Rng::new(21);
+    let docs: Vec<Vec<u32>> = (0..3)
+        .map(|_| (0..10).map(|_| r.below(cfg.vocab_size) as u32).collect())
+        .collect();
+    let mut batched: Vec<IncrementalEngine> = docs
+        .iter()
+        .map(|d| IncrementalEngine::new(w.clone(), d, EngineOptions::default()))
+        .collect();
+    let mut serial: Vec<IncrementalEngine> = docs
+        .iter()
+        .map(|d| IncrementalEngine::new(w.clone(), d, EngineOptions::default()))
+        .collect();
+    // Insert-heavy scripts at one position force defrags.
+    let scripts: Vec<Vec<Edit>> = (0..3)
+        .map(|s| {
+            (0..6)
+                .map(|i| Edit::Insert {
+                    at: (s + i) % 5,
+                    tok: ((7 * i + s) % 50) as u32,
+                })
+                .collect()
+        })
+        .collect();
+    let script_refs: Vec<&[Edit]> = scripts.iter().map(|s| s.as_slice()).collect();
+    let outcome = {
+        let mut refs: Vec<&mut IncrementalEngine> = batched.iter_mut().collect();
+        apply_scripts_batched(&mut refs, &script_refs, 8)
+    };
+    let mut any_defrag = false;
+    for i in 0..3 {
+        let rep = serial[i].apply_edits(&scripts[i]);
+        any_defrag |= rep.defragged;
+        assert_eq!(outcome.reports[i].flops, rep.flops, "session {i}");
+        assert_eq!(outcome.reports[i].defragged, rep.defragged, "session {i}");
+        assert_eq!(bits(&outcome.reports[i].logits), bits(&rep.logits));
+        assert_eq!(batched[i].stats, serial[i].stats, "session {i} stats");
+        let v = batched[i].verify();
+        assert_eq!(v.code_mismatches, 0, "session {i}");
+        assert!(v.max_logit_diff < 1e-3, "session {i}");
+    }
+    assert!(any_defrag, "zero-slack pool must defrag at least once");
+}
+
+/// Serving-scale tier (release-mode CI: `cargo test --release -- --ignored`):
+/// the vqt_mini geometries under longer concurrent streams.
+#[test]
+#[ignore = "serving-scale differential tier; run with --release -- --ignored"]
+fn batched_streams_bit_exact_at_serving_scale() {
+    for (label, cfg) in [
+        ("vqt_mini", ModelConfig::vqt_mini()),
+        ("vqt_mini_h4", ModelConfig::vqt_mini_h4()),
+    ] {
+        let w = Arc::new(ModelWeights::random(&cfg, 777));
+        let mut r = Rng::new(31337);
+        let sessions = 6;
+        let docs: Vec<Vec<u32>> = (0..sessions)
+            .map(|_| {
+                let n = r.range(64, 160);
+                (0..n).map(|_| r.below(cfg.vocab_size) as u32).collect()
+            })
+            .collect();
+        let mut batched: Vec<IncrementalEngine> = docs
+            .iter()
+            .map(|d| IncrementalEngine::new(w.clone(), d, EngineOptions::default()))
+            .collect();
+        let mut serial: Vec<IncrementalEngine> = docs
+            .iter()
+            .map(|d| IncrementalEngine::new(w.clone(), d, EngineOptions::default()))
+            .collect();
+        let mut lens: Vec<usize> = docs.iter().map(Vec::len).collect();
+        for _wave in 0..6 {
+            let scripts: Vec<Vec<Edit>> = (0..sessions)
+                .map(|i| {
+                    (0..r.range(1, 4))
+                        .map(|_| {
+                            let e = gen_edit(&mut r, lens[i], cfg.vocab_size, cfg.max_seq);
+                            lens[i] = (lens[i] as isize + e.len_delta()) as usize;
+                            e
+                        })
+                        .collect()
+                })
+                .collect();
+            let script_refs: Vec<&[Edit]> = scripts.iter().map(|s| s.as_slice()).collect();
+            let outcome = {
+                let mut refs: Vec<&mut IncrementalEngine> = batched.iter_mut().collect();
+                apply_scripts_batched(&mut refs, &script_refs, 128)
+            };
+            for i in 0..sessions {
+                let rep = serial[i].apply_edits(&scripts[i]);
+                assert_eq!(outcome.reports[i].flops, rep.flops, "{label} session {i}");
+                assert_eq!(bits(&outcome.reports[i].logits), bits(&rep.logits), "{label}");
+            }
+        }
+        for i in 0..sessions {
+            assert_eq!(batched[i].stats, serial[i].stats, "{label} session {i}");
+            let v = batched[i].verify();
+            assert_eq!(v.code_mismatches, 0, "{label} session {i}");
+            assert!(v.max_logit_diff < 1e-2, "{label} session {i}");
+        }
+    }
+}
