@@ -12,7 +12,9 @@ use std::sync::Arc;
 use vqt::bench::{emit_json, print_table, serving_weights, time_it};
 use vqt::config::ModelConfig;
 use vqt::edits::Edit;
-use vqt::incremental::{apply_scripts_batched, EngineOptions, IncrementalEngine};
+use vqt::incremental::{
+    apply_scripts_batched, CacheHandle, CodeCache, EngineOptions, IncrementalEngine,
+};
 use vqt::runtime::ArtifactRuntime;
 use vqt::tensor::{self, Matrix};
 use vqt::util::Rng;
@@ -277,6 +279,107 @@ fn main() {
         &rows,
     );
 
+    // --- codebook-product cache: miss, warm hit, wave dedup ----------------
+    // The PR-6 lever: block tails keyed by (layer, code tuple) skip the
+    // decode→mix GEMV on a hit. Three regimes, each against an uncached
+    // peer running the SAME edit pattern (edit cost varies with the token
+    // stream, so every comparison keeps its own honest baseline):
+    //   warm  — an A→B→A token toggle; every tail after warmup hits;
+    //   cold  — a fresh token every edit; every tail misses AND pays the
+    //           insert, bounding the overhead the cache can ever add;
+    //   wave  — 8 identical sessions per pooled wave; dedup collapses the
+    //           wave's repeated code to ONE product before the stacked GEMM.
+    let (cw, ci) = if smoke { (0, 1) } else { (2, 12) };
+    let cache_doc: Vec<u32> = (0..256).map(|_| rng.below(256) as u32).collect();
+    let mk_cache = || CacheHandle::new(Arc::new(CodeCache::new(64 << 20)), &w);
+    let mk_eng = |cache: Option<CacheHandle>| {
+        let mut e = IncrementalEngine::new(w.clone(), &cache_doc, EngineOptions::default());
+        e.set_code_cache(cache);
+        e
+    };
+    let mut rows = Vec::new();
+    // Warm regime (vs uncached toggle).
+    let mut plain_t = mk_eng(None);
+    let mut i1 = 0u32;
+    let tpt = time_it(cw, ci, || {
+        i1 += 1;
+        plain_t.apply_edit(Edit::Replace { at: 128, tok: 1 + (i1 & 1) });
+    });
+    let mut warm = mk_eng(Some(mk_cache()));
+    let mut i2 = 0u32;
+    let twm = time_it(cw, ci, || {
+        i2 += 1;
+        warm.apply_edit(Edit::Replace { at: 128, tok: 1 + (i2 & 1) });
+    });
+    let warm_ratio = tpt.p50.as_secs_f64() / twm.p50.as_secs_f64().max(1e-9);
+    rows.push(vec![
+        "warm (A↔B toggle, all hits)".into(),
+        format!("{:.3}", tpt.p50.as_secs_f64() * 1e3),
+        format!("{:.3}", twm.p50.as_secs_f64() * 1e3),
+        format!("{:.2}x", warm_ratio),
+    ]);
+    // Cold regime (vs uncached cycle).
+    let mut plain_c = mk_eng(None);
+    let mut i3 = 0u32;
+    let tpc = time_it(cw, ci, || {
+        i3 = (i3 + 1) % 251;
+        plain_c.apply_edit(Edit::Replace { at: 128, tok: i3 });
+    });
+    let mut cold = mk_eng(Some(mk_cache()));
+    let mut i4 = 0u32;
+    let tcd = time_it(cw, ci, || {
+        i4 = (i4 + 1) % 251;
+        cold.apply_edit(Edit::Replace { at: 128, tok: i4 });
+    });
+    let cold_ratio = tpc.p50.as_secs_f64() / tcd.p50.as_secs_f64().max(1e-9);
+    rows.push(vec![
+        "cold (fresh token, all misses)".into(),
+        format!("{:.3}", tpc.p50.as_secs_f64() * 1e3),
+        format!("{:.3}", tcd.p50.as_secs_f64() * 1e3),
+        format!("{:.2}x", cold_ratio),
+    ]);
+    // Wave-dedup regime: 8 sessions pooled, identical edits per wave.
+    let s = 8usize;
+    let mk_wave = |cache: Option<CacheHandle>| -> Vec<IncrementalEngine> {
+        (0..s).map(|_| mk_eng(cache.clone())).collect()
+    };
+    let mut unc_wave = mk_wave(None);
+    let mut k1 = 0u32;
+    let tbu = time_it(cw, ci, || {
+        k1 = (k1 + 1) % 251;
+        let script = [Edit::Replace { at: 128, tok: k1 }];
+        let refs: Vec<&[Edit]> = (0..s).map(|_| script.as_slice()).collect();
+        let mut er: Vec<&mut IncrementalEngine> = unc_wave.iter_mut().collect();
+        apply_scripts_batched(&mut er, &refs, 1024);
+    });
+    let mut ded_wave = mk_wave(Some(mk_cache()));
+    let mut k2 = 0u32;
+    let tbd = time_it(cw, ci, || {
+        k2 = (k2 + 1) % 251;
+        let script = [Edit::Replace { at: 128, tok: k2 }];
+        let refs: Vec<&[Edit]> = (0..s).map(|_| script.as_slice()).collect();
+        let mut er: Vec<&mut IncrementalEngine> = ded_wave.iter_mut().collect();
+        apply_scripts_batched(&mut er, &refs, 1024);
+    });
+    let dedup_ratio = tbu.p50.as_secs_f64() / tbd.p50.as_secs_f64().max(1e-9);
+    rows.push(vec![
+        format!("wave ×{s} (same token, deduped)"),
+        format!("{:.3}", tbu.p50.as_secs_f64() * 1e3),
+        format!("{:.3}", tbd.p50.as_secs_f64() * 1e3),
+        format!("{:.2}x", dedup_ratio),
+    ]);
+    print_table(
+        "codebook-product cache: block-tail edits, cached vs uncached (n=256)",
+        &["regime", "uncached p50 (ms)", "cached p50 (ms)", "speedup"],
+        &rows,
+    );
+    println!(
+        "(warm engine: {} hits / {} misses; wave cache deduped {} hits)",
+        warm.stats.cache_hits,
+        warm.stats.cache_misses,
+        ded_wave.iter().map(|e| e.stats.cache_hits).sum::<u64>(),
+    );
+
     // --- sustained online throughput --------------------------------------
     let n = 384;
     let tokens: Vec<u32> = (0..n).map(|_| rng.below(256) as u32).collect();
@@ -330,6 +433,17 @@ fn main() {
             ),
             ("batched_x8_speedup_ratio", amortized_ratio_s8),
             ("engine_flops", eng.ledger.total() as f64),
+            (
+                "cache_warm_edit_p50_ns",
+                twm.p50.as_secs_f64() * 1e9,
+            ),
+            (
+                "cache_uncached_edit_p50_ns",
+                tpt.p50.as_secs_f64() * 1e9,
+            ),
+            ("cache_warm_speedup_ratio", warm_ratio),
+            ("cache_cold_speedup_ratio", cold_ratio),
+            ("cache_wave_dedup_speedup_ratio", dedup_ratio),
         ],
     );
 

@@ -257,6 +257,12 @@ pub struct ServeConfig {
     /// server instances can share the path). Empty ⇒ spilling disabled:
     /// over-cap sessions are dropped (the pre-lifecycle behavior).
     pub spill_dir: String,
+    /// Process-global codebook-product cache budget, in MiB. Each
+    /// layer's `decode(code)·w_mix` product is a pure function of
+    /// `(layer, code)`, so it is cached once and shared by every session
+    /// on every shard; entries beyond the budget are evicted LRU. 0 ⇒
+    /// cache disabled (the classic per-row decode→mix path).
+    pub code_cache_mb: usize,
 }
 
 impl Default for ServeConfig {
@@ -274,6 +280,7 @@ impl Default for ServeConfig {
             max_resident_sessions: 0,
             memory_budget_mb: 0,
             spill_dir: String::new(),
+            code_cache_mb: 0,
         }
     }
 }
@@ -309,6 +316,10 @@ impl ServeConfig {
                 .as_usize()
                 .unwrap_or(d.memory_budget_mb),
             spill_dir: j.get("spill_dir").as_str().unwrap_or(&d.spill_dir).to_string(),
+            code_cache_mb: j
+                .get("code_cache_mb")
+                .as_usize()
+                .unwrap_or(d.code_cache_mb),
         })
     }
 }
@@ -438,6 +449,8 @@ mod file_tests {
         assert_eq!(serve.max_resident_sessions, 32);
         assert_eq!(serve.memory_budget_mb, 512);
         assert_eq!(serve.spill_dir, "/tmp/vqt-sessions");
+        // Cross-session codebook-product cache on in the shipped config.
+        assert_eq!(serve.code_cache_mb, 64);
     }
 
     #[test]
@@ -447,6 +460,15 @@ mod file_tests {
         assert_eq!(sc.max_resident_sessions, 0);
         assert_eq!(sc.memory_budget_mb, 0);
         assert!(sc.spill_dir.is_empty());
+    }
+
+    #[test]
+    fn code_cache_defaults_off_and_overrides() {
+        let j = Json::parse(r#"{}"#).unwrap();
+        let sc = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(sc.code_cache_mb, 0, "cache strictly opt-in");
+        let j = Json::parse(r#"{"code_cache_mb": 16}"#).unwrap();
+        assert_eq!(ServeConfig::from_json(&j).unwrap().code_cache_mb, 16);
     }
 
     #[test]

@@ -136,6 +136,18 @@ pub struct Metrics {
     /// Rows executed through pooled cross-session block-tail GEMMs (the
     /// batched execution path; 0 means every edit ran per-session).
     pub batched_rows: u64,
+    /// Block tails served from the shared codebook-product cache (the
+    /// decode→mix GEMV was skipped). Additive across sessions and shards;
+    /// 0 when `code_cache_mb` is 0.
+    pub cache_hits: u64,
+    /// Block tails that consulted the cache and had to compute (the miss
+    /// inserts the product for future hits).
+    pub cache_misses: u64,
+    /// Cache entries evicted under the `code_cache_mb` byte budget.
+    pub cache_evictions: u64,
+    /// Bytes inserted into the cache (cumulative, not resident — the
+    /// resident gauge lives in the cache itself and is bounded by config).
+    pub cache_bytes: u64,
     /// Batch occupancy: rows per pooled GEMM issued. A mean near 1 means
     /// the window rarely catches concurrent sessions; a high p50 means the
     /// weight traversal is being amortized well.
@@ -164,6 +176,10 @@ impl Metrics {
         self.panics += o.panics;
         self.batched_rows += o.batched_rows;
         self.batch_fill.merge(&o.batch_fill);
+        self.cache_hits += o.cache_hits;
+        self.cache_misses += o.cache_misses;
+        self.cache_evictions += o.cache_evictions;
+        self.cache_bytes += o.cache_bytes;
     }
     /// The aggregate speedup the engine achieved (paper's headline ratio).
     pub fn speedup(&self) -> f64 {
@@ -198,6 +214,10 @@ impl Metrics {
             ("panics", Json::num(self.panics as f64)),
             ("batched_rows", Json::num(self.batched_rows as f64)),
             ("batch_fill", self.batch_fill.to_json()),
+            ("cache_hits", Json::num(self.cache_hits as f64)),
+            ("cache_misses", Json::num(self.cache_misses as f64)),
+            ("cache_evictions", Json::num(self.cache_evictions as f64)),
+            ("cache_bytes", Json::num(self.cache_bytes as f64)),
         ])
     }
 }
@@ -249,6 +269,8 @@ mod tests {
             edits: 3,
             flops_incremental: 10,
             flops_dense_equiv: 100,
+            cache_hits: 2,
+            cache_bytes: 64,
             ..Default::default()
         };
         a.lat_edit_us.record(4.0);
@@ -259,6 +281,10 @@ mod tests {
             panics: 1,
             suspends: 2,
             resumes: 1,
+            cache_hits: 3,
+            cache_misses: 4,
+            cache_evictions: 1,
+            cache_bytes: 128,
             ..Default::default()
         };
         b.lat_edit_us.record(16.0);
@@ -266,6 +292,10 @@ mod tests {
         assert_eq!(a.edits, 8);
         assert_eq!(a.panics, 1);
         assert_eq!((a.suspends, a.resumes), (2, 1));
+        assert_eq!(
+            (a.cache_hits, a.cache_misses, a.cache_evictions, a.cache_bytes),
+            (5, 4, 1, 192)
+        );
         assert_eq!(a.speedup(), 20.0);
         assert_eq!(a.lat_edit_us.count(), 2);
     }
@@ -306,5 +336,8 @@ mod tests {
         let j = m.to_json();
         assert!(j.get("speedup").as_f64().is_some());
         assert!(j.get("lat_edit_us").get("p99").as_f64().is_some());
+        for k in ["cache_hits", "cache_misses", "cache_evictions", "cache_bytes"] {
+            assert_eq!(j.get(k).as_usize(), Some(0), "{k}");
+        }
     }
 }

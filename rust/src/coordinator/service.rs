@@ -20,7 +20,7 @@ use crate::compressed::CompressedBatch;
 use crate::config::ServeConfig;
 use crate::edits::{diff_tokens, Edit};
 use crate::flops::{dense_forward_flops, FlopLedger};
-use crate::incremental::{EngineOptions, IncrementalEngine};
+use crate::incremental::{CacheHandle, CodeCache, EngineOptions, IncrementalEngine};
 use crate::model::{dense_forward, ModelWeights};
 use crate::runtime::ArtifactRuntime;
 use crate::util::Json;
@@ -302,6 +302,13 @@ impl Client {
                                 ("errors", Json::num(metrics.errors as f64)),
                                 ("panics", Json::num(metrics.panics as f64)),
                                 ("batched_rows", Json::num(metrics.batched_rows as f64)),
+                                ("cache_hits", Json::num(metrics.cache_hits as f64)),
+                                ("cache_misses", Json::num(metrics.cache_misses as f64)),
+                                (
+                                    "cache_evictions",
+                                    Json::num(metrics.cache_evictions as f64),
+                                ),
+                                ("cache_bytes", Json::num(metrics.cache_bytes as f64)),
                             ]));
                             merged.merge(&metrics);
                             live += live_sessions;
@@ -383,20 +390,34 @@ impl Coordinator {
             memory_budget_bytes: budget_bytes,
             spill_dir,
         };
+        // One PROCESS-GLOBAL codebook-product cache for the whole pool,
+        // not one per shard: `code → decode·w_mix` products depend only on
+        // the weights, so sessions hash-routed to different shards that
+        // touch the same codes share warm entries. The handle carries the
+        // weights fingerprint; every engine attaches a clone, and the
+        // `code_cache_mb = 0` default keeps the classic uncached serving
+        // numerics (and stat series) byte-for-byte.
+        let code_cache = (cfg.code_cache_mb > 0).then(|| {
+            CacheHandle::new(
+                Arc::new(CodeCache::from_mb(cfg.code_cache_mb)),
+                &backend.weights,
+            )
+        });
         let mut txs = Vec::with_capacity(shards);
         let mut handles = Vec::with_capacity(shards);
         for shard in 0..shards {
             let (tx, rx) = mpsc::sync_channel::<Job>(queue_cap);
-            let weights = backend.weights.clone();
-            let artifacts_dir = backend.artifacts_dir.clone();
-            let engine_opts = backend.engine_opts;
-            let cfg = cfg.clone();
-            let policy = policy.clone();
+            let seed = ShardSeed {
+                weights: backend.weights.clone(),
+                artifacts_dir: backend.artifacts_dir.clone(),
+                engine_opts: backend.engine_opts,
+                cfg: cfg.clone(),
+                policy: policy.clone(),
+                code_cache: code_cache.clone(),
+            };
             let handle = std::thread::Builder::new()
                 .name(format!("vqt-shard-{shard}"))
-                .spawn(move || {
-                    worker_loop(shard, weights, artifacts_dir, engine_opts, cfg, policy, rx)
-                })
+                .spawn(move || worker_loop(shard, seed, rx))
                 .expect("spawn coordinator shard");
             txs.push(tx);
             handles.push(handle);
@@ -445,15 +466,27 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
         .unwrap_or("non-string panic payload")
 }
 
-fn worker_loop(
-    shard: usize,
+/// Everything one shard thread serves from — bundled so the spawn site
+/// stays one clone-per-field block as the pool grows knobs.
+struct ShardSeed {
     weights: Arc<ModelWeights>,
     artifacts_dir: Option<std::path::PathBuf>,
     engine_opts: EngineOptions,
     cfg: ServeConfig,
     policy: StorePolicy,
-    rx: mpsc::Receiver<Job>,
-) {
+    /// Pool-shared codebook-product cache (None ⇒ caching disabled).
+    code_cache: Option<CacheHandle>,
+}
+
+fn worker_loop(shard: usize, seed: ShardSeed, rx: mpsc::Receiver<Job>) {
+    let ShardSeed {
+        weights,
+        artifacts_dir,
+        engine_opts,
+        cfg,
+        policy,
+        code_cache,
+    } = seed;
     let runtime = artifacts_dir.as_ref().and_then(|d| {
         match ArtifactRuntime::open(d) {
             Ok(rt) => Some(rt),
@@ -474,7 +507,8 @@ fn worker_loop(
         weights: weights.clone(),
         engine_opts,
         runtime,
-        sessions: SessionStore::new(weights, effective_opts, policy),
+        sessions: SessionStore::new(weights, effective_opts, policy, code_cache.clone()),
+        cache: code_cache,
         metrics: Metrics::default(),
         verify_every: cfg.verify_every,
     };
@@ -582,8 +616,24 @@ struct Worker {
     engine_opts: EngineOptions,
     runtime: Option<ArtifactRuntime>,
     sessions: SessionStore,
+    /// Pool-shared codebook-product cache, attached to every engine this
+    /// shard constructs (`None` ⇒ `code_cache_mb = 0`, classic serving).
+    cache: Option<CacheHandle>,
     metrics: Metrics,
     verify_every: usize,
+}
+
+/// Snapshot of one engine's cache counters — subtracted around each
+/// request to attribute hit/miss/eviction/byte activity to the serving
+/// shard (same additive-delta protocol the `defrags` counter uses, so the
+/// cross-shard merge stays a plain sum regardless of session placement).
+fn cache_counters(e: &IncrementalEngine) -> (u64, u64, u64, u64) {
+    (
+        e.stats.cache_hits,
+        e.stats.cache_misses,
+        e.stats.cache_evictions,
+        e.stats.cache_bytes_inserted,
+    )
 }
 
 impl Worker {
@@ -728,6 +778,10 @@ impl Worker {
                 .iter()
                 .map(|(_, s, _)| s.engine.stats.defrags)
                 .collect();
+            let cache_before: Vec<(u64, u64, u64, u64)> = pool
+                .iter()
+                .map(|(_, s, _)| cache_counters(&s.engine))
+                .collect();
             let outcome = {
                 let script_refs: Vec<&[Edit]> = scripts.iter().map(|s| s.as_slice()).collect();
                 let mut engines: Vec<&mut crate::incremental::IncrementalEngine> =
@@ -779,9 +833,11 @@ impl Worker {
                         let n = sess.engine.len();
                         let predicted = sess.engine.predict();
                         let defrag_delta = sess.engine.stats.defrags - defrags_before[i];
+                        let cache_after = cache_counters(&sess.engine);
                         self.sessions.checkin(s, sess);
                         self.metrics.edits += nedits as u64;
                         self.metrics.defrags += defrag_delta;
+                        self.charge_cache_delta(cache_before[i], cache_after);
                         self.metrics.flops_incremental += rep.flops;
                         let dense_equiv = self.dense_equiv(n) * nedits.max(1) as u64;
                         self.metrics.flops_dense_equiv += dense_equiv;
@@ -808,6 +864,14 @@ impl Worker {
         dense_forward_flops(&self.weights.cfg, n)
     }
 
+    /// Fold an engine's cache-counter delta into this shard's metrics.
+    fn charge_cache_delta(&mut self, before: (u64, u64, u64, u64), after: (u64, u64, u64, u64)) {
+        self.metrics.cache_hits += after.0 - before.0;
+        self.metrics.cache_misses += after.1 - before.1;
+        self.metrics.cache_evictions += after.2 - before.2;
+        self.metrics.cache_bytes += after.3 - before.3;
+    }
+
     /// Fault a session in (transparently resuming it from its spill
     /// snapshot if suspended) or fail with the canonical unknown-session
     /// error. Every session-state-touching verb funnels through here.
@@ -828,7 +892,14 @@ impl Worker {
                 );
                 let mut opts = self.engine_opts;
                 opts.verify_every = self.verify_every;
-                let engine = IncrementalEngine::new(self.weights.clone(), &tokens, opts);
+                let mut engine = IncrementalEngine::new(self.weights.clone(), &tokens, opts);
+                // Attach AFTER the initial build: an Open processes every
+                // row of a fresh document, and warming the shared cache
+                // with a whole document's worth of products would let one
+                // large open evict the hot working set of every live
+                // session. Steady-state edits are the hit population that
+                // matters; they attach here and warm it row by row.
+                engine.set_code_cache(self.cache.clone());
                 let flops = engine.ledger.total();
                 let logits = engine.logits().to_vec();
                 let predicted = engine.predict();
@@ -852,15 +923,18 @@ impl Worker {
                 let s = self.sessions.get_mut(&session).expect("resident");
                 let script = diff_tokens(s.engine.tokens(), &tokens);
                 let defrags_before = s.engine.stats.defrags;
+                let cache_before = cache_counters(&s.engine);
                 let rep = s.engine.apply_revision(&script);
                 s.edits += script.len() as u64;
                 let n = s.engine.len();
                 let predicted = s.engine.predict();
                 let defrags_after = s.engine.stats.defrags;
+                let cache_after = cache_counters(&s.engine);
                 self.sessions.reaccount(&session);
                 self.metrics.revisions += 1;
                 self.metrics.edits += script.len() as u64;
                 self.metrics.defrags += defrags_after - defrags_before;
+                self.charge_cache_delta(cache_before, cache_after);
                 self.metrics.flops_incremental += rep.flops;
                 let dense_equiv = self.dense_equiv(n);
                 self.metrics.flops_dense_equiv += dense_equiv;
@@ -923,8 +997,11 @@ impl Worker {
                 anyhow::ensure!(!path.contains(".."), "checkpoint path must not contain '..'");
                 let mut opts = self.engine_opts;
                 opts.verify_every = self.verify_every;
-                let engine =
+                let mut engine =
                     IncrementalEngine::restore_from_file(self.weights.clone(), &path, opts)?;
+                // Snapshots exclude the cache by design; re-attach so the
+                // restored session rewarms lazily.
+                engine.set_code_cache(self.cache.clone());
                 self.sessions.insert(session, engine);
                 self.metrics.sessions_opened += 1;
                 Ok(Response::Done)
@@ -977,16 +1054,19 @@ impl Worker {
         self.ensure_resident(session)?;
         let s = self.sessions.get_mut(session).expect("resident");
         let defrags_before = s.engine.stats.defrags;
+        let cache_before = cache_counters(&s.engine);
         let rep = s.engine.apply_edits(edits);
         s.edits += edits.len() as u64;
         let n = s.engine.len();
         let predicted = s.engine.predict();
         let defrags_after = s.engine.stats.defrags;
+        let cache_after = cache_counters(&s.engine);
         self.sessions.reaccount(session);
         self.metrics.edits += edits.len() as u64;
         // Additive counter (not a gauge) so the cross-shard merge sums
         // correctly regardless of session placement.
         self.metrics.defrags += defrags_after - defrags_before;
+        self.charge_cache_delta(cache_before, cache_after);
         self.metrics.flops_incremental += rep.flops;
         // Dense equivalent: one from-scratch pass per edit (the online
         // comparison the paper makes for atomic edits).
@@ -1008,7 +1088,10 @@ impl Worker {
         anyhow::ensure!(!base.is_empty(), "empty base document");
         let mut opts = self.engine_opts;
         opts.verify_every = 0;
-        let base_engine = IncrementalEngine::new(self.weights.clone(), &base, opts);
+        let mut base_engine = IncrementalEngine::new(self.weights.clone(), &base, opts);
+        // Same attach-after-build rule as Open; the forks inherit the
+        // handle, so revision diffs hit products warmed by live sessions.
+        base_engine.set_code_cache(self.cache.clone());
         let mut flops = base_engine.ledger.total();
         let mut dense_equiv = self.dense_equiv(base.len());
         let mut each = Vec::with_capacity(revisions.len());
@@ -1020,6 +1103,9 @@ impl Worker {
             flops += rep.flops;
             dense_equiv += self.dense_equiv(rev.len());
             each.push(rep.logits);
+            // `fork` zeroes the stat counters, so the fork's totals ARE
+            // the delta this revision contributed.
+            self.charge_cache_delta((0, 0, 0, 0), cache_counters(&fork));
             forks.push(fork);
         }
         self.metrics.revisions += revisions.len() as u64;
@@ -1083,7 +1169,8 @@ mod batched_round_tests {
             weights: w.clone(),
             engine_opts: EngineOptions::default(),
             runtime: None,
-            sessions: SessionStore::new(w.clone(), EngineOptions::default(), policy),
+            sessions: SessionStore::new(w.clone(), EngineOptions::default(), policy, None),
+            cache: None,
             metrics: Metrics::default(),
             verify_every: 0,
         }
@@ -1268,6 +1355,41 @@ mod batched_round_tests {
         }
         assert_eq!(wk.metrics.batched_rows, 0, "no pooled GEMMs for a solo wave");
         assert_eq!(wk.metrics.edits, 1);
+    }
+
+    /// With a cache attached, sessions editing the same document share
+    /// products: the first session's edit misses (and warms the cache),
+    /// later sessions hit, and the worker attributes both to its metrics.
+    /// Opens contribute nothing — the attach happens after the build.
+    #[test]
+    fn cached_worker_attributes_cross_session_hits() {
+        use crate::incremental::{CacheHandle, CodeCache};
+        let cfg = ModelConfig::vqt_tiny();
+        let w = Arc::new(ModelWeights::random(&cfg, 53));
+        let mut wk = mk_worker(&w);
+        wk.cache = Some(CacheHandle::new(Arc::new(CodeCache::new(1 << 22)), &w));
+        let doc: Vec<u32> = (0..10).map(|i| (i % 50) as u32).collect();
+        for i in 0..3 {
+            wk.handle(Request::Open {
+                session: format!("s{i}"),
+                tokens: doc.clone(),
+            });
+        }
+        assert_eq!(
+            wk.metrics.cache_hits + wk.metrics.cache_misses,
+            0,
+            "initial builds stay uncached"
+        );
+        for i in 0..3 {
+            let resp = wk.handle(Request::Edit {
+                session: format!("s{i}"),
+                edit: Edit::Replace { at: 4, tok: 9 },
+            });
+            assert!(matches!(resp, Response::Logits { .. }), "{resp:?}");
+        }
+        assert!(wk.metrics.cache_misses > 0, "first session warms the cache");
+        assert!(wk.metrics.cache_hits > 0, "identical edits hit cross-session");
+        assert!(wk.metrics.cache_bytes > 0, "insert bytes attributed");
     }
 
     /// split_rounds takes only each session's LEADING run of edit jobs and

@@ -23,7 +23,7 @@
 //! session ever left memory. With no spill directory configured, eviction
 //! falls back to dropping sessions outright (the pre-lifecycle behavior).
 
-use crate::incremental::{EngineOptions, IncrementalEngine};
+use crate::incremental::{CacheHandle, EngineOptions, IncrementalEngine};
 use crate::model::ModelWeights;
 use crate::util::fnv1a64;
 use anyhow::{Context, Result};
@@ -99,6 +99,11 @@ pub struct SessionStore {
     policy: StorePolicy,
     weights: Arc<ModelWeights>,
     engine_opts: EngineOptions,
+    /// Shared codebook-product cache to re-attach on resume. Snapshots
+    /// exclude the cache by design, so a restored engine comes back
+    /// detached; the store is the single place that knows the shard's
+    /// handle and can make resume transparent.
+    cache: Option<CacheHandle>,
     resident_bytes: usize,
     /// Sessions dropped outright (no spill dir, or global-LRU total-cap
     /// eviction, or spill failure).
@@ -127,6 +132,7 @@ impl SessionStore {
         weights: Arc<ModelWeights>,
         engine_opts: EngineOptions,
         policy: StorePolicy,
+        cache: Option<CacheHandle>,
     ) -> SessionStore {
         assert!(policy.max_resident > 0, "resident capacity must be ≥ 1");
         assert!(
@@ -140,6 +146,7 @@ impl SessionStore {
             policy,
             weights,
             engine_opts,
+            cache,
             resident_bytes: 0,
             evictions: 0,
             suspends: 0,
@@ -269,7 +276,10 @@ impl SessionStore {
         // Whether or not the restore succeeds, the snapshot file is
         // consumed: a corrupt spill must not be retried forever.
         let _ = std::fs::remove_file(&entry.path);
-        let engine = restored?;
+        let mut engine = restored?;
+        // Snapshots exclude the cache; re-attach the shard's handle so a
+        // resumed session rewarms lazily instead of staying cold forever.
+        engine.set_code_cache(self.cache.clone());
         self.clock += 1;
         let bytes = engine.resident_bytes();
         self.resident_bytes += bytes;
@@ -487,7 +497,7 @@ mod tests {
     }
 
     fn store(w: &Arc<ModelWeights>, policy: StorePolicy) -> SessionStore {
-        SessionStore::new(w.clone(), EngineOptions::default(), policy)
+        SessionStore::new(w.clone(), EngineOptions::default(), policy, None)
     }
 
     fn drop_policy(max_resident: usize) -> StorePolicy {
@@ -577,6 +587,41 @@ mod tests {
             .iter().map(|x| x.to_bits()).collect();
         assert_eq!(back, logits_a);
         assert!(store.is_suspended("b"));
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    /// A resumed session comes back with the shard's cache handle attached
+    /// (snapshots exclude the cache, so without this re-attach a suspended
+    /// session would stay cold for the rest of its life).
+    #[test]
+    fn resume_reattaches_the_code_cache() {
+        use crate::incremental::{CacheHandle, CodeCache};
+        let cfg = ModelConfig::vqt_tiny();
+        let w = Arc::new(ModelWeights::random(&cfg, 9));
+        let handle = CacheHandle::new(Arc::new(CodeCache::new(1 << 20)), &w);
+        let dir = tempdir("reattach");
+        let mut store = SessionStore::new(
+            w.clone(),
+            EngineOptions::default(),
+            StorePolicy {
+                max_resident: 4,
+                max_total: 8,
+                memory_budget_bytes: 0,
+                spill_dir: Some(dir.clone()),
+            },
+            Some(handle.clone()),
+        );
+        store.insert("a".into(), engine(&w, 1));
+        assert!(
+            store.get_mut("a").unwrap().engine.code_cache().is_none(),
+            "insert does not attach; the coordinator's Open handler does"
+        );
+        store.suspend("a").unwrap();
+        assert_eq!(store.prepare("a").unwrap(), Prepared::Resumed);
+        let got = store.get_mut("a").unwrap().engine.code_cache().cloned();
+        let got = got.expect("resumed session re-attached");
+        assert!(Arc::ptr_eq(&got.cache, &handle.cache));
+        assert_eq!(got.fp, handle.fp);
         let _ = std::fs::remove_dir_all(dir);
     }
 

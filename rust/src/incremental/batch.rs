@@ -24,8 +24,10 @@ use crate::edits::Edit;
 use crate::model::ModelWeights;
 use crate::tensor::{self, Matrix};
 use crate::vq::CodeTuple;
+use std::collections::HashMap;
 use std::sync::Arc;
 
+use super::codecache::{CacheHandle, TailOutcome};
 use super::engine::{EditReport, IncrementalEngine, Staged, StagedEdit};
 
 /// Result of one batched multi-session application.
@@ -96,14 +98,34 @@ fn block_tail_batch(
     assert_eq!(codes.len(), b);
     let vq = layer.vq.as_ref().expect("VQ layer");
     scratch.shape(b, d, cfg.d_ff);
-    let TailScratch { a, mix, c, mid } = scratch;
-
-    // Decoded codewords, stacked.
-    for (i, &code) in codes.iter().enumerate() {
-        vq.decode_into(code, a.row_mut(i));
+    {
+        let TailScratch { a, mix, .. } = scratch;
+        // Decoded codewords, stacked.
+        for (i, &code) in codes.iter().enumerate() {
+            vq.decode_into(code, a.row_mut(i));
+        }
+        // Mix: one pass over w_mix for the whole stack.
+        tensor::matmul_into(a, &layer.w_mix, mix);
     }
-    // Mix: one pass over w_mix for the whole stack.
-    tensor::matmul_into(a, &layer.w_mix, mix);
+    finish_tail_from_mix(w, li, xs, b, scratch)
+}
+
+/// The tail stages downstream of the mix product — residual 1, LN2, FFN,
+/// residual 2 — over a `scratch.mix` whose rows are already filled
+/// (freshly computed, cache-served, or wave-deduped; the bytes are
+/// identical either way). Shared by the cached and uncached pooled
+/// kernels so they cannot diverge.
+fn finish_tail_from_mix(
+    w: &ModelWeights,
+    li: usize,
+    xs: &[f32],
+    b: usize,
+    scratch: &mut TailScratch,
+) -> Matrix {
+    let layer = &w.layers[li];
+    let cfg = &w.cfg;
+    let d = cfg.d_model;
+    let TailScratch { a, mix, c, mid } = scratch;
     // Residual 1 — identical expression order to the single-row tail.
     for i in 0..b {
         let (xr, mr) = (&xs[i * d..(i + 1) * d], mix.row(i));
@@ -128,6 +150,96 @@ fn block_tail_batch(
         }
     }
     out
+}
+
+/// [`block_tail_batch`] with the shared code cache in front of the mix
+/// GEMM, plus intra-wave dedupe: each row's mix vector is (1) served
+/// from the cache, (2) aliased to another row of this chunk with the
+/// same code (cost one product, not N — the "N sessions typing the same
+/// token" case), or (3) computed, once per distinct code, by one stacked
+/// GEMM over the *unique* misses and then inserted into the cache.
+///
+/// Bit-exactness: the unique-miss GEMM is the same row-decomposable
+/// tiled kernel, so a deduped or cache-served row receives byte-for-byte
+/// the vector it would have computed itself; the downstream stages are
+/// literally shared ([`finish_tail_from_mix`]).
+///
+/// Returns one [`TailOutcome`] per row, in row order, so the caller can
+/// attribute hit/miss/eviction/bytes to each row's owning engine
+/// (insert accounting lands on the code's first-occurrence row).
+fn block_tail_batch_cached(
+    w: &ModelWeights,
+    li: usize,
+    xs: &[f32],
+    b: usize,
+    codes: &[CodeTuple],
+    scratch: &mut TailScratch,
+    cache: &CacheHandle,
+) -> (Matrix, Vec<TailOutcome>) {
+    let layer = &w.layers[li];
+    let cfg = &w.cfg;
+    let d = cfg.d_model;
+    assert_eq!(xs.len(), b * d);
+    assert_eq!(codes.len(), b);
+    let vq = layer.vq.as_ref().expect("VQ layer");
+    scratch.shape(b, d, cfg.d_ff);
+
+    // Phase 1: resolve every row's mix-vector source. `seen` tracks
+    // codes that MISSED earlier in this chunk (a code whose first
+    // occurrence hit the cache keeps hitting it on re-lookup).
+    let mut outcomes = vec![TailOutcome::Uncached; b];
+    let mut uniq_codes: Vec<CodeTuple> = Vec::new();
+    let mut first_row: Vec<usize> = Vec::new();
+    let mut from_uniq: Vec<Option<usize>> = vec![None; b];
+    let mut seen: HashMap<u64, usize> = HashMap::new();
+    for (i, &code) in codes.iter().enumerate() {
+        let key = code.pack();
+        if let Some(&u) = seen.get(&key) {
+            // Wave dedupe: the product is already being computed this
+            // chunk. Counts as a hit for the row's engine AND globally
+            // (note_hit keeps the two views summing identically).
+            cache.cache.note_hit();
+            outcomes[i] = TailOutcome::Hit;
+            from_uniq[i] = Some(u);
+        } else if cache
+            .cache
+            .lookup(cache.fp, li as u32, key, scratch.mix.row_mut(i))
+        {
+            outcomes[i] = TailOutcome::Hit;
+        } else {
+            let u = uniq_codes.len();
+            uniq_codes.push(code);
+            first_row.push(i);
+            seen.insert(key, u);
+            from_uniq[i] = Some(u);
+            // Outcome recorded as Miss below, with insert accounting.
+        }
+    }
+
+    // Phase 2: one stacked GEMM over the unique misses only.
+    let m = uniq_codes.len();
+    if m > 0 {
+        let mut ua = Matrix::zeros(m, d);
+        for (u, &code) in uniq_codes.iter().enumerate() {
+            vq.decode_into(code, ua.row_mut(u));
+        }
+        let mut umix = Matrix::zeros(m, d);
+        tensor::matmul_into(&ua, &layer.w_mix, &mut umix);
+        for u in 0..m {
+            let (bytes, evictions) =
+                cache
+                    .cache
+                    .insert(cache.fp, li as u32, uniq_codes[u].pack(), umix.row(u));
+            outcomes[first_row[u]] = TailOutcome::Miss { bytes, evictions };
+        }
+        for i in 0..b {
+            if let Some(u) = from_uniq[i] {
+                scratch.mix.row_mut(i).copy_from_slice(umix.row(u));
+            }
+        }
+    }
+
+    (finish_tail_from_mix(w, li, xs, b, scratch), outcomes)
 }
 
 /// Apply one edit script per engine with the per-layer block tails of ALL
@@ -171,6 +283,24 @@ pub fn apply_scripts_batched(
             "batched engines must share one weight set"
         );
     }
+    // The pooled kernels use the cache only when EVERY engine of the
+    // wave holds a handle to the SAME cache under the SAME fingerprint
+    // (the coordinator sets exactly this up). Mixed attachment falls
+    // back to the uncached kernel for the whole wave: correctness would
+    // hold either way, but per-engine hit/miss attribution would depend
+    // on wave interleaving, and the all-or-nothing rule keeps batched
+    // stats reproducible.
+    let wave_cache: Option<CacheHandle> = match first.code_cache() {
+        Some(h0)
+            if engines.iter().all(|e| {
+                e.code_cache()
+                    .is_some_and(|h| Arc::ptr_eq(&h.cache, &h0.cache) && h.fp == h0.fp)
+            }) =>
+        {
+            Some(h0.clone())
+        }
+        _ => None,
+    };
     let d = w.cfg.d_model;
     let n_layers = w.cfg.n_layers;
     let max_len = scripts.iter().map(|s| s.len()).max().unwrap_or(0);
@@ -214,17 +344,31 @@ pub fn apply_scripts_batched(
             // chunk's output matrix is kept and scattered from in place,
             // so no full-stack staging copy on either side of the GEMMs.
             let mut chunks: Vec<Matrix> = Vec::new();
+            let mut outcomes: Vec<TailOutcome> = Vec::with_capacity(total);
             let mut r0 = 0;
             while r0 < total {
                 let rows = (total - r0).min(cap);
-                let chunk = block_tail_batch(
-                    &w,
-                    li,
-                    &xs[r0 * d..(r0 + rows) * d],
-                    rows,
-                    &codes[r0..r0 + rows],
-                    &mut scratch,
-                );
+                let chunk_xs = &xs[r0 * d..(r0 + rows) * d];
+                let chunk_codes = &codes[r0..r0 + rows];
+                let chunk = match &wave_cache {
+                    Some(h) => {
+                        let (out, outs) = block_tail_batch_cached(
+                            &w,
+                            li,
+                            chunk_xs,
+                            rows,
+                            chunk_codes,
+                            &mut scratch,
+                            h,
+                        );
+                        outcomes.extend(outs);
+                        out
+                    }
+                    None => {
+                        outcomes.extend(std::iter::repeat(TailOutcome::Uncached).take(rows));
+                        block_tail_batch(&w, li, chunk_xs, rows, chunk_codes, &mut scratch)
+                    }
+                };
                 chunks.push(chunk);
                 batched_rows += rows as u64;
                 gemm_fills.push(rows);
@@ -233,13 +377,32 @@ pub fn apply_scripts_batched(
             // Scatter back, engine by engine (gather order is preserved;
             // global row j lives in chunk j / cap at local row j % cap,
             // since every chunk except the last holds exactly `cap` rows).
+            // Each row's cache outcome lands on its OWNING engine's stats,
+            // and its hit/miss flag rides into staged_post so the ledger
+            // attribution matches the single-row path.
             let mut r = 0;
             for (i, slot) in staged.iter_mut().enumerate() {
                 if let Some(st) = slot {
                     let cnt = st.pending().len();
                     let refs: Vec<&[f32]> =
                         (r..r + cnt).map(|j| chunks[j / cap].row(j % cap)).collect();
-                    engines[i].staged_post(st, &refs);
+                    let mut flags: Vec<bool> = Vec::with_capacity(cnt);
+                    for j in r..r + cnt {
+                        match outcomes[j] {
+                            TailOutcome::Uncached => flags.push(false),
+                            TailOutcome::Hit => {
+                                engines[i].stats.cache_hits += 1;
+                                flags.push(true);
+                            }
+                            TailOutcome::Miss { bytes, evictions } => {
+                                engines[i].stats.cache_misses += 1;
+                                engines[i].stats.cache_bytes_inserted += bytes;
+                                engines[i].stats.cache_evictions += evictions;
+                                flags.push(false);
+                            }
+                        }
+                    }
+                    engines[i].staged_post(st, &refs, &flags);
                     r += cnt;
                 }
             }
@@ -422,6 +585,110 @@ mod tests {
         }
         for other in &bits_per_cap[1..] {
             assert_eq!(&bits_per_cap[0], other, "chunk cap moved numerics");
+        }
+    }
+
+    /// Cached pooled execution is bit-identical to the uncached pooled
+    /// path; an identical rerun against the warmed cache is all-hits;
+    /// the global cache counters equal the sum of per-engine deltas; and
+    /// the per-engine FLOP saving is exactly `hits · (MULADD·d² − d)`.
+    #[test]
+    fn cached_waves_bit_exact_warm_rerun_all_hits() {
+        use crate::flops::MULADD;
+        use crate::incremental::codecache::{CacheHandle, CodeCache};
+        let (w, _) = setup(21, 0);
+        let cfg = w.cfg.clone();
+        let mut r = Rng::new(17);
+        let docs: Vec<Vec<u32>> = (0..3)
+            .map(|i| {
+                (0..(9 + 2 * i))
+                    .map(|_| r.below(cfg.vocab_size) as u32)
+                    .collect()
+            })
+            .collect();
+        // Replace-only scripts: no structural edits, so no defrag can
+        // route rows around the pooled path — every block tail of the
+        // run flows through `batched_rows` and the outcome accounting
+        // below is exact.
+        let scripts: Vec<Vec<Edit>> = docs
+            .iter()
+            .map(|doc| {
+                (0..4)
+                    .map(|_| Edit::Replace {
+                        at: r.below(doc.len()),
+                        tok: r.below(cfg.vocab_size) as u32,
+                    })
+                    .collect()
+            })
+            .collect();
+        let script_refs: Vec<&[Edit]> = scripts.iter().map(|s| s.as_slice()).collect();
+        let cache = Arc::new(CodeCache::new(1 << 22));
+        let handle = CacheHandle::new(cache.clone(), &w);
+
+        let run = |attach: bool| -> (Vec<IncrementalEngine>, BatchOutcome) {
+            let mut engines: Vec<IncrementalEngine> = docs
+                .iter()
+                .map(|doc| {
+                    let mut e = IncrementalEngine::new(w.clone(), doc, EngineOptions::default());
+                    if attach {
+                        e.set_code_cache(Some(handle.clone()));
+                    }
+                    e
+                })
+                .collect();
+            let outcome = {
+                let mut refs: Vec<&mut IncrementalEngine> = engines.iter_mut().collect();
+                apply_scripts_batched(&mut refs, &script_refs, 4)
+            };
+            (engines, outcome)
+        };
+
+        let (plain, _) = run(false);
+        let (warming, o1) = run(true);
+        let (warm, o2) = run(true);
+        assert!(o1.batched_rows > 0, "pooled path must actually run");
+        assert_eq!(o1.batched_rows, o2.batched_rows, "same wave both runs");
+        for (name, cached_run) in [("cold", &warming), ("warm", &warm)] {
+            for (i, (p, c)) in plain.iter().zip(cached_run.iter()).enumerate() {
+                let pb: Vec<u32> = p.logits().iter().map(|x| x.to_bits()).collect();
+                let cb: Vec<u32> = c.logits().iter().map(|x| x.to_bits()).collect();
+                assert_eq!(pb, cb, "engine {i}: {name} cached run moved logits bits");
+            }
+        }
+        // Every pooled row is attributed hit-or-miss to exactly one engine.
+        let hits1: u64 = warming.iter().map(|e| e.stats.cache_hits).sum();
+        let miss1: u64 = warming.iter().map(|e| e.stats.cache_misses).sum();
+        assert_eq!(hits1 + miss1, o1.batched_rows, "every row attributed");
+        let hits2: u64 = warm.iter().map(|e| e.stats.cache_hits).sum();
+        let miss2: u64 = warm.iter().map(|e| e.stats.cache_misses).sum();
+        assert_eq!(miss2, 0, "identical rerun against a warm cache must be all hits");
+        assert_eq!(hits2, o2.batched_rows);
+        // Global counters == sum of per-engine deltas across both runs.
+        let s = cache.stats();
+        assert_eq!(s.hits, hits1 + hits2, "global hits vs engine sum");
+        assert_eq!(s.misses, miss1, "global misses vs engine sum");
+        let bytes: u64 = warming
+            .iter()
+            .chain(&warm)
+            .map(|e| e.stats.cache_bytes_inserted)
+            .sum();
+        assert_eq!(s.bytes_inserted, bytes, "global bytes vs engine sum");
+        let evs: u64 = warming
+            .iter()
+            .chain(&warm)
+            .map(|e| e.stats.cache_evictions)
+            .sum();
+        assert_eq!(s.evictions, evs, "global evictions vs engine sum");
+        // FLOP attribution: per hit, exactly the mix GEMV (MULADD·d²)
+        // minus the decode bookkeeping swap (d vs 2d) is saved.
+        let d = cfg.d_model as u64;
+        let per_hit = MULADD * d * d - d;
+        for (i, (p, c)) in plain.iter().zip(&warm).enumerate() {
+            assert_eq!(
+                p.ledger.total() - c.ledger.total(),
+                c.stats.cache_hits * per_hit,
+                "engine {i}: warm-cache FLOP saving must be exactly per-hit"
+            );
         }
     }
 

@@ -1,0 +1,470 @@
+//! Process-global codebook-product cache — VQ discreteness turned into
+//! cross-session amortization.
+//!
+//! The block tail's first two stages, `decode(code)` followed by the mix
+//! GEMV `decode(code) · w_mix`, are a pure function of `(layer, code)`:
+//! they do not depend on the row's hidden state `x`, the session, or the
+//! user. VQ collapses hidden rows onto a finite codebook, so across many
+//! sessions the same `(layer, code)` pairs recur constantly — every
+//! session typing the same token through the same layer recomputes an
+//! identical d-vector. This module caches those mix vectors once,
+//! process-wide, so the dense mix GEMV is charged only when a code is
+//! genuinely new (the Sigma-Delta insight taken to serving scale).
+//!
+//! **Bit-exactness contract.** A cached entry is the byte-exact output of
+//! the same tiled kernel (`tensor::vec_matmul_into`, fixed accumulation
+//! order) that the uncached path runs, captured on the miss that first
+//! computed it. A hit copies those bytes back; every later tail stage
+//! (residual, LN2, FFN) consumes them identically. Cached and uncached
+//! execution therefore produce bit-identical logits — locked by
+//! `tests/differential_codecache.rs`.
+//!
+//! **Keying and invalidation.** Entries are keyed `(layer, CodeTuple::pack())`
+//! and guarded by a weights fingerprint ([`weights_fingerprint`]:
+//! `util::fnv1a64` over the model config JSON, every layer's `w_mix`
+//! bytes, and every codebook's bytes — exactly the inputs the cached
+//! product depends on). Every `lookup`/`insert` carries the caller's
+//! fingerprint; a mismatch flushes the whole cache before proceeding, so
+//! a weight reload can never serve stale products. The cache assumes one
+//! active weight set at a time (the coordinator guarantees this); two
+//! fingerprints ping-ponging concurrently degrade to flush-thrash, never
+//! to wrong bytes served under a *stable* fingerprint.
+//!
+//! **Concurrency and memory.** The key space is split across
+//! [`N_SHARDS`] `RwLock`ed shards so hot-path lookups from many worker
+//! threads take only a shared read lock (LRU ticks are atomics bumped
+//! under that read lock). Each shard owns `capacity / N_SHARDS` bytes;
+//! inserts evict least-recently-used entries until the new entry fits,
+//! and an entry that alone exceeds the shard budget is simply not cached
+//! — resident bytes are strictly bounded by the configured budget
+//! (`code_cache_mb`). Global hit/miss/evict/byte counters feed the
+//! coordinator's Stats JSON; per-engine deltas are attributed by the
+//! callers (engine stats), and the two views stay consistent: global
+//! counters equal the sum of per-engine deltas.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::model::ModelWeights;
+use crate::util::fnv1a64;
+
+/// Shard count for the key space. A fixed small power of two: enough to
+/// keep write-lock contention (inserts, evictions) off unrelated keys,
+/// few enough that the per-shard byte budget stays meaningful for tiny
+/// test budgets.
+const N_SHARDS: usize = 16;
+
+/// Accounting overhead charged per entry on top of the payload floats —
+/// covers the key, the LRU tick, and hash-map slot bookkeeping. An
+/// estimate (exact allocator numbers are unknowable), but a *consistent*
+/// one: the bound it enforces is deterministic.
+const ENTRY_OVERHEAD: usize = 64;
+
+/// How one block-tail row interacted with the cache. The batched path
+/// returns one per pooled row so the caller can attribute stats to the
+/// row's owning engine (the engine is not threaded through the kernel).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TailOutcome {
+    /// No cache attached — the row ran the classic full tail.
+    Uncached,
+    /// Mix vector served from the cache (or deduped within a pooled
+    /// wave): the mix GEMV was skipped.
+    Hit,
+    /// Full product computed and offered to the cache; `bytes` is the
+    /// payload accepted (0 if it lost an insert race or exceeded the
+    /// shard budget), `evictions` the entries displaced to make room.
+    Miss { bytes: u64, evictions: u64 },
+}
+
+struct Entry {
+    mix: Vec<f32>,
+    /// Global LRU tick at last touch; bumped under the shard's *read*
+    /// lock so hits never serialize against each other.
+    last_used: AtomicU64,
+}
+
+#[derive(Default)]
+struct CacheShard {
+    map: HashMap<(u32, u64), Entry>,
+    bytes: usize,
+}
+
+/// Counter snapshot for Stats JSON / assertions.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CodeCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub bytes_inserted: u64,
+    pub resident_bytes: u64,
+    pub flushes: u64,
+}
+
+/// The shared cache. Cheap to clone via `Arc`; see the module docs for
+/// the full contract.
+pub struct CodeCache {
+    shards: Vec<RwLock<CacheShard>>,
+    capacity_bytes: usize,
+    tick: AtomicU64,
+    /// Fingerprint of the weight set the resident entries were computed
+    /// from; 0 = unset (no entries yet). Checked on every access.
+    fingerprint: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    bytes_inserted: AtomicU64,
+    resident: AtomicU64,
+    flushes: AtomicU64,
+}
+
+impl CodeCache {
+    /// A cache bounded to `capacity_bytes` of resident payload+overhead.
+    pub fn new(capacity_bytes: usize) -> Self {
+        CodeCache {
+            shards: (0..N_SHARDS).map(|_| RwLock::new(CacheShard::default())).collect(),
+            capacity_bytes,
+            tick: AtomicU64::new(1),
+            fingerprint: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            bytes_inserted: AtomicU64::new(0),
+            resident: AtomicU64::new(0),
+            flushes: AtomicU64::new(0),
+        }
+    }
+
+    /// Constructor matching the `code_cache_mb` config knob.
+    pub fn from_mb(mb: usize) -> Self {
+        CodeCache::new(mb * 1024 * 1024)
+    }
+
+    fn shard_of(layer: u32, key: u64) -> usize {
+        let mut bytes = [0u8; 12];
+        bytes[..4].copy_from_slice(&layer.to_le_bytes());
+        bytes[4..].copy_from_slice(&key.to_le_bytes());
+        (fnv1a64(&bytes) as usize) % N_SHARDS
+    }
+
+    fn per_shard_budget(&self) -> usize {
+        self.capacity_bytes / N_SHARDS
+    }
+
+    /// Flush-on-mismatch guard: if the cache currently holds entries for
+    /// a different weight set, clear everything before serving `fp`.
+    /// Fast path is one relaxed load.
+    fn ensure_fp(&self, fp: u64) {
+        debug_assert_ne!(fp, 0, "0 is the unset sentinel");
+        if self.fingerprint.load(Ordering::Acquire) == fp {
+            return;
+        }
+        // Slow path: take every shard's write lock so no concurrent
+        // reader can observe a half-flushed cache, then re-check.
+        let mut guards: Vec<_> = self.shards.iter().map(|s| s.write().unwrap()).collect();
+        let prev = self.fingerprint.load(Ordering::Acquire);
+        if prev == fp {
+            return; // another thread flushed for us while we queued
+        }
+        for g in guards.iter_mut() {
+            g.map.clear();
+            g.bytes = 0;
+        }
+        self.resident.store(0, Ordering::Relaxed);
+        if prev != 0 {
+            self.flushes.fetch_add(1, Ordering::Relaxed);
+        }
+        self.fingerprint.store(fp, Ordering::Release);
+    }
+
+    /// Look up `(layer, key)` under fingerprint `fp`. On hit the cached
+    /// mix vector is copied into `out` and `true` is returned; counters
+    /// record one hit or one miss either way.
+    pub fn lookup(&self, fp: u64, layer: u32, key: u64, out: &mut [f32]) -> bool {
+        self.ensure_fp(fp);
+        let shard = self.shards[Self::shard_of(layer, key)].read().unwrap();
+        if let Some(e) = shard.map.get(&(layer, key)) {
+            assert_eq!(e.mix.len(), out.len(), "cached width vs caller width");
+            out.copy_from_slice(&e.mix);
+            e.last_used
+                .store(self.tick.fetch_add(1, Ordering::Relaxed), Ordering::Relaxed);
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            true
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            false
+        }
+    }
+
+    /// Offer a freshly computed mix vector. Returns `(bytes_accepted,
+    /// evictions)` so the calling engine can attribute them to its own
+    /// stats; `(0, n)` means the entry was not kept (insert race, or it
+    /// alone exceeds the shard budget — n is then 0 or the evictions
+    /// performed before giving up, which for an oversized entry is 0
+    /// because we check the entry size first).
+    pub fn insert(&self, fp: u64, layer: u32, key: u64, mix: &[f32]) -> (u64, u64) {
+        self.ensure_fp(fp);
+        let entry_bytes = mix.len() * std::mem::size_of::<f32>() + ENTRY_OVERHEAD;
+        if entry_bytes > self.per_shard_budget() {
+            return (0, 0); // can never fit; bound is strict
+        }
+        let mut shard = self.shards[Self::shard_of(layer, key)].write().unwrap();
+        if shard.map.contains_key(&(layer, key)) {
+            return (0, 0); // lost a concurrent insert race — entry already present
+        }
+        let mut evicted = 0u64;
+        while shard.bytes + entry_bytes > self.per_shard_budget() {
+            // Evict the least-recently-used entry of this shard. O(n)
+            // scan, but n is small (per-shard) and eviction is off the
+            // hit path entirely.
+            let victim = shard
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used.load(Ordering::Relaxed))
+                .map(|(&k, _)| k)
+                .expect("budget exceeded with empty shard");
+            let gone = shard.map.remove(&victim).unwrap();
+            let gone_bytes = gone.mix.len() * std::mem::size_of::<f32>() + ENTRY_OVERHEAD;
+            shard.bytes -= gone_bytes;
+            self.resident.fetch_sub(gone_bytes as u64, Ordering::Relaxed);
+            evicted += 1;
+        }
+        shard.map.insert(
+            (layer, key),
+            Entry {
+                mix: mix.to_vec(),
+                last_used: AtomicU64::new(self.tick.fetch_add(1, Ordering::Relaxed)),
+            },
+        );
+        shard.bytes += entry_bytes;
+        self.resident.fetch_add(entry_bytes as u64, Ordering::Relaxed);
+        self.bytes_inserted.fetch_add(entry_bytes as u64, Ordering::Relaxed);
+        self.evictions.fetch_add(evicted, Ordering::Relaxed);
+        (entry_bytes as u64, evicted)
+    }
+
+    /// Count a hit that never touched a shard: a pooled wave deduped
+    /// this row against another row's in-flight product (the code missed
+    /// the cache once, for its first occurrence; later occurrences in
+    /// the same wave are hits by construction). Keeps the global
+    /// counters equal to the sum of per-engine deltas.
+    pub fn note_hit(&self) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Counter snapshot (relaxed loads — exact once quiescent).
+    pub fn stats(&self) -> CodeCacheStats {
+        CodeCacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            bytes_inserted: self.bytes_inserted.load(Ordering::Relaxed),
+            resident_bytes: self.resident.load(Ordering::Relaxed),
+            flushes: self.flushes.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Total resident entries across shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.read().unwrap().map.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Resident payload+overhead bytes (the quantity bounded by the
+    /// configured budget).
+    pub fn resident_bytes(&self) -> u64 {
+        self.resident.load(Ordering::Relaxed)
+    }
+}
+
+/// Fingerprint of everything a cached product depends on: the model
+/// config (shapes, head/code counts) plus the raw bytes of every layer's
+/// `w_mix` and every VQ codebook. Biases, LN parameters, FFN weights
+/// etc. are deliberately excluded — they act downstream of the cached
+/// value. 0 is remapped to 1 so it can never collide with the cache's
+/// "unset" sentinel.
+pub fn weights_fingerprint(w: &ModelWeights) -> u64 {
+    let mut bytes: Vec<u8> = w.cfg.to_json().to_string().into_bytes();
+    for layer in &w.layers {
+        for &v in &layer.w_mix.data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        if let Some(vq) = &layer.vq {
+            for book in &vq.books {
+                for &v in &book.data {
+                    bytes.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+    }
+    match fnv1a64(&bytes) {
+        0 => 1,
+        h => h,
+    }
+}
+
+/// An engine's view of the shared cache: the `Arc` plus the fingerprint
+/// of the weight set the engine runs — computed once at attach time, not
+/// per lookup. Cloning shares the cache (forked engines inherit it).
+#[derive(Clone)]
+pub struct CacheHandle {
+    pub cache: Arc<CodeCache>,
+    pub fp: u64,
+}
+
+impl CacheHandle {
+    pub fn new(cache: Arc<CodeCache>, w: &ModelWeights) -> Self {
+        let fp = weights_fingerprint(w);
+        CacheHandle { cache, fp }
+    }
+}
+
+impl std::fmt::Debug for CacheHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CacheHandle")
+            .field("fp", &self.fp)
+            .field("resident_bytes", &self.cache.resident_bytes())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    const FP: u64 = 0xFEED;
+
+    #[test]
+    fn miss_then_hit_roundtrips_exact_bits() {
+        let c = CodeCache::new(1 << 20);
+        let mix: Vec<f32> = (0..32).map(|i| (i as f32) * 0.37 - 1.0).collect();
+        let mut out = vec![0.0f32; 32];
+        assert!(!c.lookup(FP, 3, 42, &mut out), "cold cache must miss");
+        let (bytes, ev) = c.insert(FP, 3, 42, &mix);
+        assert_eq!(bytes as usize, 32 * 4 + 64);
+        assert_eq!(ev, 0);
+        assert!(c.lookup(FP, 3, 42, &mut out));
+        let a: Vec<u32> = mix.iter().map(|x| x.to_bits()).collect();
+        let b: Vec<u32> = out.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(a, b, "hit must return the exact inserted bits");
+        // Same code under a different layer is a distinct key.
+        assert!(!c.lookup(FP, 4, 42, &mut out));
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (1, 2, 0));
+        assert_eq!(s.resident_bytes, bytes);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn eviction_keeps_resident_bytes_under_budget() {
+        // Budget sized so each shard holds ~2 entries of d=16.
+        let entry = 16 * 4 + ENTRY_OVERHEAD;
+        let c = CodeCache::new(entry * 2 * N_SHARDS);
+        let mix = vec![1.0f32; 16];
+        for k in 0..200u64 {
+            c.insert(FP, 0, k, &mix);
+            assert!(
+                c.resident_bytes() as usize <= entry * 2 * N_SHARDS,
+                "budget violated at k={k}"
+            );
+        }
+        let s = c.stats();
+        assert!(s.evictions > 0, "200 inserts into ~32 slots must evict");
+        // Evicted keys miss; the most recently inserted key still hits.
+        let mut out = vec![0.0f32; 16];
+        assert!(c.lookup(FP, 0, 199, &mut out));
+    }
+
+    #[test]
+    fn lru_evicts_the_stale_entry_not_the_touched_one() {
+        // One shard's worth of budget for exactly 2 entries; find two
+        // keys landing in the same shard so the third insert must evict.
+        let entry = 8 * 4 + ENTRY_OVERHEAD;
+        let c = CodeCache::new(entry * 2 * N_SHARDS);
+        let shard0 = CodeCache::shard_of(0, 0);
+        let mut same: Vec<u64> = Vec::new();
+        let mut k = 0u64;
+        while same.len() < 3 {
+            if CodeCache::shard_of(0, k) == shard0 {
+                same.push(k);
+            }
+            k += 1;
+        }
+        let mix = vec![2.5f32; 8];
+        let mut out = vec![0.0f32; 8];
+        c.insert(FP, 0, same[0], &mix);
+        c.insert(FP, 0, same[1], &mix);
+        // Touch the older entry so the *other* one becomes LRU.
+        assert!(c.lookup(FP, 0, same[0], &mut out));
+        let (_, ev) = c.insert(FP, 0, same[2], &mix);
+        assert_eq!(ev, 1, "third entry in a 2-entry shard evicts one");
+        assert!(c.lookup(FP, 0, same[0], &mut out), "recently touched survives");
+        assert!(!c.lookup(FP, 0, same[1], &mut out), "LRU entry evicted");
+    }
+
+    #[test]
+    fn oversized_entry_is_refused_not_partially_cached() {
+        let c = CodeCache::new(128); // per-shard budget: 8 bytes
+        let mix = vec![0.5f32; 64];
+        let (bytes, ev) = c.insert(FP, 0, 7, &mix);
+        assert_eq!((bytes, ev), (0, 0));
+        assert_eq!(c.resident_bytes(), 0);
+        assert_eq!(c.len(), 0);
+    }
+
+    #[test]
+    fn fingerprint_mismatch_flushes_instead_of_serving_stale() {
+        let c = CodeCache::new(1 << 20);
+        let mix = vec![1.0f32; 16];
+        let mut out = vec![0.0f32; 16];
+        c.insert(0xAAAA, 0, 1, &mix);
+        assert!(c.lookup(0xAAAA, 0, 1, &mut out));
+        // New weight set: the old product must NOT be served.
+        assert!(!c.lookup(0xBBBB, 0, 1, &mut out), "stale product served");
+        assert_eq!(c.len(), 0, "flush clears every shard");
+        assert_eq!(c.resident_bytes(), 0);
+        assert_eq!(c.stats().flushes, 1);
+        // And the cache now serves the new fingerprint normally.
+        c.insert(0xBBBB, 0, 1, &mix);
+        assert!(c.lookup(0xBBBB, 0, 1, &mut out));
+    }
+
+    #[test]
+    fn note_hit_counts_without_touching_shards() {
+        let c = CodeCache::new(1 << 20);
+        c.note_hit();
+        c.note_hit();
+        let s = c.stats();
+        assert_eq!(s.hits, 2);
+        assert_eq!(s.misses, 0);
+        assert_eq!(c.len(), 0);
+    }
+
+    #[test]
+    fn weights_fingerprint_tracks_the_cached_inputs() {
+        let cfg = ModelConfig::vqt_tiny();
+        let w1 = ModelWeights::random(&cfg, 1);
+        let w1b = ModelWeights::random(&cfg, 1);
+        let w2 = ModelWeights::random(&cfg, 2);
+        assert_eq!(
+            weights_fingerprint(&w1),
+            weights_fingerprint(&w1b),
+            "same seed, same fingerprint"
+        );
+        assert_ne!(
+            weights_fingerprint(&w1),
+            weights_fingerprint(&w2),
+            "different weights, different fingerprint"
+        );
+        // Perturbing one w_mix element changes the fingerprint — the
+        // guard actually covers the cached product's inputs.
+        let mut w3 = ModelWeights::random(&cfg, 1);
+        w3.layers[0].w_mix.data[0] += 1.0;
+        assert_ne!(weights_fingerprint(&w1), weights_fingerprint(&w3));
+        assert_ne!(weights_fingerprint(&w1), 0, "0 is reserved for unset");
+    }
+}

@@ -35,6 +35,7 @@ use crate::tensor;
 use crate::vq::CodeTuple;
 use std::sync::Arc;
 
+use super::codecache::CacheHandle;
 use super::rowstore::RowStore;
 
 /// Engine tuning knobs (ablation surface).
@@ -73,6 +74,15 @@ pub struct EngineStats {
     /// Rows whose block output was recomputed.
     pub outputs_recomputed: u64,
     pub verifications: u64,
+    /// Block-tail mix vectors served from the shared code cache (this
+    /// engine's share; zero when no cache is attached).
+    pub cache_hits: u64,
+    /// Cache lookups that fell through to the full decode→mix product.
+    pub cache_misses: u64,
+    /// Entries this engine's inserts displaced from the shared cache.
+    pub cache_evictions: u64,
+    /// Payload+overhead bytes this engine's inserts added to the cache.
+    pub cache_bytes_inserted: u64,
 }
 
 /// Result of one edit (or edit-script) application.
@@ -153,6 +163,16 @@ pub struct IncrementalEngine {
     logits: Vec<f32>,
     /// Reusable hot-path scratch (row_output / qkv_row temporaries).
     scratch: Scratch,
+    /// Shared codebook-product cache, if the host attached one (strictly
+    /// opt-in: `None` preserves the classic uncached numerics AND the
+    /// classic stat/ledger series exactly). Travels through `clone`/
+    /// `fork`; deliberately excluded from snapshots — a restored engine
+    /// re-attaches and rewarms lazily.
+    cache: Option<CacheHandle>,
+    /// Whether the most recent `block_tail` was served from the cache —
+    /// read by `row_output` (and collected by `apply_edit`) to charge the
+    /// ledger honestly for that row.
+    tail_cached: bool,
     pub ledger: FlopLedger,
     pub stats: EngineStats,
 }
@@ -209,11 +229,29 @@ impl IncrementalEngine {
             pooled_sum: vec![0.0; d],
             logits: vec![],
             scratch: Scratch::default(),
+            cache: None,
+            tail_cached: false,
             ledger: FlopLedger::new(),
             stats: EngineStats::default(),
         };
         eng.rebuild();
         eng
+    }
+
+    /// Attach (or detach, with `None`) a shared codebook-product cache.
+    /// The handle carries the fingerprint of the weight set it was built
+    /// for; attaching a handle fingerprinted for different weights would
+    /// flush the shared cache on first use, so hosts build one handle per
+    /// weight set ([`CacheHandle::new`]) and clone it per engine.
+    pub fn set_code_cache(&mut self, cache: Option<CacheHandle>) {
+        self.cache = cache;
+        self.tail_cached = false;
+    }
+
+    /// The attached cache handle, if any (the pooled batch executor uses
+    /// this to decide whether a wave shares one cache).
+    pub fn code_cache(&self) -> Option<&CacheHandle> {
+        self.cache.as_ref()
     }
 
     pub fn tokens(&self) -> &[u32] {
@@ -523,17 +561,28 @@ impl IncrementalEngine {
 
     /// Block tail for one row: VQ-decode(code) → mix → residual → LN2 →
     /// FFN → residual. Pure function of (x, code) — the paper's reuse unit.
-    /// Ledger/stats charged via [`Self::charge_row_output`].
+    /// Ledger/stats charged via [`Self::charge_row_output`] with the
+    /// hit/miss flag `block_tail` leaves in `self.tail_cached`.
     fn row_output(&mut self, li: usize, x: &[f32], code: CodeTuple) -> Vec<f32> {
-        self.charge_row_output();
-        self.block_tail(li, x, code)
+        let out = self.block_tail(li, x, code);
+        self.charge_row_output(self.tail_cached);
+        out
     }
 
-    /// The block-tail arithmetic alone — NO ledger or stat side effects.
-    /// The staged (batchable) edit path computes tails externally and
-    /// charges per row on scatter; this is the single-row reference the
-    /// pooled executor ([`super::batch`]) must match bit-for-bit.
-    /// Scratch-buffered: zero allocations beyond the returned vector.
+    /// The block-tail arithmetic alone — NO ledger side effects (cache
+    /// hit/miss/eviction stats are updated here, because only this seam
+    /// knows the outcome; `self.tail_cached` records it for the caller's
+    /// ledger charge). The staged (batchable) edit path computes tails
+    /// externally and charges per row on scatter; this is the single-row
+    /// reference the pooled executor ([`super::batch`]) must match
+    /// bit-for-bit. Scratch-buffered: zero allocations beyond the
+    /// returned vector.
+    ///
+    /// With a cache attached, the decode→mix prefix — a pure function of
+    /// `(layer, code)` — is served from the shared cache when present. A
+    /// cached entry is the byte-exact product the miss path computed with
+    /// the same tiled kernel, so the cached and uncached tails are
+    /// bit-identical (locked by `tests/differential_codecache.rs`).
     pub(crate) fn block_tail(&mut self, li: usize, x: &[f32], code: CodeTuple) -> Vec<f32> {
         let w = Arc::clone(&self.w);
         let layer = &w.layers[li];
@@ -545,8 +594,26 @@ impl IncrementalEngine {
         sc.b.resize(d, 0.0);
         sc.c.resize(d, 0.0);
         sc.mid.resize(cfg.d_ff, 0.0);
-        vq.decode_into(code, &mut sc.a);
-        tensor::vec_matmul_into(&sc.a, &layer.w_mix, &mut sc.b);
+        let mut hit = false;
+        if let Some(h) = &self.cache {
+            let key = code.pack();
+            if h.cache.lookup(h.fp, li as u32, key, &mut sc.b) {
+                self.stats.cache_hits += 1;
+                hit = true;
+            } else {
+                self.stats.cache_misses += 1;
+            }
+        }
+        if !hit {
+            vq.decode_into(code, &mut sc.a);
+            tensor::vec_matmul_into(&sc.a, &layer.w_mix, &mut sc.b);
+            if let Some(h) = &self.cache {
+                let (bytes, ev) = h.cache.insert(h.fp, li as u32, code.pack(), &sc.b);
+                self.stats.cache_bytes_inserted += bytes;
+                self.stats.cache_evictions += ev;
+            }
+        }
+        self.tail_cached = hit;
         // y (residual 1) in sc.c
         for i in 0..d {
             sc.c[i] = x[i] + sc.b[i] + layer.b_mix[i];
@@ -564,14 +631,25 @@ impl IncrementalEngine {
 
     /// The exact ledger/stat cost of one block-tail row — shared by
     /// [`Self::row_output`] and the staged scatter path so the two charge
-    /// identically by construction.
-    fn charge_row_output(&mut self) {
+    /// identically by construction. `cached` keeps the FLOP ledger
+    /// honest: a cache hit skips the `d·d` mix GEMV (and the decode
+    /// bookkeeping) but pays a lookup+copy (`2d` bookkeeping); every
+    /// stage after residual 1 is charged identically. Per hit the ledger
+    /// saves exactly `MULADD·d² − d` — asserted by the differential
+    /// suite's attribution test.
+    fn charge_row_output(&mut self, cached: bool) {
         self.stats.outputs_recomputed += 1;
         let cfg = &self.w.cfg;
         let d = cfg.d_model;
-        self.ledger.add(Cat::Bookkeeping, d as u64);
-        self.ledger
-            .add(Cat::Linear, MULADD * (d * d + 2 * d * cfg.d_ff) as u64);
+        if cached {
+            self.ledger.add(Cat::Bookkeeping, 2 * d as u64);
+            self.ledger
+                .add(Cat::Linear, MULADD * (2 * d * cfg.d_ff) as u64);
+        } else {
+            self.ledger.add(Cat::Bookkeeping, d as u64);
+            self.ledger
+                .add(Cat::Linear, MULADD * (d * d + 2 * d * cfg.d_ff) as u64);
+        }
         self.ledger.add(
             Cat::Elementwise,
             flops::layernorm_cost(d) + cfg.d_ff as u64 * TRANSCENDENTAL + 2 * d as u64,
@@ -622,10 +700,12 @@ impl IncrementalEngine {
             self.staged_pre(&mut st);
             let li = st.layer;
             let mut outs: Vec<Vec<f32>> = Vec::with_capacity(st.pending.len());
+            let mut cached: Vec<bool> = Vec::with_capacity(st.pending.len());
             for rw in &st.pending {
                 outs.push(self.block_tail(li, &rw.x, rw.code));
+                cached.push(self.tail_cached);
             }
-            self.staged_post_owned(&mut st, outs);
+            self.staged_post_owned(&mut st, outs, &cached);
         }
         self.finish_staged(st)
     }
@@ -880,22 +960,31 @@ impl IncrementalEngine {
     /// Scatter externally computed block-tail outputs back (one slice per
     /// [`StagedEdit::pending`] entry, same order), charge the ledger and
     /// stats exactly as the single-row path would, and advance to the
-    /// next layer. The batched executor's outputs live in a stacked
-    /// matrix, so this entry point copies; an executor that owns its row
-    /// vectors should use [`Self::staged_post_owned`] and move them.
-    pub(crate) fn staged_post(&mut self, st: &mut StagedEdit, outs: &[&[f32]]) {
-        self.staged_post_owned(st, outs.iter().map(|o| o.to_vec()).collect());
+    /// next layer. `cached` carries one hit/miss flag per row (all-false
+    /// for an uncached executor) so the ledger attribution matches the
+    /// single-row path per row. The batched executor's outputs live in a
+    /// stacked matrix, so this entry point copies; an executor that owns
+    /// its row vectors should use [`Self::staged_post_owned`] and move
+    /// them.
+    pub(crate) fn staged_post(&mut self, st: &mut StagedEdit, outs: &[&[f32]], cached: &[bool]) {
+        self.staged_post_owned(st, outs.iter().map(|o| o.to_vec()).collect(), cached);
     }
 
     /// [`Self::staged_post`] over owned row outputs — the single-row
     /// executor in [`Self::apply_edit`] moves each tail result straight
     /// into the next layer's change set, no per-row copy.
-    pub(crate) fn staged_post_owned(&mut self, st: &mut StagedEdit, outs: Vec<Vec<f32>>) {
+    pub(crate) fn staged_post_owned(
+        &mut self,
+        st: &mut StagedEdit,
+        outs: Vec<Vec<f32>>,
+        cached: &[bool],
+    ) {
         assert_eq!(outs.len(), st.pending.len(), "one output per pending row");
+        assert_eq!(cached.len(), outs.len(), "one cached flag per row");
         let mut next = st.next.take().expect("staged_pre first");
-        for (rw, out) in st.pending.drain(..).zip(outs) {
+        for ((rw, out), &hit) in st.pending.drain(..).zip(outs).zip(cached) {
             assert_eq!(out.len(), self.w.cfg.d_model, "row {} output width", rw.row);
-            self.charge_row_output();
+            self.charge_row_output(hit);
             next.rows.push((rw.row, out));
         }
         st.change = Some(next);
@@ -1700,6 +1789,8 @@ impl IncrementalEngine {
             pooled_sum: vec![0.0; d],
             logits: vec![],
             scratch: Scratch::default(),
+            cache: None,
+            tail_cached: false,
             ledger: FlopLedger::new(),
             stats: EngineStats::default(),
         }

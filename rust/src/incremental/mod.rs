@@ -2,11 +2,13 @@
 //! [`engine::IncrementalEngine`].
 
 pub mod batch;
+pub mod codecache;
 pub mod engine;
 pub mod rowstore;
 pub mod snapshot;
 
 pub use batch::{apply_scripts_batched, BatchOutcome};
+pub use codecache::{weights_fingerprint, CacheHandle, CodeCache, CodeCacheStats};
 pub use engine::{EditReport, EngineOptions, EngineStats, IncrementalEngine, VerifyReport};
 pub use snapshot::{config_fingerprint, SNAPSHOT_MAGIC, SNAPSHOT_VERSION};
 

@@ -27,6 +27,15 @@
 //! The payload embeds a fingerprint of the model configuration; restoring
 //! against different weights geometry is rejected up front rather than
 //! producing silently-wrong state.
+//!
+//! The shared codebook-product cache ([`crate::incremental::codecache`])
+//! is deliberately NOT part of a snapshot — neither its entries nor the
+//! engine's `cache_*` counters. The cache is process-global derived
+//! state: a restored engine re-attaches whatever cache its host serves
+//! and rewarms lazily (first touches miss and repopulate), which stays
+//! bit-exact because cached and uncached tails are bit-identical. The
+//! stats tensor therefore stays at the 8 pre-cache counters and the
+//! snapshot format needs no version bump.
 
 use crate::flops::FlopLedger;
 use crate::incremental::{EngineOptions, IncrementalEngine};

@@ -89,6 +89,11 @@ pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
 /// is bitwise identical to n independent `vec_matmul_into` calls. The
 /// cross-session batcher leans on this; a kernel change that breaks it
 /// fails `batched_gemm_rows_bitwise_equal_gemv` below.
+///
+/// The same fixed accumulation order is what makes the codebook-product
+/// cache (docs/ARCHITECTURE.md §8) bit-exact: `decode(code)·w_mix` computed
+/// once and replayed from the cache is byte-identical to recomputing it, so
+/// a cache hit cannot perturb downstream logits.
 #[inline]
 pub fn vec_matmul_into(x: &[f32], w: &Matrix, y: &mut [f32]) {
     assert_eq!(x.len(), w.rows);

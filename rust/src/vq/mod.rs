@@ -54,6 +54,12 @@ impl CodeTuple {
 
     /// Pack into a u64 for fast interner keys (supports ≤ 4 heads of ≤ 2^16
     /// codes, or up to 8 heads of ≤ 256 codes; asserts on overflow).
+    ///
+    /// The packing is injective over the supported shapes, so the u64 also
+    /// serves directly as the codebook-product cache key
+    /// (`incremental/codecache.rs`, keyed `(layer, pack())`): equal packed
+    /// values imply equal code tuples imply equal `decode(code)·w_mix`
+    /// products under one set of weights.
     pub fn pack(&self) -> u64 {
         let mut v: u64 = self.len as u64;
         if self.len <= 4 {

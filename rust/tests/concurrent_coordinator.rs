@@ -166,6 +166,7 @@ fn stats_merge_matches_per_shard_sum_at_awkward_splits() {
             workers,
             queue_capacity: 7, // ceil(7/3)=3 per shard — non-divisible
             max_sessions: 10,  // ceil(10/3)=4 per shard — non-divisible
+            code_cache_mb: 16, // cache on: its counters must merge too
             ..ServeConfig::default()
         };
         let coordinator = Coordinator::start(
@@ -223,7 +224,17 @@ fn stats_merge_matches_per_shard_sum_at_awkward_splits() {
                 let per_shard = j.get("per_shard").as_arr().expect("per_shard");
                 assert_eq!(per_shard.len(), workers, "one entry per shard");
                 // The merged counters equal the per-shard sums EXACTLY.
-                for key in ["edits", "dense_calls", "live_sessions", "errors", "batched_rows"] {
+                for key in [
+                    "edits",
+                    "dense_calls",
+                    "live_sessions",
+                    "errors",
+                    "batched_rows",
+                    "cache_hits",
+                    "cache_misses",
+                    "cache_evictions",
+                    "cache_bytes",
+                ] {
                     let sum: usize = per_shard
                         .iter()
                         .map(|sj| sj.get(key).as_usize().unwrap_or(0))
@@ -241,12 +252,95 @@ fn stats_merge_matches_per_shard_sum_at_awkward_splits() {
                 // The batch-occupancy histogram is present and coherent
                 // (count may be 0 when no waves overlapped).
                 assert!(j.get("batch_fill").get("count").as_f64().is_some());
+                // Every edit recomputes at least one block tail, so the
+                // cache saw traffic — and it landed in the merged stats.
+                let hits = j.get("cache_hits").as_usize().unwrap();
+                let misses = j.get("cache_misses").as_usize().unwrap();
+                assert!(
+                    hits + misses > 0,
+                    "workers={workers}: cache-on pool recorded no cache traffic"
+                );
             }
             other => panic!("workers={workers}: {other:?}"),
         }
         drop(client);
         coordinator.shutdown();
     }
+}
+
+/// The cross-session payoff the cache exists for: many sessions typing
+/// the same token into the same document share ONE product. The first
+/// session's edit misses and warms the process-global cache; every later
+/// session hits — including sessions hash-routed to OTHER shards, which
+/// is what distinguishes a process-global cache from a per-shard one.
+#[test]
+fn many_sessions_same_token_hit_cross_session() {
+    let cfg = ModelConfig::vqt_tiny();
+    let w = Arc::new(ModelWeights::random(&cfg, 83));
+    let sc = ServeConfig {
+        workers: 2,
+        code_cache_mb: 8,
+        ..ServeConfig::default()
+    };
+    let coordinator = Coordinator::start(
+        Backend {
+            weights: w,
+            artifacts_dir: None,
+            engine_opts: EngineOptions::default(),
+        },
+        sc,
+    );
+    let client = coordinator.client();
+    let doc: Vec<u32> = (0..12).map(|i| (i * 5 % 50) as u32).collect();
+    let n_sessions = 6;
+    for s in 0..n_sessions {
+        client
+            .request(Request::Open {
+                session: format!("same{s}"),
+                tokens: doc.clone(),
+            })
+            .unwrap()
+            .logits()
+            .unwrap();
+    }
+    // Everyone types the same token at the same position.
+    let mut finals: Vec<Vec<u32>> = Vec::new();
+    for s in 0..n_sessions {
+        let r = client
+            .request(Request::Edit {
+                session: format!("same{s}"),
+                edit: Edit::Replace { at: 4, tok: 49 },
+            })
+            .unwrap();
+        finals.push(r.logits().unwrap().iter().map(|x| x.to_bits()).collect());
+    }
+    // Identical sessions, identical edits: identical logits bits — the
+    // cached fast path did not perturb a single bit for any session.
+    for (s, f) in finals.iter().enumerate().skip(1) {
+        assert_eq!(&finals[0], f, "session {s} diverged");
+    }
+    match client.request(Request::Stats).unwrap() {
+        Response::Stats(j) => {
+            let hits = j.get("cache_hits").as_usize().unwrap();
+            let misses = j.get("cache_misses").as_usize().unwrap();
+            assert!(misses > 0, "the first session must warm the cache");
+            assert!(
+                hits > 0,
+                "later sessions must hit cross-session (hits {hits}, misses {misses})"
+            );
+            // The per-shard breakdown carries the cache keys and sums to
+            // the merged view.
+            let per_shard = j.get("per_shard").as_arr().expect("per_shard");
+            let sum: usize = per_shard
+                .iter()
+                .map(|sj| sj.get("cache_hits").as_usize().unwrap())
+                .sum();
+            assert_eq!(sum, hits, "per-shard hits must sum to the merged total");
+        }
+        other => panic!("{other:?}"),
+    }
+    drop(client);
+    coordinator.shutdown();
 }
 
 #[test]

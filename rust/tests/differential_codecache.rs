@@ -1,0 +1,336 @@
+//! Differential suite for the shared codebook-product cache
+//! (`incremental::codecache` — the `code → decode·w_mix` products behind
+//! the block-tail seam).
+//!
+//! The claim under test is strict BIT-exactness plus honest accounting:
+//! for randomized edit streams, a cache-attached engine must produce,
+//! per script and in final state,
+//!   - identical logits (f32 bit patterns) to an uncached peer,
+//!   - identical reuse statistics apart from the cache counters
+//!     themselves,
+//!   - a FLOP ledger that undercuts the uncached peer by EXACTLY
+//!     `hits × (MULADD·d² − d)` — every hit skips one d×d GEMV (charging
+//!     a d-float copy instead), and nothing else may change,
+//! and must match the dense from-scratch oracle (`verify()`), across
+//! ≥3 model configs × seeds, under eviction pressure, across
+//! snapshot/restore (which excludes the cache by design), and across a
+//! weights-fingerprint mismatch (which must flush, never serve stale).
+
+use std::sync::Arc;
+use vqt::config::ModelConfig;
+use vqt::edits::Edit;
+use vqt::flops::MULADD;
+use vqt::incremental::{CacheHandle, CodeCache, EngineOptions, IncrementalEngine};
+use vqt::model::ModelWeights;
+use vqt::testutil::gen_edit;
+use vqt::util::Rng;
+
+/// The config axis: three genuinely different geometries (head count and
+/// depth both change the code-tuple shape and the per-layer key stream).
+fn configs() -> Vec<(&'static str, ModelConfig)> {
+    vec![
+        ("vqt_tiny", ModelConfig::vqt_tiny()),
+        (
+            "vqt_tiny_h4",
+            ModelConfig {
+                vq_heads: 4,
+                ..ModelConfig::vqt_tiny()
+            },
+        ),
+        (
+            "vqt_tiny_3l",
+            ModelConfig {
+                n_layers: 3,
+                ..ModelConfig::vqt_tiny()
+            },
+        ),
+    ]
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// What one hit saves in the ledger: the skipped d×d mix GEMV
+/// (`MULADD·d²`) minus the d-float copy a hit charges instead.
+fn hit_saving(cfg: &ModelConfig) -> u64 {
+    let d = cfg.d_model as u64;
+    MULADD * d * d - d
+}
+
+/// The cache counters, zeroed — masking them makes a cached engine's
+/// stats comparable to an uncached peer's.
+fn mask_cache_counters(stats: &vqt::incremental::EngineStats) -> vqt::incremental::EngineStats {
+    let mut s = stats.clone();
+    s.cache_hits = 0;
+    s.cache_misses = 0;
+    s.cache_evictions = 0;
+    s.cache_bytes_inserted = 0;
+    s
+}
+
+/// Drive one randomized edit stream through a cache-attached engine and
+/// an uncached peer; assert bit-exactness and exact FLOP attribution per
+/// script and in final state.
+fn run_stream(
+    label: &str,
+    cfg: &ModelConfig,
+    seed: u64,
+    scripts: usize,
+    cache_bytes: usize,
+) -> vqt::incremental::CodeCacheStats {
+    let w = Arc::new(ModelWeights::random(cfg, seed));
+    let handle = CacheHandle::new(Arc::new(CodeCache::new(cache_bytes)), &w);
+    let mut r = Rng::new(seed ^ 0xCAC4E);
+    let n0 = r.range(10, 20);
+    let doc: Vec<u32> = (0..n0).map(|_| r.below(cfg.vocab_size) as u32).collect();
+    let opts = EngineOptions::default();
+    let mut cached = IncrementalEngine::new(w.clone(), &doc, opts);
+    cached.set_code_cache(Some(handle.clone()));
+    let mut plain = IncrementalEngine::new(w.clone(), &doc, opts);
+    let mut len = doc.len();
+    for script_no in 0..scripts {
+        let k = r.range(1, 4);
+        let script: Vec<Edit> = (0..k)
+            .map(|_| {
+                let e = gen_edit(&mut r, len, cfg.vocab_size, cfg.max_seq);
+                len = (len as isize + e.len_delta()) as usize;
+                e
+            })
+            .collect();
+        let hits_before = cached.stats.cache_hits;
+        let rep_on = cached.apply_edits(&script);
+        let rep_off = plain.apply_edits(&script);
+        let hits = cached.stats.cache_hits - hits_before;
+        assert_eq!(
+            bits(&rep_on.logits),
+            bits(&rep_off.logits),
+            "{label} seed {seed} script {script_no}: logits bits"
+        );
+        assert_eq!(
+            rep_off.flops - rep_on.flops,
+            hits * hit_saving(cfg),
+            "{label} seed {seed} script {script_no}: per-script FLOP attribution \
+             (hits this script: {hits})"
+        );
+        assert_eq!(
+            rep_on.defragged, rep_off.defragged,
+            "{label} seed {seed} script {script_no}: defrag flag"
+        );
+    }
+    // Deterministic A→B→A toggle on row 0: returning a row to a prior
+    // content state reproduces the same code tuple (codes are content-
+    // determined — the oracle check below proves it), so the third edit
+    // MUST hit what the first inserted. Guarantees the stream exercises
+    // the hit path regardless of how the random phase landed.
+    let t0 = cached.tokens()[0];
+    let x = (t0 + 1) % cfg.vocab_size as u32;
+    let y = (t0 + 2) % cfg.vocab_size as u32;
+    for tok in [x, y, x] {
+        let e = [Edit::Replace { at: 0, tok }];
+        let a = cached.apply_edits(&e);
+        let b = plain.apply_edits(&e);
+        assert_eq!(bits(&a.logits), bits(&b.logits), "{label} toggle logits");
+    }
+    assert!(
+        cached.stats.cache_hits > 0,
+        "{label}: the A→B→A toggle must hit"
+    );
+    // Final state: the cached engine is indistinguishable apart from the
+    // cache counters, its ledger shortfall is exactly its hits' savings,
+    // and it matches the dense oracle.
+    assert_eq!(cached.tokens(), plain.tokens(), "{label} tokens");
+    assert_eq!(
+        cached.position_ids(),
+        plain.position_ids(),
+        "{label} positions"
+    );
+    assert_eq!(
+        bits(cached.logits()),
+        bits(plain.logits()),
+        "{label} final logits bits"
+    );
+    assert_eq!(
+        mask_cache_counters(&cached.stats),
+        plain.stats,
+        "{label} non-cache statistics"
+    );
+    assert_eq!(
+        plain.ledger.total() - cached.ledger.total(),
+        cached.stats.cache_hits * hit_saving(cfg),
+        "{label} ledger attribution over the whole stream"
+    );
+    let v = cached.verify();
+    assert_eq!(v.code_mismatches, 0, "{label}: dense oracle code parity");
+    assert!(
+        v.max_logit_diff < 1e-3,
+        "{label}: oracle logit diff {}",
+        v.max_logit_diff
+    );
+    // Engine-side counters and the shared cache's own counters must agree
+    // (one engine, one cache: no other writers).
+    let cs = handle.cache.stats();
+    assert_eq!(cs.hits, cached.stats.cache_hits, "{label} hit parity");
+    assert_eq!(cs.misses, cached.stats.cache_misses, "{label} miss parity");
+    assert_eq!(
+        cs.evictions, cached.stats.cache_evictions,
+        "{label} eviction parity"
+    );
+    assert_eq!(
+        cs.bytes_inserted, cached.stats.cache_bytes_inserted,
+        "{label} byte parity"
+    );
+    cs
+}
+
+#[test]
+fn cached_streams_bit_exact_across_configs_and_seeds() {
+    for (label, cfg) in configs() {
+        for seed in 0..3u64 {
+            let cs = run_stream(label, &cfg, 300 + seed, 5, 4 << 20);
+            assert!(cs.hits > 0, "{label} seed {seed}: stream never hit");
+            assert!(cs.misses > 0, "{label} seed {seed}: stream never missed");
+        }
+    }
+}
+
+/// A byte budget small enough to evict constantly must stay bit-exact:
+/// eviction changes WHAT is resident, never what a hit returns.
+#[test]
+fn eviction_pressure_stays_bit_exact() {
+    let cfg = ModelConfig::vqt_tiny();
+    let w = Arc::new(ModelWeights::random(&cfg, 41));
+    // Capacity of ONE ~192-byte entry (32·4 payload + 64 overhead) per
+    // shard: any two keys landing in the same shard displace each other.
+    let handle = CacheHandle::new(Arc::new(CodeCache::new(4096)), &w);
+    let doc: Vec<u32> = (0..20).map(|i| (i * 7 % 50) as u32).collect();
+    let opts = EngineOptions::default();
+    let mut cached = IncrementalEngine::new(w.clone(), &doc, opts);
+    cached.set_code_cache(Some(handle.clone()));
+    let mut plain = IncrementalEngine::new(w.clone(), &doc, opts);
+    // Three full replace sweeps: every row's tail recomputes with fresh
+    // content each time, streaming far more distinct (layer, code) keys
+    // through the cache than it can hold.
+    for sweep in 0..3u32 {
+        for at in 0..20usize {
+            let e = [Edit::Replace {
+                at,
+                tok: (sweep * 20 + at as u32) * 13 % 50,
+            }];
+            let a = cached.apply_edits(&e);
+            let b = plain.apply_edits(&e);
+            assert_eq!(bits(&a.logits), bits(&b.logits), "sweep {sweep} at {at}");
+        }
+    }
+    let cs = handle.cache.stats();
+    assert!(
+        cs.evictions > 0,
+        "budget must actually evict (misses: {})",
+        cs.misses
+    );
+    assert!(handle.cache.resident_bytes() <= 4096, "budget respected");
+    assert_eq!(
+        plain.ledger.total() - cached.ledger.total(),
+        cached.stats.cache_hits * hit_saving(&cfg),
+        "attribution stays exact under eviction"
+    );
+}
+
+/// VQSS snapshots exclude the cache: a restored engine comes back
+/// detached with zeroed cache counters, and after re-attaching it runs
+/// bit-identically to an always-resident peer — rewarming from the still-
+/// shared cache rather than re-serializing it.
+#[test]
+fn snapshot_restore_excludes_cache_and_stays_exact() {
+    let cfg = ModelConfig::vqt_tiny();
+    let w = Arc::new(ModelWeights::random(&cfg, 71));
+    let handle = CacheHandle::new(Arc::new(CodeCache::new(1 << 20)), &w);
+    let mut r = Rng::new(71);
+    let doc: Vec<u32> = (0..14).map(|_| r.below(cfg.vocab_size) as u32).collect();
+    let opts = EngineOptions::default();
+    let mut resident = IncrementalEngine::new(w.clone(), &doc, opts);
+    resident.set_code_cache(Some(handle.clone()));
+    // Warm phase: some edits populate the cache and the counters.
+    let mut len = doc.len();
+    let mut warm: Vec<Edit> = Vec::new();
+    for _ in 0..4 {
+        let e = gen_edit(&mut r, len, cfg.vocab_size, cfg.max_seq);
+        len = (len as isize + e.len_delta()) as usize;
+        warm.push(e);
+    }
+    resident.apply_edits(&warm);
+    assert!(handle.cache.len() > 0, "warm phase populated the cache");
+    let bytes = resident.snapshot();
+    let mut restored = IncrementalEngine::restore(w.clone(), &bytes, opts).unwrap();
+    assert!(
+        restored.code_cache().is_none(),
+        "snapshot must not carry the cache attachment"
+    );
+    assert_eq!(
+        (restored.stats.cache_hits, restored.stats.cache_misses),
+        (0, 0),
+        "cache counters restart at zero after restore"
+    );
+    restored.set_code_cache(Some(handle.clone()));
+    // Identical follow-up stream on both engines, sharing the still-warm
+    // cache: bit-identical logits, identical counter deltas.
+    let res_hits0 = resident.stats.cache_hits;
+    for _ in 0..3 {
+        let e = gen_edit(&mut r, len, cfg.vocab_size, cfg.max_seq);
+        len = (len as isize + e.len_delta()) as usize;
+        let a = resident.apply_edits(&[e]);
+        let b = restored.apply_edits(&[e]);
+        assert_eq!(bits(&a.logits), bits(&b.logits), "post-restore logits");
+        assert_eq!(a.flops, b.flops, "post-restore flops");
+    }
+    assert_eq!(bits(resident.logits()), bits(restored.logits()));
+    assert_eq!(
+        restored.stats.cache_hits,
+        resident.stats.cache_hits - res_hits0,
+        "restored engine's counters are exactly the post-restore delta"
+    );
+}
+
+/// Attaching a handle fingerprinted for DIFFERENT weights must flush the
+/// shared cache rather than serve another model's products — and the
+/// flushed engine must still be bit-exact against an uncached peer.
+#[test]
+fn fingerprint_mismatch_flushes_not_serves_stale() {
+    let cfg = ModelConfig::vqt_tiny();
+    let w1 = Arc::new(ModelWeights::random(&cfg, 11));
+    let w2 = Arc::new(ModelWeights::random(&cfg, 12));
+    let cache = Arc::new(CodeCache::new(1 << 20));
+    let h1 = CacheHandle::new(cache.clone(), &w1);
+    let h2 = CacheHandle::new(cache.clone(), &w2);
+    assert_ne!(h1.fp, h2.fp, "different weights, different fingerprints");
+    let doc: Vec<u32> = (0..12).map(|i| (i * 3 % 50) as u32).collect();
+    let opts = EngineOptions::default();
+    let mut a = IncrementalEngine::new(w1, &doc, opts);
+    a.set_code_cache(Some(h1));
+    a.apply_edits(&[Edit::Replace { at: 3, tok: 7 }, Edit::Insert { at: 5, tok: 9 }]);
+    assert!(cache.len() > 0, "w1 products resident");
+    // Same document, same edits, other weights: w2's engine must not see
+    // a single w1 product.
+    let mut b_cached = IncrementalEngine::new(w2.clone(), &doc, opts);
+    b_cached.set_code_cache(Some(h2));
+    let mut b_plain = IncrementalEngine::new(w2, &doc, opts);
+    let script = [Edit::Replace { at: 3, tok: 7 }, Edit::Insert { at: 5, tok: 9 }];
+    let rb = b_cached.apply_edits(&script);
+    let rp = b_plain.apply_edits(&script);
+    assert_eq!(bits(&rb.logits), bits(&rp.logits), "post-flush bit-exact");
+    assert_eq!(cache.stats().flushes, 1, "exactly one flush");
+}
+
+/// Serving-scale tier (release-mode CI: `cargo test --release -- --ignored`):
+/// the vqt_mini geometry under longer streams and realistic budgets.
+#[test]
+#[ignore = "serving-scale differential tier; run with --release -- --ignored"]
+fn cached_streams_bit_exact_at_serving_scale() {
+    for (label, cfg) in [
+        ("vqt_mini", ModelConfig::vqt_mini()),
+        ("vqt_mini_h4", ModelConfig::vqt_mini_h4()),
+    ] {
+        let cs = run_stream(label, &cfg, 999, 10, 32 << 20);
+        assert!(cs.hits > 0, "{label}: serving-scale stream must hit");
+    }
+}
