@@ -125,6 +125,76 @@ fn main() {
         &rows,
     );
 
+    // --- scalar vs explicit-SIMD backend ---------------------------------
+    // The PR-7 lever: the same tiled core with dispatch pinned per phase
+    // (the `_with` entry points ignore the global selector and any
+    // VQT_KERNEL_BACKEND override, so both columns measure what they
+    // claim). The backends are bit-identical by contract — this table is
+    // pure wall-clock. On a CPU without AVX2/NEON the "simd" column runs
+    // the scalar fallback and the ratio honestly prints ~1.0×.
+    let simd_backend = {
+        let auto = tensor::active_backend();
+        if auto == tensor::ResolvedBackend::Scalar {
+            println!("(no AVX2/NEON detected — SIMD column falls back to scalar)");
+        }
+        auto
+    };
+    let mut rows = Vec::new();
+    let mut simd_speedup = 1.0f64;
+    let mut simd_gemm_speedup = 1.0f64;
+    for &(k, n) in &[(128usize, 512usize), (768, 768), (768, 3072)] {
+        let wmat = Matrix::from_fn(k, n, |_, _| rng.normal());
+        let x: Vec<f32> = (0..k).map(|_| rng.normal()).collect();
+        let mut y = vec![0.0; n];
+        let ts = time_it(kw, ki, || {
+            tensor::vec_matmul_into_with(tensor::ResolvedBackend::Scalar, &x, &wmat, &mut y)
+        });
+        std::hint::black_box(y[0]);
+        let tv = time_it(kw, ki, || {
+            tensor::vec_matmul_into_with(simd_backend, &x, &wmat, &mut y)
+        });
+        std::hint::black_box(y[0]);
+        let ratio = ts.p50.as_secs_f64() / tv.p50.as_secs_f64().max(1e-9);
+        if (k, n) == (768, 3072) {
+            simd_speedup = ratio;
+        }
+        rows.push(vec![
+            format!("vec_matmul {k}x{n}"),
+            format!("{:.3}", ts.p50.as_secs_f64() * 1e3),
+            format!("{:.3}", tv.p50.as_secs_f64() * 1e3),
+            format!("{:.2}x", ratio),
+        ]);
+    }
+    for &(m, k, n) in &[(16usize, 768usize, 768usize), (64, 768, 768)] {
+        let a = Matrix::from_fn(m, k, |_, _| rng.normal());
+        let b = Matrix::from_fn(k, n, |_, _| rng.normal());
+        let mut c = Matrix::zeros(m, n);
+        let ts = time_it(kw, ki, || {
+            tensor::matmul_into_with(tensor::ResolvedBackend::Scalar, &a, &b, &mut c)
+        });
+        std::hint::black_box(c.data[0]);
+        let tv = time_it(kw, ki, || tensor::matmul_into_with(simd_backend, &a, &b, &mut c));
+        std::hint::black_box(c.data[0]);
+        let ratio = ts.p50.as_secs_f64() / tv.p50.as_secs_f64().max(1e-9);
+        if (m, k, n) == (64, 768, 768) {
+            simd_gemm_speedup = ratio;
+        }
+        rows.push(vec![
+            format!("matmul {m}x{k}x{n}"),
+            format!("{:.3}", ts.p50.as_secs_f64() * 1e3),
+            format!("{:.3}", tv.p50.as_secs_f64() * 1e3),
+            format!("{:.2}x", ratio),
+        ]);
+    }
+    print_table(
+        &format!(
+            "scalar vs SIMD backend (simd resolves to: {})",
+            simd_backend.name()
+        ),
+        &["shape", "scalar p50 (ms)", "simd p50 (ms)", "speedup"],
+        &rows,
+    );
+
     // --- per-edit latency by length × position --------------------------
     let (ew, ei) = if smoke { (0, 1) } else { (2, 12) };
     let mut rows = Vec::new();
@@ -444,6 +514,11 @@ fn main() {
             ("cache_warm_speedup_ratio", warm_ratio),
             ("cache_cold_speedup_ratio", cold_ratio),
             ("cache_wave_dedup_speedup_ratio", dedup_ratio),
+            // Scalar-vs-SIMD on the widest GEMV (768×3072, the FFN row)
+            // and the largest stacked GEMM — ~1.0 on CPUs without
+            // AVX2/NEON, where "simd" resolves to the scalar fallback.
+            ("simd_speedup_ratio", simd_speedup),
+            ("simd_gemm_speedup_ratio", simd_gemm_speedup),
         ],
     );
 

@@ -263,6 +263,14 @@ pub struct ServeConfig {
     /// on every shard; entries beyond the budget are evicted LRU. 0 ⇒
     /// cache disabled (the classic per-row decode→mix path).
     pub code_cache_mb: usize,
+    /// Kernel backend for the dense hot-path cores:
+    /// `"auto"` (runtime feature detection picks AVX2/NEON when present),
+    /// `"scalar"` (force the portable reference core), or `"simd"`
+    /// (prefer the explicit-SIMD core; falls back to scalar on CPUs
+    /// without AVX2/NEON). Every backend is bit-identical — this knob
+    /// trades nothing but speed. The `VQT_KERNEL_BACKEND` env var
+    /// overrides an `"auto"` config (see `tensor::set_kernel_backend`).
+    pub kernel_backend: String,
 }
 
 impl Default for ServeConfig {
@@ -281,6 +289,7 @@ impl Default for ServeConfig {
             memory_budget_mb: 0,
             spill_dir: String::new(),
             code_cache_mb: 0,
+            kernel_backend: "auto".to_string(),
         }
     }
 }
@@ -320,6 +329,18 @@ impl ServeConfig {
                 .get("code_cache_mb")
                 .as_usize()
                 .unwrap_or(d.code_cache_mb),
+            kernel_backend: {
+                let s = j
+                    .get("kernel_backend")
+                    .as_str()
+                    .unwrap_or(&d.kernel_backend)
+                    .to_string();
+                // Reject typos at config-load time, not at first matmul.
+                crate::tensor::KernelBackend::parse(&s)
+                    .map_err(anyhow::Error::msg)
+                    .context("serve.kernel_backend")?;
+                s
+            },
         })
     }
 }
@@ -451,6 +472,22 @@ mod file_tests {
         assert_eq!(serve.spill_dir, "/tmp/vqt-sessions");
         // Cross-session codebook-product cache on in the shipped config.
         assert_eq!(serve.code_cache_mb, 64);
+        // Kernel backend: runtime feature detection by default.
+        assert_eq!(serve.kernel_backend, "auto");
+    }
+
+    #[test]
+    fn kernel_backend_defaults_auto_validates_and_rejects_typos() {
+        let j = Json::parse(r#"{}"#).unwrap();
+        assert_eq!(ServeConfig::from_json(&j).unwrap().kernel_backend, "auto");
+        let j = Json::parse(r#"{"kernel_backend": "scalar"}"#).unwrap();
+        assert_eq!(ServeConfig::from_json(&j).unwrap().kernel_backend, "scalar");
+        let j = Json::parse(r#"{"kernel_backend": "simd"}"#).unwrap();
+        assert_eq!(ServeConfig::from_json(&j).unwrap().kernel_backend, "simd");
+        let j = Json::parse(r#"{"kernel_backend": "avx512"}"#).unwrap();
+        let err = format!("{:#}", ServeConfig::from_json(&j).unwrap_err());
+        assert!(err.contains("kernel_backend"), "{err}");
+        assert!(err.contains("avx512"), "{err}");
     }
 
     #[test]

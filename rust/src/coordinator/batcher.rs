@@ -35,25 +35,39 @@ pub trait SessionKeyed {
 /// shard never waits). This is the adaptive gathering step in front of
 /// [`plan`] and the cross-session pooled-GEMM executor: the window is the
 /// wait a request may pay to share a weight traversal with its neighbors.
+///
+/// The wait is a *blocking* `recv_timeout` on the remaining deadline, not
+/// a `yield_now` spin: an idle shard with an open window sleeps in the
+/// channel's futex until a job arrives or the window closes, instead of
+/// burning a full core re-polling an empty queue (regression-tested by
+/// `empty_queue_drain_sleeps_instead_of_spinning`). Queued jobs are still
+/// drained eagerly via `try_recv` first, so a `Duration::ZERO` window
+/// collects everything already in the queue without sleeping at all.
 pub fn drain<J>(
     rx: &std::sync::mpsc::Receiver<J>,
     first: J,
     max: usize,
     window: std::time::Duration,
 ) -> Vec<J> {
-    use std::sync::mpsc::TryRecvError;
+    use std::sync::mpsc::{RecvTimeoutError, TryRecvError};
     let mut batch = vec![first];
     let deadline = std::time::Instant::now() + window;
     while batch.len() < max {
         match rx.try_recv() {
-            Ok(j) => batch.push(j),
-            Err(TryRecvError::Empty) => {
-                if std::time::Instant::now() >= deadline {
-                    break;
-                }
-                std::thread::yield_now();
+            Ok(j) => {
+                batch.push(j);
+                continue;
             }
             Err(TryRecvError::Disconnected) => break,
+            Err(TryRecvError::Empty) => {}
+        }
+        let now = std::time::Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(j) => batch.push(j),
+            Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => break,
         }
     }
     batch
@@ -154,6 +168,68 @@ mod tests {
         // Disconnected sender: returns what it has, never hangs.
         let batch = drain(&rx, 7, 8, std::time::Duration::from_secs(60));
         assert_eq!(batch, vec![7]);
+    }
+
+    /// Thread CPU time (user + system) in milliseconds, from
+    /// `/proc/thread-self/stat` fields 14/15 (utime/stime, USER_HZ
+    /// ticks — 100/s on every mainstream Linux).
+    #[cfg(target_os = "linux")]
+    fn thread_cpu_ms() -> u64 {
+        let stat = std::fs::read_to_string("/proc/thread-self/stat").unwrap();
+        // comm (field 2) may contain spaces/parens; split after it.
+        let rest = &stat[stat.rfind(')').unwrap() + 2..];
+        let f: Vec<&str> = rest.split_whitespace().collect();
+        // rest starts at field 3, so utime (14) and stime (15) are at
+        // indices 11 and 12.
+        let ticks: u64 = f[11].parse::<u64>().unwrap() + f[12].parse::<u64>().unwrap();
+        ticks * 10
+    }
+
+    /// Regression for the idle-spin bug: an empty-queue drain used to
+    /// busy-loop `yield_now()` for the whole window, burning a full core.
+    /// It must now *sleep* in `recv_timeout`: wall time covers the window
+    /// while thread CPU time stays near zero.
+    #[test]
+    #[cfg(target_os = "linux")]
+    fn empty_queue_drain_sleeps_instead_of_spinning() {
+        let (tx, rx) = std::sync::mpsc::channel::<u32>();
+        // Warm up lazy init (channel internals, /proc read) off the clock.
+        let _ = drain(&rx, 0, 8, std::time::Duration::ZERO);
+        let _ = thread_cpu_ms();
+        let window = std::time::Duration::from_millis(400);
+        let cpu0 = thread_cpu_ms();
+        let t0 = std::time::Instant::now();
+        let batch = drain(&rx, 1, 8, window);
+        let wall = t0.elapsed();
+        let cpu = thread_cpu_ms() - cpu0;
+        drop(tx);
+        assert_eq!(batch, vec![1]);
+        assert!(wall >= std::time::Duration::from_millis(300), "window honored: {wall:?}");
+        // The spin version burns ~400 ms of CPU here; the sleeping version
+        // a few scheduler ticks. 100 ms is a generous CI-safe ceiling.
+        assert!(cpu <= 100, "drain burned {cpu} ms CPU over a {wall:?} idle window");
+    }
+
+    /// The blocking wait must still wake for jobs that arrive mid-window
+    /// (size-or-timeout semantics, not sleep-the-whole-window).
+    #[test]
+    fn drain_wakes_for_late_arrivals_within_window() {
+        let (tx, rx) = std::sync::mpsc::channel::<u32>();
+        let sender = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            tx.send(1).unwrap();
+            tx.send(2).unwrap();
+        });
+        let t0 = std::time::Instant::now();
+        // Size cap 3 closes the window as soon as both arrivals land.
+        let batch = drain(&rx, 0, 3, std::time::Duration::from_secs(5));
+        let wall = t0.elapsed();
+        sender.join().unwrap();
+        assert_eq!(batch, vec![0, 1, 2]);
+        assert!(
+            wall < std::time::Duration::from_secs(4),
+            "size cap must close the window early, took {wall:?}"
+        );
     }
 
     #[test]

@@ -23,6 +23,7 @@ use crate::flops::{dense_forward_flops, FlopLedger};
 use crate::incremental::{CacheHandle, CodeCache, EngineOptions, IncrementalEngine};
 use crate::model::{dense_forward, ModelWeights};
 use crate::runtime::ArtifactRuntime;
+use crate::tensor;
 use crate::util::Json;
 use anyhow::{anyhow, bail, Result};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -325,6 +326,13 @@ impl Client {
                     map.insert("spilled_sessions".into(), Json::num(spilled as f64));
                     map.insert("resident_bytes".into(), Json::num(res_bytes as f64));
                     map.insert("shards".into(), Json::num(self.shards.len() as f64));
+                    // Resolved kernel backend (process-global): lets an
+                    // operator confirm from one Stats call which core the
+                    // pool's dense work actually runs on.
+                    map.insert(
+                        "kernel_backend".into(),
+                        Json::str(tensor::active_backend().name()),
+                    );
                     map.insert("per_shard".into(), Json::Arr(per_shard));
                 }
                 Ok(Response::Stats(j))
@@ -355,6 +363,21 @@ impl Coordinator {
     /// `queue_capacity` and `max_sessions` are split evenly across shards
     /// (ceil division), so the config keeps its pool-wide meaning.
     pub fn start(backend: Backend, cfg: ServeConfig) -> Coordinator {
+        // Kernel backend selection is process-global (the codebook-product
+        // cache shares rows across shards, so every shard must produce the
+        // same bits — which all backends do by contract). An explicit
+        // scalar/simd config wins; "auto" defers to VQT_KERNEL_BACKEND and
+        // then to runtime feature detection. Config validation already
+        // rejected typos; hand-built ServeConfigs with garbage fall back
+        // to auto rather than panicking a server start.
+        let requested = tensor::KernelBackend::parse(&cfg.kernel_backend)
+            .unwrap_or(tensor::KernelBackend::Auto);
+        tensor::set_kernel_backend(requested);
+        log::info!(
+            "kernel backend: requested {} → active {}",
+            requested.name(),
+            tensor::active_backend().name()
+        );
         let shards = cfg.workers.max(1);
         let queue_cap = cfg.queue_capacity.div_ceil(shards).max(1);
         let sessions_cap = cfg.max_sessions.div_ceil(shards).max(1);
@@ -892,7 +915,7 @@ impl Worker {
                 );
                 let mut opts = self.engine_opts;
                 opts.verify_every = self.verify_every;
-                let mut engine = IncrementalEngine::new(self.weights.clone(), &tokens, opts);
+                let mut engine = IncrementalEngine::try_new(self.weights.clone(), &tokens, opts)?;
                 // Attach AFTER the initial build: an Open processes every
                 // row of a fresh document, and warming the shared cache
                 // with a whole document's worth of products would let one
@@ -1088,7 +1111,7 @@ impl Worker {
         anyhow::ensure!(!base.is_empty(), "empty base document");
         let mut opts = self.engine_opts;
         opts.verify_every = 0;
-        let mut base_engine = IncrementalEngine::new(self.weights.clone(), &base, opts);
+        let mut base_engine = IncrementalEngine::try_new(self.weights.clone(), &base, opts)?;
         // Same attach-after-build rule as Open; the forks inherit the
         // handle, so revision diffs hit products warmed by live sessions.
         base_engine.set_code_cache(self.cache.clone());
@@ -1125,7 +1148,7 @@ impl Worker {
             let li = cfg.n_layers - 1;
             let mut lut = std::collections::HashMap::new();
             let mut codebook: Vec<Vec<f32>> = Vec::new();
-            let vq = self.weights.layers[li].vq.as_ref().unwrap();
+            let vq = self.weights.layer_vq(li)?;
             let mut p: Vec<Vec<u32>> = Vec::new();
             for eng in std::iter::once(&base_engine).chain(forks.iter()) {
                 let row: Vec<u32> = eng.layer_codes(li)[..min_len]

@@ -12,7 +12,8 @@
 //! attribution — stays per-engine through the staged hooks.
 //!
 //! **Bit-exactness argument** (docs/ARCHITECTURE.md §7): the tiled GEMM
-//! core (`tensor::accum_row_tiled`) processes each output row
+//! core (`tensor::ops::accum_row_tiled_scalar` and its bit-identical
+//! SIMD mirrors) processes each output row
 //! independently with a fixed accumulation order, so a stacked
 //! `matmul_into` over gathered rows is bitwise identical to the per-row
 //! `vec_matmul_into` calls it replaces; every element-wise stage

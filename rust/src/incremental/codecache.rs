@@ -99,6 +99,10 @@ pub struct CodeCacheStats {
     pub bytes_inserted: u64,
     pub resident_bytes: u64,
     pub flushes: u64,
+    /// Times a poisoned shard lock was recovered (see
+    /// [`CodeCache`]'s poison-recovery contract). Non-zero means a worker
+    /// panicked while holding a shard guard and the cache carried on.
+    pub poison_recoveries: u64,
 }
 
 /// The shared cache. Cheap to clone via `Arc`; see the module docs for
@@ -116,6 +120,7 @@ pub struct CodeCache {
     bytes_inserted: AtomicU64,
     resident: AtomicU64,
     flushes: AtomicU64,
+    poison_recoveries: AtomicU64,
 }
 
 impl CodeCache {
@@ -132,6 +137,7 @@ impl CodeCache {
             bytes_inserted: AtomicU64::new(0),
             resident: AtomicU64::new(0),
             flushes: AtomicU64::new(0),
+            poison_recoveries: AtomicU64::new(0),
         }
     }
 
@@ -151,6 +157,44 @@ impl CodeCache {
         self.capacity_bytes / N_SHARDS
     }
 
+    /// Shard read guard with poison recovery. The cache is process-global:
+    /// a worker panicking while it holds a shard guard (the coordinator
+    /// catches request panics) must not cascade `PoisonError` panics into
+    /// every session on every shard forever after. Recovery is sound here
+    /// because shard state is crash-consistent under this module's
+    /// discipline: entries are immutable once inserted, `bytes` is only
+    /// adjusted together with `map` under the same guard, and the worst
+    /// torn state — an entry removed but its byte count not yet settled —
+    /// only skews the LRU budget, never the served bits.
+    fn read_shard(&self, idx: usize) -> std::sync::RwLockReadGuard<'_, CacheShard> {
+        match self.shards[idx].read() {
+            Ok(g) => g,
+            Err(poisoned) => {
+                self.note_poison(idx);
+                poisoned.into_inner()
+            }
+        }
+    }
+
+    /// Shard write guard with poison recovery (see [`Self::read_shard`]).
+    fn write_shard(&self, idx: usize) -> std::sync::RwLockWriteGuard<'_, CacheShard> {
+        match self.shards[idx].write() {
+            Ok(g) => g,
+            Err(poisoned) => {
+                self.note_poison(idx);
+                poisoned.into_inner()
+            }
+        }
+    }
+
+    /// Count one recovery and clear the flag so the counter tracks
+    /// panic *events*, not every access that follows one.
+    fn note_poison(&self, idx: usize) {
+        self.poison_recoveries.fetch_add(1, Ordering::Relaxed);
+        self.shards[idx].clear_poison();
+        log::warn!("code cache shard {idx}: recovered a poisoned lock (worker panic upstream)");
+    }
+
     /// Flush-on-mismatch guard: if the cache currently holds entries for
     /// a different weight set, clear everything before serving `fp`.
     /// Fast path is one relaxed load.
@@ -161,7 +205,7 @@ impl CodeCache {
         }
         // Slow path: take every shard's write lock so no concurrent
         // reader can observe a half-flushed cache, then re-check.
-        let mut guards: Vec<_> = self.shards.iter().map(|s| s.write().unwrap()).collect();
+        let mut guards: Vec<_> = (0..self.shards.len()).map(|i| self.write_shard(i)).collect();
         let prev = self.fingerprint.load(Ordering::Acquire);
         if prev == fp {
             return; // another thread flushed for us while we queued
@@ -182,7 +226,7 @@ impl CodeCache {
     /// record one hit or one miss either way.
     pub fn lookup(&self, fp: u64, layer: u32, key: u64, out: &mut [f32]) -> bool {
         self.ensure_fp(fp);
-        let shard = self.shards[Self::shard_of(layer, key)].read().unwrap();
+        let shard = self.read_shard(Self::shard_of(layer, key));
         if let Some(e) = shard.map.get(&(layer, key)) {
             assert_eq!(e.mix.len(), out.len(), "cached width vs caller width");
             out.copy_from_slice(&e.mix);
@@ -208,7 +252,7 @@ impl CodeCache {
         if entry_bytes > self.per_shard_budget() {
             return (0, 0); // can never fit; bound is strict
         }
-        let mut shard = self.shards[Self::shard_of(layer, key)].write().unwrap();
+        let mut shard = self.write_shard(Self::shard_of(layer, key));
         if shard.map.contains_key(&(layer, key)) {
             return (0, 0); // lost a concurrent insert race — entry already present
         }
@@ -261,12 +305,13 @@ impl CodeCache {
             bytes_inserted: self.bytes_inserted.load(Ordering::Relaxed),
             resident_bytes: self.resident.load(Ordering::Relaxed),
             flushes: self.flushes.load(Ordering::Relaxed),
+            poison_recoveries: self.poison_recoveries.load(Ordering::Relaxed),
         }
     }
 
     /// Total resident entries across shards.
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.read().unwrap().map.len()).sum()
+        (0..self.shards.len()).map(|i| self.read_shard(i).map.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -442,6 +487,40 @@ mod tests {
         assert_eq!(s.hits, 2);
         assert_eq!(s.misses, 0);
         assert_eq!(c.len(), 0);
+    }
+
+    /// Poison-injection regression: a worker panic while a shard guard is
+    /// held (the coordinator catches request panics) used to poison the
+    /// process-global cache and cascade `PoisonError` panics into every
+    /// session on every shard. The cache must recover, keep serving the
+    /// exact cached bits, and count the recovery once.
+    #[test]
+    fn poisoned_shard_recovers_and_stays_serveable() {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        let c = CodeCache::new(1 << 20);
+        let mix = vec![1.5f32, -2.25, 0.5, 8.0];
+        c.insert(FP, 0, 42, &mix);
+        let idx = CodeCache::shard_of(0, 42);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            let _g = c.shards[idx].write().unwrap();
+            panic!("injected worker panic while holding the shard guard");
+        }));
+        assert!(caught.is_err());
+        assert!(c.shards[idx].is_poisoned(), "injection must poison the lock");
+        // Hits still serve byte-identical payloads through the recovery.
+        let mut out = vec![0.0f32; 4];
+        assert!(c.lookup(FP, 0, 42, &mut out), "entry survives the panic");
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&out), bits(&mix), "recovered hit must be bit-exact");
+        // Inserts keep working after recovery.
+        let (bytes, _) = c.insert(FP, 0, 43, &mix);
+        assert!(bytes > 0, "insert after recovery must be accepted");
+        assert!(c.lookup(FP, 0, 43, &mut out));
+        assert_eq!(c.len(), 2);
+        // `clear_poison` means the counter tracks panic events, not every
+        // access after one.
+        assert_eq!(c.stats().poison_recoveries, 1);
+        assert!(!c.shards[idx].is_poisoned(), "flag cleared after recovery");
     }
 
     #[test]

@@ -33,6 +33,7 @@ use crate::model::{attn_out_scale, dense_forward, ModelWeights};
 use crate::positions::{InsertOutcome, PositionAllocator};
 use crate::tensor;
 use crate::vq::CodeTuple;
+use anyhow::Result;
 use std::sync::Arc;
 
 use super::codecache::CacheHandle;
@@ -186,21 +187,46 @@ struct Scratch {
     mid: Vec<f32>,
 }
 
+/// Layer `li`'s codebooks on a validated engine. Presence is checked by
+/// [`IncrementalEngine::try_new`] (and the snapshot-restore path) before
+/// any hot-path code runs, so this can only fire when a caller bypassed
+/// construction-time validation — it stays a panic (with the same message
+/// the typed boundary uses) rather than threading `Result` through every
+/// per-edit hot-path frame.
+fn expect_vq(w: &ModelWeights, li: usize) -> &crate::vq::VqCodebooks {
+    w.layers[li].vq.as_ref().unwrap_or_else(|| {
+        panic!("layer {li} has no VQ config (engine construction should have rejected it)")
+    })
+}
+
 impl IncrementalEngine {
     /// Create an engine and build the full state for `tokens`.
+    ///
+    /// Panics on a config/weights combination that cannot drive
+    /// incremental inference; serving paths use [`Self::try_new`], which
+    /// surfaces the same conditions as typed errors instead.
     pub fn new(w: Arc<ModelWeights>, tokens: &[u32], opts: EngineOptions) -> Self {
+        Self::try_new(w, tokens, opts).expect("invalid engine configuration")
+    }
+
+    /// Fallible [`Self::new`]: validates up front — element-wise
+    /// attention, `vq_heads > 0`, head divisibility, and (crucially for
+    /// serving) that **every** layer of the weight set actually carries
+    /// VQ codebooks. A weights file with a VQ-less layer thus fails here
+    /// with "layer N has no VQ config" instead of panicking a worker
+    /// mid-request deep in the hot path.
+    pub fn try_new(w: Arc<ModelWeights>, tokens: &[u32], opts: EngineOptions) -> Result<Self> {
         let cfg = &w.cfg;
-        assert_eq!(
-            cfg.attention,
-            AttentionKind::GeluElementwise,
+        anyhow::ensure!(
+            cfg.attention == AttentionKind::GeluElementwise,
             "incremental inference requires element-wise attention (paper §3)"
         );
-        assert!(cfg.vq_heads > 0, "incremental inference requires VQ layers");
-        assert_eq!(
-            cfg.n_heads % cfg.vq_heads,
-            0,
+        anyhow::ensure!(cfg.vq_heads > 0, "incremental inference requires VQ layers");
+        anyhow::ensure!(
+            cfg.n_heads % cfg.vq_heads == 0,
             "n_heads must be a multiple of vq_heads for score-space updates"
         );
+        w.validate_vq()?;
         let d = cfg.d_model;
         let hq = cfg.vq_heads * cfg.vq_codes;
         let (vc_w, acc_w) = if opts.score_trick {
@@ -235,7 +261,7 @@ impl IncrementalEngine {
             stats: EngineStats::default(),
         };
         eng.rebuild();
-        eng
+        Ok(eng)
     }
 
     /// Attach (or detach, with `None`) a shared codebook-product cache.
@@ -397,7 +423,7 @@ impl IncrementalEngine {
             return Vec::new();
         }
         let w = Arc::clone(&self.w);
-        let vq = w.layers[li].vq.as_ref().unwrap();
+        let vq = expect_vq(&w, li);
         let cfg = &w.cfg;
         let nh = cfg.n_heads;
         let dh = cfg.d_head();
@@ -437,7 +463,7 @@ impl IncrementalEngine {
         let scale = 1.0 / (dh as f32).sqrt();
         let trick = self.opts.score_trick;
         let (vqh, codes) = if trick {
-            let vq = self.w.layers[li].vq.as_ref().unwrap();
+            let vq = expect_vq(&self.w, li);
             (vq.heads, vq.codes)
         } else {
             (0, 0)
@@ -506,7 +532,7 @@ impl IncrementalEngine {
         let scale = 1.0 / (dh as f32).sqrt();
         let trick = self.opts.score_trick;
         let (vqh, codes) = if trick {
-            let vq = self.w.layers[li].vq.as_ref().unwrap();
+            let vq = expect_vq(&self.w, li);
             (vq.heads, vq.codes)
         } else {
             (0, 0)
@@ -539,7 +565,7 @@ impl IncrementalEngine {
     /// VQ assignment from an accumulator.
     fn assign_code(&mut self, li: usize, acc: &[f32]) -> CodeTuple {
         let w = Arc::clone(&self.w);
-        let vq = w.layers[li].vq.as_ref().unwrap();
+        let vq = expect_vq(&w, li);
         let out_scale = attn_out_scale(w.cfg.max_seq);
         if self.opts.score_trick {
             // biased[k] = acc[k]·scale + b[k]; argmax per VQ head.
@@ -588,7 +614,7 @@ impl IncrementalEngine {
         let layer = &w.layers[li];
         let cfg = &w.cfg;
         let d = cfg.d_model;
-        let vq = layer.vq.as_ref().unwrap();
+        let vq = expect_vq(&w, li);
         let sc = &mut self.scratch;
         sc.a.resize(d, 0.0);
         sc.b.resize(d, 0.0);
@@ -1695,6 +1721,9 @@ impl IncrementalEngine {
             (meta[1] != 0) == opts.score_trick,
             "checkpoint score-trick mode mismatch"
         );
+        // Same construction-time validation as `try_new`: restoring onto
+        // malformed weights must be a typed error, not a later panic.
+        w.validate_vq()?;
         let tokens: Vec<u32> = toks.iter().map(|&t| t as u32).collect();
         let n = tokens.len();
         // Rebuild through `new` would recompute; instead construct shell

@@ -53,6 +53,24 @@ mod tests {
     }
 
     #[test]
+    fn try_new_rejects_vq_less_layer_with_typed_error() {
+        // A weights file whose config promises VQ but whose layer lacks
+        // codebooks must be a typed error at construction, never a panic
+        // deep in the hot path (regression: `vq.as_ref().unwrap()`).
+        let (w, tokens) = setup(3, 8);
+        let mut broken = (*w).clone();
+        broken.layers[1].vq = None;
+        let opts = EngineOptions::default();
+        let msg = match IncrementalEngine::try_new(Arc::new(broken), &tokens, opts) {
+            Ok(_) => panic!("vq-less layer must be rejected"),
+            Err(e) => format!("{e:#}"),
+        };
+        assert!(msg.contains("layer 1 has no VQ config"), "{msg}");
+        // Well-formed weights still construct through the same path.
+        assert!(IncrementalEngine::try_new(w, &tokens, EngineOptions::default()).is_ok());
+    }
+
+    #[test]
     fn initial_state_matches_dense() {
         let (w, tokens) = setup(1, 20);
         let eng = IncrementalEngine::new(w.clone(), &tokens, EngineOptions::default());

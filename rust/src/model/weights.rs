@@ -187,6 +187,42 @@ impl ModelWeights {
         })
     }
 
+    /// Layer `li`'s VQ codebooks, or a typed error when the layer lacks
+    /// them. This is the boundary the serving path must use instead of
+    /// `vq.as_ref().unwrap()`: a weights file whose config promises VQ
+    /// (`vq_heads > 0`) but whose layer carries no codebooks must surface
+    /// as a request error, never a worker panic.
+    pub fn layer_vq(&self, li: usize) -> Result<&VqCodebooks> {
+        self.layers
+            .get(li)
+            .with_context(|| format!("layer {li} out of range ({} layers)", self.layers.len()))?
+            .vq
+            .as_ref()
+            .with_context(|| format!("layer {li} has no VQ config"))
+    }
+
+    /// Validate that a VQ model (`cfg.vq_heads > 0`) carries codebooks of
+    /// the configured geometry on **every** layer. Engine constructors run
+    /// this up front so malformed weights fail once, with a clear message,
+    /// instead of panicking mid-request deep in the hot path.
+    pub fn validate_vq(&self) -> Result<()> {
+        if self.cfg.vq_heads == 0 {
+            return Ok(());
+        }
+        for li in 0..self.layers.len() {
+            let vq = self.layer_vq(li)?;
+            anyhow::ensure!(
+                vq.heads == self.cfg.vq_heads && vq.codes == self.cfg.vq_codes,
+                "layer {li} VQ geometry ({}h/{}c) does not match config ({}h/{}c)",
+                vq.heads,
+                vq.codes,
+                self.cfg.vq_heads,
+                self.cfg.vq_codes
+            );
+        }
+        Ok(())
+    }
+
     /// Serialize to a tensor file (inverse of `from_tensor_file`).
     pub fn to_tensor_file(&self) -> TensorFile {
         let mut tf = TensorFile::new();
@@ -277,6 +313,31 @@ mod tests {
         let mut tf = w.to_tensor_file();
         tf.insert("w_cls", Tensor::f32(vec![3, 3], vec![0.0; 9]));
         assert!(ModelWeights::from_tensor_file(&tf, &cfg).is_err());
+    }
+
+    #[test]
+    fn validate_vq_names_the_broken_layer() {
+        let cfg = ModelConfig::vqt_tiny();
+        let mut w = ModelWeights::random(&cfg, 1);
+        assert!(w.validate_vq().is_ok(), "well-formed weights validate");
+        w.layers[1].vq = None;
+        let err = w.validate_vq().unwrap_err().to_string();
+        assert!(err.contains("layer 1 has no VQ config"), "{err}");
+        let err = w.layer_vq(1).unwrap_err().to_string();
+        assert!(err.contains("layer 1 has no VQ config"), "{err}");
+        // Untouched layers still resolve.
+        assert!(w.layer_vq(0).is_ok());
+        // Out-of-range is a typed error too, not a slice panic.
+        let err = w.layer_vq(99).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn validate_vq_is_vacuous_for_baseline_models() {
+        let mut cfg = ModelConfig::vqt_tiny();
+        cfg.vq_heads = 0;
+        let w = ModelWeights::random(&cfg, 1);
+        assert!(w.validate_vq().is_ok());
     }
 
     #[test]

@@ -8,8 +8,12 @@
 //! hot path's arithmetic layer.
 
 pub mod ops;
+pub mod simd;
 
 pub use ops::*;
+pub use simd::{
+    active_backend, requested_backend, set_kernel_backend, KernelBackend, ResolvedBackend,
+};
 
 /// Row-major 2-D f32 matrix.
 #[derive(Clone, Debug, PartialEq)]

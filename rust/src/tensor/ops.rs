@@ -16,15 +16,22 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
 /// the output row (256 B) plus the four active `W` row segments fit
 /// comfortably in L1, so every float of the strip is touched once per
 /// 4-row k-step instead of once per k-step.
-const N_TILE: usize = 64;
+pub(crate) const N_TILE: usize = 64;
 
-/// `y += x · W` — the shared tiled core behind [`matmul_into`] and
-/// [`vec_matmul_into`]. Columns are processed in `N_TILE`-wide strips;
-/// `x` is consumed four entries at a time so the write stream over the
-/// strip (the bottleneck at 128–3072-wide rows) is quartered. All inner
-/// loops are exact-length slice zips, which the autovectorizer lowers to
-/// SIMD without bounds checks.
-fn accum_row_tiled(x: &[f32], w: &Matrix, y: &mut [f32]) {
+/// `y += x · W` — the scalar reference implementation of the tiled core
+/// behind [`matmul_into`] and [`vec_matmul_into`]. Columns are processed
+/// in `N_TILE`-wide strips; `x` is consumed four entries at a time so the
+/// write stream over the strip (the bottleneck at 128–3072-wide rows) is
+/// quartered. All inner loops are exact-length slice zips, which the
+/// autovectorizer lowers to SIMD without bounds checks.
+///
+/// The explicit-SIMD backends in [`super::simd`] mirror this core
+/// bit-for-bit (same per-element accumulation order, same zero-quad skip,
+/// no FMA contraction); dispatch between them is process-global (see
+/// `tensor::set_kernel_backend`). Any change to the arithmetic here must
+/// be applied to the AVX2/NEON mirrors in lockstep — the
+/// backend-equivalence suite in `tensor/simd.rs` fails otherwise.
+pub(crate) fn accum_row_tiled_scalar(x: &[f32], w: &Matrix, y: &mut [f32]) {
     debug_assert_eq!(x.len(), w.rows);
     debug_assert_eq!(y.len(), w.cols);
     let n = w.cols;
@@ -66,8 +73,21 @@ fn accum_row_tiled(x: &[f32], w: &Matrix, y: &mut [f32]) {
 }
 
 /// `C = A · B` into an existing buffer (zeroed here). Tiled: each output
-/// row goes through the blocked [`accum_row_tiled`] core.
+/// row goes through the blocked [`accum_row_tiled_scalar`] core (or its
+/// bit-identical SIMD mirror, per the process-global backend selection).
 pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    matmul_into_with(super::simd::active_backend(), a, b, c);
+}
+
+/// [`matmul_into`] with kernel dispatch pinned to `backend` — for the
+/// backend-equivalence suite and the scalar-vs-SIMD benchmark table.
+/// Semantics (and bits) are identical on every backend.
+pub fn matmul_into_with(
+    backend: super::simd::ResolvedBackend,
+    a: &Matrix,
+    b: &Matrix,
+    c: &mut Matrix,
+) {
     assert_eq!(a.cols, b.rows);
     assert_eq!((c.rows, c.cols), (a.rows, b.cols));
     let (m, k, n) = (a.rows, a.cols, b.cols);
@@ -75,7 +95,7 @@ pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     for i in 0..m {
         let arow = &a.data[i * k..(i + 1) * k];
         let crow = &mut c.data[i * n..(i + 1) * n];
-        accum_row_tiled(arow, b, crow);
+        super::simd::accum_row_tiled_with(backend, arow, b, crow);
     }
 }
 
@@ -96,10 +116,23 @@ pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
 /// a cache hit cannot perturb downstream logits.
 #[inline]
 pub fn vec_matmul_into(x: &[f32], w: &Matrix, y: &mut [f32]) {
+    vec_matmul_into_with(super::simd::active_backend(), x, w, y);
+}
+
+/// [`vec_matmul_into`] with kernel dispatch pinned to `backend` — for the
+/// backend-equivalence suite and the scalar-vs-SIMD benchmark table.
+/// Semantics (and bits) are identical on every backend.
+#[inline]
+pub fn vec_matmul_into_with(
+    backend: super::simd::ResolvedBackend,
+    x: &[f32],
+    w: &Matrix,
+    y: &mut [f32],
+) {
     assert_eq!(x.len(), w.rows);
     assert_eq!(y.len(), w.cols);
     y.iter_mut().for_each(|v| *v = 0.0);
-    accum_row_tiled(x, w, y);
+    super::simd::accum_row_tiled_with(backend, x, w, y);
 }
 
 /// Row-wise layer normalization over stacked rows: `out.row(i) =

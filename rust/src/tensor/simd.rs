@@ -1,0 +1,571 @@
+//! Kernel backend selection and explicit-SIMD implementations of the
+//! `accum_row_tiled` hot-path core (AVX2 on x86_64, NEON on aarch64).
+//!
+//! # Bit-exactness contract
+//!
+//! Every backend produces **bit-identical** output to the scalar core
+//! ([`ops::accum_row_tiled_scalar`]). This is not best-effort: the
+//! differential suites, the golden-trace lock, and the process-global
+//! codebook-product cache all compare `f32::to_bits`, so a backend that
+//! reassociates sums or contracts mul+add into FMA would corrupt those
+//! locks the moment dispatch picks it. The SIMD cores achieve exactness
+//! by construction:
+//!
+//! - **Vectorize across columns, not across k.** The scalar core updates
+//!   each output element as `y[j] += x0*w0[j] + x1*w1[j] + x2*w2[j] + x3*w3[j]`
+//!   (left-to-right). A SIMD lane owns one output column `j`, so the
+//!   per-element accumulation order is exactly the scalar order — lanes
+//!   are independent columns and no reassociation ever happens.
+//! - **No FMA.** The cores use separate multiply and add intrinsics
+//!   (`_mm256_mul_ps`/`_mm256_add_ps`, `vmulq_f32`/`vaddq_f32`), never
+//!   `_mm256_fmadd_ps`/`vfmaq_f32`: fusing would skip the intermediate
+//!   rounding step the scalar expression performs. (Rust/LLVM never
+//!   auto-contracts mul+add without fast-math flags, so the scalar
+//!   reference is unfused even under `-C target-cpu=native`.)
+//! - **Identical zero-skip semantics.** The scalar core skips a k-quad
+//!   when all four `x` values compare `== 0.0` (which matches `-0.0`),
+//!   so `0 * inf`/`0 * NaN` in the weight matrix never materialize. The
+//!   SIMD cores perform the same scalar test before the vector inner
+//!   loop, and the k-tail skips individual `x == 0.0` exactly as the
+//!   scalar tail does.
+//!
+//! Because exactness holds by construction, no tolerance tier is needed
+//! anywhere: the backend-equivalence tests below assert `to_bits`
+//! equality outright. If a future backend (e.g. a k-vectorized AVX-512
+//! core with horizontal reduction) must reassociate, it gets an explicit
+//! tolerance tier in those tests — never a silent loosening — and must
+//! be kept out of `auto` until every bit-exact consumer is audited.
+//!
+//! # Selection order
+//!
+//! 1. An explicit `scalar`/`simd` request — from `ServeConfig::kernel_backend`
+//!    via [`set_kernel_backend`] at coordinator start, or a direct call —
+//!    always wins.
+//! 2. Otherwise (`auto`), the `VQT_KERNEL_BACKEND` env var, if set and
+//!    valid, decides; this is the operator escape hatch when the config
+//!    file says `auto`.
+//! 3. Otherwise runtime feature detection picks the best available core:
+//!    AVX2 on x86_64, NEON on aarch64, scalar elsewhere.
+//!
+//! A `simd` request on hardware without AVX2/NEON resolves to scalar
+//! rather than failing: the request names a preference, and the scalar
+//! core is always a correct implementation of the same contract.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use super::ops;
+use super::Matrix;
+
+/// Requested kernel backend (config/env/API surface).
+///
+/// This is the *request*; [`active_backend`] reports what dispatch
+/// actually resolved it to on this machine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum KernelBackend {
+    /// Pick the best available core via runtime feature detection.
+    Auto = 0,
+    /// Force the scalar reference core.
+    Scalar = 1,
+    /// Prefer the explicit-SIMD core; falls back to scalar when the CPU
+    /// lacks AVX2/NEON.
+    Simd = 2,
+}
+
+impl KernelBackend {
+    /// Parse a config/env spelling (`"auto" | "scalar" | "simd"`).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Ok(KernelBackend::Auto),
+            "scalar" => Ok(KernelBackend::Scalar),
+            "simd" => Ok(KernelBackend::Simd),
+            other => Err(format!(
+                "unknown kernel backend {other:?} (expected \"auto\", \"scalar\", or \"simd\")"
+            )),
+        }
+    }
+
+    /// Canonical spelling (round-trips through [`Self::parse`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelBackend::Auto => "auto",
+            KernelBackend::Scalar => "scalar",
+            KernelBackend::Simd => "simd",
+        }
+    }
+
+    fn from_u8(v: u8) -> Self {
+        match v {
+            1 => KernelBackend::Scalar,
+            2 => KernelBackend::Simd,
+            _ => KernelBackend::Auto,
+        }
+    }
+}
+
+/// The concrete core dispatch resolved to on this machine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResolvedBackend {
+    /// Portable scalar core (the correctness reference).
+    Scalar,
+    /// 8-wide f32 core via `core::arch::x86_64` AVX2 intrinsics.
+    Avx2,
+    /// 4-wide f32 core via `core::arch::aarch64` NEON intrinsics.
+    Neon,
+}
+
+impl ResolvedBackend {
+    /// Human/Stats-JSON name of the resolved core.
+    pub fn name(self) -> &'static str {
+        match self {
+            ResolvedBackend::Scalar => "scalar",
+            ResolvedBackend::Avx2 => "avx2",
+            ResolvedBackend::Neon => "neon",
+        }
+    }
+}
+
+/// Best SIMD core the running CPU supports, if any.
+fn simd_available() -> Option<ResolvedBackend> {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return Some(ResolvedBackend::Avx2);
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return Some(ResolvedBackend::Neon);
+        }
+    }
+    None
+}
+
+/// Sentinel meaning "not yet initialized from the environment".
+const UNSET: u8 = u8::MAX;
+
+/// Process-global requested backend. Kernel dispatch is process-global
+/// (the codebook-product cache is too, and mixing backends across
+/// workers would be pointless: they are bit-identical anyway), so one
+/// atomic suffices.
+static REQUESTED: AtomicU8 = AtomicU8::new(UNSET);
+
+fn env_request() -> Option<KernelBackend> {
+    let v = std::env::var("VQT_KERNEL_BACKEND").ok()?;
+    match KernelBackend::parse(&v) {
+        Ok(b) => Some(b),
+        Err(e) => {
+            log::warn!("ignoring VQT_KERNEL_BACKEND: {e}");
+            None
+        }
+    }
+}
+
+/// The backend currently requested (config/env/default), before
+/// hardware resolution.
+pub fn requested_backend() -> KernelBackend {
+    match REQUESTED.load(Ordering::Acquire) {
+        UNSET => {
+            let b = env_request().unwrap_or(KernelBackend::Auto);
+            // First initializer wins; a concurrent explicit set keeps
+            // its value.
+            let _ = REQUESTED.compare_exchange(
+                UNSET,
+                b as u8,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            );
+            KernelBackend::from_u8(REQUESTED.load(Ordering::Acquire))
+        }
+        v => KernelBackend::from_u8(v),
+    }
+}
+
+/// Set the process-global kernel backend and return what actually took
+/// effect. An explicit `Scalar`/`Simd` request always wins; an `Auto`
+/// request defers to the `VQT_KERNEL_BACKEND` env var when set (the
+/// operator escape hatch for configs that say `auto`).
+pub fn set_kernel_backend(req: KernelBackend) -> KernelBackend {
+    let effective = match req {
+        KernelBackend::Auto => env_request().unwrap_or(KernelBackend::Auto),
+        explicit => explicit,
+    };
+    REQUESTED.store(effective as u8, Ordering::Release);
+    effective
+}
+
+/// The concrete core the current request resolves to on this machine.
+pub fn active_backend() -> ResolvedBackend {
+    match requested_backend() {
+        KernelBackend::Scalar => ResolvedBackend::Scalar,
+        KernelBackend::Auto | KernelBackend::Simd => {
+            simd_available().unwrap_or(ResolvedBackend::Scalar)
+        }
+    }
+}
+
+/// Backend-pinned entry point (equivalence tests and benchmarks): same
+/// contract as the scalar core, with dispatch forced to `backend`.
+pub(crate) fn accum_row_tiled_with(
+    backend: ResolvedBackend,
+    x: &[f32],
+    w: &Matrix,
+    y: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), w.rows);
+    debug_assert_eq!(y.len(), w.cols);
+    match backend {
+        ResolvedBackend::Scalar => ops::accum_row_tiled_scalar(x, w, y),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: dispatch only resolves to Avx2 after
+        // `is_x86_feature_detected!("avx2")` succeeded.
+        ResolvedBackend::Avx2 => unsafe { avx2::accum_row_tiled(x, w, y) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: dispatch only resolves to Neon after
+        // `is_aarch64_feature_detected!("neon")` succeeded.
+        ResolvedBackend::Neon => unsafe { neon::accum_row_tiled(x, w, y) },
+        // A Resolved variant whose core is compiled out for this arch
+        // (e.g. a deserialized/forced Neon on x86_64): the scalar core
+        // is always a correct implementation of the same contract.
+        #[allow(unreachable_patterns)]
+        _ => ops::accum_row_tiled_scalar(x, w, y),
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::super::ops::N_TILE;
+    use super::Matrix;
+    use core::arch::x86_64::{
+        _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps, _mm256_storeu_ps,
+    };
+
+    /// AVX2 mirror of `accum_row_tiled_scalar`: 8 output columns per
+    /// vector, mul+add (never FMA), scalar-identical zero-quad skip.
+    /// Column-tail (`jw % 8`) and k-tail (`k % 4`) fall back to the
+    /// exact scalar expressions.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn accum_row_tiled(x: &[f32], w: &Matrix, y: &mut [f32]) {
+        let n = w.cols;
+        let k = x.len();
+        let k4 = k - k % 4;
+        let mut j0 = 0;
+        while j0 < n {
+            let jw = (n - j0).min(N_TILE);
+            let jw8 = jw - jw % 8;
+            let ytile = &mut y[j0..j0 + jw];
+            let mut p = 0;
+            while p < k4 {
+                let (x0, x1, x2, x3) = (x[p], x[p + 1], x[p + 2], x[p + 3]);
+                if x0 == 0.0 && x1 == 0.0 && x2 == 0.0 && x3 == 0.0 {
+                    p += 4;
+                    continue;
+                }
+                let w0 = &w.data[p * n + j0..p * n + j0 + jw];
+                let w1 = &w.data[(p + 1) * n + j0..(p + 1) * n + j0 + jw];
+                let w2 = &w.data[(p + 2) * n + j0..(p + 2) * n + j0 + jw];
+                let w3 = &w.data[(p + 3) * n + j0..(p + 3) * n + j0 + jw];
+                let (xv0, xv1) = (_mm256_set1_ps(x0), _mm256_set1_ps(x1));
+                let (xv2, xv3) = (_mm256_set1_ps(x2), _mm256_set1_ps(x3));
+                let mut j = 0;
+                while j < jw8 {
+                    // Per lane: y + (((x0*a0 + x1*a1) + x2*a2) + x3*a3)
+                    // — the exact scalar evaluation order.
+                    let s01 = _mm256_add_ps(
+                        _mm256_mul_ps(xv0, _mm256_loadu_ps(w0.as_ptr().add(j))),
+                        _mm256_mul_ps(xv1, _mm256_loadu_ps(w1.as_ptr().add(j))),
+                    );
+                    let s012 =
+                        _mm256_add_ps(s01, _mm256_mul_ps(xv2, _mm256_loadu_ps(w2.as_ptr().add(j))));
+                    let s = _mm256_add_ps(
+                        s012,
+                        _mm256_mul_ps(xv3, _mm256_loadu_ps(w3.as_ptr().add(j))),
+                    );
+                    let yp = ytile.as_mut_ptr().add(j);
+                    _mm256_storeu_ps(yp, _mm256_add_ps(_mm256_loadu_ps(yp), s));
+                    j += 8;
+                }
+                for ((((yv, &a0), &a1), &a2), &a3) in ytile[jw8..]
+                    .iter_mut()
+                    .zip(&w0[jw8..])
+                    .zip(&w1[jw8..])
+                    .zip(&w2[jw8..])
+                    .zip(&w3[jw8..])
+                {
+                    *yv += x0 * a0 + x1 * a1 + x2 * a2 + x3 * a3;
+                }
+                p += 4;
+            }
+            for (pp, &xv) in x.iter().enumerate().skip(k4) {
+                if xv == 0.0 {
+                    continue;
+                }
+                let wrow = &w.data[pp * n + j0..pp * n + j0 + jw];
+                let xvv = _mm256_set1_ps(xv);
+                let mut j = 0;
+                while j < jw8 {
+                    let yp = ytile.as_mut_ptr().add(j);
+                    let s = _mm256_mul_ps(xvv, _mm256_loadu_ps(wrow.as_ptr().add(j)));
+                    _mm256_storeu_ps(yp, _mm256_add_ps(_mm256_loadu_ps(yp), s));
+                    j += 8;
+                }
+                for (yv, &wv) in ytile[jw8..].iter_mut().zip(&wrow[jw8..]) {
+                    *yv += xv * wv;
+                }
+            }
+            j0 += jw;
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::super::ops::N_TILE;
+    use super::Matrix;
+    use core::arch::aarch64::{vaddq_f32, vdupq_n_f32, vld1q_f32, vmulq_f32, vst1q_f32};
+
+    /// NEON mirror of `accum_row_tiled_scalar`: 4 output columns per
+    /// vector, mul+add (never `vfmaq_f32`), scalar-identical zero-quad
+    /// skip; tails fall back to the exact scalar expressions.
+    ///
+    /// # Safety
+    /// Caller must have verified NEON support at runtime.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn accum_row_tiled(x: &[f32], w: &Matrix, y: &mut [f32]) {
+        let n = w.cols;
+        let k = x.len();
+        let k4 = k - k % 4;
+        let mut j0 = 0;
+        while j0 < n {
+            let jw = (n - j0).min(N_TILE);
+            let jw4 = jw - jw % 4;
+            let ytile = &mut y[j0..j0 + jw];
+            let mut p = 0;
+            while p < k4 {
+                let (x0, x1, x2, x3) = (x[p], x[p + 1], x[p + 2], x[p + 3]);
+                if x0 == 0.0 && x1 == 0.0 && x2 == 0.0 && x3 == 0.0 {
+                    p += 4;
+                    continue;
+                }
+                let w0 = &w.data[p * n + j0..p * n + j0 + jw];
+                let w1 = &w.data[(p + 1) * n + j0..(p + 1) * n + j0 + jw];
+                let w2 = &w.data[(p + 2) * n + j0..(p + 2) * n + j0 + jw];
+                let w3 = &w.data[(p + 3) * n + j0..(p + 3) * n + j0 + jw];
+                let (xv0, xv1) = (vdupq_n_f32(x0), vdupq_n_f32(x1));
+                let (xv2, xv3) = (vdupq_n_f32(x2), vdupq_n_f32(x3));
+                let mut j = 0;
+                while j < jw4 {
+                    // Per lane: y + (((x0*a0 + x1*a1) + x2*a2) + x3*a3)
+                    // — the exact scalar evaluation order.
+                    let s01 = vaddq_f32(
+                        vmulq_f32(xv0, vld1q_f32(w0.as_ptr().add(j))),
+                        vmulq_f32(xv1, vld1q_f32(w1.as_ptr().add(j))),
+                    );
+                    let s012 = vaddq_f32(s01, vmulq_f32(xv2, vld1q_f32(w2.as_ptr().add(j))));
+                    let s = vaddq_f32(s012, vmulq_f32(xv3, vld1q_f32(w3.as_ptr().add(j))));
+                    let yp = ytile.as_mut_ptr().add(j);
+                    vst1q_f32(yp, vaddq_f32(vld1q_f32(yp), s));
+                    j += 4;
+                }
+                for ((((yv, &a0), &a1), &a2), &a3) in ytile[jw4..]
+                    .iter_mut()
+                    .zip(&w0[jw4..])
+                    .zip(&w1[jw4..])
+                    .zip(&w2[jw4..])
+                    .zip(&w3[jw4..])
+                {
+                    *yv += x0 * a0 + x1 * a1 + x2 * a2 + x3 * a3;
+                }
+                p += 4;
+            }
+            for (pp, &xv) in x.iter().enumerate().skip(k4) {
+                if xv == 0.0 {
+                    continue;
+                }
+                let wrow = &w.data[pp * n + j0..pp * n + j0 + jw];
+                let xvv = vdupq_n_f32(xv);
+                let mut j = 0;
+                while j < jw4 {
+                    let yp = ytile.as_mut_ptr().add(j);
+                    let s = vmulq_f32(xvv, vld1q_f32(wrow.as_ptr().add(j)));
+                    vst1q_f32(yp, vaddq_f32(vld1q_f32(yp), s));
+                    j += 4;
+                }
+                for (yv, &wv) in ytile[jw4..].iter_mut().zip(&wrow[jw4..]) {
+                    *yv += xv * wv;
+                }
+            }
+            j0 += jw;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Every backend available on this machine, scalar first. On a CPU
+    /// without AVX2/NEON this is just `[Scalar]` and the equivalence
+    /// tests degenerate to scalar-vs-scalar (still a valid smoke).
+    fn backends_under_test() -> Vec<ResolvedBackend> {
+        let mut v = vec![ResolvedBackend::Scalar];
+        if let Some(b) = simd_available() {
+            v.push(b);
+        }
+        v
+    }
+
+    fn rand_vec(r: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| r.f32() * 2.0 - 1.0).collect()
+    }
+
+    fn rand_mat(r: &mut Rng, rows: usize, cols: usize) -> Matrix {
+        Matrix {
+            rows,
+            cols,
+            data: rand_vec(r, rows * cols),
+        }
+    }
+
+    fn run_with(b: ResolvedBackend, x: &[f32], w: &Matrix, y0: &[f32]) -> Vec<u32> {
+        let mut y = y0.to_vec();
+        accum_row_tiled_with(b, x, w, &mut y);
+        y.iter().map(|v| v.to_bits()).collect()
+    }
+
+    /// Tile-boundary (k, n) shapes: below/at/above N_TILE and the SIMD
+    /// widths, plus k-tail remainders.
+    const SHAPES: &[(usize, usize)] = &[
+        (1, 1),
+        (3, 7),
+        (5, 8),
+        (4, 9),
+        (7, 63),
+        (8, 64),
+        (9, 65),
+        (63, 65),
+        (64, 64),
+        (129, 100),
+        (130, 131),
+        (16, 257),
+    ];
+
+    #[test]
+    fn simd_backends_bitwise_equal_scalar_at_tile_boundaries() {
+        let mut r = Rng::new(0x51D0);
+        for &(k, n) in SHAPES {
+            let x = rand_vec(&mut r, k);
+            let w = rand_mat(&mut r, k, n);
+            // Non-zero starting accumulator: the core must *add into* y.
+            let y0 = rand_vec(&mut r, n);
+            let want = run_with(ResolvedBackend::Scalar, &x, &w, &y0);
+            for b in backends_under_test() {
+                let got = run_with(b, &x, &w, &y0);
+                assert_eq!(got, want, "backend {} diverged at (k={k}, n={n})", b.name());
+            }
+        }
+    }
+
+    #[test]
+    fn zero_skip_shields_nonfinite_weights_on_every_backend() {
+        // Quads of exact zeros (mixing -0.0) must skip the weight rows
+        // entirely, so inf/NaN planted there never reach the output.
+        let mut r = Rng::new(0xDEAD);
+        for &(k, n) in &[(8usize, 65usize), (12, 64), (9, 31)] {
+            let mut x = rand_vec(&mut r, k);
+            let mut w = rand_mat(&mut r, k, n);
+            for p in 0..4.min(k) {
+                x[p] = if p % 2 == 0 { 0.0 } else { -0.0 };
+                for j in 0..n {
+                    w.data[p * n + j] = if j % 2 == 0 { f32::INFINITY } else { f32::NAN };
+                }
+            }
+            if k > 4 {
+                // k-tail zero (k=9 case): shields its row the same way.
+                x[k - 1] = -0.0;
+                for j in 0..n {
+                    w.data[(k - 1) * n + j] = f32::NAN;
+                }
+            }
+            let y0 = vec![0.0; n];
+            let want = run_with(ResolvedBackend::Scalar, &x, &w, &y0);
+            assert!(
+                want.iter().all(|b| f32::from_bits(*b).is_finite()),
+                "scalar reference must skip the poisoned rows (k={k}, n={n})"
+            );
+            for b in backends_under_test() {
+                let got = run_with(b, &x, &w, &y0);
+                assert_eq!(got, want, "backend {} diverged at (k={k}, n={n})", b.name());
+            }
+        }
+    }
+
+    #[test]
+    fn partially_zero_quads_are_not_skipped_on_any_backend() {
+        // One non-zero in the quad ⇒ the quad runs; denormal-free random
+        // data keeps the comparison meaningful, and bit equality must
+        // still hold including any NaN/inf the math produces.
+        let mut r = Rng::new(0xBEEF);
+        let (k, n) = (8usize, 70usize);
+        let mut x = rand_vec(&mut r, k);
+        x[0] = 0.0;
+        x[1] = -0.0;
+        x[2] = 0.0;
+        // x[3] stays non-zero: the quad must execute.
+        let mut w = rand_mat(&mut r, k, n);
+        w.data[3 * n + 5] = f32::INFINITY;
+        let y0 = vec![0.0; n];
+        let want = run_with(ResolvedBackend::Scalar, &x, &w, &y0);
+        assert!(f32::from_bits(want[5]).is_infinite());
+        for b in backends_under_test() {
+            assert_eq!(run_with(b, &x, &w, &y0), want, "backend {}", b.name());
+        }
+    }
+
+    #[test]
+    fn auto_dispatch_is_bitwise_equal_to_scalar() {
+        // Whatever `auto` resolves to on this machine (and whatever the
+        // test environment pinned via VQT_KERNEL_BACKEND), the dispatched
+        // entry point must match the scalar reference bit-for-bit.
+        let mut r = Rng::new(7);
+        let (k, n) = (130usize, 129usize);
+        let x = rand_vec(&mut r, k);
+        let w = rand_mat(&mut r, k, n);
+        let y0 = rand_vec(&mut r, n);
+        let want = run_with(ResolvedBackend::Scalar, &x, &w, &y0);
+        let mut y = y0.clone();
+        accum_row_tiled_with(active_backend(), &x, &w, &mut y);
+        let got: Vec<u32> = y.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, want, "auto resolved to {}", active_backend().name());
+    }
+
+    #[test]
+    fn backend_parse_round_trips_and_rejects_garbage() {
+        for b in [KernelBackend::Auto, KernelBackend::Scalar, KernelBackend::Simd] {
+            assert_eq!(KernelBackend::parse(b.name()), Ok(b));
+        }
+        assert_eq!(KernelBackend::parse(" SIMD "), Ok(KernelBackend::Simd));
+        let err = KernelBackend::parse("avx512").unwrap_err();
+        assert!(err.contains("avx512"), "{err}");
+    }
+
+    #[test]
+    fn explicit_requests_resolve_sensibly() {
+        // Pure resolution logic — no global/env mutation (unit tests run
+        // in parallel threads).
+        assert_eq!(KernelBackend::from_u8(KernelBackend::Scalar as u8), KernelBackend::Scalar);
+        assert_eq!(KernelBackend::from_u8(KernelBackend::Simd as u8), KernelBackend::Simd);
+        assert_eq!(KernelBackend::from_u8(UNSET), KernelBackend::Auto);
+        // `simd` on a machine without SIMD must fall back, not fail.
+        let resolved = simd_available().unwrap_or(ResolvedBackend::Scalar);
+        assert!(matches!(
+            resolved,
+            ResolvedBackend::Scalar | ResolvedBackend::Avx2 | ResolvedBackend::Neon
+        ));
+    }
+}

@@ -1,0 +1,57 @@
+//! Engine-level backend-equivalence lock: the whole incremental serving
+//! stack — rebuild, edits, codebook products, logits — must produce
+//! bit-identical results on every kernel backend (scalar, explicit SIMD,
+//! auto). This is the end-to-end counterpart of the per-kernel
+//! equivalence suite in `src/tensor/simd.rs`; if it fails, a SIMD core
+//! diverged from the scalar reference somewhere a microkernel test
+//! didn't reach.
+//!
+//! Single test function on purpose: the kernel backend selector is
+//! process-global, and integration tests within one binary run on
+//! multiple threads — toggling the selector from parallel tests would
+//! race. (An explicit `Scalar`/`Simd` request overrides the
+//! `VQT_KERNEL_BACKEND` env var, so the forced phases hold even under
+//! the CI leg that pins the env to `simd`.)
+
+use std::sync::Arc;
+use vqt::config::ModelConfig;
+use vqt::edits::Edit;
+use vqt::incremental::{EngineOptions, IncrementalEngine};
+use vqt::model::ModelWeights;
+use vqt::tensor::{set_kernel_backend, KernelBackend};
+use vqt::util::Rng;
+
+fn logits_bits(eng: &IncrementalEngine) -> Vec<u32> {
+    eng.logits().iter().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn engine_logits_bitwise_identical_across_backends() {
+    let cfg = ModelConfig::vqt_tiny();
+    let w = Arc::new(ModelWeights::random(&cfg, 41));
+    let mut r = Rng::new(0xBACC);
+    let tokens: Vec<u32> = (0..24).map(|_| r.below(cfg.vocab_size) as u32).collect();
+    let edits: Vec<Edit> = vec![
+        Edit::Replace { at: 3, tok: 7 },
+        Edit::Insert { at: 10, tok: 11 },
+        Edit::Delete { at: 0 },
+        Edit::Replace { at: 20, tok: 1 },
+        Edit::Insert { at: 0, tok: 2 },
+    ];
+    let run = |kb: KernelBackend| -> Vec<Vec<u32>> {
+        set_kernel_backend(kb);
+        let mut eng = IncrementalEngine::new(w.clone(), &tokens, EngineOptions::default());
+        let mut traces = vec![logits_bits(&eng)];
+        for e in &edits {
+            eng.apply_edit(*e);
+            traces.push(logits_bits(&eng));
+        }
+        traces
+    };
+    let scalar = run(KernelBackend::Scalar);
+    let simd = run(KernelBackend::Simd);
+    let auto = run(KernelBackend::Auto);
+    set_kernel_backend(KernelBackend::Auto);
+    assert_eq!(scalar, simd, "forced SIMD diverged from scalar");
+    assert_eq!(scalar, auto, "auto dispatch diverged from scalar");
+}

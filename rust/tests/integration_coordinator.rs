@@ -266,6 +266,53 @@ fn invalid_requests_surface_errors_not_panics() {
 }
 
 #[test]
+fn vq_less_weights_error_instead_of_panicking_the_worker() {
+    // A weights file whose config promises VQ but whose layer carries no
+    // codebooks must surface as a typed request error ("layer N has no VQ
+    // config"), not a worker panic (regression: `vq.as_ref().unwrap()`).
+    let cfg = ModelConfig::vqt_tiny();
+    let mut w = ModelWeights::random(&cfg, 5);
+    w.layers[1].vq = None;
+    let c = Coordinator::start(
+        Backend {
+            weights: Arc::new(w),
+            artifacts_dir: None,
+            engine_opts: EngineOptions::default(),
+        },
+        ServeConfig::default(),
+    );
+    let client = c.client();
+    let r = client
+        .request(Request::Open {
+            session: "s".into(),
+            tokens: doc(1, 12),
+        })
+        .unwrap();
+    match r {
+        Response::Err(e) => assert!(e.contains("layer 1 has no VQ config"), "{e}"),
+        other => panic!("expected typed error, got {other:?}"),
+    }
+    let r = client
+        .request(Request::BatchRevisions {
+            base: doc(2, 10),
+            revisions: vec![doc(3, 10)],
+        })
+        .unwrap();
+    assert!(matches!(r, Response::Err(_)));
+    // The shard survived both failures: typed errors, zero panics.
+    match client.request(Request::Stats).unwrap() {
+        Response::Stats(j) => {
+            assert_eq!(j.get("panics").as_usize(), Some(0));
+            assert!(j.get("errors").as_usize().unwrap() >= 2);
+            // And the resolved kernel backend is reported for operators.
+            let kb = j.get("kernel_backend").as_str().unwrap();
+            assert!(["scalar", "avx2", "neon"].contains(&kb), "{kb}");
+        }
+        other => panic!("{other:?}"),
+    }
+}
+
+#[test]
 fn stats_track_speedup() {
     let c = start(|_| {});
     let client = c.client();
