@@ -4,12 +4,182 @@
 //! attention ⇒ fewer affected rows).
 //!
 //! Emits the scatter series as CSV (`fig4_online.csv`) plus summary stats.
+//!
+//! Second half (Linux): an **open-loop arrival-curve driver** against the
+//! readiness-driven async server — requests fire on a fixed schedule
+//! regardless of completions (no coordinated omission: latency is measured
+//! from the *scheduled* arrival), and the client-side tail is reported as
+//! exact p50/p99/p999 percentiles plus the typed-busy shed ratio.
 
+use std::sync::Arc;
 use vqt::bench::*;
 use vqt::config::ModelConfig;
 use vqt::edits::trace::TraceConfig;
 use vqt::incremental::EngineOptions;
+use vqt::model::ModelWeights;
 use vqt::util::Rng;
+
+/// Client-side tail of one open-loop run.
+struct OpenLoop {
+    p50_ns: f64,
+    p99_ns: f64,
+    p999_ns: f64,
+    shed_ratio: f64,
+}
+
+/// Exact percentile from a sorted sample (nearest-rank on the inclusive
+/// scale — same convention as `coordinator::metrics::Histogram`).
+fn percentile(sorted_ns: &[f64], p: f64) -> f64 {
+    if sorted_ns.is_empty() {
+        return 0.0;
+    }
+    let idx = ((p / 100.0) * (sorted_ns.len() - 1) as f64).round() as usize;
+    sorted_ns[idx.min(sorted_ns.len() - 1)]
+}
+
+/// Drive the async front end open-loop: `n_requests` atomic edits across
+/// `conns` pipelined connections at `rate` requests/s. Returns `None` off
+/// Linux (the event-loop front end is epoll-based).
+#[cfg(target_os = "linux")]
+fn openloop_tail(w: &Arc<ModelWeights>, n_requests: usize, rate: f64) -> Option<OpenLoop> {
+    use std::collections::VecDeque;
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    use std::sync::Mutex;
+    use std::time::{Duration, Instant};
+    use vqt::config::ServeConfig;
+    use vqt::coordinator::{Backend, Coordinator};
+    use vqt::server::{AsyncServer, FrontendOptions};
+
+    const CONNS: usize = 8;
+    let mut sc = ServeConfig::default();
+    sc.workers = 2;
+    sc.queue_capacity = 512;
+    let coord = Coordinator::start(
+        Backend {
+            weights: w.clone(),
+            artifacts_dir: None,
+            engine_opts: EngineOptions::default(),
+        },
+        sc,
+    );
+    let server = AsyncServer::start(
+        "127.0.0.1:0",
+        coord.client(),
+        FrontendOptions {
+            io_threads: 2,
+            max_connections: 0,
+            max_inflight_per_conn: 64,
+        },
+    )
+    .ok()?;
+    let addr = server.local_addr();
+
+    // One session per connection, opened in lockstep before the clock
+    // starts; the open-loop phase then measures steady-state edits only.
+    let mut rng = Rng::new(911);
+    let doc_len = w.cfg.max_seq * 3 / 4;
+    let mut writers = Vec::with_capacity(CONNS);
+    let mut readers = Vec::with_capacity(CONNS);
+    for i in 0..CONNS {
+        let mut conn = TcpStream::connect(addr).ok()?;
+        conn.set_nodelay(true).ok()?;
+        let mut reader = BufReader::new(conn.try_clone().ok()?);
+        let tokens: Vec<String> = (0..doc_len)
+            .map(|_| (rng.below(w.cfg.vocab_size - 1)).to_string())
+            .collect();
+        let line = format!(
+            "{{\"op\":\"open\",\"session\":\"ol{i}\",\"tokens\":[{}]}}\n",
+            tokens.join(",")
+        );
+        conn.write_all(line.as_bytes()).ok()?;
+        let mut resp = String::new();
+        reader.read_line(&mut resp).ok()?;
+        writers.push(conn);
+        readers.push(reader);
+    }
+
+    // Reader threads: match replies FIFO against the scheduled arrival
+    // stamps (per-connection ordering is the server's contract).
+    let stamps: Vec<Arc<Mutex<VecDeque<Instant>>>> =
+        (0..CONNS).map(|_| Arc::new(Mutex::new(VecDeque::new()))).collect();
+    let per_conn: Vec<usize> = (0..CONNS)
+        .map(|c| n_requests / CONNS + usize::from(c < n_requests % CONNS))
+        .collect();
+    let mut handles = Vec::with_capacity(CONNS);
+    for (c, mut reader) in readers.into_iter().enumerate() {
+        let stamps = stamps[c].clone();
+        let expect = per_conn[c];
+        handles.push(std::thread::spawn(move || {
+            let mut lat_ns = Vec::with_capacity(expect);
+            let mut shed = 0usize;
+            let mut line = String::new();
+            for _ in 0..expect {
+                line.clear();
+                if reader.read_line(&mut line).unwrap_or(0) == 0 {
+                    break;
+                }
+                let scheduled = stamps.lock().unwrap().pop_front().expect("stamp per reply");
+                lat_ns.push(scheduled.elapsed().as_nanos() as f64);
+                if line.contains("\"busy\":true") {
+                    shed += 1;
+                }
+            }
+            (lat_ns, shed)
+        }));
+    }
+
+    // Open-loop writer: requests fire at t0 + k/rate whether or not
+    // earlier ones completed; the stamp is the SCHEDULED time, so client
+    // slip (a late write) counts against the tail instead of hiding.
+    let t0 = Instant::now();
+    let mut sent = vec![0usize; CONNS];
+    for k in 0..n_requests {
+        let c = k % CONNS;
+        if sent[c] >= per_conn[c] {
+            continue;
+        }
+        let target = t0 + Duration::from_secs_f64(k as f64 / rate);
+        while Instant::now() < target {
+            std::thread::sleep(Duration::from_micros(50));
+        }
+        let at = rng.below(doc_len);
+        let tok = rng.below(w.cfg.vocab_size - 1);
+        let line = format!(
+            "{{\"op\":\"edit\",\"session\":\"ol{c}\",\"kind\":\"replace\",\"at\":{at},\"tok\":{tok}}}\n"
+        );
+        stamps[c].lock().unwrap().push_back(target);
+        if writers[c].write_all(line.as_bytes()).is_err() {
+            break;
+        }
+        sent[c] += 1;
+    }
+
+    let mut lat_ns = Vec::with_capacity(n_requests);
+    let mut shed = 0usize;
+    for h in handles {
+        let (l, s) = h.join().ok()?;
+        lat_ns.extend(l);
+        shed += s;
+    }
+    server.shutdown();
+    coord.shutdown();
+    if lat_ns.is_empty() {
+        return None;
+    }
+    lat_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Some(OpenLoop {
+        p50_ns: percentile(&lat_ns, 50.0),
+        p99_ns: percentile(&lat_ns, 99.0),
+        p999_ns: percentile(&lat_ns, 99.9),
+        shed_ratio: shed as f64 / lat_ns.len() as f64,
+    })
+}
+
+#[cfg(not(target_os = "linux"))]
+fn openloop_tail(_w: &Arc<ModelWeights>, _n_requests: usize, _rate: f64) -> Option<OpenLoop> {
+    None
+}
 
 fn main() {
     let bench_t0 = std::time::Instant::now();
@@ -77,5 +247,26 @@ fn main() {
         vqt::util::median(&late) / vqt::util::median(&early)
     };
     metrics.push(("late_over_early_ratio", late_over_early));
+
+    // Open-loop tail latency against the async front end: a fixed arrival
+    // curve (requests/s), client-measured from the scheduled arrival time.
+    let smoke = std::env::var("VQT_BENCH_SMOKE").is_ok();
+    let (n_requests, rate) = if smoke { (160, 400.0) } else { (4000, 1000.0) };
+    match openloop_tail(&w, n_requests, rate) {
+        Some(ol) => {
+            println!(
+                "\nopen-loop tail ({n_requests} req @ {rate:.0}/s): p50 {:.2}ms  p99 {:.2}ms  p999 {:.2}ms  shed {:.2}%",
+                ol.p50_ns / 1e6,
+                ol.p99_ns / 1e6,
+                ol.p999_ns / 1e6,
+                ol.shed_ratio * 100.0
+            );
+            metrics.push(("openloop_p50_wall_ns", ol.p50_ns));
+            metrics.push(("openloop_p99_wall_ns", ol.p99_ns));
+            metrics.push(("openloop_p999_wall_ns", ol.p999_ns));
+            metrics.push(("openloop_shed_ratio", ol.shed_ratio));
+        }
+        None => println!("\n(open-loop driver skipped: async front end unavailable here)"),
+    }
     vqt::bench::emit_json("fig4_online", &metrics);
 }

@@ -132,6 +132,67 @@ fn main() {
     );
     println!("\npaper's measured value at this scale: 12.1× (median)");
 
+    // ---- open-loop tail-latency projection ---------------------------
+    // Serving tail at OPT-125M scale: convert the projected per-edit FLOP
+    // cost into a service time using the arithmetic throughput this host
+    // actually achieves on the incremental path (measured, not assumed),
+    // then push a Poisson arrival curve through a single-shard queue
+    // (Lindley recursion, deterministic service — the per-session shard is
+    // serial by design) and read exact p50/p99/p999 off the sample.
+    let smoke = std::env::var("VQT_BENCH_SMOKE").is_ok();
+    let mut rng = Rng::new(77);
+    let doc: Vec<u32> = (0..448).map(|_| rng.below(mini.vocab_size - 1) as u32).collect();
+    let mut eng = IncrementalEngine::new(w.clone(), &doc, EngineOptions::default());
+    let timed_edits = if smoke { 8 } else { 64 };
+    let ledger0 = eng.ledger.total();
+    let t = std::time::Instant::now();
+    for _ in 0..timed_edits {
+        let at = rng.below(eng.len());
+        let tok = rng.below(mini.vocab_size - 1) as u32;
+        eng.apply_edit(vqt::edits::Edit::Replace { at, tok });
+    }
+    let wall_per_edit_ns = t.elapsed().as_nanos() as f64 / timed_edits as f64;
+    let flops_per_edit = (eng.ledger.total() - ledger0) as f64 / timed_edits as f64;
+    let flops_per_ns = flops_per_edit / wall_per_edit_ns;
+    let service_ns = projected_edit_cost(&opt, n, &rates, 1.0) / flops_per_ns;
+    println!(
+        "\nmeasured incremental throughput: {flops_per_ns:.2} flops/ns ⇒ projected OPT-125M service time {:.2}ms/edit",
+        service_ns / 1e6
+    );
+
+    let arrivals = 50_000usize;
+    let mut tail_rows = Vec::new();
+    let mut emitted: Option<(f64, f64, f64)> = None;
+    for rho in [0.3, 0.6, 0.9] {
+        let mean_gap_ns = service_ns / rho;
+        let mut wait_ns = 0f64; // Lindley: W_{k+1} = max(0, W_k + S − A_k)
+        let mut lat = Vec::with_capacity(arrivals);
+        for _ in 0..arrivals {
+            lat.push(wait_ns + service_ns);
+            let u = (rng.below(1 << 20) + 1) as f64 / (1u64 << 20) as f64;
+            let gap_ns = -u.ln() * mean_gap_ns;
+            wait_ns = (wait_ns + service_ns - gap_ns).max(0.0);
+        }
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| lat[(((p / 100.0) * (lat.len() - 1) as f64).round() as usize).min(lat.len() - 1)];
+        let (p50, p99, p999) = (pct(50.0), pct(99.0), pct(99.9));
+        tail_rows.push(vec![
+            format!("{rho:.1}"),
+            format!("{:.2}ms", p50 / 1e6),
+            format!("{:.2}ms", p99 / 1e6),
+            format!("{:.2}ms", p999 / 1e6),
+        ]);
+        if rho == 0.6 {
+            emitted = Some((p50, p99, p999));
+        }
+    }
+    print_table(
+        "Projected OPT-125M open-loop tail latency (Poisson arrivals, one shard)",
+        &["utilization ρ", "p50", "p99", "p999"],
+        &tail_rows,
+    );
+    let (p50, p99, p999) = emitted.expect("ρ=0.6 row");
+
     vqt::bench::emit_json(
         "scale_projection",
         &[
@@ -140,6 +201,9 @@ fn main() {
                 "projected_speedup_1x_ratio",
                 dense / projected_edit_cost(&opt, n, &rates, 1.0),
             ),
+            ("projected_tail_p50_wall_ns", p50),
+            ("projected_tail_p99_wall_ns", p99),
+            ("projected_tail_p999_wall_ns", p999),
         ],
     );
 }

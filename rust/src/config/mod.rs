@@ -271,6 +271,29 @@ pub struct ServeConfig {
     /// trades nothing but speed. The `VQT_KERNEL_BACKEND` env var
     /// overrides an `"auto"` config (see `tensor::set_kernel_backend`).
     pub kernel_backend: String,
+    /// Event-loop IO threads for the async front end (Linux). Thread 0
+    /// also owns the listener; accepted connections are spread round-robin
+    /// across all IO threads. Clamped to ≥ 1. The blocking fallback server
+    /// ignores this knob (it spawns one thread per connection).
+    pub io_threads: usize,
+    /// Admission control: maximum concurrently open client connections.
+    /// A connection past the cap is answered with one typed `busy` line
+    /// and closed immediately (counted in `shed_connections`). 0 ⇒
+    /// unlimited (tests / trusted front ends).
+    pub max_connections: usize,
+    /// Per-connection backpressure: maximum requests in flight (submitted
+    /// to a shard, reply not yet flushed) before the event loop stops
+    /// *reading* from that connection. Reads resume as replies drain, so a
+    /// pipelining client is throttled instead of buffered unboundedly.
+    /// Clamped to ≥ 1.
+    pub max_inflight_per_conn: usize,
+    /// Directory `checkpoint`/`restore` snapshot paths are confined to.
+    /// Clients name bare files (no separators, no `..`, not absolute);
+    /// the coordinator joins them onto this directory. Empty ⇒ the
+    /// checkpoint/restore verbs are disabled (secure default: a client
+    /// must not be able to read or write server paths unless an operator
+    /// opted in).
+    pub checkpoint_dir: String,
 }
 
 impl Default for ServeConfig {
@@ -290,6 +313,10 @@ impl Default for ServeConfig {
             spill_dir: String::new(),
             code_cache_mb: 0,
             kernel_backend: "auto".to_string(),
+            io_threads: 2,
+            max_connections: 0,
+            max_inflight_per_conn: 32,
+            checkpoint_dir: String::new(),
         }
     }
 }
@@ -341,6 +368,21 @@ impl ServeConfig {
                     .context("serve.kernel_backend")?;
                 s
             },
+            io_threads: j.get("io_threads").as_usize().unwrap_or(d.io_threads).max(1),
+            max_connections: j
+                .get("max_connections")
+                .as_usize()
+                .unwrap_or(d.max_connections),
+            max_inflight_per_conn: j
+                .get("max_inflight_per_conn")
+                .as_usize()
+                .unwrap_or(d.max_inflight_per_conn)
+                .max(1),
+            checkpoint_dir: j
+                .get("checkpoint_dir")
+                .as_str()
+                .unwrap_or(&d.checkpoint_dir)
+                .to_string(),
         })
     }
 }
@@ -474,6 +516,12 @@ mod file_tests {
         assert_eq!(serve.code_cache_mb, 64);
         // Kernel backend: runtime feature detection by default.
         assert_eq!(serve.kernel_backend, "auto");
+        // Async front end: a few IO threads, admission control on.
+        assert_eq!(serve.io_threads, 2);
+        assert_eq!(serve.max_connections, 4096);
+        assert_eq!(serve.max_inflight_per_conn, 32);
+        // Snapshot verbs confined to an operator-chosen directory.
+        assert_eq!(serve.checkpoint_dir, "/tmp/vqt-checkpoints");
     }
 
     #[test]
@@ -526,6 +574,29 @@ mod file_tests {
     fn zero_workers_clamped_to_one() {
         let j = Json::parse(r#"{"workers": 0}"#).unwrap();
         assert_eq!(ServeConfig::from_json(&j).unwrap().workers, 1);
+    }
+
+    #[test]
+    fn frontend_knob_defaults_and_clamps() {
+        let j = Json::parse(r#"{}"#).unwrap();
+        let sc = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(sc.io_threads, 2);
+        assert_eq!(sc.max_connections, 0, "unlimited unless configured");
+        assert_eq!(sc.max_inflight_per_conn, 32);
+        assert!(sc.checkpoint_dir.is_empty(), "snapshot verbs off by default");
+        // Degenerate values are clamped, not served.
+        let j = Json::parse(r#"{"io_threads": 0, "max_inflight_per_conn": 0}"#).unwrap();
+        let sc = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(sc.io_threads, 1);
+        assert_eq!(sc.max_inflight_per_conn, 1);
+        let j = Json::parse(
+            r#"{"max_connections": 128, "checkpoint_dir": "/srv/ckpt", "io_threads": 4}"#,
+        )
+        .unwrap();
+        let sc = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(sc.max_connections, 128);
+        assert_eq!(sc.checkpoint_dir, "/srv/ckpt");
+        assert_eq!(sc.io_threads, 4);
     }
 
     #[test]

@@ -94,6 +94,7 @@ impl Histogram {
             ("mean", Json::num(self.mean())),
             ("p50", Json::num(self.percentile(50.0))),
             ("p99", Json::num(self.percentile(99.0))),
+            ("p999", Json::num(self.percentile(99.9))),
             ("max", Json::num(self.max)),
         ])
     }
@@ -119,6 +120,10 @@ pub struct Metrics {
     /// across edits, sessions, and shards.
     pub defrags: u64,
     pub sessions_opened: u64,
+    /// Sessions (re)created from a client-supplied checkpoint via the
+    /// `Restore` verb. Counted separately from `sessions_opened` so a
+    /// restore over an already-known id doesn't double-count the session.
+    pub sessions_restored: u64,
     /// Sessions dropped outright (no spill dir, total-cap eviction, or a
     /// failed spill write).
     pub sessions_evicted: u64,
@@ -168,6 +173,7 @@ impl Metrics {
         self.dense_calls += o.dense_calls;
         self.defrags += o.defrags;
         self.sessions_opened += o.sessions_opened;
+        self.sessions_restored += o.sessions_restored;
         self.sessions_evicted += o.sessions_evicted;
         self.suspends += o.suspends;
         self.resumes += o.resumes;
@@ -203,6 +209,7 @@ impl Metrics {
             ("dense_calls", Json::num(self.dense_calls as f64)),
             ("defrags", Json::num(self.defrags as f64)),
             ("sessions_opened", Json::num(self.sessions_opened as f64)),
+            ("sessions_restored", Json::num(self.sessions_restored as f64)),
             ("sessions_evicted", Json::num(self.sessions_evicted as f64)),
             ("suspends", Json::num(self.suspends as f64)),
             ("resumes", Json::num(self.resumes as f64)),
@@ -336,6 +343,8 @@ mod tests {
         let j = m.to_json();
         assert!(j.get("speedup").as_f64().is_some());
         assert!(j.get("lat_edit_us").get("p99").as_f64().is_some());
+        assert!(j.get("lat_edit_us").get("p999").as_f64().is_some());
+        assert_eq!(j.get("sessions_restored").as_usize(), Some(0));
         for k in ["cache_hits", "cache_misses", "cache_evictions", "cache_bytes"] {
             assert_eq!(j.get(k).as_usize(), Some(0), "{k}");
         }

@@ -12,5 +12,7 @@ pub mod service;
 pub mod session;
 
 pub use metrics::{Histogram, Metrics};
-pub use service::{Backend, Client, Coordinator, Request, Response};
+pub use service::{
+    Backend, Client, Completion, Coordinator, ReplyTo, Request, Response, SubmitError,
+};
 pub use session::{Prepared, SessionInfo, SessionStore, StorePolicy};

@@ -175,9 +175,65 @@ impl Response {
     }
 }
 
+/// A finished async request on its way back to the event loop: which
+/// connection it belongs to and its per-connection sequence number, so the
+/// front end can release replies in request order even when shards finish
+/// out of order.
+#[derive(Debug)]
+pub struct Completion {
+    pub conn: u64,
+    pub seq: u64,
+    pub resp: Response,
+}
+
+/// Where a shard delivers a job's reply.
+///
+/// The blocking server parks each caller thread on a fresh per-request
+/// channel ([`ReplyTo::Sync`]). The readiness-driven front end cannot park
+/// anything, so its jobs carry [`ReplyTo::Async`]: the shard pushes a
+/// [`Completion`] onto the owning IO thread's queue and rings its waker
+/// (an opaque `Fn` — an `eventfd` write in practice — so the coordinator
+/// stays free of server types).
+#[derive(Clone)]
+pub enum ReplyTo {
+    Sync(mpsc::Sender<Response>),
+    Async {
+        tx: mpsc::Sender<Completion>,
+        conn: u64,
+        seq: u64,
+        wake: Arc<dyn Fn() + Send + Sync>,
+    },
+}
+
+impl ReplyTo {
+    /// Deliver the reply. A vanished receiver (caller gone, event loop
+    /// shut down) is not an error for the shard — it just drops the reply,
+    /// same contract the old raw `Sender` had.
+    pub fn send(&self, resp: Response) {
+        match self {
+            ReplyTo::Sync(tx) => {
+                let _ = tx.send(resp);
+            }
+            ReplyTo::Async {
+                tx,
+                conn,
+                seq,
+                wake,
+            } => {
+                let _ = tx.send(Completion {
+                    conn: *conn,
+                    seq: *seq,
+                    resp,
+                });
+                wake();
+            }
+        }
+    }
+}
+
 struct Job {
     req: Request,
-    reply: mpsc::Sender<Response>,
+    reply: ReplyTo,
     enqueued: Instant,
 }
 
@@ -203,6 +259,16 @@ fn route(req: &Request, shards: usize) -> Route {
         None if matches!(req, Request::Stats) => Route::FanOut,
         None => Route::Any,
     }
+}
+
+/// Why a non-blocking [`Client::submit`] could not enqueue a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The target shard's queue is full. The front end sheds the request
+    /// with a typed `Busy` reply instead of queueing unboundedly.
+    Busy,
+    /// The coordinator has stopped; the connection should be closed.
+    Closed,
 }
 
 /// Clonable client handle to a running coordinator pool. Routing happens
@@ -231,6 +297,41 @@ impl Client {
         self.dispatch(req, false)
     }
 
+    /// Non-blocking submit for the readiness-driven front end: route the
+    /// request and `try_send` it — the event loop must never park on a
+    /// full shard queue. `Stats` (a pool-wide fan-out that has to park on
+    /// every shard's snapshot) is serviced on a short-lived helper thread;
+    /// it is a rare monitoring verb, so the thread cost is off the hot
+    /// path by construction.
+    pub fn submit(&self, req: Request, reply: ReplyTo) -> std::result::Result<(), SubmitError> {
+        let shard = match route(&req, self.shards.len()) {
+            Route::Pinned(s) => s,
+            Route::Any => self.rr.fetch_add(1, Ordering::Relaxed) % self.shards.len(),
+            Route::FanOut => {
+                let client = self.clone();
+                let spawned = std::thread::Builder::new()
+                    .name("vqt-stats-fanout".into())
+                    .spawn(move || {
+                        let resp = client
+                            .dispatch(req, true)
+                            .unwrap_or_else(|e| Response::Err(format!("{e:#}")));
+                        reply.send(resp);
+                    });
+                return spawned.map(|_| ()).map_err(|_| SubmitError::Closed);
+            }
+        };
+        let job = Job {
+            req,
+            reply,
+            enqueued: Instant::now(),
+        };
+        match self.shards[shard].try_send(job) {
+            Ok(()) => Ok(()),
+            Err(mpsc::TrySendError::Full(_)) => Err(SubmitError::Busy),
+            Err(mpsc::TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
+        }
+    }
+
     fn enqueue(
         &self,
         shard: usize,
@@ -240,7 +341,7 @@ impl Client {
         let (rtx, rrx) = mpsc::channel();
         let job = Job {
             req,
-            reply: rtx,
+            reply: ReplyTo::Sync(rtx),
             enqueued: Instant::now(),
         };
         if blocking {
@@ -534,6 +635,7 @@ fn worker_loop(shard: usize, seed: ShardSeed, rx: mpsc::Receiver<Job>) {
         cache: code_cache,
         metrics: Metrics::default(),
         verify_every: cfg.verify_every,
+        checkpoint_dir: cfg.checkpoint_dir.clone(),
     };
     // Size-or-timeout drain window: `batch_window_us` when set, else the
     // legacy ms-granular deadline.
@@ -634,6 +736,33 @@ fn split_rounds(jobs: Vec<Job>, enabled: bool) -> (Vec<BatchEntry>, Vec<Job>) {
     (entries, rest)
 }
 
+/// Validate an edit script against the engine's document invariants
+/// WITHOUT touching engine state, by simulating the document length across
+/// the script. These are exactly the conditions `stage_edit` asserts on;
+/// checking them up front turns a malformed client script into a typed
+/// error instead of a panic that costs the whole session (or, on the
+/// pooled path, every session in the wave).
+fn validate_edits(edits: &[Edit], mut len: usize, max_seq: usize) -> Result<()> {
+    for e in edits {
+        match *e {
+            Edit::Replace { at, .. } => {
+                anyhow::ensure!(at < len, "replace at {at} out of bounds (document length {len})");
+            }
+            Edit::Insert { at, .. } => {
+                anyhow::ensure!(at <= len, "insert at {at} out of bounds (document length {len})");
+                anyhow::ensure!(len < max_seq, "document full ({max_seq} tokens)");
+                len += 1;
+            }
+            Edit::Delete { at } => {
+                anyhow::ensure!(at < len, "delete at {at} out of bounds (document length {len})");
+                anyhow::ensure!(len > 1, "cannot delete the last token");
+                len -= 1;
+            }
+        }
+    }
+    Ok(())
+}
+
 struct Worker {
     weights: Arc<ModelWeights>,
     engine_opts: EngineOptions,
@@ -644,6 +773,8 @@ struct Worker {
     cache: Option<CacheHandle>,
     metrics: Metrics,
     verify_every: usize,
+    /// Directory snapshot verbs are confined to (empty ⇒ verbs disabled).
+    checkpoint_dir: String,
 }
 
 /// Snapshot of one engine's cache counters — subtracted around each
@@ -708,7 +839,7 @@ impl Worker {
         if matches!(resp, Response::Err(_)) {
             self.metrics.errors += 1;
         }
-        let _ = reply.send(resp);
+        reply.send(resp);
     }
 
     /// Cross-session pooled execution over the batchable prefixes of one
@@ -768,10 +899,38 @@ impl Worker {
                     Ok(Prepared::Missing) => fallback.push(job),
                     Err(e) => {
                         self.metrics.errors += 1;
-                        let _ = job.reply.send(Response::Err(format!("{e:#}")));
+                        job.reply.send(Response::Err(format!("{e:#}")));
                     }
                 }
             }
+            // Typed pre-validation against each session's CURRENT document
+            // (earlier waves already applied): a malformed script gets an
+            // error reply and leaves its session intact, exactly like the
+            // classic path — and it never reaches the pooled kernel, where
+            // a panic would cost every session in the wave.
+            let mut valid: Vec<(String, Session, Job)> = Vec::new();
+            for (s, sess, job) in pool {
+                let checked = match &job.req {
+                    Request::Edit { edit, .. } => validate_edits(
+                        std::slice::from_ref(edit),
+                        sess.engine.len(),
+                        self.weights.cfg.max_seq,
+                    ),
+                    Request::EditScript { edits, .. } => {
+                        validate_edits(edits, sess.engine.len(), self.weights.cfg.max_seq)
+                    }
+                    other => unreachable!("non-edit request {other:?} in batch pool"),
+                };
+                match checked {
+                    Ok(()) => valid.push((s, sess, job)),
+                    Err(e) => {
+                        self.sessions.checkin(s, sess);
+                        self.metrics.errors += 1;
+                        job.reply.send(Response::Err(format!("{e:#}")));
+                    }
+                }
+            }
+            let mut pool = valid;
             if pool.len() < 2 {
                 // Nothing to pool across sessions — classic path.
                 for (s, sess, job) in pool {
@@ -828,7 +987,7 @@ impl Worker {
                     for (s, sess, job) in pool {
                         self.sessions.discard(sess);
                         self.metrics.errors += 1;
-                        let _ = job.reply.send(Response::Err(format!(
+                        job.reply.send(Response::Err(format!(
                             "batched edit panicked: {msg} (session '{s}' dropped)"
                         )));
                     }
@@ -870,7 +1029,7 @@ impl Worker {
                             "shard {shard} batched {}: {us:.0}µs (+{wait_us:.0}µs queued)",
                             job.req.kind()
                         );
-                        let _ = job.reply.send(Response::Logits {
+                        job.reply.send(Response::Logits {
                             logits: rep.logits,
                             predicted,
                             flops: rep.flops,
@@ -893,6 +1052,32 @@ impl Worker {
         self.metrics.cache_misses += after.1 - before.1;
         self.metrics.cache_evictions += after.2 - before.2;
         self.metrics.cache_bytes += after.3 - before.3;
+    }
+
+    /// Resolve a client-supplied snapshot name inside the configured
+    /// checkpoint directory. The name must be a bare filename: absolute
+    /// paths, path separators, and dot components are rejected with typed
+    /// errors, so no client-controlled string can make the server read or
+    /// write outside `checkpoint_dir`. An empty `checkpoint_dir` keeps the
+    /// verbs disabled (the secure default).
+    fn checkpoint_path(&self, name: &str) -> Result<std::path::PathBuf> {
+        anyhow::ensure!(
+            !self.checkpoint_dir.is_empty(),
+            "checkpoint/restore disabled: no checkpoint_dir configured"
+        );
+        anyhow::ensure!(!name.is_empty(), "empty checkpoint name");
+        anyhow::ensure!(
+            !name.contains('/') && !name.contains('\\'),
+            "checkpoint name must be a bare filename inside checkpoint_dir \
+             (path separators rejected)"
+        );
+        anyhow::ensure!(
+            name != "." && name != "..",
+            "checkpoint name must be a bare filename inside checkpoint_dir"
+        );
+        // Separators are rejected above, so the name is one normal path
+        // component and the join cannot escape the directory.
+        Ok(std::path::Path::new(&self.checkpoint_dir).join(name))
     }
 
     /// Fault a session in (transparently resuming it from its spill
@@ -942,6 +1127,15 @@ impl Worker {
             Request::Edit { session, edit } => self.apply_edits(&session, &[edit]),
             Request::EditScript { session, edits } => self.apply_edits(&session, &edits),
             Request::Revision { session, tokens } => {
+                // A revision is a whole replacement document, so it obeys
+                // the same bounds as Open — diffing toward an empty or
+                // oversized document would walk the engine into the
+                // delete-last/document-full panics.
+                anyhow::ensure!(!tokens.is_empty(), "empty revision");
+                anyhow::ensure!(
+                    tokens.len() <= self.weights.cfg.max_seq,
+                    "revision too long"
+                );
                 self.ensure_resident(&session)?;
                 let s = self.sessions.get_mut(&session).expect("resident");
                 let script = diff_tokens(s.engine.tokens(), &tokens);
@@ -971,6 +1165,11 @@ impl Worker {
             }
             Request::BatchRevisions { base, revisions } => self.batch_revisions(base, revisions),
             Request::Dense { tokens } => {
+                anyhow::ensure!(!tokens.is_empty(), "empty document");
+                anyhow::ensure!(
+                    tokens.len() <= self.weights.cfg.max_seq,
+                    "document too long"
+                );
                 self.metrics.dense_calls += 1;
                 let n = tokens.len();
                 let logits = match &self.runtime {
@@ -1007,26 +1206,30 @@ impl Worker {
                 Ok(Response::Suggestions(s.engine.suggest_topk(k.clamp(1, 64))))
             }
             Request::Checkpoint { session, path } => {
-                anyhow::ensure!(
-                    !path.contains(".."),
-                    "checkpoint path must not contain '..'"
-                );
+                let file = self.checkpoint_path(&path)?;
                 self.ensure_resident(&session)?;
+                std::fs::create_dir_all(&self.checkpoint_dir)?;
                 let s = self.sessions.get_mut(&session).expect("resident");
-                s.engine.snapshot_to_file(&path)?;
+                s.engine.snapshot_to_file(file)?;
                 Ok(Response::Done)
             }
             Request::Restore { session, path } => {
-                anyhow::ensure!(!path.contains(".."), "checkpoint path must not contain '..'");
+                let file = self.checkpoint_path(&path)?;
                 let mut opts = self.engine_opts;
                 opts.verify_every = self.verify_every;
                 let mut engine =
-                    IncrementalEngine::restore_from_file(self.weights.clone(), &path, opts)?;
+                    IncrementalEngine::restore_from_file(self.weights.clone(), &file, opts)?;
                 // Snapshots exclude the cache by design; re-attach so the
                 // restored session rewarms lazily.
                 engine.set_code_cache(self.cache.clone());
+                // Restoring over a live id replaces the old incarnation:
+                // remove it first so a suspended predecessor's spill file
+                // is reclaimed instead of leaking, and count the verb in
+                // its own gauge — a restore is not a fresh open, and
+                // double-counting the id would inflate `sessions_opened`.
+                self.sessions.remove(&session);
                 self.sessions.insert(session, engine);
-                self.metrics.sessions_opened += 1;
+                self.metrics.sessions_restored += 1;
                 Ok(Response::Done)
             }
             Request::Suspend { session } => {
@@ -1076,6 +1279,7 @@ impl Worker {
     fn apply_edits(&mut self, session: &str, edits: &[Edit]) -> Result<Response> {
         self.ensure_resident(session)?;
         let s = self.sessions.get_mut(session).expect("resident");
+        validate_edits(edits, s.engine.len(), self.weights.cfg.max_seq)?;
         let defrags_before = s.engine.stats.defrags;
         let cache_before = cache_counters(&s.engine);
         let rep = s.engine.apply_edits(edits);
@@ -1109,6 +1313,17 @@ impl Worker {
     /// code state across the batch.
     fn batch_revisions(&mut self, base: Vec<u32>, revisions: Vec<Vec<u32>>) -> Result<Response> {
         anyhow::ensure!(!base.is_empty(), "empty base document");
+        anyhow::ensure!(
+            base.len() <= self.weights.cfg.max_seq,
+            "base document too long"
+        );
+        for (i, rev) in revisions.iter().enumerate() {
+            anyhow::ensure!(!rev.is_empty(), "empty revision (index {i})");
+            anyhow::ensure!(
+                rev.len() <= self.weights.cfg.max_seq,
+                "revision {i} too long"
+            );
+        }
         let mut opts = self.engine_opts;
         opts.verify_every = 0;
         let mut base_engine = IncrementalEngine::try_new(self.weights.clone(), &base, opts)?;
@@ -1196,6 +1411,7 @@ mod batched_round_tests {
             cache: None,
             metrics: Metrics::default(),
             verify_every: 0,
+            checkpoint_dir: String::new(),
         }
     }
 
@@ -1204,7 +1420,7 @@ mod batched_round_tests {
         (
             Job {
                 req,
-                reply: tx,
+                reply: ReplyTo::Sync(tx),
                 enqueued: Instant::now(),
             },
             rx,
@@ -1309,15 +1525,16 @@ mod batched_round_tests {
         assert_eq!(batched.metrics.errors, 0);
     }
 
-    /// A panic mid-wave (out-of-bounds edit) drops every wave session and
-    /// replies Err to each caller — never a hang, never corrupt state.
+    /// An out-of-bounds edit in a wave is rejected with a typed error
+    /// BEFORE the pooled kernel runs: the bad job's session survives, the
+    /// rest of the wave still pools, and no panic is recorded.
     #[test]
-    fn batched_round_panic_drops_wave_and_replies_err() {
+    fn batched_round_rejects_invalid_edit_without_panicking() {
         let cfg = ModelConfig::vqt_tiny();
         let w = Arc::new(ModelWeights::random(&cfg, 43));
         let mut wk = mk_worker(&w);
         let doc: Vec<u32> = (0..10).map(|i| (i % 50) as u32).collect();
-        for s in ["a", "b"] {
+        for s in ["a", "b", "c"] {
             wk.handle(Request::Open {
                 session: s.into(),
                 tokens: doc.clone(),
@@ -1329,23 +1546,87 @@ mod batched_round_tests {
         });
         let (jb, rxb) = job(Request::Edit {
             session: "b".into(),
-            edit: Edit::Replace { at: 9999, tok: 3 }, // out of bounds ⇒ panic
+            edit: Edit::Replace { at: 9999, tok: 3 }, // out of bounds ⇒ typed reject
         });
-        wk.run_batched(0, vec![entry("a", vec![ja]), entry("b", vec![jb])], 8);
-        assert!(matches!(rxa.try_recv(), Ok(Response::Err(_))));
-        assert!(matches!(rxb.try_recv(), Ok(Response::Err(_))));
-        assert_eq!(wk.metrics.panics, 1);
-        assert_eq!(wk.metrics.errors, 2);
-        // Both sessions were dropped; the canonical error follows.
-        for s in ["a", "b"] {
-            match wk.handle(Request::Edit {
+        let (jc, rxc) = job(Request::Edit {
+            session: "c".into(),
+            edit: Edit::Replace { at: 5, tok: 4 },
+        });
+        wk.run_batched(
+            0,
+            vec![
+                entry("a", vec![ja]),
+                entry("b", vec![jb]),
+                entry("c", vec![jc]),
+            ],
+            8,
+        );
+        assert!(matches!(rxa.try_recv(), Ok(Response::Logits { .. })));
+        match rxb.try_recv() {
+            Ok(Response::Err(e)) => assert!(e.contains("out of bounds"), "{e}"),
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(rxc.try_recv(), Ok(Response::Logits { .. })));
+        assert_eq!(wk.metrics.panics, 0, "validation fires before the kernel");
+        assert_eq!(wk.metrics.errors, 1);
+        assert!(wk.metrics.batched_rows > 0, "survivors still pool");
+        // Every session — including the one whose edit was rejected —
+        // stays alive and serviceable.
+        for s in ["a", "b", "c"] {
+            let resp = wk.handle(Request::Edit {
                 session: s.into(),
                 edit: Edit::Replace { at: 0, tok: 1 },
+            });
+            assert!(matches!(resp, Response::Logits { .. }), "{s}: {resp:?}");
+        }
+    }
+
+    /// Classic-path sweep of the malformed-script space: out-of-bounds
+    /// replace/insert/delete, delete-to-empty, and document-full all come
+    /// back as typed errors with the session intact and `panics == 0`.
+    #[test]
+    fn classic_path_rejects_malformed_scripts_without_panicking() {
+        let cfg = ModelConfig::vqt_tiny();
+        let w = Arc::new(ModelWeights::random(&cfg, 59));
+        let mut wk = mk_worker(&w);
+        wk.handle(Request::Open {
+            session: "s".into(),
+            tokens: vec![1, 2, 3],
+        });
+        let bad: Vec<(Vec<Edit>, &str)> = vec![
+            (vec![Edit::Replace { at: 3, tok: 0 }], "out of bounds"),
+            (vec![Edit::Insert { at: 4, tok: 0 }], "out of bounds"),
+            (vec![Edit::Delete { at: 7 }], "out of bounds"),
+            (
+                // Delete-to-empty: the THIRD delete (simulated len 1) trips.
+                vec![
+                    Edit::Delete { at: 0 },
+                    Edit::Delete { at: 0 },
+                    Edit::Delete { at: 0 },
+                ],
+                "cannot delete the last token",
+            ),
+            (
+                (0..cfg.max_seq).map(|_| Edit::Insert { at: 0, tok: 1 }).collect(),
+                "document full",
+            ),
+        ];
+        for (edits, want) in bad {
+            match wk.handle(Request::EditScript {
+                session: "s".into(),
+                edits,
             }) {
-                Response::Err(e) => assert!(e.contains("unknown session"), "{e}"),
-                other => panic!("{other:?}"),
+                Response::Err(e) => assert!(e.contains(want), "{want}: {e}"),
+                other => panic!("{want}: {other:?}"),
             }
         }
+        assert_eq!(wk.metrics.panics, 0);
+        // The session never lost state: a valid edit still lands.
+        let resp = wk.handle(Request::Edit {
+            session: "s".into(),
+            edit: Edit::Replace { at: 0, tok: 9 },
+        });
+        assert!(matches!(resp, Response::Logits { .. }), "{resp:?}");
     }
 
     /// A wave with fewer than two poolable sessions falls back to the

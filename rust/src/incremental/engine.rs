@@ -1620,8 +1620,13 @@ impl IncrementalEngine {
     /// embeddings (OPT-style LM head: `h_last · E_tokensᵀ`). Returns the
     /// top-k (token, score) pairs. Cost is `vocab·d` muladds — independent
     /// of document length, so suggestions stay cheap after every edit.
+    ///
+    /// An empty document has no last row to score from, so it yields an
+    /// empty suggestion list rather than panicking the caller's thread.
     pub fn suggest_topk(&mut self, k: usize) -> Vec<(u32, f32)> {
-        assert!(!self.is_empty(), "no rows to suggest from");
+        if self.is_empty() {
+            return Vec::new();
+        }
         let w = Arc::clone(&self.w);
         let cfg = &w.cfg;
         let h = self.final_hidden.copy_row(self.len() - 1);

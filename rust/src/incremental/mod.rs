@@ -537,4 +537,15 @@ mod revision_overflow_tests {
             .unwrap();
         assert_eq!(top[0].0 as usize, best_dense);
     }
+
+    /// An empty document yields an empty suggestion list — no panic, no
+    /// phantom scores (the serving layer turns this into a typed reply).
+    #[test]
+    fn suggestions_on_empty_document_are_empty() {
+        let cfg = ModelConfig::vqt_tiny();
+        let w = Arc::new(ModelWeights::random(&cfg, 5));
+        let mut eng = IncrementalEngine::new(w, &[], EngineOptions::default());
+        assert!(eng.is_empty());
+        assert!(eng.suggest_topk(5).is_empty());
+    }
 }

@@ -97,7 +97,9 @@ fn serve(args: &[String]) -> Result<()> {
         },
         serve_cfg.clone(),
     );
-    vqt::server::serve(&serve_cfg.bind, coordinator.client())
+    // Readiness-driven event loop on Linux; thread-per-connection
+    // elsewhere (same wire protocol, bit-identical replies).
+    vqt::server::serve_async(&serve_cfg, coordinator.client())
 }
 
 fn validate(args: &[String]) -> Result<()> {

@@ -1,0 +1,659 @@
+//! Readiness-driven TCP front end (Linux): a fixed pool of IO threads
+//! owns every socket in nonblocking mode behind per-thread epoll sets, so
+//! concurrent connections cost bytes, not threads.
+//!
+//! Thread 0 owns the listener and distributes accepted connections
+//! round-robin across the pool via per-thread injection queues (an
+//! `eventfd` wakes the adoptive thread). Each connection's byte stream is
+//! framed incrementally ([`super::framer::LineFramer`], carrying the same
+//! `READ_LIMIT_BYTES` cap as the blocking reader), parsed with the shared
+//! protocol, and submitted to the coordinator WITHOUT blocking
+//! ([`Client::submit`]). Shards deliver [`Completion`]s to the owning IO
+//! thread's channel and ring its waker; replies are released strictly in
+//! per-connection request order (a `BTreeMap` keyed by sequence number),
+//! so the wire is bit-identical to the blocking server's
+//! one-request-at-a-time loop.
+//!
+//! Admission control and backpressure:
+//! - `max_connections`: past the cap, an accepted socket is answered with
+//!   one typed busy line and dropped.
+//! - `max_inflight_per_conn`: a connection at its in-flight cap (or with a
+//!   backed-up write buffer) simply stops being polled for reads — the
+//!   bytes wait in the kernel, and TCP flow control pushes back on the
+//!   client. No thread blocks.
+//! - A full shard queue sheds the request with a typed busy reply
+//!   (`protocol::busy_json`) instead of queueing unboundedly.
+//!
+//! Graceful drain: `AsyncServer::shutdown` stops the acceptor, stops
+//! polling reads, flushes every in-flight reply, closes the sockets, joins
+//! the IO threads, and only then should the caller tear down the
+//! coordinator — the shards are still alive for every reply the drain
+//! waits on.
+
+use super::framer::{Frame, LineFramer};
+use super::poll::{Epoll, EventFd, EPOLLERR, EPOLLHUP, EPOLLIN, EPOLLOUT, EPOLLRDHUP};
+use super::{protocol, READ_LIMIT_BYTES};
+use crate::config::ServeConfig;
+use crate::coordinator::{Client, Completion, ReplyTo, Response, SubmitError};
+use crate::util::Json;
+use anyhow::{Context, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+/// Epoll user-data sentinels for the two non-connection fds; connection
+/// ids come from a counter and can never collide with them.
+const DATA_WAKE: u64 = u64::MAX;
+const DATA_LISTENER: u64 = u64::MAX - 1;
+
+/// Stop polling reads while a connection's pending write bytes exceed
+/// this; a client that doesn't read its replies doesn't get to keep
+/// submitting work.
+const WBUF_HIGH_WATER: usize = 1 << 20;
+
+/// Front-end counters (server-side, not per-shard): surfaced under a
+/// `"frontend"` object inside the `stats` reply by the async server.
+#[derive(Default)]
+pub struct FrontendStats {
+    /// Currently open connections (gauge).
+    pub connections: AtomicU64,
+    /// Connections admitted over the lifetime of the server.
+    pub connections_accepted: AtomicU64,
+    /// Connections refused at accept by `max_connections` (each got one
+    /// typed busy line).
+    pub connections_rejected: AtomicU64,
+    /// Requests shed with a typed busy reply because the target shard's
+    /// queue was full.
+    pub requests_shed: AtomicU64,
+}
+
+impl FrontendStats {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "connections",
+                Json::num(self.connections.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "connections_accepted",
+                Json::num(self.connections_accepted.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "connections_rejected",
+                Json::num(self.connections_rejected.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "requests_shed",
+                Json::num(self.requests_shed.load(Ordering::Relaxed) as f64),
+            ),
+        ])
+    }
+}
+
+/// Admission/backpressure knobs, lifted from [`ServeConfig`].
+#[derive(Clone, Copy, Debug)]
+pub struct FrontendOptions {
+    pub io_threads: usize,
+    pub max_connections: usize,
+    pub max_inflight_per_conn: usize,
+}
+
+impl FrontendOptions {
+    pub fn from_cfg(cfg: &ServeConfig) -> FrontendOptions {
+        FrontendOptions {
+            io_threads: cfg.io_threads.max(1),
+            max_connections: cfg.max_connections,
+            max_inflight_per_conn: cfg.max_inflight_per_conn.max(1),
+        }
+    }
+}
+
+/// State shared by every IO thread.
+struct Shared {
+    client: Client,
+    stats: Arc<FrontendStats>,
+    shutdown: AtomicBool,
+    /// Accepted-but-unadopted sockets, one queue per IO thread.
+    inject: Vec<Mutex<Vec<TcpStream>>>,
+    /// One waker per IO thread (shard completions and injections ring it).
+    wakers: Vec<Arc<EventFd>>,
+    max_connections: usize,
+    max_inflight: usize,
+    rr: AtomicUsize,
+    conn_ids: AtomicU64,
+}
+
+fn locked<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// One nonblocking connection owned by an IO thread.
+struct Conn {
+    stream: TcpStream,
+    framer: LineFramer,
+    /// Serialized reply bytes not yet written to the socket.
+    wbuf: Vec<u8>,
+    /// Next sequence number to assign to an incoming request.
+    next_seq: u64,
+    /// Next sequence number to release onto the wire.
+    next_flush: u64,
+    /// Completed reply lines waiting for their turn (out-of-order shard
+    /// completions park here; size is bounded by `max_inflight`).
+    done: BTreeMap<u64, Vec<u8>>,
+    /// Requests submitted to the coordinator and not yet completed.
+    inflight: usize,
+    /// Epoll interest mask currently registered for this socket.
+    interest: u32,
+    /// Peer half-closed its write side (clean EOF).
+    eof: bool,
+    /// Close once every pending reply is flushed (oversized line,
+    /// coordinator gone, or server drain).
+    closing: bool,
+    /// Unrecoverable socket error: drop immediately.
+    dead: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            framer: LineFramer::new(READ_LIMIT_BYTES as usize),
+            wbuf: Vec::new(),
+            next_seq: 0,
+            next_flush: 0,
+            done: BTreeMap::new(),
+            inflight: 0,
+            interest: EPOLLIN | EPOLLRDHUP,
+            eof: false,
+            closing: false,
+            dead: false,
+        }
+    }
+
+    /// Everything owed to the peer is on the wire and nothing more can
+    /// arrive: safe to close.
+    fn finished(&self) -> bool {
+        self.dead
+            || ((self.eof || self.closing)
+                && self.inflight == 0
+                && self.done.is_empty()
+                && self.wbuf.is_empty())
+    }
+}
+
+fn reply_line(j: Json) -> Vec<u8> {
+    let mut line = j.to_string().into_bytes();
+    line.push(b'\n');
+    line
+}
+
+/// One IO thread's world: its epoll set, its connections, its completion
+/// channel, and (for thread 0) the listener.
+struct IoThread {
+    idx: usize,
+    shared: Arc<Shared>,
+    epoll: Epoll,
+    wake: Arc<EventFd>,
+    ctx: mpsc::Sender<Completion>,
+    crx: mpsc::Receiver<Completion>,
+    /// Waker closure cloned into every `ReplyTo::Async` this thread mints
+    /// (type-erased so the coordinator stays free of server types).
+    wake_fn: Arc<dyn Fn() + Send + Sync>,
+    listener: Option<TcpListener>,
+    conns: HashMap<u64, Conn>,
+    draining: bool,
+}
+
+impl IoThread {
+    fn run(mut self) {
+        let mut events =
+            vec![super::poll::EpollEvent { events: 0, data: 0 }; 256];
+        loop {
+            let n = match self.epoll.wait(&mut events, 100) {
+                Ok(n) => n,
+                Err(e) => {
+                    log::error!("io thread {}: epoll_wait failed: {e}", self.idx);
+                    break;
+                }
+            };
+            let ready: Vec<(u32, u64)> = events
+                .iter()
+                .take(n)
+                .map(|ev| (ev.events, ev.data)) // copy out of the packed struct
+                .collect();
+            for (mask, data) in ready {
+                match data {
+                    DATA_WAKE => self.wake.drain(),
+                    DATA_LISTENER => self.accept_ready(),
+                    id => self.conn_ready(id, mask),
+                }
+            }
+            // Completions and injections are drained every tick — the
+            // waker guarantees promptness, draining unconditionally
+            // guarantees none are stranded behind a lost wakeup.
+            self.drain_completions();
+            self.adopt_injected();
+            if self.shared.shutdown.load(Ordering::Relaxed) && !self.draining {
+                self.begin_drain();
+            }
+            if self.draining && self.conns.is_empty() {
+                break;
+            }
+        }
+        log::debug!("io thread {} exiting", self.idx);
+    }
+
+    /// Enter graceful drain: stop accepting, stop reading, keep flushing.
+    fn begin_drain(&mut self) {
+        self.draining = true;
+        if let Some(listener) = self.listener.take() {
+            let _ = self.epoll.del(listener.as_raw_fd());
+        }
+        let ids: Vec<u64> = self.conns.keys().copied().collect();
+        for id in ids {
+            let mut conn = self.conns.remove(&id).expect("listed id");
+            conn.closing = true;
+            self.flush(&mut conn);
+            self.settle(id, conn);
+        }
+    }
+
+    fn accept_ready(&mut self) {
+        loop {
+            let Some(listener) = &self.listener else { return };
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    let live = self.shared.stats.connections.load(Ordering::Relaxed) as usize;
+                    if self.shared.max_connections > 0 && live >= self.shared.max_connections {
+                        // Admission reject: one typed busy line, best
+                        // effort (a fresh socket's buffer always has room
+                        // for it in practice), then drop.
+                        self.shared
+                            .stats
+                            .connections_rejected
+                            .fetch_add(1, Ordering::Relaxed);
+                        let _ = stream.set_nonblocking(true);
+                        let mut s = stream;
+                        let _ = s.write(&reply_line(protocol::busy_json(
+                            "server busy: connection limit reached",
+                        )));
+                        continue;
+                    }
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    self.shared
+                        .stats
+                        .connections_accepted
+                        .fetch_add(1, Ordering::Relaxed);
+                    // The gauge is bumped at hand-off (not adoption) so
+                    // the admission check never undercounts a burst that
+                    // is still sitting in injection queues.
+                    self.shared.stats.connections.fetch_add(1, Ordering::Relaxed);
+                    let nthreads = self.shared.inject.len();
+                    let t = self.shared.rr.fetch_add(1, Ordering::Relaxed) % nthreads;
+                    locked(&self.shared.inject[t]).push(stream);
+                    self.shared.wakers[t].ring();
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    log::warn!("accept failed: {e}");
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Register connections handed over by the acceptor.
+    fn adopt_injected(&mut self) {
+        let streams: Vec<TcpStream> = std::mem::take(&mut *locked(&self.shared.inject[self.idx]));
+        for stream in streams {
+            if self.draining {
+                self.shared.stats.connections.fetch_sub(1, Ordering::Relaxed);
+                continue; // drained before adoption: just drop
+            }
+            let id = self.shared.conn_ids.fetch_add(1, Ordering::Relaxed);
+            let fd = stream.as_raw_fd();
+            let conn = Conn::new(stream);
+            if self.epoll.add(fd, conn.interest, id).is_err() {
+                self.shared.stats.connections.fetch_sub(1, Ordering::Relaxed);
+                continue;
+            }
+            self.conns.insert(id, conn);
+        }
+    }
+
+    fn conn_ready(&mut self, id: u64, mask: u32) {
+        let Some(mut conn) = self.conns.remove(&id) else {
+            return;
+        };
+        if mask & (EPOLLIN | EPOLLRDHUP | EPOLLERR | EPOLLHUP) != 0 {
+            self.read_ready(id, &mut conn);
+        }
+        if mask & EPOLLOUT != 0 {
+            self.write_socket(&mut conn);
+            self.flush(&mut conn);
+        }
+        self.settle(id, conn);
+    }
+
+    /// Drain the socket into the framer, then run as many complete frames
+    /// as the in-flight cap allows.
+    fn read_ready(&mut self, id: u64, conn: &mut Conn) {
+        let mut buf = [0u8; 16384];
+        loop {
+            match conn.stream.read(&mut buf) {
+                Ok(0) => {
+                    conn.eof = true;
+                    break;
+                }
+                Ok(n) => conn.framer.push(&buf[..n]),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    conn.dead = true;
+                    return;
+                }
+            }
+        }
+        self.process_frames(id, conn);
+    }
+
+    /// Frame → parse → submit, mirroring the blocking server's per-line
+    /// pipeline (UTF-8 check, blank-line skip, shared parser) exactly.
+    /// Every frame that produces a reply claims a sequence number, so
+    /// immediate replies (parse errors, sheds) stay ordered with shard
+    /// completions.
+    fn process_frames(&mut self, id: u64, conn: &mut Conn) {
+        while !conn.closing && conn.inflight < self.shared.max_inflight {
+            let frame = match conn.framer.next() {
+                Some(f) => f,
+                // At EOF the blocking server processes a trailing
+                // unterminated line as a request; do the same.
+                None => match conn.eof.then(|| conn.framer.take_remainder()).flatten() {
+                    Some(bytes) => Frame::Line(bytes),
+                    None => break,
+                },
+            };
+            match frame {
+                Frame::Oversized => {
+                    let seq = conn.next_seq;
+                    conn.next_seq += 1;
+                    conn.done.insert(
+                        seq,
+                        reply_line(protocol::error_json(&format!(
+                            "oversized request: line exceeds {} bytes",
+                            protocol::MAX_REQUEST_BYTES
+                        ))),
+                    );
+                    conn.closing = true;
+                }
+                Frame::Line(bytes) => {
+                    let parsed = match std::str::from_utf8(&bytes) {
+                        Ok(line) if line.trim().is_empty() => continue, // no reply, no seq
+                        Ok(line) => protocol::parse_request(line.trim())
+                            .map_err(|e| format!("{e:#}")),
+                        Err(_) => Err("request line is not valid UTF-8".to_string()),
+                    };
+                    let seq = conn.next_seq;
+                    conn.next_seq += 1;
+                    match parsed {
+                        Ok(req) => {
+                            let reply = ReplyTo::Async {
+                                tx: self.ctx.clone(),
+                                conn: id,
+                                seq,
+                                wake: self.wake_fn.clone(),
+                            };
+                            match self.shared.client.submit(req, reply) {
+                                Ok(()) => conn.inflight += 1,
+                                Err(SubmitError::Busy) => {
+                                    self.shared
+                                        .stats
+                                        .requests_shed
+                                        .fetch_add(1, Ordering::Relaxed);
+                                    conn.done.insert(
+                                        seq,
+                                        reply_line(protocol::busy_json(
+                                            "server busy: shard queue full",
+                                        )),
+                                    );
+                                }
+                                Err(SubmitError::Closed) => {
+                                    conn.done.insert(
+                                        seq,
+                                        reply_line(protocol::error_json(
+                                            "server shutting down",
+                                        )),
+                                    );
+                                    conn.closing = true;
+                                }
+                            }
+                        }
+                        Err(e) => {
+                            conn.done.insert(seq, reply_line(protocol::error_json(&e)));
+                        }
+                    }
+                }
+            }
+        }
+        self.flush(conn);
+    }
+
+    /// Serialize a shard response; the pool-wide stats snapshot gets the
+    /// front end's own counters grafted in.
+    fn serialize(&self, resp: &Response) -> Vec<u8> {
+        let j = match resp {
+            Response::Stats(inner) => {
+                let mut stats = inner.clone();
+                if let Json::Obj(map) = &mut stats {
+                    map.insert("frontend".into(), self.shared.stats.to_json());
+                }
+                Json::obj(vec![("ok", Json::Bool(true)), ("stats", stats)])
+            }
+            other => protocol::response_to_json(other),
+        };
+        reply_line(j)
+    }
+
+    fn drain_completions(&mut self) {
+        while let Ok(c) = self.crx.try_recv() {
+            let line = self.serialize(&c.resp);
+            let Some(mut conn) = self.conns.remove(&c.conn) else {
+                continue; // connection died with requests in flight
+            };
+            conn.inflight -= 1;
+            conn.done.insert(c.seq, line);
+            // Capacity freed: frames parked in the framer can resume.
+            self.process_frames(c.conn, &mut conn);
+            self.settle(c.conn, conn);
+        }
+    }
+
+    /// Release in-order completed replies into the write buffer and push
+    /// bytes at the socket.
+    fn flush(&mut self, conn: &mut Conn) {
+        while let Some(line) = conn.done.remove(&conn.next_flush) {
+            conn.wbuf.extend_from_slice(&line);
+            conn.next_flush += 1;
+        }
+        self.write_socket(conn);
+    }
+
+    fn write_socket(&mut self, conn: &mut Conn) {
+        let mut written = 0;
+        while written < conn.wbuf.len() {
+            match conn.stream.write(&conn.wbuf[written..]) {
+                Ok(0) => {
+                    conn.dead = true;
+                    break;
+                }
+                Ok(n) => written += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    conn.dead = true;
+                    break;
+                }
+            }
+        }
+        conn.wbuf.drain(..written);
+    }
+
+    /// Re-register interest and put the connection back in the map — or
+    /// close it if it has finished.
+    fn settle(&mut self, id: u64, mut conn: Conn) {
+        if conn.finished() {
+            let _ = self.epoll.del(conn.stream.as_raw_fd());
+            self.shared.stats.connections.fetch_sub(1, Ordering::Relaxed);
+            return; // dropping the Conn closes the socket
+        }
+        let mut want = EPOLLRDHUP;
+        let reads_on = !conn.eof
+            && !conn.closing
+            && !self.draining
+            && conn.inflight < self.shared.max_inflight
+            && conn.wbuf.len() < WBUF_HIGH_WATER;
+        if reads_on {
+            want |= EPOLLIN;
+        }
+        if !conn.wbuf.is_empty() {
+            want |= EPOLLOUT;
+        }
+        if want != conn.interest
+            && self
+                .epoll
+                .modify(conn.stream.as_raw_fd(), want, id)
+                .is_ok()
+        {
+            conn.interest = want;
+        }
+        self.conns.insert(id, conn);
+    }
+}
+
+/// A running readiness-driven front end.
+pub struct AsyncServer {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl AsyncServer {
+    /// Bind and spawn `opts.io_threads` event-loop threads. Thread 0 owns
+    /// the listener; all threads serve connections.
+    pub fn start(bind: &str, client: Client, opts: FrontendOptions) -> Result<AsyncServer> {
+        let listener = TcpListener::bind(bind).with_context(|| format!("binding {bind}"))?;
+        listener
+            .set_nonblocking(true)
+            .context("nonblocking listener")?;
+        let addr = listener.local_addr().context("listener addr")?;
+        let nthreads = opts.io_threads.max(1);
+        let wakers: Vec<Arc<EventFd>> = (0..nthreads)
+            .map(|_| EventFd::new().map(Arc::new))
+            .collect::<std::io::Result<_>>()
+            .context("creating wakers")?;
+        let shared = Arc::new(Shared {
+            client,
+            stats: Arc::new(FrontendStats::default()),
+            shutdown: AtomicBool::new(false),
+            inject: (0..nthreads).map(|_| Mutex::new(Vec::new())).collect(),
+            wakers,
+            max_connections: opts.max_connections,
+            max_inflight: opts.max_inflight_per_conn.max(1),
+            rr: AtomicUsize::new(0),
+            conn_ids: AtomicU64::new(0),
+        });
+        let mut threads = Vec::with_capacity(nthreads);
+        let mut listener = Some(listener);
+        for idx in 0..nthreads {
+            let epoll = Epoll::new().context("epoll_create1")?;
+            let wake = shared.wakers[idx].clone();
+            epoll
+                .add(wake.raw(), EPOLLIN, DATA_WAKE)
+                .context("registering waker")?;
+            let own_listener = if idx == 0 { listener.take() } else { None };
+            if let Some(l) = &own_listener {
+                epoll
+                    .add(l.as_raw_fd(), EPOLLIN, DATA_LISTENER)
+                    .context("registering listener")?;
+            }
+            let (ctx, crx) = mpsc::channel();
+            let wake_for_fn = wake.clone();
+            let thread = IoThread {
+                idx,
+                shared: shared.clone(),
+                epoll,
+                wake,
+                ctx,
+                crx,
+                wake_fn: Arc::new(move || wake_for_fn.ring()),
+                listener: own_listener,
+                conns: HashMap::new(),
+                draining: false,
+            };
+            let handle = std::thread::Builder::new()
+                .name(format!("vqt-io-{idx}"))
+                .spawn(move || thread.run())
+                .context("spawning io thread")?;
+            threads.push(handle);
+        }
+        log::info!(
+            "vqt async server listening on {addr} ({nthreads} io threads, \
+             max_connections={}, max_inflight_per_conn={})",
+            opts.max_connections,
+            opts.max_inflight_per_conn
+        );
+        Ok(AsyncServer {
+            addr,
+            shared,
+            threads,
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn stats(&self) -> Arc<FrontendStats> {
+        self.shared.stats.clone()
+    }
+
+    /// Graceful drain: stop accepting, flush in-flight replies, close
+    /// connections, join the IO threads. Call BEFORE tearing down the
+    /// coordinator — the drain waits on shard replies.
+    pub fn shutdown(mut self) {
+        self.shared.shutdown.store(true, Ordering::Relaxed);
+        for w in &self.shared.wakers {
+            w.ring();
+        }
+        for h in self.threads.drain(..) {
+            if h.join().is_err() {
+                log::error!("io thread panicked during shutdown");
+            }
+        }
+    }
+
+    /// Park until the IO threads exit (they don't, short of `shutdown` or
+    /// a fatal epoll error) — the serve-forever entry point.
+    pub fn join(mut self) -> Result<()> {
+        for h in self.threads.drain(..) {
+            h.join()
+                .map_err(|_| anyhow::anyhow!("io thread panicked"))?;
+        }
+        Ok(())
+    }
+}
+
+/// Serve forever on `cfg.bind` with the readiness-driven front end.
+pub fn serve_async(cfg: &ServeConfig, client: Client) -> Result<()> {
+    AsyncServer::start(&cfg.bind, client, FrontendOptions::from_cfg(cfg))?.join()
+}

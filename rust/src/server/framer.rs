@@ -1,0 +1,176 @@
+//! Streaming newline framer for the readiness-driven front end.
+//!
+//! The blocking server frames with `BufRead::read_until(b'\n')` behind a
+//! `take(READ_LIMIT_BYTES)` guard: a connection is declared oversized
+//! exactly when the first `READ_LIMIT_BYTES` bytes of a line contain no
+//! newline. The event loop receives the same byte stream in arbitrary
+//! readiness-sized chunks, so this framer re-implements that rule
+//! incrementally — the differential tests in `tests/prop_framer.rs` hold
+//! the two framings bit-identical at every split boundary.
+
+/// One framing step's output.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Frame {
+    /// A complete line, trailing newline stripped. Byte content is
+    /// unvalidated — UTF-8 and JSON checks happen downstream, in the same
+    /// order the blocking server applies them.
+    Line(Vec<u8>),
+    /// The line cap was exceeded before a newline arrived. The connection
+    /// cannot be resynced to a message boundary: the caller must emit the
+    /// oversized error and close. The framer yields this once and then
+    /// only `None`.
+    Oversized,
+}
+
+/// Incremental line framer with the blocking server's oversized rule.
+#[derive(Debug)]
+pub struct LineFramer {
+    buf: Vec<u8>,
+    /// Prefix of `buf` already scanned and known newline-free, so repeated
+    /// `next()` calls across partial reads stay O(bytes), not O(bytes²).
+    scanned: usize,
+    limit: usize,
+    dead: bool,
+}
+
+impl LineFramer {
+    /// `limit` is the per-line byte cap INCLUDING the newline window —
+    /// the server passes `READ_LIMIT_BYTES`, keeping the async cap derived
+    /// from the same shared constant as the blocking read cap.
+    pub fn new(limit: usize) -> Self {
+        LineFramer {
+            buf: Vec::new(),
+            scanned: 0,
+            limit,
+            dead: false,
+        }
+    }
+
+    /// Append bytes read from the socket.
+    pub fn push(&mut self, bytes: &[u8]) {
+        if !self.dead {
+            self.buf.extend_from_slice(bytes);
+        }
+    }
+
+    /// Bytes currently buffered and not yet framed.
+    pub fn pending(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Pop the next complete frame, if any. `None` means "need more
+    /// bytes" (or the framer is dead after `Oversized`).
+    pub fn next(&mut self) -> Option<Frame> {
+        if self.dead {
+            return None;
+        }
+        let window = self.buf.len().min(self.limit);
+        if let Some(off) = self.buf[self.scanned..window].iter().position(|&b| b == b'\n') {
+            let nl = self.scanned + off;
+            let mut line: Vec<u8> = self.buf.drain(..=nl).collect();
+            line.pop(); // strip '\n'
+            self.scanned = 0;
+            return Some(Frame::Line(line));
+        }
+        self.scanned = window;
+        if self.scanned >= self.limit {
+            // Same boundary as the blocking server: `limit` bytes read,
+            // none of them a newline ⇒ oversized, unrecoverable.
+            self.dead = true;
+            return Some(Frame::Oversized);
+        }
+        None
+    }
+
+    /// Take the trailing unterminated line at EOF, if any. The blocking
+    /// server's `read_until` returns a final partial line when the peer
+    /// half-closes without a newline and processes it as a request; call
+    /// this once `next()` returns `None` on an EOF'd stream to match.
+    /// Always under `limit` bytes — a full window is `Oversized`, not a
+    /// remainder.
+    pub fn take_remainder(&mut self) -> Option<Vec<u8>> {
+        if self.dead || self.buf.is_empty() {
+            return None;
+        }
+        self.scanned = 0;
+        Some(std::mem::take(&mut self.buf))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(f: &mut LineFramer) -> Vec<Frame> {
+        std::iter::from_fn(|| f.next()).collect()
+    }
+
+    #[test]
+    fn frames_whole_and_split_lines() {
+        let mut f = LineFramer::new(64);
+        f.push(b"abc\nde");
+        assert_eq!(drain(&mut f), vec![Frame::Line(b"abc".to_vec())]);
+        f.push(b"f\n\n");
+        assert_eq!(
+            drain(&mut f),
+            vec![Frame::Line(b"def".to_vec()), Frame::Line(b"".to_vec())]
+        );
+    }
+
+    #[test]
+    fn byte_at_a_time_equals_one_push() {
+        let input = b"hello\nworld\n";
+        let mut a = LineFramer::new(64);
+        a.push(input);
+        let whole = drain(&mut a);
+        let mut b = LineFramer::new(64);
+        let mut split = Vec::new();
+        for &byte in input {
+            b.push(&[byte]);
+            split.extend(drain(&mut b));
+        }
+        assert_eq!(whole, split);
+    }
+
+    #[test]
+    fn oversized_at_exactly_the_blocking_boundary() {
+        // A newline AT the limit boundary (line of limit-1 content bytes)
+        // is still a line; one more content byte is oversized.
+        let mut ok = LineFramer::new(8);
+        ok.push(b"1234567\n");
+        assert_eq!(drain(&mut ok), vec![Frame::Line(b"1234567".to_vec())]);
+        let mut over = LineFramer::new(8);
+        over.push(b"12345678");
+        assert_eq!(drain(&mut over), vec![Frame::Oversized]);
+        // Dead after oversized: later bytes never resync.
+        over.push(b"\nok\n");
+        assert_eq!(drain(&mut over), vec![]);
+    }
+
+    #[test]
+    fn remainder_is_the_trailing_partial_line_only() {
+        let mut f = LineFramer::new(64);
+        f.push(b"done\npartial");
+        assert_eq!(drain(&mut f), vec![Frame::Line(b"done".to_vec())]);
+        assert_eq!(f.take_remainder(), Some(b"partial".to_vec()));
+        assert_eq!(f.take_remainder(), None);
+        // A dead framer never yields a remainder.
+        let mut over = LineFramer::new(4);
+        over.push(b"12345");
+        assert_eq!(drain(&mut over), vec![Frame::Oversized]);
+        assert_eq!(over.take_remainder(), None);
+    }
+
+    #[test]
+    fn limit_window_resets_per_line() {
+        let mut f = LineFramer::new(8);
+        f.push(b"1234567\n1234567\n");
+        assert_eq!(
+            drain(&mut f),
+            vec![
+                Frame::Line(b"1234567".to_vec()),
+                Frame::Line(b"1234567".to_vec())
+            ]
+        );
+    }
+}

@@ -1,6 +1,12 @@
-//! TCP JSON server: newline-delimited JSON requests over TCP, one
-//! connection per client thread, all inference routed through the
-//! coordinator's channel client.
+//! TCP JSON server: newline-delimited JSON requests over TCP, all
+//! inference routed through the coordinator's channel client. Two front
+//! ends share the wire protocol and produce bit-identical replies:
+//!
+//! - [`serve`]: the blocking thread-per-connection reference server;
+//! - [`serve_async`] (Linux): the readiness-driven epoll event loop in
+//!   [`event_loop`] — a fixed pool of IO threads, incremental framing
+//!   ([`framer`]), admission control, and typed `Busy` load shedding.
+//!   See `docs/ARCHITECTURE.md` §10.
 //!
 //! Wire protocol (one JSON object per line):
 //! ```text
@@ -21,7 +27,13 @@
 //! → {"op":"restore","session":"s1","path":"s1.vqss"}
 //! ```
 
+pub mod framer;
 pub mod protocol;
+
+#[cfg(target_os = "linux")]
+pub mod event_loop;
+#[cfg(target_os = "linux")]
+pub mod poll;
 
 use crate::coordinator::Client;
 use anyhow::{Context, Result};
@@ -29,6 +41,21 @@ use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 
 pub use protocol::{parse_request, response_to_json, MAX_REQUEST_BYTES};
+
+#[cfg(target_os = "linux")]
+pub use event_loop::{serve_async, AsyncServer, FrontendOptions, FrontendStats};
+
+/// Non-Linux fallback: the readiness-driven front end is epoll-based, so
+/// other platforms keep the thread-per-connection blocking server (same
+/// wire protocol, same replies — only the concurrency model differs).
+#[cfg(not(target_os = "linux"))]
+pub fn serve_async(cfg: &crate::config::ServeConfig, client: Client) -> Result<()> {
+    log::warn!(
+        "readiness-driven front end requires Linux; serving with the blocking \
+         thread-per-connection server"
+    );
+    serve(&cfg.bind, client)
+}
 
 /// Socket read cap for one request line: the single shared
 /// [`MAX_REQUEST_BYTES`] plus newline slack (CR+LF). Derived — never

@@ -235,6 +235,17 @@ pub fn error_json(msg: &str) -> Json {
     Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(msg))])
 }
 
+/// Typed load-shed reply: `busy:true` distinguishes "server saturated,
+/// retry later" from a request the client got wrong — a client can back
+/// off on `busy` without parsing error strings.
+pub fn busy_json(msg: &str) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("busy", Json::Bool(true)),
+        ("error", Json::str(msg)),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -343,5 +354,9 @@ mod tests {
         let err = error_json("boom");
         assert_eq!(err.get("ok").as_bool(), Some(false));
         assert_eq!(err.get("error").as_str(), Some("boom"));
+        let busy = busy_json("shard queue full");
+        assert_eq!(busy.get("ok").as_bool(), Some(false));
+        assert_eq!(busy.get("busy").as_bool(), Some(true));
+        assert_eq!(busy.get("error").as_str(), Some("shard queue full"));
     }
 }

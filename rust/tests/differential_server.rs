@@ -1,0 +1,310 @@
+//! Differential test: the readiness-driven async front end must be
+//! bit-identical on the wire to the blocking thread-per-connection server
+//! — same multi-session script in, byte-for-byte same reply lines out —
+//! plus admission-control and typed load-shedding behavior that only the
+//! async front end has.
+#![cfg(target_os = "linux")]
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use vqt::config::{ModelConfig, ServeConfig};
+use vqt::coordinator::{Backend, Coordinator};
+use vqt::incremental::EngineOptions;
+use vqt::model::ModelWeights;
+use vqt::server::{AsyncServer, FrontendOptions};
+use vqt::util::Json;
+
+fn coordinator(tag: &str, cfg_mut: impl FnOnce(&mut ServeConfig)) -> Coordinator {
+    let cfg = ModelConfig::vqt_tiny();
+    // Same seed for both coordinators: identical weights ⇒ identical
+    // logits ⇒ the replies can be compared as raw bytes.
+    let w = Arc::new(ModelWeights::random(&cfg, 5));
+    let mut sc = ServeConfig::default();
+    sc.workers = 2;
+    sc.spill_dir = std::env::temp_dir()
+        .join(format!("vqt_diff_spill_{tag}_{}", std::process::id()))
+        .to_str()
+        .unwrap()
+        .to_string();
+    cfg_mut(&mut sc);
+    Coordinator::start(
+        Backend {
+            weights: w,
+            artifacts_dir: None,
+            engine_opts: EngineOptions::default(),
+        },
+        sc,
+    )
+}
+
+/// One scripted exchange: raw bytes to write, number of reply lines owed.
+/// (Blank/whitespace lines owe none — both servers skip them silently.)
+struct Step(Vec<u8>, usize);
+
+fn step(line: &str, replies: usize) -> Step {
+    let mut b = line.as_bytes().to_vec();
+    b.push(b'\n');
+    Step(b, replies)
+}
+
+/// A multi-session script touching every differential-safe verb (no
+/// `stats`: the async server grafts its own `frontend` counters into that
+/// one reply by design) plus the error paths panic-proofed in this series.
+fn script() -> Vec<Step> {
+    vec![
+        step(r#"{"op":"open","session":"s1","tokens":[1,2,3,4,5,6,7,8]}"#, 1),
+        step(r#"{"op":"open","session":"s2","tokens":[9,8,7,6,5,4,3,2,1]}"#, 1),
+        step(r#"{"op":"open","session":"s3","tokens":[11,12,13,14,15,16]}"#, 1),
+        // Blank and whitespace-only lines produce no reply on either server.
+        Step(b"\n   \n".to_vec(), 0),
+        step(r#"{"op":"edit","session":"s1","kind":"replace","at":2,"tok":40}"#, 1),
+        step(r#"{"op":"edit","session":"s2","kind":"insert","at":0,"tok":7}"#, 1),
+        step(r#"{"op":"edit","session":"s3","kind":"delete","at":5}"#, 1),
+        step(r#"{"op":"revision","session":"s1","tokens":[1,2,3,9,9,6,7,8,10]}"#, 1),
+        step(r#"{"op":"suggest","session":"s2","k":4}"#, 1),
+        step(r#"{"op":"dense","tokens":[3,1,4,1,5]}"#, 1),
+        step(r#"{"op":"batch_revisions","base":[1,2,3,4],"revisions":[[1,2,3,5],[1,2,4]]}"#, 1),
+        step(r#"{"op":"session_info","session":"s3"}"#, 1),
+        step(r#"{"op":"suspend","session":"s3"}"#, 1),
+        step(r#"{"op":"session_info","session":"s3"}"#, 1),
+        step(r#"{"op":"resume","session":"s3"}"#, 1),
+        step(r#"{"op":"edit","session":"s3","kind":"replace","at":0,"tok":2}"#, 1),
+        // Typed errors — the panic-proofed paths, byte-identical too.
+        step(r#"{"op":"edit","session":"s1","kind":"replace","at":9999,"tok":1}"#, 1),
+        step(r#"{"op":"revision","session":"s1","tokens":[]}"#, 1),
+        step(r#"{"op":"open","session":"s4","tokens":[]}"#, 1),
+        step(r#"{"op":"dense","tokens":[]}"#, 1),
+        step(r#"{"op":"suggest","session":"nope","k":2}"#, 1),
+        step(r#"{"op":"oops"}"#, 1),
+        step(r#"not json at all"#, 1),
+        Step(b"\xff\xfe not utf8\n".to_vec(), 1),
+        // The session the typed errors hit keeps serving.
+        step(r#"{"op":"edit","session":"s1","kind":"replace","at":0,"tok":3}"#, 1),
+        step(r#"{"op":"close","session":"s2"}"#, 1),
+        step(r#"{"op":"close","session":"s2"}"#, 1),
+    ]
+}
+
+/// Drive a server in lockstep (write one step, read its owed replies) and
+/// return every reply line verbatim.
+fn run_script(addr: std::net::SocketAddr, steps: &[Step]) -> Vec<String> {
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut out = Vec::new();
+    for Step(bytes, replies) in steps {
+        conn.write_all(bytes).unwrap();
+        for _ in 0..*replies {
+            let mut line = String::new();
+            assert!(reader.read_line(&mut line).unwrap() > 0, "server hung up early");
+            out.push(line);
+        }
+    }
+    // Trailing unterminated request, then half-close: both servers process
+    // it as a final request and reply before closing.
+    conn.write_all(br#"{"op":"dense","tokens":[2,2,2]}"#).unwrap();
+    conn.shutdown(std::net::Shutdown::Write).unwrap();
+    let mut line = String::new();
+    assert!(reader.read_line(&mut line).unwrap() > 0, "no reply to EOF-partial line");
+    out.push(line);
+    assert_eq!(reader.read_line(&mut String::new()).unwrap(), 0, "clean close after EOF");
+    out
+}
+
+#[test]
+fn async_server_is_bit_identical_to_blocking_server() {
+    let steps = script();
+
+    // Blocking reference endpoint.
+    let c_blocking = coordinator("blk", |_| {});
+    let client = c_blocking.client();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let blocking_addr = listener.local_addr().unwrap();
+    let acceptor = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        let _ = vqt::server::handle_conn(stream, client);
+    });
+    let blocking_replies = run_script(blocking_addr, &steps);
+    acceptor.join().unwrap();
+
+    // Async endpoint, identically-seeded coordinator.
+    let c_async = coordinator("async", |_| {});
+    let server = AsyncServer::start(
+        "127.0.0.1:0",
+        c_async.client(),
+        FrontendOptions {
+            io_threads: 2,
+            max_connections: 0,
+            max_inflight_per_conn: 32,
+        },
+    )
+    .unwrap();
+    let async_replies = run_script(server.local_addr(), &steps);
+    server.shutdown();
+
+    assert_eq!(blocking_replies.len(), async_replies.len());
+    for (i, (b, a)) in blocking_replies.iter().zip(&async_replies).enumerate() {
+        assert_eq!(b, a, "reply {i} diverged");
+    }
+    // Paranoia: the script exercised real replies, not just errors.
+    assert!(blocking_replies.iter().any(|l| l.contains("\"logits\"")));
+    assert!(blocking_replies.iter().any(|l| l.contains("\"suggestions\"")));
+}
+
+/// Pipelined requests on one connection come back in request order even
+/// though shards complete them concurrently, and a full shard queue sheds
+/// with `busy:true` instead of queueing unboundedly.
+#[test]
+fn pipelined_requests_stay_ordered_and_overload_sheds_typed_busy() {
+    // A one-worker, one-slot queue: while the worker chews on the opening
+    // request, pipelined followers overflow the queue and must be shed.
+    let c = coordinator("shed", |sc| {
+        sc.workers = 1;
+        sc.queue_capacity = 1;
+    });
+    let server = AsyncServer::start(
+        "127.0.0.1:0",
+        c.client(),
+        FrontendOptions {
+            io_threads: 1,
+            max_connections: 0,
+            max_inflight_per_conn: 64,
+        },
+    )
+    .unwrap();
+    let mut conn = TcpStream::connect(server.local_addr()).unwrap();
+    let mut batch = Vec::new();
+    // An expensive head (fresh engine build) followed by a cheap tail,
+    // written as ONE burst so the tail parses while the head executes.
+    batch.extend_from_slice(
+        br#"{"op":"open","session":"big","tokens":[1,2,3,4,5,6,7,8,9,10,11,12,13,14,15,16,17,18,19,20,21,22,23,24,25,26,27,28,29,30,31,32,33,34,35,36,37,38,39,40,41,42,43,44,45,46,47,48]}"#,
+    );
+    batch.push(b'\n');
+    const TAIL: usize = 24;
+    for _ in 0..TAIL {
+        batch.extend_from_slice(br#"{"op":"dense","tokens":[1,2,3,4]}"#);
+        batch.push(b'\n');
+    }
+    conn.write_all(&batch).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut ok = 0usize;
+    let mut busy = 0usize;
+    let mut first: Option<Json> = None;
+    for _ in 0..TAIL + 1 {
+        let mut line = String::new();
+        assert!(reader.read_line(&mut line).unwrap() > 0, "missing reply");
+        let j = Json::parse(&line).unwrap();
+        if first.is_none() {
+            first = Some(j.clone());
+        }
+        match (j.get("ok").as_bool(), j.get("busy").as_bool()) {
+            (Some(true), _) => ok += 1,
+            (Some(false), Some(true)) => busy += 1,
+            other => panic!("reply neither ok nor typed-busy: {other:?} in {line}"),
+        }
+    }
+    // Ordering: the first reply on the wire is the head request's.
+    assert!(
+        first.unwrap().get("logits").as_arr().is_some(),
+        "head reply must come first"
+    );
+    assert_eq!(ok + busy, TAIL + 1);
+    assert!(busy >= 1, "tiny queue under a pipelined burst must shed");
+    assert_eq!(
+        server.stats().requests_shed.load(Ordering::Relaxed) as usize,
+        busy,
+        "shed counter must match busy replies"
+    );
+    server.shutdown();
+}
+
+/// `max_connections` admission control: past the cap a fresh connection
+/// gets one typed busy line and is dropped; closing a connection frees a
+/// slot.
+#[test]
+fn connection_cap_rejects_with_typed_busy_then_recovers() {
+    let c = coordinator("cap", |_| {});
+    let server = AsyncServer::start(
+        "127.0.0.1:0",
+        c.client(),
+        FrontendOptions {
+            io_threads: 2,
+            max_connections: 8,
+            max_inflight_per_conn: 4,
+        },
+    )
+    .unwrap();
+    let stats = server.stats();
+    let gauge = |stats: &vqt::server::FrontendStats| stats.connections.load(Ordering::Relaxed);
+    let mut held = Vec::new();
+    for _ in 0..8 {
+        held.push(TcpStream::connect(server.local_addr()).unwrap());
+    }
+    // The gauge is bumped at accept hand-off; wait for the acceptor to
+    // catch up with the burst before poking the cap.
+    for _ in 0..500 {
+        if gauge(&stats) == 8 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    assert_eq!(gauge(&stats), 8);
+    // Ninth connection: one typed busy line, then EOF.
+    let over = TcpStream::connect(server.local_addr()).unwrap();
+    let mut reader = BufReader::new(over);
+    let mut line = String::new();
+    assert!(reader.read_line(&mut line).unwrap() > 0);
+    let j = Json::parse(&line).unwrap();
+    assert_eq!(j.get("busy").as_bool(), Some(true), "{line}");
+    assert_eq!(reader.read_line(&mut line).unwrap(), 0, "rejected conn must close");
+    assert_eq!(stats.connections_rejected.load(Ordering::Relaxed), 1);
+    // Free a slot and the next admission succeeds end to end.
+    drop(held.pop());
+    for _ in 0..500 {
+        if gauge(&stats) < 8 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    let mut again = TcpStream::connect(server.local_addr()).unwrap();
+    again
+        .write_all(b"{\"op\":\"dense\",\"tokens\":[1,2,3]}\n")
+        .unwrap();
+    let mut reader = BufReader::new(again);
+    let mut line = String::new();
+    assert!(reader.read_line(&mut line).unwrap() > 0);
+    assert_eq!(Json::parse(&line).unwrap().get("ok").as_bool(), Some(true), "{line}");
+    drop(held);
+    server.shutdown();
+}
+
+/// The async server's `stats` reply carries the front end's own counters
+/// under `"frontend"` — the one deliberate difference from the blocking
+/// server's stats reply.
+#[test]
+fn stats_reply_carries_frontend_counters() {
+    let c = coordinator("fstats", |_| {});
+    let server = AsyncServer::start(
+        "127.0.0.1:0",
+        c.client(),
+        FrontendOptions {
+            io_threads: 1,
+            max_connections: 0,
+            max_inflight_per_conn: 4,
+        },
+    )
+    .unwrap();
+    let mut conn = TcpStream::connect(server.local_addr()).unwrap();
+    conn.write_all(b"{\"op\":\"stats\"}\n").unwrap();
+    let mut reader = BufReader::new(conn);
+    let mut line = String::new();
+    assert!(reader.read_line(&mut line).unwrap() > 0);
+    let j = Json::parse(&line).unwrap();
+    assert_eq!(j.get("ok").as_bool(), Some(true));
+    let fe = j.get("stats").get("frontend");
+    assert_eq!(fe.get("connections").as_usize(), Some(1), "{line}");
+    assert_eq!(fe.get("connections_accepted").as_usize(), Some(1));
+    assert_eq!(fe.get("requests_shed").as_usize(), Some(0));
+    server.shutdown();
+}

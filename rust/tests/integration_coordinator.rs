@@ -184,7 +184,7 @@ fn lru_eviction_under_session_pressure() {
 }
 
 #[test]
-fn worker_panic_surfaces_error_and_pool_survives() {
+fn malformed_edit_is_typed_error_session_survives() {
     let c = start(|sc| sc.workers = 2);
     let client = c.client();
     client
@@ -199,9 +199,9 @@ fn worker_panic_surfaces_error_and_pool_survives() {
             tokens: doc(2, 16),
         })
         .unwrap();
-    // An out-of-bounds edit panics inside the engine (assert). The shard
-    // must catch it, surface an error, and drop the poisoned session —
-    // not hang the caller or kill the pool.
+    // An out-of-bounds edit is rejected by typed pre-validation BEFORE it
+    // can trip the engine's asserts: the caller gets a descriptive error,
+    // the session keeps its state, and no panic is recorded.
     let r = client
         .request(Request::Edit {
             session: "a".into(),
@@ -209,18 +209,18 @@ fn worker_panic_surfaces_error_and_pool_survives() {
         })
         .unwrap();
     match &r {
-        Response::Err(e) => assert!(e.contains("panicked"), "error lacks cause: {e}"),
+        Response::Err(e) => assert!(e.contains("out of bounds"), "error lacks cause: {e}"),
         other => panic!("expected Err, got {other:?}"),
     }
-    // The panicking session is gone (its state can't be trusted)...
+    // The rejected session is still alive and serviceable...
     let r = client
         .request(Request::Edit {
             session: "a".into(),
             edit: Edit::Replace { at: 0, tok: 1 },
         })
         .unwrap();
-    assert!(matches!(r, Response::Err(_)), "poisoned session must be dropped");
-    // ...but other sessions and further requests keep being served.
+    assert!(r.logits().is_ok(), "rejected edit must not cost the session: {r:?}");
+    // ...as is everyone else.
     let r = client
         .request(Request::Edit {
             session: "b".into(),
@@ -228,12 +228,87 @@ fn worker_panic_surfaces_error_and_pool_survives() {
         })
         .unwrap();
     assert!(r.logits().is_ok(), "{r:?}");
-    // The merged snapshot records the panic.
+    // The merged snapshot shows a typed error, zero panics, both sessions.
     match client.request(Request::Stats).unwrap() {
         Response::Stats(j) => {
-            assert_eq!(j.get("panics").as_usize(), Some(1));
-            assert_eq!(j.get("live_sessions").as_usize(), Some(1));
+            assert_eq!(j.get("panics").as_usize(), Some(0));
+            assert!(j.get("errors").as_usize().unwrap() >= 1);
+            assert_eq!(j.get("live_sessions").as_usize(), Some(2));
         }
+        other => panic!("{other:?}"),
+    }
+}
+
+/// The empty-document sweep: every verb a client can point at an empty or
+/// emptied document returns a typed error (or a well-defined empty reply),
+/// with zero worker panics across the whole sweep.
+#[test]
+fn empty_document_paths_are_typed_errors_not_panics() {
+    let c = start(|_| {});
+    let client = c.client();
+    // open with [] → typed error (already covered; re-checked in-sweep).
+    let r = client
+        .request(Request::Open {
+            session: "e".into(),
+            tokens: vec![],
+        })
+        .unwrap();
+    assert!(matches!(r, Response::Err(_)));
+    // A real session, edited down to one token: the delete that would
+    // empty it is refused, so a document can never become empty.
+    client
+        .request(Request::Open {
+            session: "e".into(),
+            tokens: vec![5, 6],
+        })
+        .unwrap();
+    let r = client
+        .request(Request::EditScript {
+            session: "e".into(),
+            edits: vec![Edit::Delete { at: 0 }, Edit::Delete { at: 0 }],
+        })
+        .unwrap();
+    match &r {
+        Response::Err(e) => assert!(e.contains("cannot delete the last token"), "{e}"),
+        other => panic!("{other:?}"),
+    }
+    // revision to [] → typed error; suggest still works after all this.
+    let r = client
+        .request(Request::Revision {
+            session: "e".into(),
+            tokens: vec![],
+        })
+        .unwrap();
+    match &r {
+        Response::Err(e) => assert!(e.contains("empty revision"), "{e}"),
+        other => panic!("{other:?}"),
+    }
+    match client
+        .request(Request::Suggest {
+            session: "e".into(),
+            k: 3,
+        })
+        .unwrap()
+    {
+        Response::Suggestions(top) => assert_eq!(top.len(), 3),
+        other => panic!("{other:?}"),
+    }
+    // dense with [] and batch_revisions with an empty member → typed.
+    let r = client.request(Request::Dense { tokens: vec![] }).unwrap();
+    assert!(matches!(r, Response::Err(_)));
+    let r = client
+        .request(Request::BatchRevisions {
+            base: vec![1, 2, 3],
+            revisions: vec![vec![1, 2], vec![]],
+        })
+        .unwrap();
+    match &r {
+        Response::Err(e) => assert!(e.contains("empty revision"), "{e}"),
+        other => panic!("{other:?}"),
+    }
+    // The whole sweep cost zero panics.
+    match client.request(Request::Stats).unwrap() {
+        Response::Stats(j) => assert_eq!(j.get("panics").as_usize(), Some(0)),
         other => panic!("{other:?}"),
     }
 }
@@ -379,7 +454,9 @@ fn tcp_server_end_to_end() {
 
 #[test]
 fn suggest_checkpoint_restore_cycle() {
-    let c = start(|_| {});
+    let ckpt_dir = std::env::temp_dir().join(format!("vqt_itest_ckpt_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+    let c = start(|sc| sc.checkpoint_dir = ckpt_dir.to_str().unwrap().to_string());
     let client = c.client();
     let tokens = doc(20, 24);
     client
@@ -410,17 +487,17 @@ fn suggest_checkpoint_restore_cycle() {
         })
         .unwrap();
     let logits_before = r.logits().unwrap().to_vec();
-    let path = std::env::temp_dir().join(format!("vqt_ckpt_{}.bin", std::process::id()));
-    let path_s = path.to_str().unwrap().to_string();
+    // Checkpoint names are bare filenames, confined to checkpoint_dir.
     assert!(matches!(
         client
             .request(Request::Checkpoint {
                 session: "cp".into(),
-                path: path_s.clone(),
+                path: "cp.vqss".into(),
             })
             .unwrap(),
         Response::Done
     ));
+    assert!(ckpt_dir.join("cp.vqss").exists(), "checkpoint lands in checkpoint_dir");
     client
         .request(Request::Close {
             session: "cp".into(),
@@ -430,7 +507,7 @@ fn suggest_checkpoint_restore_cycle() {
         client
             .request(Request::Restore {
                 session: "cp2".into(),
-                path: path_s.clone(),
+                path: "cp.vqss".into(),
             })
             .unwrap(),
         Response::Done
@@ -446,15 +523,153 @@ fn suggest_checkpoint_restore_cycle() {
     for (a, b) in logits_before.iter().zip(logits_after) {
         assert!((a - b).abs() < 1e-4, "restored state diverged: {a} vs {b}");
     }
-    let _ = std::fs::remove_file(path);
-    // Path traversal rejected.
-    let r = client
-        .request(Request::Checkpoint {
-            session: "cp2".into(),
-            path: "../evil.bin".into(),
+    // Escapes are typed errors, not filesystem writes: traversal,
+    // absolute paths, and any separator-bearing name are all refused.
+    for evil in ["../evil.bin", "/tmp/evil.bin", "sub/dir.bin", "..", ""] {
+        let r = client
+            .request(Request::Checkpoint {
+                session: "cp2".into(),
+                path: evil.into(),
+            })
+            .unwrap();
+        match &r {
+            Response::Err(_) => {}
+            other => panic!("checkpoint {evil:?} must be rejected, got {other:?}"),
+        }
+        let r = client
+            .request(Request::Restore {
+                session: "cp3".into(),
+                path: evil.into(),
+            })
+            .unwrap();
+        assert!(matches!(r, Response::Err(_)), "restore {evil:?} must be rejected");
+    }
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+}
+
+/// With no `checkpoint_dir` configured, the checkpoint/restore verbs are
+/// disabled outright — a typed error, never a write relative to the
+/// server's cwd.
+#[test]
+fn checkpoint_disabled_without_configured_dir() {
+    let c = start(|_| {});
+    let client = c.client();
+    client
+        .request(Request::Open {
+            session: "nd".into(),
+            tokens: doc(21, 12),
         })
         .unwrap();
-    assert!(matches!(r, Response::Err(_)));
+    let r = client
+        .request(Request::Checkpoint {
+            session: "nd".into(),
+            path: "cp.vqss".into(),
+        })
+        .unwrap();
+    match &r {
+        Response::Err(e) => assert!(e.contains("no checkpoint_dir"), "{e}"),
+        other => panic!("{other:?}"),
+    }
+}
+
+/// Restoring on top of an existing session replaces the old incarnation
+/// cleanly: the resident engine (or its spill file) is released, the
+/// restore is counted under `sessions_restored` — not double-counted as a
+/// fresh `sessions_opened` — and the gauges stay truthful.
+#[test]
+fn restore_over_existing_session_replaces_cleanly() {
+    let ckpt_dir = std::env::temp_dir().join(format!("vqt_itest_ckptover_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+    let spill = temp_spill_dir("ckptover");
+    let c = start(|sc| {
+        sc.checkpoint_dir = ckpt_dir.to_str().unwrap().to_string();
+        sc.spill_dir = spill.to_str().unwrap().to_string();
+        sc.workers = 1; // same shard for both sessions: deterministic stats
+    });
+    let client = c.client();
+    let stats = |client: &vqt::coordinator::Client| match client.request(Request::Stats).unwrap() {
+        Response::Stats(j) => j,
+        other => panic!("{other:?}"),
+    };
+    client
+        .request(Request::Open {
+            session: "a".into(),
+            tokens: doc(40, 16),
+        })
+        .unwrap();
+    client
+        .request(Request::Checkpoint {
+            session: "a".into(),
+            path: "a.vqss".into(),
+        })
+        .unwrap();
+    let opened_before = stats(&client).get("sessions_opened").as_usize().unwrap();
+
+    // Restore over the RESIDENT incarnation of "a".
+    client
+        .request(Request::Edit {
+            session: "a".into(),
+            edit: Edit::Replace { at: 0, tok: 3 },
+        })
+        .unwrap();
+    assert!(matches!(
+        client
+            .request(Request::Restore {
+                session: "a".into(),
+                path: "a.vqss".into(),
+            })
+            .unwrap(),
+        Response::Done
+    ));
+    let j = stats(&client);
+    assert_eq!(j.get("sessions_restored").as_usize(), Some(1));
+    assert_eq!(
+        j.get("sessions_opened").as_usize(),
+        Some(opened_before),
+        "restore must not inflate sessions_opened"
+    );
+    assert_eq!(j.get("live_sessions").as_usize(), Some(1));
+
+    // Restore over a SUSPENDED incarnation: the old spill file must not
+    // leak — the replaced incarnation's state is released with it.
+    assert!(matches!(
+        client
+            .request(Request::Suspend {
+                session: "a".into(),
+            })
+            .unwrap(),
+        Response::Done
+    ));
+    let spilled = |dir: &std::path::Path| -> usize {
+        std::fs::read_dir(dir)
+            .map(|rd| rd.filter_map(|e| e.ok()).count())
+            .unwrap_or(0)
+    };
+    assert_eq!(spilled(&spill), 1, "suspend writes exactly one spill file");
+    assert!(matches!(
+        client
+            .request(Request::Restore {
+                session: "a".into(),
+                path: "a.vqss".into(),
+            })
+            .unwrap(),
+        Response::Done
+    ));
+    let j = stats(&client);
+    assert_eq!(j.get("sessions_restored").as_usize(), Some(2));
+    assert_eq!(j.get("spilled_sessions").as_usize(), Some(0), "old spill must be released");
+    assert_eq!(spilled(&spill), 0, "restore-over-suspended leaks a spill file");
+    assert_eq!(j.get("live_sessions").as_usize(), Some(1));
+    // And the surviving incarnation serves.
+    let r = client
+        .request(Request::Edit {
+            session: "a".into(),
+            edit: Edit::Replace { at: 1, tok: 4 },
+        })
+        .unwrap();
+    assert!(r.logits().is_ok(), "{r:?}");
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+    let _ = std::fs::remove_dir_all(&spill);
 }
 
 #[test]

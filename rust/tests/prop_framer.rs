@@ -1,0 +1,220 @@
+//! Differential framing tests: the event loop's incremental [`LineFramer`]
+//! must frame any byte stream bit-identically to the blocking server's
+//! `take(limit).read_until(b'\n')` loop — at EVERY chunk boundary, since
+//! readiness-sized reads can split the stream anywhere.
+
+use vqt::server::framer::{Frame, LineFramer};
+use vqt::util::Rng;
+
+/// What a framing pass says about a stream: the complete lines (newline
+/// stripped), whether it ended oversized, and the trailing unterminated
+/// line at EOF, if any.
+#[derive(Debug, PartialEq, Eq)]
+struct Framing {
+    lines: Vec<Vec<u8>>,
+    oversized: bool,
+    remainder: Option<Vec<u8>>,
+}
+
+/// Reference: the blocking server's exact loop (`handle_conn`), run over an
+/// in-memory stream. A line is oversized iff `read_until` fills the whole
+/// `take(limit)` window without finding a newline; a final partial line at
+/// EOF is returned (and processed) as-is.
+fn blocking_framing(input: &[u8], limit: usize) -> Framing {
+    use std::io::{BufRead, BufReader, Read};
+    let mut reader = BufReader::new(std::io::Cursor::new(input));
+    let mut out = Framing {
+        lines: Vec::new(),
+        oversized: false,
+        remainder: None,
+    };
+    let mut buf = Vec::new();
+    loop {
+        buf.clear();
+        let n = Read::by_ref(&mut reader)
+            .take(limit as u64)
+            .read_until(b'\n', &mut buf)
+            .unwrap();
+        if n == 0 {
+            return out;
+        }
+        if buf.last() != Some(&b'\n') && n == limit {
+            out.oversized = true;
+            return out; // connection dropped: the rest is never read
+        }
+        if buf.last() == Some(&b'\n') {
+            buf.pop();
+            out.lines.push(buf.clone());
+        } else {
+            out.remainder = Some(buf.clone()); // partial line at EOF
+            return out;
+        }
+    }
+}
+
+/// Run the incremental framer over `input` split at the given chunk sizes
+/// (the tail after the last boundary is pushed too), then signal EOF.
+fn incremental_framing(input: &[u8], limit: usize, chunks: &[usize]) -> Framing {
+    let mut f = LineFramer::new(limit);
+    let mut out = Framing {
+        lines: Vec::new(),
+        oversized: false,
+        remainder: None,
+    };
+    let mut drain = |f: &mut LineFramer, out: &mut Framing| {
+        while let Some(frame) = f.next() {
+            match frame {
+                Frame::Line(l) => out.lines.push(l),
+                Frame::Oversized => out.oversized = true,
+            }
+        }
+    };
+    let mut at = 0;
+    for &sz in chunks {
+        let end = (at + sz).min(input.len());
+        f.push(&input[at..end]);
+        drain(&mut f, &mut out);
+        at = end;
+    }
+    f.push(&input[at..]);
+    drain(&mut f, &mut out);
+    out.remainder = f.take_remainder();
+    out
+}
+
+const LIMIT: usize = 16;
+
+/// A corpus that exercises every boundary the rule has: empty lines, lines
+/// at limit-1/limit/limit+1 content bytes, and interleaved normal traffic.
+fn corpus() -> Vec<Vec<u8>> {
+    vec![
+        b"a\nbb\nccc\n".to_vec(),
+        b"\n\n\n".to_vec(),
+        b"123456789012345\n".to_vec(),   // limit-1 content + '\n': fits exactly
+        b"1234567890123456\n".to_vec(),  // limit content bytes: oversized
+        b"12345678901234567".to_vec(),   // oversized, no newline at all
+        b"ok\n1234567890123456\nnever\n".to_vec(), // oversized mid-stream
+        b"trailing-partial".to_vec(),    // EOF without newline
+        b"full\ntrailing".to_vec(),
+        b"".to_vec(),
+        b"exact-window-lin\nx\n".to_vec(),
+    ]
+}
+
+#[test]
+fn every_two_chunk_split_matches_the_blocking_reference() {
+    for input in corpus() {
+        let want = blocking_framing(&input, LIMIT);
+        for split in 0..=input.len() {
+            let got = incremental_framing(&input, LIMIT, &[split]);
+            assert_eq!(got, want, "input {input:?} split at {split}");
+        }
+    }
+}
+
+#[test]
+fn byte_at_a_time_matches_the_blocking_reference() {
+    for input in corpus() {
+        let want = blocking_framing(&input, LIMIT);
+        let ones = vec![1usize; input.len()];
+        let got = incremental_framing(&input, LIMIT, &ones);
+        assert_eq!(got, want, "input {input:?} byte-at-a-time");
+    }
+}
+
+#[test]
+fn random_chunk_schedules_match_the_blocking_reference() {
+    let mut rng = Rng::new(0xF4A3);
+    // One long adversarial stream: random lines whose lengths cluster
+    // around the limit boundary, plus occasional blanks.
+    let mut input = Vec::new();
+    for _ in 0..200 {
+        let len = rng.below(LIMIT + 4);
+        for _ in 0..len {
+            input.push(b'a' + (rng.below(26) as u8));
+        }
+        input.push(b'\n');
+    }
+    input.extend_from_slice(b"tail-without-newline");
+    let want = blocking_framing(&input, LIMIT);
+    for _ in 0..50 {
+        let mut chunks = Vec::new();
+        let mut total = 0;
+        while total < input.len() {
+            let c = 1 + rng.below(32);
+            chunks.push(c);
+            total += c;
+        }
+        let got = incremental_framing(&input, LIMIT, &chunks);
+        assert_eq!(got, want);
+    }
+}
+
+/// Interleaved connections: many framers fed round-robin in small chunks
+/// (as one IO thread does across its sockets) frame independently — one
+/// connection's partial line never bleeds into another's.
+#[test]
+fn interleaved_framers_keep_streams_independent() {
+    let streams: Vec<Vec<u8>> = (0..8)
+        .map(|i| {
+            let mut rng = Rng::new(100 + i as u64);
+            let mut s = Vec::new();
+            for _ in 0..40 {
+                let len = rng.below(LIMIT - 1);
+                for _ in 0..len {
+                    s.push(b'0' + (i as u8));
+                }
+                s.push(b'\n');
+            }
+            s
+        })
+        .collect();
+    let mut framers: Vec<LineFramer> = (0..8).map(|_| LineFramer::new(LIMIT)).collect();
+    let mut got: Vec<Vec<Vec<u8>>> = vec![Vec::new(); 8];
+    let mut offsets = vec![0usize; 8];
+    let mut rng = Rng::new(7);
+    while offsets.iter().zip(&streams).any(|(&o, s)| o < s.len()) {
+        for i in 0..8 {
+            let (o, s) = (offsets[i], &streams[i]);
+            if o >= s.len() {
+                continue;
+            }
+            let end = (o + 1 + rng.below(5)).min(s.len());
+            framers[i].push(&s[o..end]);
+            offsets[i] = end;
+            while let Some(Frame::Line(l)) = framers[i].next() {
+                got[i].push(l);
+            }
+        }
+    }
+    for i in 0..8 {
+        let want = blocking_framing(&streams[i], LIMIT);
+        assert_eq!(got[i], want.lines, "stream {i}");
+        // Every line of stream i is made of stream i's own byte.
+        for l in &got[i] {
+            assert!(l.iter().all(|&b| b == b'0' + i as u8));
+        }
+    }
+}
+
+/// The server-facing limit: the framer is constructed with the same
+/// `READ_LIMIT_BYTES` window the blocking reader uses, so a line of
+/// exactly `MAX_REQUEST_BYTES` bytes plus newline still frames, and the
+/// parser (not the framer) is what rejects it from there on up.
+#[test]
+fn server_limit_admits_exactly_what_the_blocking_reader_admits() {
+    let limit = vqt::server::MAX_REQUEST_BYTES + 2;
+    let mut line = vec![b'x'; vqt::server::MAX_REQUEST_BYTES + 1];
+    line.push(b'\n');
+    let mut f = LineFramer::new(limit);
+    f.push(&line);
+    match f.next() {
+        Some(Frame::Line(l)) => assert_eq!(l.len(), vqt::server::MAX_REQUEST_BYTES + 1),
+        other => panic!("{other:?}"),
+    }
+    assert_eq!(
+        blocking_framing(&line, limit).lines.len(),
+        1,
+        "blocking reader admits the same line"
+    );
+}

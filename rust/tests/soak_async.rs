@@ -1,0 +1,136 @@
+//! Soak smoke for the readiness-driven front end: ≥1k truly concurrent
+//! connections served on a fixed, small thread count. Ignored by default
+//! (CI runs it in the `--ignored` tier with `--release`).
+#![cfg(target_os = "linux")]
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use vqt::config::{ModelConfig, ServeConfig};
+use vqt::coordinator::{Backend, Coordinator};
+use vqt::incremental::EngineOptions;
+use vqt::model::ModelWeights;
+use vqt::server::{AsyncServer, FrontendOptions};
+use vqt::util::Json;
+
+const CONNS: usize = 1000;
+
+/// Current thread count of this process (server + test harness combined),
+/// from `/proc/self/status` — the soak's whole point is that this number
+/// stays O(io_threads + workers), not O(connections).
+fn process_threads() -> usize {
+    let status = std::fs::read_to_string("/proc/self/status").unwrap();
+    status
+        .lines()
+        .find_map(|l| l.strip_prefix("Threads:"))
+        .and_then(|v| v.trim().parse().ok())
+        .unwrap()
+}
+
+/// Best-effort `RLIMIT_NOFILE` bump: 1k client + 1k server sockets need
+/// ~2k fds, and some CI soft limits sit at 1024. Declared directly against
+/// the libc `std` links (same zero-dep approach as `server::poll`).
+fn raise_fd_limit() {
+    #[repr(C)]
+    struct Rlimit {
+        cur: u64,
+        max: u64,
+    }
+    extern "C" {
+        fn getrlimit(resource: i32, rlim: *mut Rlimit) -> i32;
+        fn setrlimit(resource: i32, rlim: *const Rlimit) -> i32;
+    }
+    const RLIMIT_NOFILE: i32 = 7;
+    let mut lim = Rlimit { cur: 0, max: 0 };
+    if unsafe { getrlimit(RLIMIT_NOFILE, &mut lim) } == 0 && lim.cur < lim.max {
+        lim.cur = lim.max;
+        unsafe { setrlimit(RLIMIT_NOFILE, &lim) };
+    }
+}
+
+#[test]
+#[ignore = "soak: 1k concurrent connections; run with --ignored"]
+fn thousand_concurrent_connections_on_a_fixed_thread_budget() {
+    raise_fd_limit();
+    let cfg = ModelConfig::vqt_tiny();
+    let w = Arc::new(ModelWeights::random(&cfg, 5));
+    let mut sc = ServeConfig::default();
+    sc.workers = 2;
+    // Size the shard queues for the full burst: this soak measures thread
+    // scaling, not load shedding (shedding has its own differential test).
+    sc.queue_capacity = 4 * CONNS;
+    let c = Coordinator::start(
+        Backend {
+            weights: w,
+            artifacts_dir: None,
+            engine_opts: EngineOptions::default(),
+        },
+        sc,
+    );
+    let server = AsyncServer::start(
+        "127.0.0.1:0",
+        c.client(),
+        FrontendOptions {
+            io_threads: 2,
+            max_connections: 0,
+            max_inflight_per_conn: 4,
+        },
+    )
+    .unwrap();
+    let baseline_threads = process_threads();
+
+    // Establish every connection and put one request on each wire before
+    // reading any reply: all CONNS connections are concurrently open and
+    // concurrently in flight.
+    let mut conns = Vec::with_capacity(CONNS);
+    for i in 0..CONNS {
+        let mut s = TcpStream::connect(server.local_addr())
+            .unwrap_or_else(|e| panic!("connect {i}: {e}"));
+        s.set_read_timeout(Some(std::time::Duration::from_secs(60)))
+            .unwrap();
+        let t = i % 60;
+        s.write_all(format!("{{\"op\":\"dense\",\"tokens\":[{t},1,2,3]}}\n").as_bytes())
+            .unwrap();
+        conns.push(s);
+    }
+
+    // The thread count is a budget, not a function of load: with every
+    // connection open, the process grew by ZERO threads per connection.
+    let peak_threads = process_threads();
+    assert!(
+        peak_threads <= baseline_threads + 4,
+        "thread count grew with connections: {baseline_threads} -> {peak_threads}"
+    );
+
+    let mut ok = 0usize;
+    for (i, s) in conns.iter_mut().enumerate() {
+        let mut reader = BufReader::new(s);
+        let mut line = String::new();
+        assert!(
+            reader.read_line(&mut line).unwrap_or_else(|e| panic!("read {i}: {e}")) > 0,
+            "conn {i}: server hung up"
+        );
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("ok").as_bool(), Some(true), "conn {i}: {line}");
+        assert!(j.get("logits").as_arr().is_some(), "conn {i}: {line}");
+        ok += 1;
+    }
+    assert_eq!(ok, CONNS);
+
+    let stats = server.stats();
+    assert_eq!(
+        stats.connections_accepted.load(Ordering::Relaxed) as usize,
+        CONNS
+    );
+    assert_eq!(
+        stats.connections.load(Ordering::Relaxed) as usize,
+        CONNS,
+        "every connection still concurrently open"
+    );
+    assert_eq!(stats.connections_rejected.load(Ordering::Relaxed), 0);
+
+    drop(conns);
+    server.shutdown();
+    c.shutdown();
+}
