@@ -70,6 +70,7 @@ fn openloop_tail(w: &Arc<ModelWeights>, n_requests: usize, rate: f64) -> Option<
             io_threads: 2,
             max_connections: 0,
             max_inflight_per_conn: 64,
+            trace_buffer: 0,
         },
     )
     .ok()?;

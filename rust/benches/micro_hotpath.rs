@@ -488,6 +488,72 @@ fn main() {
             / eng.ledger.total() as f64
     );
 
+    // --- tracing overhead: the disabled guard on the edit hot path ---------
+    // The §11 observability contract: with tracing off, a stage guard is
+    // one thread-local load — and CI gates the derived per-edit overhead
+    // at ≤2%. Three measurements: (a) the raw disabled-guard cost in a
+    // tight loop, (b) guard activations per edit (counted by an actual
+    // traced edit — the same guards that fire inert when tracing is off),
+    // (c) edit p50 with tracing off vs begin/finish around every edit.
+    use vqt::util::trace;
+    trace::ensure_off();
+    let guard_iters: u32 = if smoke { 10_000 } else { 2_000_000 };
+    let tg0 = std::time::Instant::now();
+    for _ in 0..guard_iters {
+        std::hint::black_box(trace::stage("bench_guard"));
+    }
+    let guard_ns = tg0.elapsed().as_nanos() as f64 / guard_iters as f64;
+
+    let trace_doc: Vec<u32> = (0..256).map(|_| rng.below(256) as u32).collect();
+    let mut probe = IncrementalEngine::new(w.clone(), &trace_doc, EngineOptions::default());
+    trace::begin(std::time::Instant::now());
+    probe.apply_edit(Edit::Replace { at: 128, tok: 1 });
+    let guards_per_edit = trace::finish()
+        .map(|r| r.stages.iter().map(|s| s.count).sum::<u64>())
+        .unwrap_or(1)
+        .max(1) as f64;
+
+    let (tw, ti) = if smoke { (0, 1) } else { (2, 12) };
+    let mut eng_off = IncrementalEngine::new(w.clone(), &trace_doc, EngineOptions::default());
+    let mut tk = 0u32;
+    let t_off = time_it(tw, ti, || {
+        tk = (tk + 1) % 251;
+        eng_off.apply_edit(Edit::Replace { at: 128, tok: tk });
+    });
+    let mut eng_on = IncrementalEngine::new(w.clone(), &trace_doc, EngineOptions::default());
+    let mut tk2 = 0u32;
+    let t_on = time_it(tw, ti, || {
+        tk2 = (tk2 + 1) % 251;
+        trace::begin(std::time::Instant::now());
+        eng_on.apply_edit(Edit::Replace { at: 128, tok: tk2 });
+        std::hint::black_box(trace::finish());
+    });
+    let edit_off_ns = t_off.p50.as_secs_f64() * 1e9;
+    let trace_off_overhead_ratio = guard_ns * guards_per_edit / edit_off_ns.max(1.0);
+    let trace_on_overhead_ratio =
+        t_on.p50.as_secs_f64() / t_off.p50.as_secs_f64().max(1e-12) - 1.0;
+    print_table(
+        "tracing overhead on the edit hot path (n=256 replace)",
+        &["measurement", "value"],
+        &[
+            vec!["disabled guard (ns)".into(), format!("{guard_ns:.2}")],
+            vec!["guard activations / edit".into(), format!("{guards_per_edit:.0}")],
+            vec!["edit p50, tracing off (ms)".into(), format!("{:.3}", edit_off_ns / 1e6)],
+            vec![
+                "edit p50, traced (ms)".into(),
+                format!("{:.3}", t_on.p50.as_secs_f64() * 1e3),
+            ],
+            vec![
+                "derived off-overhead".into(),
+                format!("{:.4}% (gate: ≤2%)", trace_off_overhead_ratio * 100.0),
+            ],
+            vec![
+                "measured on-overhead".into(),
+                format!("{:.2}%", trace_on_overhead_ratio * 100.0),
+            ],
+        ],
+    );
+
     emit_json(
         "micro_hotpath",
         &[
@@ -519,6 +585,11 @@ fn main() {
             // AVX2/NEON, where "simd" resolves to the scalar fallback.
             ("simd_speedup_ratio", simd_speedup),
             ("simd_gemm_speedup_ratio", simd_gemm_speedup),
+            // Observability cost contract (§11): the disabled-guard cost
+            // per edit as a fraction of the edit itself — CI fails >2%.
+            ("trace_off_guard_wall_ns", guard_ns),
+            ("trace_off_overhead_ratio", trace_off_overhead_ratio),
+            ("trace_on_overhead_ratio", trace_on_overhead_ratio),
         ],
     );
 

@@ -294,6 +294,17 @@ pub struct ServeConfig {
     /// must not be able to read or write server paths unless an operator
     /// opted in).
     pub checkpoint_dir: String,
+    /// Completed request traces retained per shard ring (plus one ring in
+    /// the async front end) for the `trace` verb. Non-zero turns span
+    /// collection on for *every* request; 0 ⇒ only requests carrying
+    /// `"trace":true` are traced, and nothing is retained in the rings.
+    pub trace_buffer: usize,
+    /// Slow-request sampling threshold in microseconds: any traced
+    /// request whose end-to-end time (enqueue → reply dispatch) meets it
+    /// logs its full span breakdown at WARN and counts in
+    /// `slow_requests`. Non-zero also turns span collection on for every
+    /// request. 0 ⇒ disabled.
+    pub slow_request_us: u64,
 }
 
 impl Default for ServeConfig {
@@ -317,6 +328,8 @@ impl Default for ServeConfig {
             max_connections: 0,
             max_inflight_per_conn: 32,
             checkpoint_dir: String::new(),
+            trace_buffer: 0,
+            slow_request_us: 0,
         }
     }
 }
@@ -383,6 +396,11 @@ impl ServeConfig {
                 .as_str()
                 .unwrap_or(&d.checkpoint_dir)
                 .to_string(),
+            trace_buffer: j.get("trace_buffer").as_usize().unwrap_or(d.trace_buffer),
+            slow_request_us: j
+                .get("slow_request_us")
+                .as_usize()
+                .unwrap_or(d.slow_request_us as usize) as u64,
         })
     }
 }
@@ -522,6 +540,21 @@ mod file_tests {
         assert_eq!(serve.max_inflight_per_conn, 32);
         // Snapshot verbs confined to an operator-chosen directory.
         assert_eq!(serve.checkpoint_dir, "/tmp/vqt-checkpoints");
+        // Observability: trace ring on, slow-request sampling at 50ms.
+        assert_eq!(serve.trace_buffer, 64);
+        assert_eq!(serve.slow_request_us, 50_000);
+    }
+
+    #[test]
+    fn trace_knobs_default_off_and_override() {
+        let j = Json::parse(r#"{}"#).unwrap();
+        let sc = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(sc.trace_buffer, 0, "span collection strictly opt-in");
+        assert_eq!(sc.slow_request_us, 0, "slow sampling strictly opt-in");
+        let j = Json::parse(r#"{"trace_buffer": 32, "slow_request_us": 1500}"#).unwrap();
+        let sc = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(sc.trace_buffer, 32);
+        assert_eq!(sc.slow_request_us, 1500);
     }
 
     #[test]

@@ -43,6 +43,12 @@ pub trait SessionKeyed {
 /// `empty_queue_drain_sleeps_instead_of_spinning`). Queued jobs are still
 /// drained eagerly via `try_recv` first, so a `Duration::ZERO` window
 /// collects everything already in the queue without sleeping at all.
+///
+/// Observability note: the window wait is charged to the *queue_wait*
+/// stage, not to the wave itself — per-job queue wait is measured on the
+/// worker from enqueue to the moment wave execution starts (after this
+/// drain and [`plan`]), so `util::trace` needs no hook here and an
+/// untraced drain stays zero-cost.
 pub fn drain<J>(
     rx: &std::sync::mpsc::Receiver<J>,
     first: J,

@@ -60,6 +60,17 @@ impl Histogram {
         self.count
     }
 
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Raw bucket counts (bucket i holds values in [2^i, 2^(i+1))) — the
+    /// Prometheus exposition renders the full distribution from these,
+    /// not just the point percentiles `to_json` reports.
+    pub fn buckets(&self) -> &[u64] {
+        &self.buckets
+    }
+
     pub fn mean(&self) -> f64 {
         if self.count == 0 {
             0.0
@@ -105,10 +116,22 @@ impl Histogram {
 /// shard and merges them with [`Metrics::merge`].
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
-    /// Per-request wall latency in microseconds, by op kind.
+    /// Per-request wall latency in microseconds, by op kind. Measured
+    /// from dequeue — queue time is `queue_wait_us`, not folded in here.
     pub lat_edit_us: Histogram,
     pub lat_revision_us: Histogram,
     pub lat_dense_us: Histogram,
+    /// Shard-queue wait (enqueue→dequeue) in microseconds, recorded for
+    /// every job on both the classic and batched paths. Split out of the
+    /// `lat_*` histograms so queueing delay is visible instead of hiding
+    /// inside request latency.
+    pub queue_wait_us: Histogram,
+    /// Completed request traces retained (ring pushes + completions
+    /// shipped to the async front end for the reply-write stage).
+    pub traces_recorded: u64,
+    /// Requests whose end-to-end trace exceeded `slow_request_us` (each
+    /// logs its full span breakdown at WARN).
+    pub slow_requests: u64,
     /// FLOPs actually spent by incremental processing.
     pub flops_incremental: u64,
     /// FLOPs a dense recompute would have spent for the same requests.
@@ -166,6 +189,9 @@ impl Metrics {
         self.lat_edit_us.merge(&o.lat_edit_us);
         self.lat_revision_us.merge(&o.lat_revision_us);
         self.lat_dense_us.merge(&o.lat_dense_us);
+        self.queue_wait_us.merge(&o.queue_wait_us);
+        self.traces_recorded += o.traces_recorded;
+        self.slow_requests += o.slow_requests;
         self.flops_incremental += o.flops_incremental;
         self.flops_dense_equiv += o.flops_dense_equiv;
         self.edits += o.edits;
@@ -201,6 +227,9 @@ impl Metrics {
             ("lat_edit_us", self.lat_edit_us.to_json()),
             ("lat_revision_us", self.lat_revision_us.to_json()),
             ("lat_dense_us", self.lat_dense_us.to_json()),
+            ("queue_wait_us", self.queue_wait_us.to_json()),
+            ("traces_recorded", Json::num(self.traces_recorded as f64)),
+            ("slow_requests", Json::num(self.slow_requests as f64)),
             ("flops_incremental", Json::num(self.flops_incremental as f64)),
             ("flops_dense_equiv", Json::num(self.flops_dense_equiv as f64)),
             ("speedup", Json::num(self.speedup())),
@@ -227,6 +256,137 @@ impl Metrics {
             ("cache_bytes", Json::num(self.cache_bytes as f64)),
         ])
     }
+
+    /// Render every counter and histogram in Prometheus text exposition
+    /// format (`# HELP`/`# TYPE`, cumulative `_bucket{le="…"}` lines with
+    /// the histograms' explicit power-of-2 bounds — the full distribution,
+    /// not the point percentiles `to_json` reports). `gauges` carries
+    /// point-in-time values owned by the caller (live sessions, resident
+    /// bytes, shard count, front-end connection gauges, …), emitted as
+    /// `vqt_<name>` gauge lines in the given order.
+    pub fn to_prometheus(&self, gauges: &[(&str, f64)]) -> String {
+        let mut out = String::with_capacity(6 * 1024);
+        let hists: [(&str, &str, &Histogram); 5] = [
+            (
+                "vqt_lat_edit_us",
+                "Edit latency from shard dequeue, microseconds",
+                &self.lat_edit_us,
+            ),
+            (
+                "vqt_lat_revision_us",
+                "Revision latency from shard dequeue, microseconds",
+                &self.lat_revision_us,
+            ),
+            (
+                "vqt_lat_dense_us",
+                "Dense-call latency from shard dequeue, microseconds",
+                &self.lat_dense_us,
+            ),
+            (
+                "vqt_queue_wait_us",
+                "Shard-queue wait enqueue to dequeue, microseconds",
+                &self.queue_wait_us,
+            ),
+            (
+                "vqt_batch_fill_rows",
+                "Rows per pooled cross-session GEMM wave",
+                &self.batch_fill,
+            ),
+        ];
+        for (name, help, h) in hists {
+            prometheus_histogram(&mut out, name, help, h);
+        }
+        let counters: [(&str, &str, u64); 21] = [
+            ("vqt_edits_total", "Edit requests served", self.edits),
+            ("vqt_revisions_total", "Revision requests served", self.revisions),
+            ("vqt_dense_calls_total", "Dense forward calls served", self.dense_calls),
+            ("vqt_defrags_total", "Position-pool defragmentations", self.defrags),
+            ("vqt_sessions_opened_total", "Sessions opened", self.sessions_opened),
+            (
+                "vqt_sessions_restored_total",
+                "Sessions restored from client checkpoints",
+                self.sessions_restored,
+            ),
+            ("vqt_sessions_evicted_total", "Sessions dropped outright", self.sessions_evicted),
+            ("vqt_suspends_total", "Sessions suspended to the spill dir", self.suspends),
+            ("vqt_resumes_total", "Suspended sessions resumed", self.resumes),
+            (
+                "vqt_rejected_backpressure_total",
+                "Requests rejected by shard-queue backpressure",
+                self.rejected_backpressure,
+            ),
+            ("vqt_errors_total", "Requests answered with a typed error", self.errors),
+            ("vqt_panics_total", "Requests that panicked inside a shard", self.panics),
+            (
+                "vqt_batched_rows_total",
+                "Rows executed through pooled GEMM waves",
+                self.batched_rows,
+            ),
+            ("vqt_cache_hits_total", "Codebook-product cache hits", self.cache_hits),
+            ("vqt_cache_misses_total", "Codebook-product cache misses", self.cache_misses),
+            (
+                "vqt_cache_evictions_total",
+                "Codebook-product cache evictions",
+                self.cache_evictions,
+            ),
+            (
+                "vqt_cache_bytes_total",
+                "Bytes inserted into the codebook-product cache",
+                self.cache_bytes,
+            ),
+            (
+                "vqt_flops_incremental_total",
+                "FLOPs spent by incremental processing",
+                self.flops_incremental,
+            ),
+            (
+                "vqt_flops_dense_equiv_total",
+                "FLOPs a dense recompute would have spent",
+                self.flops_dense_equiv,
+            ),
+            ("vqt_traces_recorded_total", "Completed request traces retained", self.traces_recorded),
+            (
+                "vqt_slow_requests_total",
+                "Requests exceeding slow_request_us",
+                self.slow_requests,
+            ),
+        ];
+        for (name, help, v) in counters {
+            out.push_str(&format!(
+                "# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}\n"
+            ));
+        }
+        out.push_str(&format!(
+            "# HELP vqt_speedup_ratio Dense-equivalent over incremental FLOPs\n\
+             # TYPE vqt_speedup_ratio gauge\nvqt_speedup_ratio {}\n",
+            self.speedup()
+        ));
+        for (name, v) in gauges {
+            out.push_str(&format!(
+                "# TYPE vqt_{name} gauge\nvqt_{name} {v}\n"
+            ));
+        }
+        out
+    }
+}
+
+/// One histogram in exposition format: cumulative buckets up to the last
+/// non-empty bound, then the mandatory `+Inf`/`_sum`/`_count` triple.
+fn prometheus_histogram(out: &mut String, name: &str, help: &str, h: &Histogram) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} histogram\n"));
+    let buckets = h.buckets();
+    let live = buckets.iter().rposition(|&c| c != 0).map_or(0, |i| i + 1);
+    let mut cum = 0u64;
+    for (i, &c) in buckets.iter().take(live).enumerate() {
+        cum += c;
+        out.push_str(&format!(
+            "{name}_bucket{{le=\"{}\"}} {cum}\n",
+            1u64 << (i + 1)
+        ));
+    }
+    out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", h.count()));
+    out.push_str(&format!("{name}_sum {}\n", h.sum()));
+    out.push_str(&format!("{name}_count {}\n", h.count()));
 }
 
 #[cfg(test)]
@@ -327,6 +487,61 @@ mod tests {
         let j = a.to_json();
         assert_eq!(j.get("batched_rows").as_usize(), Some(15));
         assert!(j.get("batch_fill").get("p50").as_f64().is_some());
+    }
+
+    #[test]
+    fn merge_folds_queue_wait_and_trace_counters() {
+        let mut a = Metrics {
+            traces_recorded: 2,
+            slow_requests: 1,
+            ..Default::default()
+        };
+        a.queue_wait_us.record(3.0);
+        let mut b = Metrics {
+            traces_recorded: 5,
+            slow_requests: 0,
+            ..Default::default()
+        };
+        b.queue_wait_us.record(100.0);
+        b.queue_wait_us.record(7.0);
+        a.merge(&b);
+        assert_eq!(a.traces_recorded, 7);
+        assert_eq!(a.slow_requests, 1);
+        assert_eq!(a.queue_wait_us.count(), 3);
+        assert_eq!(a.queue_wait_us.max(), 100.0);
+        let j = a.to_json();
+        assert_eq!(j.get("queue_wait_us").get("count").as_usize(), Some(3));
+        assert_eq!(j.get("traces_recorded").as_usize(), Some(7));
+        assert_eq!(j.get("slow_requests").as_usize(), Some(1));
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let mut m = Metrics {
+            edits: 9,
+            cache_hits: 4,
+            ..Default::default()
+        };
+        m.lat_edit_us.record(5.0);
+        m.lat_edit_us.record(300.0);
+        m.queue_wait_us.record(12.0);
+        let text = m.to_prometheus(&[("live_sessions", 3.0), ("shards", 2.0)]);
+        // Histograms: TYPE line, explicit cumulative buckets, +Inf triple.
+        assert!(text.contains("# TYPE vqt_lat_edit_us histogram"), "{text}");
+        assert!(text.contains("vqt_lat_edit_us_bucket{le=\"8\"} 1"));
+        assert!(text.contains("vqt_lat_edit_us_bucket{le=\"512\"} 2"));
+        assert!(text.contains("vqt_lat_edit_us_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("vqt_lat_edit_us_sum 305"));
+        assert!(text.contains("vqt_lat_edit_us_count 2"));
+        assert!(text.contains("# TYPE vqt_queue_wait_us histogram"));
+        // Counters and caller-supplied gauges.
+        assert!(text.contains("# TYPE vqt_edits_total counter\nvqt_edits_total 9"));
+        assert!(text.contains("vqt_cache_hits_total 4"));
+        assert!(text.contains("vqt_traces_recorded_total 0"));
+        assert!(text.contains("# TYPE vqt_live_sessions gauge\nvqt_live_sessions 3"));
+        assert!(text.contains("vqt_shards 2"));
+        // Empty histograms still expose a valid +Inf/sum/count triple.
+        assert!(text.contains("vqt_lat_dense_us_bucket{le=\"+Inf\"} 0"));
     }
 
     #[test]

@@ -24,6 +24,7 @@ use crate::incremental::{CacheHandle, CodeCache, EngineOptions, IncrementalEngin
 use crate::model::{dense_forward, ModelWeights};
 use crate::runtime::ArtifactRuntime;
 use crate::tensor;
+use crate::util::trace::{self, TraceRecord, TraceRing};
 use crate::util::Json;
 use anyhow::{anyhow, bail, Result};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -74,6 +75,11 @@ pub enum Request {
     Close { session: String },
     /// Metrics snapshot.
     Stats,
+    /// Last-N completed request traces (per-shard rings + the async
+    /// front end's reply-write ring, concatenated).
+    TraceDump,
+    /// Prometheus-style text exposition of every counter/histogram.
+    Metrics,
 }
 
 impl Request {
@@ -93,7 +99,11 @@ impl Request {
             | Request::Resume { session }
             | Request::SessionInfo { session }
             | Request::Close { session } => Some(session),
-            Request::BatchRevisions { .. } | Request::Dense { .. } | Request::Stats => None,
+            Request::BatchRevisions { .. }
+            | Request::Dense { .. }
+            | Request::Stats
+            | Request::TraceDump
+            | Request::Metrics => None,
         }
     }
 
@@ -113,7 +123,18 @@ impl Request {
             Request::SessionInfo { .. } => "session_info",
             Request::Close { .. } => "close",
             Request::Stats => "stats",
+            Request::TraceDump => "trace",
+            Request::Metrics => "metrics",
         }
+    }
+
+    /// Monitoring verbs are never traced themselves (a `trace` dump that
+    /// recorded itself would pollute the very rings it reads).
+    fn is_admin(&self) -> bool {
+        matches!(
+            self,
+            Request::Stats | Request::TraceDump | Request::Metrics
+        )
     }
 }
 
@@ -158,6 +179,17 @@ pub enum Response {
         doc_len: usize,
     },
     Suggestions(Vec<(u32, f32)>),
+    /// JSON array of completed [`TraceRecord`]s (the `trace` verb).
+    Traces(Json),
+    /// Prometheus text exposition (the `metrics` verb).
+    MetricsText(String),
+    /// A reply with its request's span breakdown attached — produced only
+    /// when the client sent `"trace": true`, so replies stay byte-identical
+    /// for everyone else.
+    Traced {
+        inner: Box<Response>,
+        trace: Json,
+    },
     Done,
     Closed {
         existed: bool,
@@ -184,6 +216,10 @@ pub struct Completion {
     pub conn: u64,
     pub seq: u64,
     pub resp: Response,
+    /// Span breakdown of the request that produced this reply (traced
+    /// requests only). The IO thread appends the `reply_write` stage once
+    /// the bytes are flushed, then retires the record to its ring.
+    pub trace: Option<TraceRecord>,
 }
 
 /// Where a shard delivers a job's reply.
@@ -210,9 +246,19 @@ impl ReplyTo {
     /// shut down) is not an error for the shard — it just drops the reply,
     /// same contract the old raw `Sender` had.
     pub fn send(&self, resp: Response) {
+        let _ = self.send_traced(resp, None);
+    }
+
+    /// Deliver the reply along with its trace record, if any. Async
+    /// replies ship the record inside the [`Completion`] (the IO thread
+    /// appends `reply_write` and owns its retirement); synchronous replies
+    /// have no further stages, so the record is handed BACK to the caller
+    /// — the shard worker — to retire into its own ring.
+    pub fn send_traced(&self, resp: Response, rec: Option<TraceRecord>) -> Option<TraceRecord> {
         match self {
             ReplyTo::Sync(tx) => {
                 let _ = tx.send(resp);
+                rec
             }
             ReplyTo::Async {
                 tx,
@@ -224,8 +270,10 @@ impl ReplyTo {
                     conn: *conn,
                     seq: *seq,
                     resp,
+                    trace: rec,
                 });
                 wake();
+                None
             }
         }
     }
@@ -235,6 +283,8 @@ struct Job {
     req: Request,
     reply: ReplyTo,
     enqueued: Instant,
+    /// Client asked for the span breakdown in its reply (`"trace": true`).
+    trace: bool,
 }
 
 impl SessionKeyed for Job {
@@ -256,7 +306,7 @@ enum Route {
 fn route(req: &Request, shards: usize) -> Route {
     match req.session() {
         Some(s) => Route::Pinned(shard_of(s, shards)),
-        None if matches!(req, Request::Stats) => Route::FanOut,
+        None if req.is_admin() => Route::FanOut,
         None => Route::Any,
     }
 }
@@ -288,13 +338,19 @@ impl Client {
 
     /// Blocking request (waits for queue space — natural backpressure).
     pub fn request(&self, req: Request) -> Result<Response> {
-        self.dispatch(req, true)
+        self.dispatch(req, true, false)
+    }
+
+    /// Blocking request with the client's per-request trace flag: the
+    /// reply comes back wrapped in [`Response::Traced`] when set.
+    pub fn request_traced(&self, req: Request, trace: bool) -> Result<Response> {
+        self.dispatch(req, true, trace)
     }
 
     /// Non-blocking request: fails fast when the target shard's queue is
     /// full (backpressure surfaces to the caller).
     pub fn try_request(&self, req: Request) -> Result<Response> {
-        self.dispatch(req, false)
+        self.dispatch(req, false, false)
     }
 
     /// Non-blocking submit for the readiness-driven front end: route the
@@ -304,16 +360,26 @@ impl Client {
     /// it is a rare monitoring verb, so the thread cost is off the hot
     /// path by construction.
     pub fn submit(&self, req: Request, reply: ReplyTo) -> std::result::Result<(), SubmitError> {
+        self.submit_traced(req, reply, false)
+    }
+
+    /// [`Client::submit`] with the client's per-request trace flag.
+    pub fn submit_traced(
+        &self,
+        req: Request,
+        reply: ReplyTo,
+        trace: bool,
+    ) -> std::result::Result<(), SubmitError> {
         let shard = match route(&req, self.shards.len()) {
             Route::Pinned(s) => s,
             Route::Any => self.rr.fetch_add(1, Ordering::Relaxed) % self.shards.len(),
             Route::FanOut => {
                 let client = self.clone();
                 let spawned = std::thread::Builder::new()
-                    .name("vqt-stats-fanout".into())
+                    .name("vqt-fanout".into())
                     .spawn(move || {
                         let resp = client
-                            .dispatch(req, true)
+                            .dispatch(req, true, false)
                             .unwrap_or_else(|e| Response::Err(format!("{e:#}")));
                         reply.send(resp);
                     });
@@ -324,6 +390,7 @@ impl Client {
             req,
             reply,
             enqueued: Instant::now(),
+            trace,
         };
         match self.shards[shard].try_send(job) {
             Ok(()) => Ok(()),
@@ -337,12 +404,14 @@ impl Client {
         shard: usize,
         req: Request,
         blocking: bool,
+        trace: bool,
     ) -> Result<mpsc::Receiver<Response>> {
         let (rtx, rrx) = mpsc::channel();
         let job = Job {
             req,
             reply: ReplyTo::Sync(rtx),
             enqueued: Instant::now(),
+            trace,
         };
         if blocking {
             self.shards[shard]
@@ -365,19 +434,34 @@ impl Client {
             .map_err(|_| anyhow!("coordinator shard terminated before replying"))
     }
 
-    fn dispatch(&self, req: Request, blocking: bool) -> Result<Response> {
+    fn dispatch(&self, req: Request, blocking: bool, trace: bool) -> Result<Response> {
         match route(&req, self.shards.len()) {
-            Route::Pinned(s) => Self::recv(self.enqueue(s, req, blocking)?),
+            Route::Pinned(s) => Self::recv(self.enqueue(s, req, blocking, trace)?),
             Route::Any => {
                 let s = self.rr.fetch_add(1, Ordering::Relaxed) % self.shards.len();
-                Self::recv(self.enqueue(s, req, blocking)?)
+                Self::recv(self.enqueue(s, req, blocking, trace)?)
             }
             Route::FanOut => {
                 // Enqueue on every shard first, then collect, so the
                 // snapshots are taken concurrently.
+                let want_prometheus = matches!(req, Request::Metrics);
                 let rxs: Vec<_> = (0..self.shards.len())
-                    .map(|s| self.enqueue(s, req.clone(), blocking))
+                    .map(|s| self.enqueue(s, req.clone(), blocking, false))
                     .collect::<Result<_>>()?;
+                if matches!(req, Request::TraceDump) {
+                    // Shard rings in shard order, oldest-first within each.
+                    // (The async front end grafts its own reply-write ring
+                    // on top before serializing.)
+                    let mut all = Vec::new();
+                    for rrx in rxs {
+                        match Self::recv(rrx)? {
+                            Response::Traces(Json::Arr(mut v)) => all.append(&mut v),
+                            Response::Err(e) => bail!("trace fan-out failed: {e}"),
+                            other => bail!("unexpected shard trace response {other:?}"),
+                        }
+                    }
+                    return Ok(Response::Traces(Json::Arr(all)));
+                }
                 let mut merged = Metrics::default();
                 let mut live = 0usize;
                 let mut spilled = 0usize;
@@ -411,6 +495,15 @@ impl Client {
                                     Json::num(metrics.cache_evictions as f64),
                                 ),
                                 ("cache_bytes", Json::num(metrics.cache_bytes as f64)),
+                                (
+                                    "queue_wait_p99_us",
+                                    Json::num(metrics.queue_wait_us.percentile(99.0)),
+                                ),
+                                (
+                                    "traces_recorded",
+                                    Json::num(metrics.traces_recorded as f64),
+                                ),
+                                ("slow_requests", Json::num(metrics.slow_requests as f64)),
                             ]));
                             merged.merge(&metrics);
                             live += live_sessions;
@@ -420,6 +513,18 @@ impl Client {
                         Response::Err(e) => bail!("stats fan-out failed: {e}"),
                         other => bail!("unexpected shard stats response {other:?}"),
                     }
+                }
+                if want_prometheus {
+                    // The text exposition renders the merged counters; the
+                    // pool-wide gauges ride along as plain gauges. (The
+                    // async front end appends its connection gauges before
+                    // the text leaves the process.)
+                    return Ok(Response::MetricsText(merged.to_prometheus(&[
+                        ("live_sessions", live as f64),
+                        ("spilled_sessions", spilled as f64),
+                        ("resident_bytes", res_bytes as f64),
+                        ("shards", self.shards.len() as f64),
+                    ])));
                 }
                 let mut j = merged.to_json();
                 if let Json::Obj(map) = &mut j {
@@ -636,6 +741,9 @@ fn worker_loop(shard: usize, seed: ShardSeed, rx: mpsc::Receiver<Job>) {
         metrics: Metrics::default(),
         verify_every: cfg.verify_every,
         checkpoint_dir: cfg.checkpoint_dir.clone(),
+        trace_all: cfg.trace_buffer > 0 || cfg.slow_request_us > 0,
+        slow_request_us: cfg.slow_request_us,
+        ring: TraceRing::new(cfg.trace_buffer),
     };
     // Size-or-timeout drain window: `batch_window_us` when set, else the
     // legacy ms-granular deadline.
@@ -775,6 +883,15 @@ struct Worker {
     verify_every: usize,
     /// Directory snapshot verbs are confined to (empty ⇒ verbs disabled).
     checkpoint_dir: String,
+    /// Trace every request (`trace_buffer > 0` or `slow_request_us > 0`),
+    /// not just the ones that asked with `"trace": true`.
+    trace_all: bool,
+    /// WARN with the full span breakdown when a traced request's total
+    /// exceeds this many microseconds (0 ⇒ off).
+    slow_request_us: u64,
+    /// Last-N completed traces on this shard (sync-reply requests; async
+    /// replies retire into the front end's ring after `reply_write`).
+    ring: TraceRing,
 }
 
 /// Snapshot of one engine's cache counters — subtracted around each
@@ -798,17 +915,50 @@ impl Worker {
         }
     }
 
+    /// Shared trace bookkeeping: count the record, and WARN with the full
+    /// span breakdown when it crossed the slow-request threshold.
+    fn note_trace(&mut self, rec: &TraceRecord) {
+        self.metrics.traces_recorded += 1;
+        if self.slow_request_us > 0 && rec.total_us >= self.slow_request_us {
+            self.metrics.slow_requests += 1;
+            log::warn!(
+                "slow request on shard {}: '{}' took {}µs (threshold {}µs) {}",
+                rec.shard,
+                rec.kind,
+                rec.total_us,
+                self.slow_request_us,
+                rec.to_json()
+            );
+        }
+    }
+
     /// Execute one job on the classic per-session path: panic-guarded
-    /// handle, latency/error accounting, reply.
+    /// handle, latency/error accounting, optional span trace, reply.
     fn execute_job(&mut self, shard: usize, job: Job) {
         let Job {
             req,
             reply,
             enqueued,
+            trace: trace_requested,
         } = job;
         let kind = req.kind();
         let session = req.session().map(str::to_string);
+        // Admin verbs are exempt from tracing: a `trace` dump that traced
+        // itself would pollute the very rings it reads.
+        let traced = (self.trace_all || trace_requested) && !req.is_admin();
+        // Queue wait is measured AT dequeue so service time cannot leak
+        // into it (the old `enqueued.elapsed()` taken after handle() made
+        // the "queued" debug figure include the request's own service).
         let t0 = Instant::now();
+        let wait_us = t0.saturating_duration_since(enqueued).as_micros() as f64;
+        self.metrics.queue_wait_us.record(wait_us);
+        if traced {
+            trace::begin(enqueued);
+            trace::record_span("queue_wait", enqueued, t0);
+        } else {
+            // Also neutralizes state a panic-unwound request left behind.
+            trace::ensure_off();
+        }
         let guarded = std::panic::AssertUnwindSafe(|| self.handle(req));
         let resp = match std::panic::catch_unwind(guarded) {
             Ok(r) => r,
@@ -827,7 +977,6 @@ impl Worker {
                 ))
             }
         };
-        let wait_us = enqueued.elapsed().as_micros() as f64;
         let us = t0.elapsed().as_micros() as f64;
         match kind {
             "edit" | "edit_script" => self.metrics.lat_edit_us.record(us),
@@ -839,7 +988,29 @@ impl Worker {
         if matches!(resp, Response::Err(_)) {
             self.metrics.errors += 1;
         }
-        reply.send(resp);
+        match trace::finish() {
+            None => reply.send(resp),
+            Some(mut rec) => {
+                rec.kind = kind;
+                rec.session = session;
+                rec.shard = shard;
+                self.note_trace(&rec);
+                let resp = if trace_requested {
+                    Response::Traced {
+                        inner: Box::new(resp),
+                        trace: rec.to_json(),
+                    }
+                } else {
+                    resp
+                };
+                // Sync replies hand the record back for this shard's ring;
+                // async replies retire it in the IO thread after the
+                // `reply_write` stage is appended.
+                if let Some(r) = reply.send_traced(resp, Some(rec)) {
+                    self.ring.push(r);
+                }
+            }
+        }
     }
 
     /// Cross-session pooled execution over the batchable prefixes of one
@@ -946,6 +1117,23 @@ impl Worker {
             for job in fallback {
                 self.execute_job(shard, job);
             }
+            // Trace the wave ONCE against its earliest enqueue (the pooled
+            // stages are shared work, so per-job guards would lie); each
+            // member's record is rebased to its own enqueue instant in the
+            // reply loop so every timeline starts at 0. This must begin
+            // after the fallback jobs above — execute_job manages the
+            // thread-local trace itself and would clobber an open wave.
+            let wave_traced = self.trace_all || pool.iter().any(|(_, _, j)| j.trace);
+            if wave_traced {
+                let epoch = pool
+                    .iter()
+                    .map(|(_, _, j)| j.enqueued)
+                    .min()
+                    .expect("pooled wave has >=2 jobs");
+                trace::begin(epoch);
+            } else {
+                trace::ensure_off();
+            }
             // Pooled execution of the wave.
             let t0 = Instant::now();
             let scripts: Vec<Vec<Edit>> = pool
@@ -982,6 +1170,7 @@ impl Worker {
                     // drop them all rather than serve corrupt sessions.
                     // (Their queued follow-up jobs will get the canonical
                     // unknown-session error on later waves.)
+                    trace::ensure_off();
                     self.metrics.panics += 1;
                     let msg = panic_message(payload.as_ref()).to_string();
                     for (s, sess, job) in pool {
@@ -993,6 +1182,7 @@ impl Worker {
                     }
                 }
                 Ok(out) => {
+                    let wave_rec = trace::finish();
                     self.metrics.batched_rows += out.batched_rows;
                     for &f in &out.gemm_fills {
                         self.metrics.batch_fill.record(f as f64);
@@ -1024,18 +1214,51 @@ impl Worker {
                         let dense_equiv = self.dense_equiv(n) * nedits.max(1) as u64;
                         self.metrics.flops_dense_equiv += dense_equiv;
                         self.metrics.lat_edit_us.record(us);
-                        let wait_us = (job.enqueued.elapsed().as_micros() as f64 - us).max(0.0);
+                        // Per-job queue wait, measured at the wave's
+                        // dequeue/prepare point (service time excluded,
+                        // same fix as the classic path).
+                        let wait_us =
+                            t_prep.saturating_duration_since(job.enqueued).as_micros() as f64;
+                        self.metrics.queue_wait_us.record(wait_us);
                         log::debug!(
                             "shard {shard} batched {}: {us:.0}µs (+{wait_us:.0}µs queued)",
                             job.req.kind()
                         );
-                        job.reply.send(Response::Logits {
+                        let resp = Response::Logits {
                             logits: rep.logits,
                             predicted,
                             flops: rep.flops,
                             dense_equiv_flops: dense_equiv,
                             defragged: rep.defragged,
-                        });
+                        };
+                        let rec = wave_rec
+                            .as_ref()
+                            .filter(|_| self.trace_all || job.trace)
+                            .map(|w| {
+                                let mut r = w.rebased(job.enqueued);
+                                r.kind = job.req.kind();
+                                r.session = job.req.session().map(str::to_string);
+                                r.shard = shard;
+                                r.push_span("queue_wait", job.enqueued, t_prep);
+                                r
+                            });
+                        match rec {
+                            None => job.reply.send(resp),
+                            Some(rec) => {
+                                self.note_trace(&rec);
+                                let resp = if job.trace {
+                                    Response::Traced {
+                                        inner: Box::new(resp),
+                                        trace: rec.to_json(),
+                                    }
+                                } else {
+                                    resp
+                                };
+                                if let Some(r) = job.reply.send_traced(resp, Some(rec)) {
+                                    self.ring.push(r);
+                                }
+                            }
+                        }
                     }
                 }
             }
@@ -1258,7 +1481,11 @@ impl Worker {
                 let existed = self.sessions.remove(&session);
                 Ok(Response::Closed { existed })
             }
-            Request::Stats => {
+            Request::TraceDump => Ok(Response::Traces(self.ring.to_json())),
+            Request::Stats | Request::Metrics => {
+                // Both verbs read the same per-shard snapshot; the client
+                // merges and renders (JSON for `stats`, Prometheus text
+                // for `metrics`).
                 // Lifecycle counters live in the store (the single writer);
                 // surface them through the shard's metrics snapshot so the
                 // cross-shard merge sums them like every other counter.
@@ -1412,6 +1639,9 @@ mod batched_round_tests {
             metrics: Metrics::default(),
             verify_every: 0,
             checkpoint_dir: String::new(),
+            trace_all: false,
+            slow_request_us: 0,
+            ring: TraceRing::new(0),
         }
     }
 
@@ -1422,6 +1652,7 @@ mod batched_round_tests {
                 req,
                 reply: ReplyTo::Sync(tx),
                 enqueued: Instant::now(),
+                trace: false,
             },
             rx,
         )
@@ -1694,6 +1925,87 @@ mod batched_round_tests {
         assert!(wk.metrics.cache_misses > 0, "first session warms the cache");
         assert!(wk.metrics.cache_hits > 0, "identical edits hit cross-session");
         assert!(wk.metrics.cache_bytes > 0, "insert bytes attributed");
+    }
+
+    /// A trace-enabled worker measures queue wait at dequeue, stamps the
+    /// span breakdown, retires sync-reply traces into its own ring, and
+    /// wraps the reply only when the client asked for it.
+    #[test]
+    fn traced_worker_records_spans_and_ring() {
+        let cfg = ModelConfig::vqt_tiny();
+        let w = Arc::new(ModelWeights::random(&cfg, 61));
+        let mut wk = mk_worker(&w);
+        wk.trace_all = true;
+        wk.slow_request_us = 1;
+        wk.ring = TraceRing::new(8);
+        wk.handle(Request::Open {
+            session: "s".into(),
+            tokens: vec![1, 2, 3],
+        });
+        // trace_all without the per-request flag: the reply stays plain,
+        // the record retires into the shard ring.
+        let (j, rx) = job(Request::Edit {
+            session: "s".into(),
+            edit: Edit::Replace { at: 0, tok: 5 },
+        });
+        // Make the queue wait unambiguous (and trip the 1µs slow bar).
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        wk.execute_job(2, j);
+        assert!(matches!(rx.try_recv(), Ok(Response::Logits { .. })));
+        assert_eq!(wk.ring.len(), 1, "sync trace retires into the ring");
+        assert_eq!(wk.metrics.traces_recorded, 1);
+        assert_eq!(wk.metrics.slow_requests, 1, "2ms wait trips a 1µs bar");
+        assert!(wk.metrics.queue_wait_us.count() >= 1);
+        assert!(
+            wk.metrics.queue_wait_us.max() >= 2_000.0,
+            "queue wait measured at dequeue: {}",
+            wk.metrics.queue_wait_us.max()
+        );
+        // Per-request flag: the reply arrives wrapped with the breakdown.
+        let (mut j2, rx2) = job(Request::Edit {
+            session: "s".into(),
+            edit: Edit::Replace { at: 1, tok: 6 },
+        });
+        j2.trace = true;
+        wk.execute_job(2, j2);
+        match rx2.try_recv() {
+            Ok(Response::Traced { inner, trace }) => {
+                assert!(matches!(*inner, Response::Logits { .. }), "{inner:?}");
+                assert_eq!(trace.get("kind").as_str(), Some("edit"));
+                assert_eq!(trace.get("shard").as_usize(), Some(2));
+                let names: Vec<&str> = trace
+                    .get("stages")
+                    .as_arr()
+                    .expect("stages array")
+                    .iter()
+                    .map(|s| s.get("name").as_str().unwrap())
+                    .collect();
+                assert!(names.contains(&"queue_wait"), "{names:?}");
+                assert!(names.contains(&"engine"), "{names:?}");
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(wk.ring.len(), 2);
+        // The trace verb serves this shard's ring.
+        match wk.handle(Request::TraceDump) {
+            Response::Traces(j) => assert_eq!(j.as_arr().unwrap().len(), 2),
+            other => panic!("{other:?}"),
+        }
+        // Tracing off: no ring growth, no wrapper, queue wait still lands.
+        let mut quiet = mk_worker(&w);
+        quiet.handle(Request::Open {
+            session: "q".into(),
+            tokens: vec![4, 5],
+        });
+        let (j3, rx3) = job(Request::Edit {
+            session: "q".into(),
+            edit: Edit::Replace { at: 0, tok: 1 },
+        });
+        quiet.execute_job(0, j3);
+        assert!(matches!(rx3.try_recv(), Ok(Response::Logits { .. })));
+        assert!(quiet.ring.is_empty());
+        assert_eq!(quiet.metrics.traces_recorded, 0);
+        assert_eq!(quiet.metrics.queue_wait_us.count(), 1);
     }
 
     /// split_rounds takes only each session's LEADING run of edit jobs and

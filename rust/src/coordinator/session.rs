@@ -267,6 +267,7 @@ impl SessionStore {
         let Some(entry) = self.spilled.remove(id) else {
             return Ok(Prepared::Missing);
         };
+        let _span = crate::util::trace::stage("fault_in");
         let restored = IncrementalEngine::restore_from_file(
             self.weights.clone(),
             &entry.path,

@@ -332,6 +332,7 @@ pub fn apply_scripts_batched(
                 }
             }
             // Gather the pending rows of every engine into one stack.
+            let gather_span = crate::util::trace::stage("wave_gather");
             xs.clear();
             codes.clear();
             for slot in staged.iter().flatten() {
@@ -340,12 +341,14 @@ pub fn apply_scripts_batched(
                     codes.push(rw.code);
                 }
             }
+            drop(gather_span);
             let total = codes.len();
             // Chunked execution straight off the gather buffer: each
             // chunk's output matrix is kept and scattered from in place,
             // so no full-stack staging copy on either side of the GEMMs.
             let mut chunks: Vec<Matrix> = Vec::new();
             let mut outcomes: Vec<TailOutcome> = Vec::with_capacity(total);
+            let gemm_span = crate::util::trace::stage("wave_gemm");
             let mut r0 = 0;
             while r0 < total {
                 let rows = (total - r0).min(cap);
@@ -375,12 +378,14 @@ pub fn apply_scripts_batched(
                 gemm_fills.push(rows);
                 r0 += rows;
             }
+            drop(gemm_span);
             // Scatter back, engine by engine (gather order is preserved;
             // global row j lives in chunk j / cap at local row j % cap,
             // since every chunk except the last holds exactly `cap` rows).
             // Each row's cache outcome lands on its OWNING engine's stats,
             // and its hit/miss flag rides into staged_post so the ledger
             // attribution matches the single-row path.
+            let _scatter_span = crate::util::trace::stage("wave_scatter");
             let mut r = 0;
             for (i, slot) in staged.iter_mut().enumerate() {
                 if let Some(st) = slot {

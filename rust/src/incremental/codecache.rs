@@ -225,6 +225,7 @@ impl CodeCache {
     /// mix vector is copied into `out` and `true` is returned; counters
     /// record one hit or one miss either way.
     pub fn lookup(&self, fp: u64, layer: u32, key: u64, out: &mut [f32]) -> bool {
+        let _span = crate::util::trace::stage("cache_lookup");
         self.ensure_fp(fp);
         let shard = self.read_shard(Self::shard_of(layer, key));
         if let Some(e) = shard.map.get(&(layer, key)) {

@@ -718,6 +718,7 @@ impl IncrementalEngine {
     /// path drives the same staged hooks with a pooled executor, so the
     /// two paths share every line of orchestration code.
     pub fn apply_edit(&mut self, edit: Edit) -> EditReport {
+        let _span = crate::util::trace::stage("engine");
         let mut st = match self.stage_edit(edit) {
             Staged::Done(rep) => return rep,
             Staged::Pending(st) => st,
@@ -1319,6 +1320,10 @@ impl IncrementalEngine {
         if edits.len() == 1 {
             return self.apply_edit(edits[0]);
         }
+        // After the single-edit delegation: `apply_edit` opens its own
+        // "engine" span, and nesting two same-name spans would double-count
+        // busy time.
+        let _span = crate::util::trace::stage("engine");
         let snapshot = self.ledger.clone();
         self.stats.edits_applied += edits.len() as u64;
 

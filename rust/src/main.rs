@@ -18,7 +18,7 @@ USAGE:
   vqt demo                            quick in-process session demo
   vqt help
 
-Environment: VQT_LOG=error|warn|info|debug|trace";
+Environment: VQT_LOG=off|none|error|warn|info|debug|trace";
 
 fn main() {
     vqt::util::logging::init();

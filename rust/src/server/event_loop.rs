@@ -34,7 +34,8 @@ use super::framer::{Frame, LineFramer};
 use super::poll::{Epoll, EventFd, EPOLLERR, EPOLLHUP, EPOLLIN, EPOLLOUT, EPOLLRDHUP};
 use super::{protocol, READ_LIMIT_BYTES};
 use crate::config::ServeConfig;
-use crate::coordinator::{Client, Completion, ReplyTo, Response, SubmitError};
+use crate::coordinator::{Client, Completion, ReplyTo, Request, Response, SubmitError};
+use crate::util::trace::TraceRing;
 use crate::util::Json;
 use anyhow::{Context, Result};
 use std::collections::{BTreeMap, HashMap};
@@ -43,6 +44,7 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::os::unix::io::AsRawFd;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
 
 /// Epoll user-data sentinels for the two non-connection fds; connection
 /// ids come from a counter and can never collide with them.
@@ -58,8 +60,14 @@ const WBUF_HIGH_WATER: usize = 1 << 20;
 /// `"frontend"` object inside the `stats` reply by the async server.
 #[derive(Default)]
 pub struct FrontendStats {
-    /// Currently open connections (gauge).
+    /// Currently open connections (gauge, process-wide).
     pub connections: AtomicU64,
+    /// Per-IO-thread breakdown of `connections` (same gauge protocol:
+    /// bumped for thread `t` at accept hand-off, decremented by `t` when
+    /// it drops the socket), so a load skew across the round-robin spread
+    /// is observable the same way the coordinator's `per_shard` is. The
+    /// entries always sum to `connections`.
+    pub per_thread_connections: Vec<AtomicU64>,
     /// Connections admitted over the lifetime of the server.
     pub connections_accepted: AtomicU64,
     /// Connections refused at accept by `max_connections` (each got one
@@ -71,11 +79,28 @@ pub struct FrontendStats {
 }
 
 impl FrontendStats {
-    fn to_json(&self) -> Json {
+    /// Counters for a front end with `io_threads` event-loop threads.
+    pub fn new(io_threads: usize) -> FrontendStats {
+        FrontendStats {
+            per_thread_connections: (0..io_threads.max(1)).map(|_| AtomicU64::new(0)).collect(),
+            ..FrontendStats::default()
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
         Json::obj(vec![
             (
                 "connections",
                 Json::num(self.connections.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "per_io_thread",
+                Json::Arr(
+                    self.per_thread_connections
+                        .iter()
+                        .map(|g| Json::num(g.load(Ordering::Relaxed) as f64))
+                        .collect(),
+                ),
             ),
             (
                 "connections_accepted",
@@ -91,6 +116,51 @@ impl FrontendStats {
             ),
         ])
     }
+
+    /// Append the front end's own series to a Prometheus exposition (the
+    /// coordinator rendered everything else; the async server calls this
+    /// before the text leaves the process).
+    pub fn append_prometheus(&self, out: &mut String) {
+        use std::fmt::Write as _;
+        let _ = writeln!(
+            out,
+            "# HELP vqt_frontend_connections Currently open connections.\n\
+             # TYPE vqt_frontend_connections gauge\n\
+             vqt_frontend_connections {}",
+            self.connections.load(Ordering::Relaxed)
+        );
+        let _ = writeln!(
+            out,
+            "# HELP vqt_frontend_thread_connections Open connections per IO thread.\n\
+             # TYPE vqt_frontend_thread_connections gauge"
+        );
+        for (t, g) in self.per_thread_connections.iter().enumerate() {
+            let _ = writeln!(
+                out,
+                "vqt_frontend_thread_connections{{io_thread=\"{t}\"}} {}",
+                g.load(Ordering::Relaxed)
+            );
+        }
+        for (name, help, v) in [
+            (
+                "vqt_frontend_connections_accepted_total",
+                "Connections admitted over the server lifetime.",
+                self.connections_accepted.load(Ordering::Relaxed),
+            ),
+            (
+                "vqt_frontend_connections_rejected_total",
+                "Connections refused at accept by max_connections.",
+                self.connections_rejected.load(Ordering::Relaxed),
+            ),
+            (
+                "vqt_frontend_requests_shed_total",
+                "Requests shed with a typed busy reply (shard queue full).",
+                self.requests_shed.load(Ordering::Relaxed),
+            ),
+        ] {
+            let _ = writeln!(out, "# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}");
+        }
+    }
 }
 
 /// Admission/backpressure knobs, lifted from [`ServeConfig`].
@@ -99,6 +169,9 @@ pub struct FrontendOptions {
     pub io_threads: usize,
     pub max_connections: usize,
     pub max_inflight_per_conn: usize,
+    /// Capacity of the front end's completed-trace ring (0 ⇒ traces from
+    /// async replies are dropped after any per-request delivery).
+    pub trace_buffer: usize,
 }
 
 impl FrontendOptions {
@@ -107,6 +180,7 @@ impl FrontendOptions {
             io_threads: cfg.io_threads.max(1),
             max_connections: cfg.max_connections,
             max_inflight_per_conn: cfg.max_inflight_per_conn.max(1),
+            trace_buffer: cfg.trace_buffer,
         }
     }
 }
@@ -124,6 +198,11 @@ struct Shared {
     max_inflight: usize,
     rr: AtomicUsize,
     conn_ids: AtomicU64,
+    /// Completed traces from async replies, `reply_write` span included.
+    /// The mutex is touched only when a completion actually carries a
+    /// record (tracing on) and by the rare `trace` dump — never on the
+    /// untraced fast path.
+    traces: Mutex<TraceRing>,
 }
 
 fn locked<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
@@ -157,6 +236,10 @@ struct Conn {
     closing: bool,
     /// Unrecoverable socket error: drop immediately.
     dead: bool,
+    /// The peer spoke HTTP (`GET /metrics`): later frames are its header
+    /// lines (dropped, never replies), and the one completion is written
+    /// back as an HTTP response before closing.
+    http: bool,
 }
 
 impl Conn {
@@ -173,6 +256,7 @@ impl Conn {
             eof: false,
             closing: false,
             dead: false,
+            http: false,
         }
     }
 
@@ -299,6 +383,9 @@ impl IoThread {
                     self.shared.stats.connections.fetch_add(1, Ordering::Relaxed);
                     let nthreads = self.shared.inject.len();
                     let t = self.shared.rr.fetch_add(1, Ordering::Relaxed) % nthreads;
+                    // Attributed to the adoptive thread from hand-off, so
+                    // the per-thread gauges always sum to `connections`.
+                    self.shared.stats.per_thread_connections[t].fetch_add(1, Ordering::Relaxed);
                     locked(&self.shared.inject[t]).push(stream);
                     self.shared.wakers[t].ring();
                 }
@@ -317,18 +404,26 @@ impl IoThread {
         let streams: Vec<TcpStream> = std::mem::take(&mut *locked(&self.shared.inject[self.idx]));
         for stream in streams {
             if self.draining {
-                self.shared.stats.connections.fetch_sub(1, Ordering::Relaxed);
+                self.conn_gone();
                 continue; // drained before adoption: just drop
             }
             let id = self.shared.conn_ids.fetch_add(1, Ordering::Relaxed);
             let fd = stream.as_raw_fd();
             let conn = Conn::new(stream);
             if self.epoll.add(fd, conn.interest, id).is_err() {
-                self.shared.stats.connections.fetch_sub(1, Ordering::Relaxed);
+                self.conn_gone();
                 continue;
             }
             self.conns.insert(id, conn);
         }
+    }
+
+    /// A connection owned (or owed) to this thread is gone: decrement the
+    /// process gauge and this thread's slice of it together so the
+    /// per-thread breakdown keeps summing to the total.
+    fn conn_gone(&self) {
+        self.shared.stats.connections.fetch_sub(1, Ordering::Relaxed);
+        self.shared.stats.per_thread_connections[self.idx].fetch_sub(1, Ordering::Relaxed);
     }
 
     fn conn_ready(&mut self, id: u64, mask: u32) {
@@ -397,23 +492,56 @@ impl IoThread {
                     conn.closing = true;
                 }
                 Frame::Line(bytes) => {
+                    if conn.http {
+                        continue; // HTTP header lines: no replies, no seqs
+                    }
                     let parsed = match std::str::from_utf8(&bytes) {
                         Ok(line) if line.trim().is_empty() => continue, // no reply, no seq
-                        Ok(line) => protocol::parse_request(line.trim())
-                            .map_err(|e| format!("{e:#}")),
-                        Err(_) => Err("request line is not valid UTF-8".to_string()),
-                    };
-                    let seq = conn.next_seq;
-                    conn.next_seq += 1;
-                    match parsed {
-                        Ok(req) => {
+                        // Plain-HTTP scrape endpoint, mirroring the
+                        // blocking server: the one reply is the metrics
+                        // exposition wrapped as an HTTP response (formatted
+                        // at completion time, in drain_completions), then
+                        // the connection closes.
+                        Ok(line) if line.trim_end().starts_with("GET /metrics") => {
+                            conn.http = true;
+                            let seq = conn.next_seq;
+                            conn.next_seq += 1;
                             let reply = ReplyTo::Async {
                                 tx: self.ctx.clone(),
                                 conn: id,
                                 seq,
                                 wake: self.wake_fn.clone(),
                             };
-                            match self.shared.client.submit(req, reply) {
+                            match self.shared.client.submit(Request::Metrics, reply) {
+                                Ok(()) => conn.inflight += 1,
+                                Err(_) => {
+                                    conn.done.insert(
+                                        seq,
+                                        super::http_metrics_response(
+                                            "# metrics unavailable: server busy\n",
+                                        )
+                                        .into_bytes(),
+                                    );
+                                    conn.closing = true;
+                                }
+                            }
+                            continue;
+                        }
+                        Ok(line) => protocol::parse_request_traced(line.trim())
+                            .map_err(|e| format!("{e:#}")),
+                        Err(_) => Err("request line is not valid UTF-8".to_string()),
+                    };
+                    let seq = conn.next_seq;
+                    conn.next_seq += 1;
+                    match parsed {
+                        Ok((req, trace)) => {
+                            let reply = ReplyTo::Async {
+                                tx: self.ctx.clone(),
+                                conn: id,
+                                seq,
+                                wake: self.wake_fn.clone(),
+                            };
+                            match self.shared.client.submit_traced(req, reply, trace) {
                                 Ok(()) => conn.inflight += 1,
                                 Err(SubmitError::Busy) => {
                                     self.shared
@@ -448,8 +576,9 @@ impl IoThread {
         self.flush(conn);
     }
 
-    /// Serialize a shard response; the pool-wide stats snapshot gets the
-    /// front end's own counters grafted in.
+    /// Serialize a shard response; the pool-wide monitoring verbs get the
+    /// front end's own state grafted in (stats counters, the reply-write
+    /// trace ring, the frontend Prometheus series).
     fn serialize(&self, resp: &Response) -> Vec<u8> {
         let j = match resp {
             Response::Stats(inner) => {
@@ -459,6 +588,20 @@ impl IoThread {
                 }
                 Json::obj(vec![("ok", Json::Bool(true)), ("stats", stats)])
             }
+            // Shard rings first (sync-reply traces), then the front end's
+            // ring (async traces, reply_write included).
+            Response::Traces(inner) => {
+                let mut all = inner.as_arr().map(<[Json]>::to_vec).unwrap_or_default();
+                if let Json::Arr(mut fe) = locked(&self.shared.traces).to_json() {
+                    all.append(&mut fe);
+                }
+                Json::obj(vec![("ok", Json::Bool(true)), ("traces", Json::Arr(all))])
+            }
+            Response::MetricsText(text) => {
+                let mut t = text.clone();
+                self.shared.stats.append_prometheus(&mut t);
+                Json::obj(vec![("ok", Json::Bool(true)), ("metrics", Json::str(t))])
+            }
             other => protocol::response_to_json(other),
         };
         reply_line(j)
@@ -466,15 +609,39 @@ impl IoThread {
 
     fn drain_completions(&mut self) {
         while let Ok(c) = self.crx.try_recv() {
-            let line = self.serialize(&c.resp);
             let Some(mut conn) = self.conns.remove(&c.conn) else {
                 continue; // connection died with requests in flight
+            };
+            let t_reply = Instant::now();
+            let line = if conn.http {
+                // The scrape reply leaves as HTTP and the connection ends.
+                let body = match &c.resp {
+                    Response::MetricsText(text) => {
+                        let mut t = text.clone();
+                        self.shared.stats.append_prometheus(&mut t);
+                        t
+                    }
+                    Response::Err(e) => format!("# metrics unavailable: {e}\n"),
+                    other => format!("# metrics unavailable: unexpected response {other:?}\n"),
+                };
+                conn.closing = true;
+                super::http_metrics_response(&body).into_bytes()
+            } else {
+                self.serialize(&c.resp)
             };
             conn.inflight -= 1;
             conn.done.insert(c.seq, line);
             // Capacity freed: frames parked in the framer can resume.
             self.process_frames(c.conn, &mut conn);
             self.settle(c.conn, conn);
+            // Retire the request's trace with the reply-write stage:
+            // serialization through this flush attempt (the bytes may
+            // still ride the socket buffer, but this is the moment the
+            // event loop is done with the reply).
+            if let Some(mut rec) = c.trace {
+                rec.push_span("reply_write", t_reply, Instant::now());
+                locked(&self.shared.traces).push(rec);
+            }
         }
     }
 
@@ -513,7 +680,7 @@ impl IoThread {
     fn settle(&mut self, id: u64, mut conn: Conn) {
         if conn.finished() {
             let _ = self.epoll.del(conn.stream.as_raw_fd());
-            self.shared.stats.connections.fetch_sub(1, Ordering::Relaxed);
+            self.conn_gone();
             return; // dropping the Conn closes the socket
         }
         let mut want = EPOLLRDHUP;
@@ -563,7 +730,7 @@ impl AsyncServer {
             .context("creating wakers")?;
         let shared = Arc::new(Shared {
             client,
-            stats: Arc::new(FrontendStats::default()),
+            stats: Arc::new(FrontendStats::new(nthreads)),
             shutdown: AtomicBool::new(false),
             inject: (0..nthreads).map(|_| Mutex::new(Vec::new())).collect(),
             wakers,
@@ -571,6 +738,7 @@ impl AsyncServer {
             max_inflight: opts.max_inflight_per_conn.max(1),
             rr: AtomicUsize::new(0),
             conn_ids: AtomicU64::new(0),
+            traces: Mutex::new(TraceRing::new(opts.trace_buffer)),
         });
         let mut threads = Vec::with_capacity(nthreads);
         let mut listener = Some(listener);

@@ -35,12 +35,12 @@ pub mod event_loop;
 #[cfg(target_os = "linux")]
 pub mod poll;
 
-use crate::coordinator::Client;
+use crate::coordinator::{Client, Request, Response};
 use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 
-pub use protocol::{parse_request, response_to_json, MAX_REQUEST_BYTES};
+pub use protocol::{parse_request, parse_request_traced, response_to_json, MAX_REQUEST_BYTES};
 
 #[cfg(target_os = "linux")]
 pub use event_loop::{serve_async, AsyncServer, FrontendOptions, FrontendStats};
@@ -116,8 +116,18 @@ pub fn handle_conn(stream: TcpStream, client: Client) -> Result<()> {
         }
         let out = match std::str::from_utf8(&buf) {
             Ok(line) if line.trim().is_empty() => continue,
-            Ok(line) => match parse_request(line.trim()) {
-                Ok(req) => match client.request(req) {
+            // Plain-HTTP scrape endpoint: a Prometheus scraper speaks
+            // `GET /metrics HTTP/1.x`, not the line protocol. Serve the
+            // text exposition as one HTTP/1.0 response and close — the
+            // scraper opens a fresh connection per scrape anyway.
+            Ok(line) if line.trim_end().starts_with("GET /metrics") => {
+                let body = metrics_exposition(&client);
+                writer.write_all(http_metrics_response(&body).as_bytes())?;
+                writer.flush()?;
+                return Ok(());
+            }
+            Ok(line) => match parse_request_traced(line.trim()) {
+                Ok((req, trace)) => match client.request_traced(req, trace) {
                     Ok(resp) => response_to_json(&resp),
                     Err(e) => protocol::error_json(&format!("{e:#}")),
                 },
@@ -131,9 +141,41 @@ pub fn handle_conn(stream: TcpStream, client: Client) -> Result<()> {
     }
 }
 
+/// Render the pool's Prometheus exposition (errors become a commented-out
+/// exposition so a scrape never sees a half-broken body).
+pub(crate) fn metrics_exposition(client: &Client) -> String {
+    match client.request(Request::Metrics) {
+        Ok(Response::MetricsText(text)) => text,
+        Ok(other) => format!("# metrics unavailable: unexpected response {other:?}\n"),
+        Err(e) => format!("# metrics unavailable: {e:#}\n"),
+    }
+}
+
+/// Wrap the exposition text in a minimal HTTP/1.0 response for scrapers.
+pub(crate) fn http_metrics_response(body: &str) -> String {
+    format!(
+        "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// The HTTP wrapper is well-formed: status line, both headers, an
+    /// exact byte-length, and the body after the blank line.
+    #[test]
+    fn http_metrics_response_shape() {
+        let body = "# TYPE vqt_edits_total counter\nvqt_edits_total 3\n";
+        let resp = http_metrics_response(body);
+        assert!(resp.starts_with("HTTP/1.0 200 OK\r\n"));
+        assert!(resp.contains("Content-Type: text/plain; version=0.0.4\r\n"));
+        assert!(resp.contains(&format!("Content-Length: {}\r\n", body.len())));
+        let split = resp.split_once("\r\n\r\n").expect("header/body split");
+        assert_eq!(split.1, body);
+    }
 
     /// The read cap is DERIVED from the parse cap (one shared constant):
     /// any line the reader admits whole (≤ cap bytes + newline) is within

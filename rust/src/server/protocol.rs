@@ -37,8 +37,16 @@ fn session_field(j: &Json) -> Result<String> {
         .to_string())
 }
 
-/// Parse one request line.
+/// Parse one request line (trace flag discarded — test/tooling shorthand).
 pub fn parse_request(line: &str) -> Result<Request> {
+    parse_request_traced(line).map(|(req, _)| req)
+}
+
+/// Parse one request line plus its opt-in `"trace": true` flag. The flag
+/// rides on any request; a flagged request's reply carries a `"trace"`
+/// object with the span breakdown. Replies without the flag are
+/// byte-identical to a build that never heard of tracing.
+pub fn parse_request_traced(line: &str) -> Result<(Request, bool)> {
     if line.len() > MAX_REQUEST_BYTES {
         bail!(
             "oversized request: {} bytes (limit {MAX_REQUEST_BYTES})",
@@ -47,7 +55,8 @@ pub fn parse_request(line: &str) -> Result<Request> {
     }
     let j = Json::parse(line).context("invalid JSON")?;
     let op = j.get("op").as_str().context("missing 'op'")?;
-    Ok(match op {
+    let trace = j.get("trace").as_bool().unwrap_or(false);
+    let req = match op {
         "open" => Request::Open {
             session: session_field(&j)?,
             tokens: tokens_field(&j, "tokens")?,
@@ -120,8 +129,11 @@ pub fn parse_request(line: &str) -> Result<Request> {
             session: session_field(&j)?,
         },
         "stats" => Request::Stats,
+        "trace" => Request::TraceDump,
+        "metrics" => Request::Metrics,
         op => bail!("unknown op '{op}'"),
-    })
+    };
+    Ok((req, trace))
 }
 
 /// Serialize a response line.
@@ -222,6 +234,25 @@ pub fn response_to_json(resp: &Response) -> Json {
                 ),
             ),
         ]),
+        Response::Traces(traces) => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("traces", traces.clone()),
+        ]),
+        // The exposition text is shipped inside JSON on the line protocol;
+        // `GET /metrics` peels it back out as text/plain for scrapers.
+        Response::MetricsText(text) => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("metrics", Json::str(text.clone())),
+        ]),
+        // The span breakdown rides inside the inner reply's object — the
+        // reply keeps its normal shape plus one extra "trace" key.
+        Response::Traced { inner, trace } => {
+            let mut j = response_to_json(inner);
+            if let Json::Obj(map) = &mut j {
+                map.insert("trace".into(), trace.clone());
+            }
+            j
+        }
         Response::Done => Json::obj(vec![("ok", Json::Bool(true))]),
         Response::Closed { existed } => Json::obj(vec![
             ("ok", Json::Bool(true)),
@@ -327,6 +358,52 @@ mod tests {
         assert_eq!(j.get("state").as_str(), Some("suspended"));
         assert_eq!(j.get("spill_bytes").as_usize(), Some(1234));
         assert_eq!(j.get("len").as_usize(), Some(42));
+    }
+
+    #[test]
+    fn parse_trace_flag_and_observability_verbs() {
+        let (r, t) = parse_request_traced(r#"{"op":"trace"}"#).unwrap();
+        assert!(matches!(r, Request::TraceDump));
+        assert!(!t);
+        let (r, _) = parse_request_traced(r#"{"op":"metrics"}"#).unwrap();
+        assert!(matches!(r, Request::Metrics));
+        // The flag rides on ordinary requests and defaults to off.
+        let (r, t) = parse_request_traced(
+            r#"{"op":"edit","session":"s","kind":"delete","at":0,"trace":true}"#,
+        )
+        .unwrap();
+        assert!(matches!(r, Request::Edit { .. }));
+        assert!(t);
+        let (_, t) =
+            parse_request_traced(r#"{"op":"edit","session":"s","kind":"delete","at":0}"#).unwrap();
+        assert!(!t);
+        // Non-boolean values of the flag read as off, not as an error.
+        let (_, t) = parse_request_traced(r#"{"op":"stats","trace":"yes"}"#).unwrap();
+        assert!(!t);
+    }
+
+    #[test]
+    fn traced_and_observability_response_shapes() {
+        // Traced: the inner reply keeps its shape, plus one "trace" key.
+        let inner = Response::Closed { existed: true };
+        let plain = response_to_json(&inner).to_string();
+        let j = response_to_json(&Response::Traced {
+            inner: Box::new(inner),
+            trace: Json::obj(vec![("total_us", Json::num(42.0))]),
+        });
+        assert_eq!(j.get("ok").as_bool(), Some(true));
+        assert_eq!(j.get("existed").as_bool(), Some(true));
+        assert_eq!(j.get("trace").get("total_us").as_usize(), Some(42));
+        assert!(!plain.contains("trace"), "untraced replies carry no key");
+        // Traces: array passthrough under "traces".
+        let j = response_to_json(&Response::Traces(Json::Arr(vec![])));
+        assert_eq!(j.get("ok").as_bool(), Some(true));
+        assert_eq!(j.get("traces").as_arr().map(<[Json]>::len), Some(0));
+        // MetricsText: exposition text embedded as a JSON string (newlines
+        // escaped by the serializer, so it stays one protocol line).
+        let j = response_to_json(&Response::MetricsText("# TYPE a counter\na 1\n".into()));
+        assert_eq!(j.get("metrics").as_str(), Some("# TYPE a counter\na 1\n"));
+        assert!(!j.to_string().contains('\n'), "one line on the wire");
     }
 
     #[test]

@@ -1,7 +1,9 @@
 //! Tiny leveled logger backing the `log` crate facade.
 //!
 //! `env_logger` is not in the offline crate set; this is a minimal stderr
-//! logger honouring `VQT_LOG` (error|warn|info|debug|trace, default info).
+//! logger honouring `VQT_LOG` (off|none|error|warn|info|debug|trace,
+//! default info). An unrecognized value still defaults to info but warns
+//! once — a typo like `VQT_LOG=inf` must not silently change verbosity.
 
 use log::{Level, LevelFilter, Metadata, Record};
 use std::time::Instant;
@@ -42,18 +44,31 @@ impl log::Log for StderrLogger {
 pub fn init() {
     static INIT: std::sync::Once = std::sync::Once::new();
     INIT.call_once(|| {
-        let level = match std::env::var("VQT_LOG").as_deref() {
-            Ok("error") => LevelFilter::Error,
-            Ok("warn") => LevelFilter::Warn,
-            Ok("debug") => LevelFilter::Debug,
-            Ok("trace") => LevelFilter::Trace,
-            _ => LevelFilter::Info,
+        let var = std::env::var("VQT_LOG");
+        let (level, unknown) = match var.as_deref() {
+            Ok("off") | Ok("none") => (LevelFilter::Off, None),
+            Ok("error") => (LevelFilter::Error, None),
+            Ok("warn") => (LevelFilter::Warn, None),
+            Ok("info") => (LevelFilter::Info, None),
+            Ok("debug") => (LevelFilter::Debug, None),
+            Ok("trace") => (LevelFilter::Trace, None),
+            // Unrecognized values keep the info default but must say so
+            // (once — this runs under `Once`): a typo'd `VQT_LOG=inf`
+            // silently meaning "info" hid real intent for too long.
+            Ok(other) => (LevelFilter::Info, Some(other.to_string())),
+            Err(_) => (LevelFilter::Info, None),
         };
         let logger = Box::leak(Box::new(StderrLogger {
             start: Instant::now(),
         }));
         let _ = log::set_logger(logger);
         log::set_max_level(level);
+        if let Some(bad) = unknown {
+            log::warn!(
+                "VQT_LOG={bad:?} is not a recognized level \
+                 (off|none|error|warn|info|debug|trace); defaulting to info"
+            );
+        }
     });
 }
 

@@ -6,6 +6,7 @@ pub mod binfmt;
 pub mod json;
 pub mod logging;
 pub mod rng;
+pub mod trace;
 
 pub use binfmt::{Tensor, TensorFile};
 pub use json::Json;

@@ -1,0 +1,423 @@
+//! Zero-dependency request tracing: per-stage monotonic timings folded
+//! into one record per request.
+//!
+//! The design is built around the serving topology: every request is
+//! executed start-to-finish on exactly one shard worker thread, so the
+//! active trace lives in a thread-local and the per-shard ring buffers
+//! are owned single-threaded by their worker — no locks, no atomics on
+//! the hot path. The *only* cost a stage guard pays while tracing is
+//! disabled is one thread-local `Cell<bool>` load (cheaper than the
+//! "at most one atomic load per stage" contract in ARCHITECTURE.md §11,
+//! which micro_hotpath's overhead table enforces at ≤2% per edit).
+//!
+//! Lifecycle per traced request:
+//!
+//! 1. the worker calls [`begin`] with the request's enqueue instant (the
+//!    trace epoch — every stage timestamp is microseconds since then);
+//! 2. instrumented code creates RAII [`stage`] guards (engine, cache
+//!    lookup, wave gather/GEMM/scatter, session fault-in, …); repeated
+//!    guards with the same name *aggregate* (busy sum + hit count)
+//!    instead of appending, so a 128-row wave doesn't emit 128 spans;
+//! 3. the worker calls [`finish`] to detach the [`TraceRecord`], stamps
+//!    kind/session/shard, and either keeps it in its own [`TraceRing`]
+//!    (synchronous replies) or ships it with the completion so the async
+//!    front end can append the `reply_write` stage after the bytes hit
+//!    the socket.
+//!
+//! Requests that are *not* traced call [`ensure_off`] instead of
+//! [`begin`], which also makes a panic-unwound predecessor's stale state
+//! harmless.
+
+use crate::util::Json;
+use std::cell::{Cell, RefCell};
+use std::collections::VecDeque;
+use std::time::Instant;
+
+thread_local! {
+    /// Fast-path flag: is a trace active on this thread? Kept separate
+    /// from `CURRENT` so the disabled guard never touches the RefCell.
+    static ENABLED: Cell<bool> = const { Cell::new(false) };
+    static CURRENT: RefCell<Option<Active>> = const { RefCell::new(None) };
+}
+
+struct Active {
+    epoch: Instant,
+    stages: Vec<Stage>,
+}
+
+impl Active {
+    fn fold(&mut self, name: &'static str, start_us: u64, end_us: u64) {
+        if let Some(s) = self.stages.iter_mut().find(|s| s.name == name) {
+            s.last_end_us = s.last_end_us.max(end_us);
+            s.busy_us += end_us - start_us;
+            s.count += 1;
+        } else {
+            self.stages.push(Stage {
+                name,
+                first_start_us: start_us,
+                last_end_us: end_us,
+                busy_us: end_us - start_us,
+                count: 1,
+            });
+        }
+    }
+}
+
+/// One named stage of a request, aggregated across repeat entries.
+/// Timestamps are microseconds relative to the request's enqueue epoch;
+/// `busy_us` is the summed in-stage time (≤ `last_end_us -
+/// first_start_us` when the stage was entered more than once with other
+/// work in between).
+#[derive(Clone, Debug)]
+pub struct Stage {
+    pub name: &'static str,
+    pub first_start_us: u64,
+    pub last_end_us: u64,
+    pub busy_us: u64,
+    pub count: u64,
+}
+
+impl Stage {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name)),
+            ("start_us", Json::num(self.first_start_us as f64)),
+            ("end_us", Json::num(self.last_end_us as f64)),
+            ("busy_us", Json::num(self.busy_us as f64)),
+            ("count", Json::num(self.count as f64)),
+        ])
+    }
+}
+
+/// A completed request trace. `total_us` is the latest stage end seen —
+/// it grows when the async front end appends `reply_write` after the
+/// reply bytes are flushed.
+#[derive(Clone, Debug)]
+pub struct TraceRecord {
+    /// The enqueue instant every `*_us` field is relative to. Not
+    /// serialized; kept so later stages (reply write) share the epoch.
+    pub epoch: Instant,
+    pub kind: &'static str,
+    pub session: Option<String>,
+    pub shard: usize,
+    pub total_us: u64,
+    pub stages: Vec<Stage>,
+}
+
+impl TraceRecord {
+    /// Microseconds from this record's epoch to `t` (0 if `t` precedes it).
+    pub fn rel_us(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.epoch).as_micros() as u64
+    }
+
+    /// Append a single-entry stage measured by absolute instants (the
+    /// async front end's `reply_write`, the worker's `queue_wait`).
+    pub fn push_span(&mut self, name: &'static str, start: Instant, end: Instant) {
+        let s = self.rel_us(start);
+        let e = self.rel_us(end).max(s);
+        self.stages.push(Stage {
+            name,
+            first_start_us: s,
+            last_end_us: e,
+            busy_us: e - s,
+            count: 1,
+        });
+        self.total_us = self.total_us.max(e);
+    }
+
+    /// Re-express this record against a later epoch (a pooled wave is
+    /// traced once against the *earliest* enqueue in the wave; each
+    /// member job's copy is rebased to its own enqueue instant so its
+    /// timeline starts at 0).
+    pub fn rebased(&self, new_epoch: Instant) -> TraceRecord {
+        let delta = new_epoch.saturating_duration_since(self.epoch).as_micros() as u64;
+        let stages: Vec<Stage> = self
+            .stages
+            .iter()
+            .map(|s| Stage {
+                name: s.name,
+                first_start_us: s.first_start_us.saturating_sub(delta),
+                last_end_us: s.last_end_us.saturating_sub(delta),
+                busy_us: s.busy_us,
+                count: s.count,
+            })
+            .collect();
+        TraceRecord {
+            epoch: new_epoch,
+            kind: self.kind,
+            session: self.session.clone(),
+            shard: self.shard,
+            total_us: stages.iter().map(|s| s.last_end_us).max().unwrap_or(0),
+            stages,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str(self.kind)),
+            (
+                "session",
+                match &self.session {
+                    Some(s) => Json::str(s.clone()),
+                    None => Json::Null,
+                },
+            ),
+            ("shard", Json::num(self.shard as f64)),
+            ("total_us", Json::num(self.total_us as f64)),
+            (
+                "stages",
+                Json::Arr(self.stages.iter().map(|s| s.to_json()).collect()),
+            ),
+        ])
+    }
+}
+
+/// Start tracing the current request on this thread. `epoch` should be
+/// the request's enqueue instant so queue wait shows up at offset 0.
+pub fn begin(epoch: Instant) {
+    CURRENT.with(|c| {
+        *c.borrow_mut() = Some(Active {
+            epoch,
+            stages: Vec::with_capacity(8),
+        })
+    });
+    ENABLED.with(|e| e.set(true));
+}
+
+/// Clear any active trace (the untraced-request entry point; also
+/// neutralizes state left behind by a panic-unwound predecessor).
+pub fn ensure_off() {
+    ENABLED.with(|e| {
+        if e.get() {
+            e.set(false);
+            CURRENT.with(|c| c.borrow_mut().take());
+        }
+    });
+}
+
+/// Is a trace active on this thread? (One thread-local load.)
+pub fn active() -> bool {
+    ENABLED.with(|e| e.get())
+}
+
+/// RAII stage guard: folds `(name, enter..drop)` into the active trace.
+/// Inert — no clock read, no RefCell — when tracing is off.
+#[must_use = "the stage ends when the guard drops"]
+pub struct StageGuard {
+    name: &'static str,
+    start: Option<Instant>,
+}
+
+impl Drop for StageGuard {
+    fn drop(&mut self) {
+        let Some(start) = self.start else { return };
+        let end = Instant::now();
+        CURRENT.with(|c| {
+            if let Some(t) = c.borrow_mut().as_mut() {
+                let s = start.saturating_duration_since(t.epoch).as_micros() as u64;
+                let e = end.saturating_duration_since(t.epoch).as_micros() as u64;
+                t.fold(self.name, s, e.max(s));
+            }
+        });
+    }
+}
+
+/// Enter a named stage of the active trace. `name` must be `'static`
+/// (stage identity is pointer-free string equality on literals).
+#[inline]
+pub fn stage(name: &'static str) -> StageGuard {
+    StageGuard {
+        name,
+        start: if active() { Some(Instant::now()) } else { None },
+    }
+}
+
+/// Fold an explicitly-measured span into the active trace (used where
+/// the boundaries are pre-existing instants, e.g. enqueue→dequeue).
+pub fn record_span(name: &'static str, start: Instant, end: Instant) {
+    if !active() {
+        return;
+    }
+    CURRENT.with(|c| {
+        if let Some(t) = c.borrow_mut().as_mut() {
+            let s = start.saturating_duration_since(t.epoch).as_micros() as u64;
+            let e = end.saturating_duration_since(t.epoch).as_micros() as u64;
+            t.fold(name, s, e.max(s));
+        }
+    });
+}
+
+/// End the active trace and detach its record (kind/session/shard are
+/// stamped by the caller, which knows the request). `None` if no trace
+/// was active.
+pub fn finish() -> Option<TraceRecord> {
+    ENABLED.with(|e| e.set(false));
+    let active = CURRENT.with(|c| c.borrow_mut().take())?;
+    let total_us = active.stages.iter().map(|s| s.last_end_us).max().unwrap_or(0);
+    Some(TraceRecord {
+        epoch: active.epoch,
+        kind: "",
+        session: None,
+        shard: 0,
+        total_us,
+        stages: active.stages,
+    })
+}
+
+/// Bounded FIFO of completed traces. Each shard worker (and the async
+/// front end) owns one; single-owner access is what makes it lock-free.
+#[derive(Debug, Default)]
+pub struct TraceRing {
+    cap: usize,
+    buf: VecDeque<TraceRecord>,
+}
+
+impl TraceRing {
+    pub fn new(cap: usize) -> Self {
+        TraceRing {
+            cap,
+            buf: VecDeque::with_capacity(cap.min(1024)),
+        }
+    }
+
+    /// Retain `r` as one of the last `cap` completed traces (dropped
+    /// outright when the ring is configured off, `cap == 0`).
+    pub fn push(&mut self, r: TraceRecord) {
+        if self.cap == 0 {
+            return;
+        }
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(r);
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Oldest-first JSON array of the retained records.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.buf.iter().map(|r| r.to_json()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn disabled_guard_is_inert() {
+        ensure_off();
+        {
+            let _g = stage("nothing");
+        }
+        assert!(!active());
+        assert!(finish().is_none());
+    }
+
+    #[test]
+    fn stages_aggregate_and_finish_detaches() {
+        let epoch = Instant::now();
+        begin(epoch);
+        assert!(active());
+        for _ in 0..3 {
+            let _g = stage("work");
+            std::hint::black_box(());
+        }
+        record_span("queue_wait", epoch, epoch + Duration::from_micros(40));
+        let rec = finish().expect("active trace");
+        assert!(!active());
+        assert!(finish().is_none(), "finish detaches");
+        assert_eq!(rec.stages.len(), 2, "repeat guards aggregate");
+        let work = rec.stages.iter().find(|s| s.name == "work").unwrap();
+        assert_eq!(work.count, 3);
+        assert!(work.first_start_us <= work.last_end_us);
+        assert!(work.busy_us <= work.last_end_us.saturating_sub(work.first_start_us) + 1);
+        let qw = rec.stages.iter().find(|s| s.name == "queue_wait").unwrap();
+        assert_eq!((qw.first_start_us, qw.last_end_us), (0, 40));
+        assert!(rec.total_us >= 40);
+    }
+
+    #[test]
+    fn push_span_extends_total() {
+        begin(Instant::now());
+        let mut rec = finish().unwrap();
+        let s = rec.epoch + Duration::from_micros(100);
+        rec.push_span("reply_write", s, s + Duration::from_micros(25));
+        assert_eq!(rec.total_us, 125);
+        let st = rec.stages.last().unwrap();
+        assert_eq!((st.first_start_us, st.last_end_us, st.busy_us), (100, 125, 25));
+    }
+
+    #[test]
+    fn rebase_shifts_timeline() {
+        let epoch = Instant::now();
+        begin(epoch);
+        record_span(
+            "engine",
+            epoch + Duration::from_micros(50),
+            epoch + Duration::from_micros(90),
+        );
+        let rec = finish().unwrap();
+        let shifted = rec.rebased(epoch + Duration::from_micros(30));
+        let st = &shifted.stages[0];
+        assert_eq!((st.first_start_us, st.last_end_us), (20, 60));
+        assert_eq!(shifted.total_us, 60);
+        assert_eq!(st.busy_us, 40, "durations survive rebasing");
+    }
+
+    #[test]
+    fn ring_bounds_and_zero_cap() {
+        let mk = |kind| TraceRecord {
+            epoch: Instant::now(),
+            kind,
+            session: None,
+            shard: 0,
+            total_us: 1,
+            stages: Vec::new(),
+        };
+        let mut off = TraceRing::new(0);
+        off.push(mk("a"));
+        assert!(off.is_empty());
+        let mut ring = TraceRing::new(2);
+        ring.push(mk("a"));
+        ring.push(mk("b"));
+        ring.push(mk("c"));
+        assert_eq!(ring.len(), 2);
+        let arr = ring.to_json();
+        let kinds: Vec<&str> = arr
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|r| r.get("kind").as_str().unwrap())
+            .collect();
+        assert_eq!(kinds, vec!["b", "c"], "oldest evicted first");
+    }
+
+    #[test]
+    fn record_json_shape() {
+        begin(Instant::now());
+        {
+            let _g = stage("engine");
+        }
+        let mut rec = finish().unwrap();
+        rec.kind = "edit";
+        rec.session = Some("s1".into());
+        rec.shard = 3;
+        let j = rec.to_json();
+        assert_eq!(j.get("kind").as_str(), Some("edit"));
+        assert_eq!(j.get("session").as_str(), Some("s1"));
+        assert_eq!(j.get("shard").as_usize(), Some(3));
+        let stages = j.get("stages").as_arr().unwrap();
+        assert_eq!(stages.len(), 1);
+        for key in ["name", "start_us", "end_us", "busy_us", "count"] {
+            assert!(!matches!(stages[0].get(key), Json::Null), "missing {key}");
+        }
+    }
+}

@@ -137,6 +137,7 @@ fn async_server_is_bit_identical_to_blocking_server() {
             io_threads: 2,
             max_connections: 0,
             max_inflight_per_conn: 32,
+            trace_buffer: 0,
         },
     )
     .unwrap();
@@ -170,6 +171,7 @@ fn pipelined_requests_stay_ordered_and_overload_sheds_typed_busy() {
             io_threads: 1,
             max_connections: 0,
             max_inflight_per_conn: 64,
+            trace_buffer: 0,
         },
     )
     .unwrap();
@@ -232,6 +234,7 @@ fn connection_cap_rejects_with_typed_busy_then_recovers() {
             io_threads: 2,
             max_connections: 8,
             max_inflight_per_conn: 4,
+            trace_buffer: 0,
         },
     )
     .unwrap();
@@ -292,6 +295,7 @@ fn stats_reply_carries_frontend_counters() {
             io_threads: 1,
             max_connections: 0,
             max_inflight_per_conn: 4,
+            trace_buffer: 0,
         },
     )
     .unwrap();
@@ -306,5 +310,60 @@ fn stats_reply_carries_frontend_counters() {
     assert_eq!(fe.get("connections").as_usize(), Some(1), "{line}");
     assert_eq!(fe.get("connections_accepted").as_usize(), Some(1));
     assert_eq!(fe.get("requests_shed").as_usize(), Some(0));
+    // The per-IO-thread breakdown must cover every IO thread and sum back
+    // to the merged gauge (the invariant `conn_gone` maintains).
+    let per_thread = fe.get("per_io_thread").as_arr().expect("per_io_thread array");
+    assert_eq!(per_thread.len(), 1, "{line}");
+    let sum: usize = per_thread.iter().map(|v| v.as_usize().unwrap()).sum();
+    assert_eq!(sum, 1, "per-thread gauges must sum to the merged gauge");
     server.shutdown();
+}
+
+/// Turning tracing ON (ring buffers + slow-request sampling armed) must
+/// not change a single reply byte for requests that don't ask for a trace
+/// — the span machinery rides alongside the reply, never inside it.
+#[test]
+fn tracing_enabled_servers_stay_bit_identical() {
+    let steps = script();
+    let traced = |sc: &mut ServeConfig| {
+        sc.trace_buffer = 64;
+        sc.slow_request_us = 1_000_000;
+    };
+
+    // Blocking reference endpoint with tracing armed.
+    let c_blocking = coordinator("blk_tr", traced);
+    let client = c_blocking.client();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let blocking_addr = listener.local_addr().unwrap();
+    let acceptor = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        let _ = vqt::server::handle_conn(stream, client);
+    });
+    let blocking_replies = run_script(blocking_addr, &steps);
+    acceptor.join().unwrap();
+
+    // Async endpoint, identically-seeded coordinator, tracing armed on
+    // both the shard rings and the front-end ring.
+    let c_async = coordinator("async_tr", traced);
+    let server = AsyncServer::start(
+        "127.0.0.1:0",
+        c_async.client(),
+        FrontendOptions {
+            io_threads: 2,
+            max_connections: 0,
+            max_inflight_per_conn: 32,
+            trace_buffer: 64,
+        },
+    )
+    .unwrap();
+    let async_replies = run_script(server.local_addr(), &steps);
+    server.shutdown();
+
+    assert_eq!(blocking_replies.len(), async_replies.len());
+    for (i, (b, a)) in blocking_replies.iter().zip(&async_replies).enumerate() {
+        assert_eq!(b, a, "reply {i} diverged with tracing enabled");
+    }
+    // No reply grew a trace field: the flag is per-request opt-in.
+    assert!(blocking_replies.iter().all(|l| !l.contains("\"trace\"")));
+    assert!(async_replies.iter().all(|l| !l.contains("\"trace\"")));
 }

@@ -75,6 +75,7 @@ fn thousand_concurrent_connections_on_a_fixed_thread_budget() {
             io_threads: 2,
             max_connections: 0,
             max_inflight_per_conn: 4,
+            trace_buffer: 0,
         },
     )
     .unwrap();

@@ -1,0 +1,155 @@
+//! Golden schema lock for the `stats` snapshot: dashboards and scrapers
+//! key off these field names, so adding/renaming/dropping one must be a
+//! conscious, test-visible act. Checked at one shard and at three (the
+//! merge path and the per-shard breakdown must agree on shape).
+
+use std::sync::Arc;
+use vqt::config::{ModelConfig, ServeConfig};
+use vqt::coordinator::{Backend, Coordinator, Request, Response};
+use vqt::incremental::EngineOptions;
+use vqt::model::ModelWeights;
+use vqt::util::Json;
+
+/// Every key the merged (pool-level) stats object carries.
+const MERGED_KEYS: &[&str] = &[
+    "batch_fill",
+    "batched_rows",
+    "cache_bytes",
+    "cache_evictions",
+    "cache_hits",
+    "cache_misses",
+    "defrags",
+    "dense_calls",
+    "edits",
+    "errors",
+    "flops_dense_equiv",
+    "flops_incremental",
+    "kernel_backend",
+    "lat_dense_us",
+    "lat_edit_us",
+    "lat_revision_us",
+    "live_sessions",
+    "panics",
+    "per_shard",
+    "queue_wait_us",
+    "rejected_backpressure",
+    "resident_bytes",
+    "resumes",
+    "revisions",
+    "sessions_evicted",
+    "sessions_opened",
+    "sessions_restored",
+    "shards",
+    "slow_requests",
+    "speedup",
+    "spilled_sessions",
+    "suspends",
+    "traces_recorded",
+];
+
+/// Every key each `per_shard` entry carries.
+const PER_SHARD_KEYS: &[&str] = &[
+    "batched_rows",
+    "cache_bytes",
+    "cache_evictions",
+    "cache_hits",
+    "cache_misses",
+    "dense_calls",
+    "edits",
+    "errors",
+    "live_sessions",
+    "panics",
+    "queue_wait_p99_us",
+    "resident_bytes",
+    "slow_requests",
+    "spilled_sessions",
+    "traces_recorded",
+];
+
+/// Every key a histogram summary carries.
+const HISTOGRAM_KEYS: &[&str] = &["count", "max", "mean", "p50", "p99", "p999"];
+
+fn keys(j: &Json) -> Vec<String> {
+    j.as_obj()
+        .unwrap_or_else(|| panic!("expected object, got {j}"))
+        .keys()
+        .cloned()
+        .collect()
+}
+
+fn stats_snapshot(workers: usize) -> Json {
+    let cfg = ModelConfig::vqt_tiny();
+    let w = Arc::new(ModelWeights::random(&cfg, 23));
+    let mut sc = ServeConfig::default();
+    sc.workers = workers;
+    let c = Coordinator::start(
+        Backend {
+            weights: w,
+            artifacts_dir: None,
+            engine_opts: EngineOptions::default(),
+        },
+        sc,
+    );
+    let client = c.client();
+    // A little traffic so the snapshot reflects real counters, not just
+    // zero-init defaults.
+    client
+        .request(Request::Open {
+            session: "g".into(),
+            tokens: vec![1, 2, 3, 4],
+        })
+        .unwrap();
+    let resp = client.request(Request::Stats).unwrap();
+    let j = match resp {
+        Response::Stats(j) => j,
+        other => panic!("{other:?}"),
+    };
+    c.shutdown();
+    j
+}
+
+#[test]
+fn stats_schema_is_locked_at_one_and_three_shards() {
+    for workers in [1usize, 3] {
+        let j = stats_snapshot(workers);
+        assert_eq!(keys(&j), MERGED_KEYS, "merged keys at {workers} shards");
+        for h in ["lat_edit_us", "lat_revision_us", "lat_dense_us", "queue_wait_us", "batch_fill"]
+        {
+            assert_eq!(keys(j.get(h)), HISTOGRAM_KEYS, "{h} at {workers} shards");
+        }
+        let shards = j.get("per_shard").as_arr().expect("per_shard array");
+        assert_eq!(shards.len(), workers);
+        for (i, s) in shards.iter().enumerate() {
+            assert_eq!(keys(s), PER_SHARD_KEYS, "shard {i} of {workers}");
+        }
+        assert_eq!(j.get("shards").as_usize(), Some(workers));
+        // The breakdown reconciles with the merged gauges.
+        let live: usize = shards
+            .iter()
+            .map(|s| s.get("live_sessions").as_usize().unwrap())
+            .sum();
+        assert_eq!(Some(live), j.get("live_sessions").as_usize());
+    }
+}
+
+/// The async front end's grafted `frontend` object (Linux only — the
+/// blocking server's stats reply has no front end).
+#[cfg(target_os = "linux")]
+#[test]
+fn frontend_stats_schema_is_locked() {
+    use vqt::server::FrontendStats;
+    let fs = FrontendStats::new(3);
+    let j = fs.to_json();
+    assert_eq!(
+        keys(&j),
+        [
+            "connections",
+            "connections_accepted",
+            "connections_rejected",
+            "per_io_thread",
+            "requests_shed",
+        ],
+        "frontend keys"
+    );
+    assert_eq!(j.get("per_io_thread").as_arr().map(<[Json]>::len), Some(3));
+}

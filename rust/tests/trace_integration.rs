@@ -1,0 +1,226 @@
+//! End-to-end observability: a traced request driven through the
+//! readiness-driven async front end must come back with a span breakdown
+//! covering (at least) queue wait, engine work, and the reply write —
+//! with monotonic timestamps — and the three surfacing paths (`trace`
+//! verb, `metrics` verb, plain-HTTP `GET /metrics`) must all serve.
+#![cfg(target_os = "linux")]
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use vqt::config::{ModelConfig, ServeConfig};
+use vqt::coordinator::{Backend, Coordinator};
+use vqt::incremental::EngineOptions;
+use vqt::model::ModelWeights;
+use vqt::server::{AsyncServer, FrontendOptions};
+use vqt::util::Json;
+
+fn serve(tag: &str, cfg_mut: impl FnOnce(&mut ServeConfig)) -> (Coordinator, AsyncServer) {
+    let cfg = ModelConfig::vqt_tiny();
+    let w = Arc::new(ModelWeights::random(&cfg, 17));
+    let mut sc = ServeConfig::default();
+    sc.workers = 2;
+    sc.trace_buffer = 64;
+    sc.spill_dir = std::env::temp_dir()
+        .join(format!("vqt_trace_it_{tag}_{}", std::process::id()))
+        .to_str()
+        .unwrap()
+        .to_string();
+    cfg_mut(&mut sc);
+    let trace_buffer = sc.trace_buffer;
+    let c = Coordinator::start(
+        Backend {
+            weights: w,
+            artifacts_dir: None,
+            engine_opts: EngineOptions::default(),
+        },
+        sc,
+    );
+    let server = AsyncServer::start(
+        "127.0.0.1:0",
+        c.client(),
+        FrontendOptions {
+            io_threads: 1,
+            max_connections: 0,
+            max_inflight_per_conn: 8,
+            trace_buffer,
+        },
+    )
+    .unwrap();
+    (c, server)
+}
+
+fn roundtrip(conn: &mut TcpStream, reader: &mut BufReader<TcpStream>, req: &str) -> Json {
+    conn.write_all(req.as_bytes()).unwrap();
+    conn.write_all(b"\n").unwrap();
+    let mut line = String::new();
+    assert!(reader.read_line(&mut line).unwrap() > 0, "server hung up");
+    Json::parse(&line).unwrap_or_else(|e| panic!("{e}: {line}"))
+}
+
+/// Stage lookup by name in a trace record's `stages` array.
+fn stage<'a>(trace: &'a Json, name: &str) -> Option<&'a Json> {
+    trace
+        .get("stages")
+        .as_arr()?
+        .iter()
+        .find(|s| s.get("name").as_str() == Some(name))
+}
+
+#[test]
+fn traced_request_breakdown_spans_the_pipeline() {
+    let (c, server) = serve("breakdown", |_| {});
+    let mut conn = TcpStream::connect(server.local_addr()).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+
+    // Untraced requests never grow a trace field, even with the rings armed.
+    let j = roundtrip(
+        &mut conn,
+        &mut reader,
+        r#"{"op":"open","session":"t1","tokens":[1,2,3,4,5,6]}"#,
+    );
+    assert_eq!(j.get("ok").as_bool(), Some(true), "{j}");
+    assert!(matches!(j.get("trace"), Json::Null), "opt-in only: {j}");
+
+    // Per-request opt-in: the reply carries the span breakdown inline.
+    let j = roundtrip(
+        &mut conn,
+        &mut reader,
+        r#"{"op":"edit","session":"t1","kind":"replace","at":1,"tok":9,"trace":true}"#,
+    );
+    assert_eq!(j.get("ok").as_bool(), Some(true), "{j}");
+    let trace = j.get("trace");
+    assert_eq!(trace.get("kind").as_str(), Some("edit"), "{j}");
+    assert_eq!(trace.get("session").as_str(), Some("t1"));
+    let total = trace.get("total_us").as_usize().expect("total_us");
+
+    // The breakdown covers queue wait and engine work, timestamps are
+    // monotonic per stage, and every stage fits inside the total.
+    let qw = stage(trace, "queue_wait").expect("queue_wait stage");
+    let eng = stage(trace, "engine").expect("engine stage");
+    for s in trace.get("stages").as_arr().unwrap() {
+        let start = s.get("start_us").as_usize().unwrap();
+        let end = s.get("end_us").as_usize().unwrap();
+        assert!(start <= end, "stage ends before it starts: {s}");
+        assert!(end <= total, "stage past total_us: {s} vs {total}");
+        assert!(s.get("busy_us").as_usize().unwrap() <= end - start + 1, "{s}");
+    }
+    // The epoch is the enqueue instant, so queue wait opens the timeline
+    // and the engine runs strictly after dequeue.
+    assert_eq!(qw.get("start_us").as_usize(), Some(0), "{trace}");
+    assert!(
+        eng.get("start_us").as_usize().unwrap() >= qw.get("end_us").as_usize().unwrap(),
+        "engine before dequeue: {trace}"
+    );
+    // The inline copy is attached BEFORE the bytes hit the socket — the
+    // reply-write stage can only exist in the retained ring.
+    assert!(stage(trace, "reply_write").is_none(), "{trace}");
+
+    // The `trace` verb serves the retained rings; the async front end's
+    // copy of the edit's record has the appended reply_write stage.
+    let j = roundtrip(&mut conn, &mut reader, r#"{"op":"trace"}"#);
+    assert_eq!(j.get("ok").as_bool(), Some(true), "{j}");
+    let traces = j.get("traces").as_arr().expect("traces array");
+    assert!(!traces.is_empty());
+    let with_reply = traces
+        .iter()
+        .find(|t| t.get("kind").as_str() == Some("edit") && stage(t, "reply_write").is_some())
+        .expect("an edit trace retired through the front end with reply_write");
+    let rw = stage(with_reply, "reply_write").unwrap();
+    let eng = stage(with_reply, "engine").expect("engine stage in retained record");
+    assert!(
+        rw.get("start_us").as_usize().unwrap() >= eng.get("end_us").as_usize().unwrap(),
+        "reply written before the engine finished: {with_reply}"
+    );
+    assert!(
+        with_reply.get("total_us").as_usize().unwrap()
+            >= rw.get("end_us").as_usize().unwrap(),
+        "{with_reply}"
+    );
+
+    server.shutdown();
+    c.shutdown();
+}
+
+#[test]
+fn metrics_verb_and_http_scrape_serve_the_exposition() {
+    let (c, server) = serve("metrics", |_| {});
+    let mut conn = TcpStream::connect(server.local_addr()).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    roundtrip(
+        &mut conn,
+        &mut reader,
+        r#"{"op":"open","session":"m1","tokens":[4,5,6,7]}"#,
+    );
+    roundtrip(
+        &mut conn,
+        &mut reader,
+        r#"{"op":"edit","session":"m1","kind":"replace","at":0,"tok":2}"#,
+    );
+
+    // Line-protocol verb: the exposition rides inside the JSON reply.
+    let j = roundtrip(&mut conn, &mut reader, r#"{"op":"metrics"}"#);
+    assert_eq!(j.get("ok").as_bool(), Some(true), "{j}");
+    let text = j.get("metrics").as_str().expect("metrics text").to_string();
+    assert!(text.contains("# TYPE vqt_edits_total counter"), "{text}");
+    assert!(text.contains("vqt_edits_total 1"), "{text}");
+    assert!(text.contains("# TYPE vqt_queue_wait_us histogram"), "{text}");
+    assert!(text.contains("vqt_queue_wait_us_bucket{le=\"+Inf\"}"), "{text}");
+    assert!(text.contains("vqt_live_sessions 1"), "{text}");
+    // The async front end appends its own series to the pool's.
+    assert!(text.contains("vqt_frontend_connections 1"), "{text}");
+    assert!(
+        text.contains("vqt_frontend_thread_connections{io_thread=\"0\"} 1"),
+        "{text}"
+    );
+
+    // Plain-HTTP scrape: one HTTP/1.0 response carrying the same body
+    // shape, then close.
+    let mut scrape = TcpStream::connect(server.local_addr()).unwrap();
+    scrape.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+    let mut resp = String::new();
+    scrape.read_to_string(&mut resp).unwrap();
+    assert!(resp.starts_with("HTTP/1.0 200 OK\r\n"), "{resp}");
+    assert!(resp.contains("Content-Type: text/plain; version=0.0.4"), "{resp}");
+    let body = resp.split_once("\r\n\r\n").expect("header/body split").1;
+    assert!(body.contains("# TYPE vqt_edits_total counter"), "{body}");
+    assert!(body.contains("vqt_frontend_connections"), "{body}");
+
+    server.shutdown();
+    c.shutdown();
+}
+
+#[test]
+fn slow_request_sampling_counts_over_threshold_requests() {
+    // A 1µs bar everything trips: every request is sampled as slow.
+    let (c, server) = serve("slow", |sc| {
+        sc.trace_buffer = 0;
+        sc.slow_request_us = 1;
+    });
+    let mut conn = TcpStream::connect(server.local_addr()).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    roundtrip(
+        &mut conn,
+        &mut reader,
+        r#"{"op":"open","session":"sl","tokens":[1,2,3]}"#,
+    );
+    roundtrip(
+        &mut conn,
+        &mut reader,
+        r#"{"op":"edit","session":"sl","kind":"replace","at":0,"tok":7}"#,
+    );
+    let j = roundtrip(&mut conn, &mut reader, r#"{"op":"stats"}"#);
+    let shards = j.get("stats").get("per_shard").as_arr().expect("per_shard");
+    let slow: usize = shards
+        .iter()
+        .map(|s| s.get("slow_requests").as_usize().unwrap())
+        .sum();
+    let traced: usize = shards
+        .iter()
+        .map(|s| s.get("traces_recorded").as_usize().unwrap())
+        .sum();
+    assert!(slow >= 1, "an edit request is always over a 1µs bar, got {slow}");
+    assert!(traced >= 2, "sampling requires tracing: {traced}");
+    server.shutdown();
+    c.shutdown();
+}
