@@ -1,6 +1,14 @@
-//! Server demo: start the TCP JSON server on an ephemeral port, run a
-//! scripted client against it, and print the wire exchange — the deploy
-//! shape of the system (one leader process, newline-delimited JSON).
+//! Server demo: run a scripted client against the TCP JSON wire protocol
+//! and print the exchange (newline-delimited JSON, one object per line).
+//!
+//! For readability this demo drives `vqt::server::handle_conn` directly —
+//! the blocking thread-per-connection reference handler. The production
+//! deploy shape is the readiness-driven async front end (`serve_async`,
+//! ARCHITECTURE.md §10): a fixed pool of IO threads with admission
+//! control (defaults: `max_connections = 4096`, `max_inflight_per_conn =
+//! 32`) and typed `Busy` load shedding. Both front ends speak the wire
+//! protocol shown here and produce bit-identical replies, so everything
+//! this demo prints applies to both.
 //!
 //! Run: `cargo run --release --example server_demo`
 

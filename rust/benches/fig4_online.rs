@@ -270,4 +270,10 @@ fn main() {
         None => println!("\n(open-loop driver skipped: async front end unavailable here)"),
     }
     vqt::bench::emit_json("fig4_online", &metrics);
+    // Say where the consolidated JSON landed (or how to get one), so a CI
+    // log reader can find the artifact without opening the workflow file.
+    match std::env::var("VQT_BENCH_JSON") {
+        Ok(p) => println!("\nbench JSON appended to {p}"),
+        Err(_) => println!("\n(set VQT_BENCH_JSON=<path> to append these metrics as JSON)"),
+    }
 }

@@ -180,6 +180,18 @@ pub struct Metrics {
     /// the window rarely catches concurrent sessions; a high p50 means the
     /// weight traversal is being amortized well.
     pub batch_fill: Histogram,
+    /// Softmax engines: consumer rows updated via streaming-softmax
+    /// aggregate deltas (semi-naive recompute). 0 for element-wise models,
+    /// whose per-column corrections are exact and tracked by the engine's
+    /// own `corrections` counter instead.
+    pub attn_delta_rows: u64,
+    /// Softmax engines: consumer rows that fell back to a full attention
+    /// recompute (cost rule, numeric guard, or drift refresh).
+    pub attn_full_rows: u64,
+    /// Drift-counter-triggered full refreshes (subset of `attn_full_rows`).
+    pub attn_refreshes: u64,
+    /// FLOPs the delta rows saved vs pricing them as full recomputes.
+    pub attn_saved_flops: u64,
 }
 
 impl Metrics {
@@ -212,6 +224,10 @@ impl Metrics {
         self.cache_misses += o.cache_misses;
         self.cache_evictions += o.cache_evictions;
         self.cache_bytes += o.cache_bytes;
+        self.attn_delta_rows += o.attn_delta_rows;
+        self.attn_full_rows += o.attn_full_rows;
+        self.attn_refreshes += o.attn_refreshes;
+        self.attn_saved_flops += o.attn_saved_flops;
     }
     /// The aggregate speedup the engine achieved (paper's headline ratio).
     pub fn speedup(&self) -> f64 {
@@ -254,6 +270,10 @@ impl Metrics {
             ("cache_misses", Json::num(self.cache_misses as f64)),
             ("cache_evictions", Json::num(self.cache_evictions as f64)),
             ("cache_bytes", Json::num(self.cache_bytes as f64)),
+            ("attn_delta_rows", Json::num(self.attn_delta_rows as f64)),
+            ("attn_full_rows", Json::num(self.attn_full_rows as f64)),
+            ("attn_refreshes", Json::num(self.attn_refreshes as f64)),
+            ("attn_saved_flops", Json::num(self.attn_saved_flops as f64)),
         ])
     }
 
@@ -296,7 +316,7 @@ impl Metrics {
         for (name, help, h) in hists {
             prometheus_histogram(&mut out, name, help, h);
         }
-        let counters: [(&str, &str, u64); 21] = [
+        let counters: [(&str, &str, u64); 25] = [
             ("vqt_edits_total", "Edit requests served", self.edits),
             ("vqt_revisions_total", "Revision requests served", self.revisions),
             ("vqt_dense_calls_total", "Dense forward calls served", self.dense_calls),
@@ -349,6 +369,26 @@ impl Metrics {
                 "vqt_slow_requests_total",
                 "Requests exceeding slow_request_us",
                 self.slow_requests,
+            ),
+            (
+                "vqt_attn_delta_rows_total",
+                "Consumer rows updated via streaming-softmax aggregate deltas",
+                self.attn_delta_rows,
+            ),
+            (
+                "vqt_attn_full_rows_total",
+                "Consumer rows that fell back to full attention recompute",
+                self.attn_full_rows,
+            ),
+            (
+                "vqt_attn_refreshes_total",
+                "Drift-counter-triggered full attention refreshes",
+                self.attn_refreshes,
+            ),
+            (
+                "vqt_attn_saved_flops_total",
+                "FLOPs saved by attention delta updates vs full recompute",
+                self.attn_saved_flops,
             ),
         ];
         for (name, help, v) in counters {
@@ -452,6 +492,10 @@ mod tests {
             cache_misses: 4,
             cache_evictions: 1,
             cache_bytes: 128,
+            attn_delta_rows: 7,
+            attn_full_rows: 2,
+            attn_refreshes: 1,
+            attn_saved_flops: 900,
             ..Default::default()
         };
         b.lat_edit_us.record(16.0);
@@ -462,6 +506,10 @@ mod tests {
         assert_eq!(
             (a.cache_hits, a.cache_misses, a.cache_evictions, a.cache_bytes),
             (5, 4, 1, 192)
+        );
+        assert_eq!(
+            (a.attn_delta_rows, a.attn_full_rows, a.attn_refreshes, a.attn_saved_flops),
+            (7, 2, 1, 900)
         );
         assert_eq!(a.speedup(), 20.0);
         assert_eq!(a.lat_edit_us.count(), 2);
@@ -538,6 +586,8 @@ mod tests {
         assert!(text.contains("# TYPE vqt_edits_total counter\nvqt_edits_total 9"));
         assert!(text.contains("vqt_cache_hits_total 4"));
         assert!(text.contains("vqt_traces_recorded_total 0"));
+        assert!(text.contains("# TYPE vqt_attn_delta_rows_total counter"));
+        assert!(text.contains("vqt_attn_saved_flops_total 0"));
         assert!(text.contains("# TYPE vqt_live_sessions gauge\nvqt_live_sessions 3"));
         assert!(text.contains("vqt_shards 2"));
         // Empty histograms still expose a valid +Inf/sum/count triple.
@@ -560,7 +610,16 @@ mod tests {
         assert!(j.get("lat_edit_us").get("p99").as_f64().is_some());
         assert!(j.get("lat_edit_us").get("p999").as_f64().is_some());
         assert_eq!(j.get("sessions_restored").as_usize(), Some(0));
-        for k in ["cache_hits", "cache_misses", "cache_evictions", "cache_bytes"] {
+        for k in [
+            "cache_hits",
+            "cache_misses",
+            "cache_evictions",
+            "cache_bytes",
+            "attn_delta_rows",
+            "attn_full_rows",
+            "attn_refreshes",
+            "attn_saved_flops",
+        ] {
             assert_eq!(j.get(k).as_usize(), Some(0), "{k}");
         }
     }

@@ -496,6 +496,22 @@ impl Client {
                                 ),
                                 ("cache_bytes", Json::num(metrics.cache_bytes as f64)),
                                 (
+                                    "attn_delta_rows",
+                                    Json::num(metrics.attn_delta_rows as f64),
+                                ),
+                                (
+                                    "attn_full_rows",
+                                    Json::num(metrics.attn_full_rows as f64),
+                                ),
+                                (
+                                    "attn_refreshes",
+                                    Json::num(metrics.attn_refreshes as f64),
+                                ),
+                                (
+                                    "attn_saved_flops",
+                                    Json::num(metrics.attn_saved_flops as f64),
+                                ),
+                                (
                                     "queue_wait_p99_us",
                                     Json::num(metrics.queue_wait_us.percentile(99.0)),
                                 ),
@@ -907,6 +923,19 @@ fn cache_counters(e: &IncrementalEngine) -> (u64, u64, u64, u64) {
     )
 }
 
+/// Snapshot of one engine's semi-naive attention counters — same
+/// additive-delta protocol as [`cache_counters`], so delta-row/full-row/
+/// refresh/saved-FLOP activity sums correctly across shards. All four stay
+/// zero on gelu-series engines (no aggregates, no softmax recompute path).
+fn attn_counters(e: &IncrementalEngine) -> (u64, u64, u64, u64) {
+    (
+        e.stats.attn_delta_rows,
+        e.stats.attn_full_rows,
+        e.stats.attn_refreshes,
+        e.stats.attn_delta_saved_flops,
+    )
+}
+
 impl Worker {
     fn handle(&mut self, req: Request) -> Response {
         match self.handle_inner(req) {
@@ -1152,6 +1181,10 @@ impl Worker {
                 .iter()
                 .map(|(_, s, _)| cache_counters(&s.engine))
                 .collect();
+            let attn_before: Vec<(u64, u64, u64, u64)> = pool
+                .iter()
+                .map(|(_, s, _)| attn_counters(&s.engine))
+                .collect();
             let outcome = {
                 let script_refs: Vec<&[Edit]> = scripts.iter().map(|s| s.as_slice()).collect();
                 let mut engines: Vec<&mut crate::incremental::IncrementalEngine> =
@@ -1206,10 +1239,12 @@ impl Worker {
                         let predicted = sess.engine.predict();
                         let defrag_delta = sess.engine.stats.defrags - defrags_before[i];
                         let cache_after = cache_counters(&sess.engine);
+                        let attn_after = attn_counters(&sess.engine);
                         self.sessions.checkin(s, sess);
                         self.metrics.edits += nedits as u64;
                         self.metrics.defrags += defrag_delta;
                         self.charge_cache_delta(cache_before[i], cache_after);
+                        self.charge_attn_delta(attn_before[i], attn_after);
                         self.metrics.flops_incremental += rep.flops;
                         let dense_equiv = self.dense_equiv(n) * nedits.max(1) as u64;
                         self.metrics.flops_dense_equiv += dense_equiv;
@@ -1275,6 +1310,14 @@ impl Worker {
         self.metrics.cache_misses += after.1 - before.1;
         self.metrics.cache_evictions += after.2 - before.2;
         self.metrics.cache_bytes += after.3 - before.3;
+    }
+
+    /// Fold an engine's attention-counter delta into this shard's metrics.
+    fn charge_attn_delta(&mut self, before: (u64, u64, u64, u64), after: (u64, u64, u64, u64)) {
+        self.metrics.attn_delta_rows += after.0 - before.0;
+        self.metrics.attn_full_rows += after.1 - before.1;
+        self.metrics.attn_refreshes += after.2 - before.2;
+        self.metrics.attn_saved_flops += after.3 - before.3;
     }
 
     /// Resolve a client-supplied snapshot name inside the configured
@@ -1364,17 +1407,20 @@ impl Worker {
                 let script = diff_tokens(s.engine.tokens(), &tokens);
                 let defrags_before = s.engine.stats.defrags;
                 let cache_before = cache_counters(&s.engine);
+                let attn_before = attn_counters(&s.engine);
                 let rep = s.engine.apply_revision(&script);
                 s.edits += script.len() as u64;
                 let n = s.engine.len();
                 let predicted = s.engine.predict();
                 let defrags_after = s.engine.stats.defrags;
                 let cache_after = cache_counters(&s.engine);
+                let attn_after = attn_counters(&s.engine);
                 self.sessions.reaccount(&session);
                 self.metrics.revisions += 1;
                 self.metrics.edits += script.len() as u64;
                 self.metrics.defrags += defrags_after - defrags_before;
                 self.charge_cache_delta(cache_before, cache_after);
+                self.charge_attn_delta(attn_before, attn_after);
                 self.metrics.flops_incremental += rep.flops;
                 let dense_equiv = self.dense_equiv(n);
                 self.metrics.flops_dense_equiv += dense_equiv;
@@ -1509,18 +1555,21 @@ impl Worker {
         validate_edits(edits, s.engine.len(), self.weights.cfg.max_seq)?;
         let defrags_before = s.engine.stats.defrags;
         let cache_before = cache_counters(&s.engine);
+        let attn_before = attn_counters(&s.engine);
         let rep = s.engine.apply_edits(edits);
         s.edits += edits.len() as u64;
         let n = s.engine.len();
         let predicted = s.engine.predict();
         let defrags_after = s.engine.stats.defrags;
         let cache_after = cache_counters(&s.engine);
+        let attn_after = attn_counters(&s.engine);
         self.sessions.reaccount(session);
         self.metrics.edits += edits.len() as u64;
         // Additive counter (not a gauge) so the cross-shard merge sums
         // correctly regardless of session placement.
         self.metrics.defrags += defrags_after - defrags_before;
         self.charge_cache_delta(cache_before, cache_after);
+        self.charge_attn_delta(attn_before, attn_after);
         self.metrics.flops_incremental += rep.flops;
         // Dense equivalent: one from-scratch pass per edit (the online
         // comparison the paper makes for atomic edits).
@@ -1571,6 +1620,7 @@ impl Worker {
             // `fork` zeroes the stat counters, so the fork's totals ARE
             // the delta this revision contributed.
             self.charge_cache_delta((0, 0, 0, 0), cache_counters(&fork));
+            self.charge_attn_delta((0, 0, 0, 0), attn_counters(&fork));
             forks.push(fork);
         }
         self.metrics.revisions += revisions.len() as u64;

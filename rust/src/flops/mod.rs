@@ -152,6 +152,47 @@ pub fn attention_row_cost(cfg: &ModelConfig, ctx: usize) -> u64 {
         + d                 // constant output rescale
 }
 
+// ---------------------------------------------------------------------------
+// Streaming-softmax (semi-naive) attention attribution — the engine-side
+// charges for softmax sessions (docs/ARCHITECTURE.md §12). These are the
+// exact amounts `IncrementalEngine` ticks, so the per-row delta-vs-full
+// decision can be made by comparing the two closed forms, and the ledger
+// identity `flops_full − flops_delta == Σ per-row savings` holds exactly.
+// ---------------------------------------------------------------------------
+
+/// Cost of renormalizing one row's aggregates into its accumulator:
+/// one reciprocal per attention head + one multiply per output element.
+pub fn attn_sm_renorm_cost(cfg: &ModelConfig) -> u64 {
+    cfg.n_heads as u64 + cfg.d_model as u64
+}
+
+/// Cost of ONE side term (subtract-old or add-new) of a streaming-softmax
+/// delta update, all heads combined: the q·k score dots (d muladds), the
+/// per-head scale multiply and exp, the per-head denominator update, and
+/// the numerator axpy (d muladds). Deliberately identical to the
+/// per-column cost inside [`attn_sm_full_cost`] — the same arithmetic is
+/// performed either way, so `delta < full ⟺ sides < ctx`.
+pub fn attn_sm_side_cost(cfg: &ModelConfig) -> u64 {
+    let d = cfg.d_model as u64;
+    let nh = cfg.n_heads as u64;
+    2 * MULADD * d + nh * (2 + TRANSCENDENTAL)
+}
+
+/// Cost of a streaming-softmax delta update applying `sides` side terms
+/// (a modified column contributes two — subtract old, add new; an
+/// inserted or removed column contributes one) plus the final renorm.
+pub fn attn_sm_delta_cost(cfg: &ModelConfig, sides: usize) -> u64 {
+    sides as u64 * attn_sm_side_cost(cfg) + attn_sm_renorm_cost(cfg)
+}
+
+/// Cost of a full streaming-softmax recompute of one row over `ctx`
+/// visible columns: per column the same side-term arithmetic (the
+/// per-head max scan costs what the per-head denominator update costs —
+/// one op per head per column), plus the final renorm.
+pub fn attn_sm_full_cost(cfg: &ModelConfig, ctx: usize) -> u64 {
+    ctx as u64 * attn_sm_side_cost(cfg) + attn_sm_renorm_cost(cfg)
+}
+
 /// Cost of multi-head VQ assignment of one d-vector against the per-head
 /// codebooks (scores matmul + bias + argmax), per App. A.2's formulation.
 pub fn vq_assign_cost(cfg: &ModelConfig) -> u64 {
@@ -245,6 +286,35 @@ mod tests {
         let mut cfg = ModelConfig::vqt_mini();
         cfg.vq_heads = 0;
         assert_eq!(vq_assign_cost(&cfg), 0);
+    }
+
+    #[test]
+    fn attn_sm_delta_wins_exactly_when_sides_below_ctx() {
+        // The decision rule of docs/ARCHITECTURE.md §12: side-term and
+        // per-column costs are identical by construction, so the ledger
+        // comparison reduces to `sides < ctx` — locked here so a later
+        // formula change can't silently skew the decision boundary.
+        let cfg = ModelConfig::vqt_mini();
+        for ctx in [1usize, 2, 7, 64, 512] {
+            for sides in [1usize, 2, 7, 64, 512] {
+                let delta = attn_sm_delta_cost(&cfg, sides);
+                let full = attn_sm_full_cost(&cfg, ctx);
+                assert_eq!(delta < full, sides < ctx, "sides {sides} ctx {ctx}");
+            }
+        }
+    }
+
+    #[test]
+    fn attn_sm_costs_compose_from_sides_and_renorm() {
+        let cfg = ModelConfig::vqt_tiny();
+        let side = attn_sm_side_cost(&cfg);
+        let renorm = attn_sm_renorm_cost(&cfg);
+        assert_eq!(attn_sm_delta_cost(&cfg, 0), renorm);
+        assert_eq!(attn_sm_delta_cost(&cfg, 3), 3 * side + renorm);
+        assert_eq!(attn_sm_full_cost(&cfg, 5), 5 * side + renorm);
+        // The savings of a delta row is full − delta — always positive on
+        // the delta side of the decision boundary.
+        assert!(attn_sm_full_cost(&cfg, 10) > attn_sm_delta_cost(&cfg, 2));
     }
 }
 

@@ -1,0 +1,214 @@
+//! Semi-naive softmax-attention recompute: per-(layer, query-row)
+//! streaming-softmax aggregates and the delta-update primitives over them.
+//!
+//! With true softmax attention an edited key/value column changes every
+//! later row's attention output through the *normalizer* — the reason the
+//! paper restricts its exact delta rules to element-wise σ (App. A.1).
+//! The semi-naive recipe recovers most of the saving anyway: keep, per
+//! query row i and head h, the streaming-softmax state
+//!
+//! ```text
+//!   m_h  — the shift (frozen at the last full refresh of row i)
+//!   D_h  = Σ_j exp(s_ij − m_h)                 (denominator)
+//!   N_h  = Σ_j exp(s_ij − m_h) · v_j|_h        (numerator, d_head wide)
+//! ```
+//!
+//! so the attention output is `N_h / D_h`. When an edit changes a *set*
+//! of key/value columns, an unchanged query row re-evaluates only the
+//! variants where one term is restricted to the delta: subtract the old
+//! columns' terms (recomputed bit-identically from the retained old K/V),
+//! add the new ones, renormalize. Cost is `O(|changed columns|)` instead
+//! of `O(context)`; the engine picks per row between the delta and a full
+//! recompute via the FLOP-ledger arms in [`crate::flops`]
+//! (`attn_sm_delta_cost` vs `attn_sm_full_cost`).
+//!
+//! The trade is explicit and bounded (docs/ARCHITECTURE.md §12): each
+//! delta application can cancel at most one f32 rounding step per element
+//! against the original addition, a per-row drift counter caps how many
+//! applications accumulate before a full refresh re-freezes the shift,
+//! and two guards force an early refresh when the frozen shift goes stale
+//! ([`MAX_EXP_ARG`]) or the denominator loses too much mass ([`MIN_DEN`]).
+
+use super::rowstore::RowStore;
+use crate::tensor;
+
+/// Largest tolerated `score − shift` before `exp` under a stale frozen
+/// shift risks blow-up: beyond this the row falls back to a full refresh,
+/// which re-freezes the shift at the true row maximum. `exp(30) ≈ 1e13`
+/// still sits comfortably inside f32 range (~3.4e38) even summed over a
+/// max_seq context, so the guard fires well before overflow.
+pub const MAX_EXP_ARG: f32 = 30.0;
+
+/// Smallest tolerated per-head denominator after subtractions. Below this
+/// the running sum has cancelled almost entirely and the renormalized
+/// ratio amplifies rounding error unboundedly — full refresh instead.
+pub const MIN_DEN: f32 = 1e-6;
+
+/// Per-layer streaming-softmax state: one row per sequence position,
+/// structurally maintained in lock-step with the engine's other per-layer
+/// row stores (same insert/remove/reindex at the same call sites).
+#[derive(Clone, Debug, Default)]
+pub struct AttnAggregates {
+    /// Numerators — (n, d_model): head h's d_head-wide `N_h` in its slice.
+    pub num: RowStore,
+    /// Denominators — (n, n_heads).
+    pub den: RowStore,
+    /// Frozen shifts — (n, n_heads).
+    pub m: RowStore,
+    /// Delta applications since each row's last full refresh.
+    pub drift: Vec<u32>,
+}
+
+impl AttnAggregates {
+    pub fn new(d_model: usize, n_heads: usize) -> AttnAggregates {
+        AttnAggregates {
+            num: RowStore::new(d_model),
+            den: RowStore::new(n_heads),
+            m: RowStore::new(n_heads),
+            drift: Vec::new(),
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.drift.len()
+    }
+
+    pub fn clear(&mut self) {
+        self.num.clear();
+        self.den.clear();
+        self.m.clear();
+        self.drift.clear();
+    }
+
+    /// Append a zeroed row (filled by the next full refresh of that row).
+    pub fn push_zero_row(&mut self) {
+        self.num.insert_zero_row(self.num.rows());
+        self.den.insert_zero_row(self.den.rows());
+        self.m.insert_zero_row(self.m.rows());
+        self.drift.push(0);
+    }
+
+    pub fn insert_zero_row(&mut self, at: usize) {
+        self.num.insert_zero_row(at);
+        self.den.insert_zero_row(at);
+        self.m.insert_zero_row(at);
+        self.drift.insert(at, 0);
+    }
+
+    pub fn remove_row(&mut self, at: usize) {
+        self.num.remove_row(at);
+        self.den.remove_row(at);
+        self.m.remove_row(at);
+        self.drift.remove(at);
+    }
+
+    /// Batched-revision restructure — same mapping contract as
+    /// [`RowStore::reindex`]; rows without an origin start zeroed with a
+    /// fresh drift counter (they are dirty and refresh in the same pass).
+    pub fn reindex(&mut self, mapping: &[Option<usize>]) {
+        self.num.reindex(mapping);
+        self.den.reindex(mapping);
+        self.m.reindex(mapping);
+        let old = std::mem::take(&mut self.drift);
+        self.drift = mapping
+            .iter()
+            .map(|o| o.map(|o| old[o]).unwrap_or(0))
+            .collect();
+    }
+
+    /// Resident payload bytes (counted by the session memory accountant).
+    pub fn bytes(&self) -> usize {
+        self.num.bytes()
+            + self.den.bytes()
+            + self.m.bytes()
+            + self.drift.len() * std::mem::size_of::<u32>()
+    }
+}
+
+/// One key/value-column change, normalized for aggregate application:
+/// rows at index ≥ `start` (in the *current* layout, after structural
+/// restructuring) are affected. `old` carries the retained pre-edit
+/// (key, value) rows to subtract — recomputing their weights from the
+/// retained key reproduces the originally-added term bit-identically, so
+/// subtraction cancels exactly up to one rounding step per element. A
+/// `new_j` names a current column whose fresh (key, value) is added.
+pub struct SmChange {
+    pub start: usize,
+    pub old: Option<(Vec<f32>, Vec<f32>)>,
+    pub new_j: Option<usize>,
+}
+
+impl SmChange {
+    /// Terms this change contributes to one affected row.
+    pub fn sides(&self) -> usize {
+        self.old.is_some() as usize + self.new_j.is_some() as usize
+    }
+}
+
+/// Per-head `exp(q·k·scale − m)` weights for one (query, key) pair under
+/// frozen shifts `m` — into a fixed buffer, no ledger (callers account in
+/// bulk). Returns `false` — **without partial output** the caller may
+/// rely on — when any head trips the [`MAX_EXP_ARG`] stale-shift guard;
+/// the caller must then fall back to a full refresh.
+#[inline]
+pub fn side_weights(
+    q: &[f32],
+    k: &[f32],
+    m: &[f32],
+    nh: usize,
+    dh: usize,
+    scale: f32,
+    out: &mut [f32; 16],
+) -> bool {
+    debug_assert!(nh <= 16);
+    for h in 0..nh {
+        let s = tensor::dot(&q[h * dh..(h + 1) * dh], &k[h * dh..(h + 1) * dh]) * scale;
+        let z = s - m[h];
+        if z > MAX_EXP_ARG {
+            return false;
+        }
+        out[h] = z.exp();
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates_track_structure() {
+        let mut a = AttnAggregates::new(8, 2);
+        a.push_zero_row();
+        a.push_zero_row();
+        a.num.row_mut(1)[0] = 5.0;
+        a.drift[1] = 3;
+        a.insert_zero_row(1);
+        assert_eq!(a.rows(), 3);
+        assert_eq!(a.num.row(2)[0], 5.0);
+        assert_eq!(a.drift, vec![0, 0, 3]);
+        a.remove_row(0);
+        assert_eq!(a.rows(), 2);
+        assert_eq!(a.num.row(1)[0], 5.0);
+        // reindex: keep old row 1 at new 0, fresh zero row at new 1.
+        a.reindex(&[Some(1), None]);
+        assert_eq!(a.num.row(0)[0], 5.0);
+        assert_eq!(a.drift, vec![3, 0]);
+        assert_eq!(a.num.row(1)[0], 0.0);
+        assert!(a.bytes() > 0);
+    }
+
+    #[test]
+    fn side_weights_guard_trips_on_stale_shift() {
+        let q = vec![8.0f32; 4];
+        let k = vec![8.0f32; 4];
+        let mut out = [0f32; 16];
+        // score = 8·8·2·scale per head (dh = 2, scale = 1/√2) ≈ 90 ≫ m + 30.
+        let ok = side_weights(&q, &k, &[0.0, 0.0], 2, 2, 1.0 / (2f32).sqrt(), &mut out);
+        assert!(!ok);
+        // A generous shift keeps it in range.
+        let ok = side_weights(&q, &k, &[85.0, 85.0], 2, 2, 1.0 / (2f32).sqrt(), &mut out);
+        assert!(ok);
+        assert!(out[0].is_finite() && out[0] > 0.0);
+    }
+}

@@ -20,6 +20,14 @@
 //! (residual adds, LN2, fused bias-GELU) is shared scalar code applied
 //! row-wise. Locked by `pooled_block_tail_bitwise_matches_single_row`
 //! below and by `tests/differential_batch.rs`.
+//!
+//! **Attention-kind agnosticism**: this module only pools the dense block
+//! *tails*, which are identical across attention kinds. The attention
+//! stage itself — including the softmax semi-naive delta-vs-full decision
+//! (docs/ARCHITECTURE.md §12) — runs inside each engine's staged hooks
+//! (`staged_pre`/`staged_post`), so pooled waves inherit exactly the
+//! per-row recompute choices an unpooled `apply_edits` would have made,
+//! and the `attn_*` counters attribute identically either way.
 
 use crate::edits::Edit;
 use crate::model::ModelWeights;

@@ -9,6 +9,14 @@
 //!   softmax, a changed key/value at column j contributes an exact
 //!   correction term `±σ(q_i·k_j·s)·v_j` to every later row i — no
 //!   renormalization, unlike softmax.
+//! - **Semi-naive softmax recompute** (delta-restricted propagation):
+//!   with true softmax the exact rule above breaks — the normalizer
+//!   couples every column. Softmax engines instead keep per-row
+//!   streaming-softmax aggregates ([`super::attn_delta`]) and update
+//!   unchanged query rows by subtracting the changed columns' old terms
+//!   and adding the new ones, renormalizing once — choosing per row
+//!   between delta and full recompute via the FLOP ledger, with a
+//!   bounded, drift-refreshed tolerance (docs/ARCHITECTURE.md §12).
 //! - **VQ cost hiding** (App. A.2): attention outputs are maintained
 //!   directly in *VQ score space*. Per row we keep
 //!   `acc[i] = ⟨Σ_j σ_h(q_i,k_j)·v_j, C⟩`, exploiting linearity of the
@@ -36,6 +44,7 @@ use crate::vq::CodeTuple;
 use anyhow::Result;
 use std::sync::Arc;
 
+use super::attn_delta::{self, AttnAggregates, SmChange};
 use super::codecache::CacheHandle;
 use super::rowstore::RowStore;
 
@@ -49,6 +58,16 @@ pub struct EngineOptions {
     /// After this many edits, self-verify against a dense recompute and
     /// rebuild on drift (0 = never).
     pub verify_every: usize,
+    /// Softmax engines only: allow per-row delta updates of the
+    /// streaming-softmax aggregates (semi-naive recompute). When false,
+    /// every affected consumer row recomputes its attention in full — the
+    /// forced-full ablation arm the differential suite compares against.
+    pub attn_delta: bool,
+    /// Softmax engines only: full-refresh a row's aggregates after this
+    /// many delta applications, bounding accumulated rounding drift
+    /// (0 = never refresh on the counter; the stale-shift and denominator
+    /// guards in [`super::attn_delta`] still force refreshes).
+    pub attn_refresh_every: usize,
 }
 
 impl Default for EngineOptions {
@@ -56,6 +75,8 @@ impl Default for EngineOptions {
         EngineOptions {
             score_trick: true,
             verify_every: 0,
+            attn_delta: true,
+            attn_refresh_every: 64,
         }
     }
 }
@@ -84,6 +105,19 @@ pub struct EngineStats {
     pub cache_evictions: u64,
     /// Payload+overhead bytes this engine's inserts added to the cache.
     pub cache_bytes_inserted: u64,
+    /// Softmax engines: clean consumer rows updated via aggregate delta
+    /// (semi-naive recompute) instead of full re-attention.
+    pub attn_delta_rows: u64,
+    /// Softmax engines: clean consumer rows that fell back to a full
+    /// attention recompute — cost rule, guard trip, or drift refresh.
+    pub attn_full_rows: u64,
+    /// Drift-counter-triggered full refreshes (a subset of
+    /// `attn_full_rows`; see `EngineOptions::attn_refresh_every`).
+    pub attn_refreshes: u64,
+    /// FLOPs the delta rows saved vs the full recompute the cost rule
+    /// priced for them (Σ full − delta) — the operand of the ledger
+    /// identity checked by `tests/differential_attn_delta.rs`.
+    pub attn_delta_saved_flops: u64,
 }
 
 /// Result of one edit (or edit-script) application.
@@ -129,6 +163,9 @@ struct LayerState {
     acc: RowStore,
     /// Current VQ code per row.
     codes: Vec<CodeTuple>,
+    /// Streaming-softmax aggregates (softmax attention only; `None` for
+    /// element-wise engines, whose deltas are exact without them).
+    agg: Option<AttnAggregates>,
 }
 
 /// A pending change to attention column `j` within a layer.
@@ -209,18 +246,32 @@ impl IncrementalEngine {
         Self::try_new(w, tokens, opts).expect("invalid engine configuration")
     }
 
-    /// Fallible [`Self::new`]: validates up front — element-wise
-    /// attention, `vq_heads > 0`, head divisibility, and (crucially for
+    /// Fallible [`Self::new`]: validates up front — a supported attention
+    /// kind, `vq_heads > 0`, head divisibility, and (crucially for
     /// serving) that **every** layer of the weight set actually carries
     /// VQ codebooks. A weights file with a VQ-less layer thus fails here
     /// with "layer N has no VQ config" instead of panicking a worker
     /// mid-request deep in the hot path.
-    pub fn try_new(w: Arc<ModelWeights>, tokens: &[u32], opts: EngineOptions) -> Result<Self> {
+    ///
+    /// Element-wise engines update exactly (paper §3 / App. A.1); softmax
+    /// engines run the semi-naive aggregate path with its documented
+    /// tolerance (docs/ARCHITECTURE.md §12). The App. A.2 score-space
+    /// trick relies on update linearity, which softmax's renormalization
+    /// breaks, so softmax engines always run in value space —
+    /// `opts.score_trick` is normalized to `false` here (and checkpoints
+    /// record the normalized mode).
+    pub fn try_new(w: Arc<ModelWeights>, tokens: &[u32], mut opts: EngineOptions) -> Result<Self> {
         let cfg = &w.cfg;
         anyhow::ensure!(
-            cfg.attention == AttentionKind::GeluElementwise,
-            "incremental inference requires element-wise attention (paper §3)"
+            matches!(
+                cfg.attention,
+                AttentionKind::GeluElementwise | AttentionKind::Softmax
+            ),
+            "incremental inference requires element-wise or softmax attention"
         );
+        if cfg.attention == AttentionKind::Softmax {
+            opts.score_trick = false;
+        }
         anyhow::ensure!(cfg.vq_heads > 0, "incremental inference requires VQ layers");
         anyhow::ensure!(
             cfg.n_heads % cfg.vq_heads == 0,
@@ -243,6 +294,8 @@ impl IncrementalEngine {
                 vc: RowStore::new(vc_w),
                 acc: RowStore::new(acc_w),
                 codes: Vec::new(),
+                agg: (cfg.attention == AttentionKind::Softmax)
+                    .then(|| AttnAggregates::new(d, cfg.n_heads)),
             })
             .collect();
         let mut eng = IncrementalEngine {
@@ -340,6 +393,9 @@ impl IncrementalEngine {
             l.vc.clear();
             l.acc.clear();
             l.codes.clear();
+            if let Some(a) = &mut l.agg {
+                a.clear();
+            }
         }
         self.final_hidden.clear();
         self.pooled_sum = vec![0.0; d];
@@ -359,6 +415,13 @@ impl IncrementalEngine {
                 layer.k.push_row(&k);
                 layer.v.push_row(&v);
                 layer.vc.push_row(&vc);
+            }
+            // Aggregate rows must exist before the per-row full pass below
+            // writes them (softmax only).
+            if let Some(a) = &mut self.layers[li].agg {
+                for _ in 0..n {
+                    a.push_zero_row();
+                }
             }
             for (i, x) in x_rows.iter_mut().enumerate() {
                 let acc = self.attn_full_row(li, i);
@@ -524,8 +587,13 @@ impl IncrementalEngine {
     }
 
     /// Full attention accumulator for row i (over all visible columns).
-    /// Allocation-free per column; ledger ticked in bulk.
+    /// Allocation-free per column; ledger ticked in bulk. Softmax engines
+    /// divert to the streaming-softmax variant, which also refreshes the
+    /// row's aggregates.
     fn attn_full_row(&mut self, li: usize, i: usize) -> Vec<f32> {
+        if self.is_softmax() {
+            return self.attn_sm_full_row(li, i);
+        }
         self.stats.rows_recomputed += 1;
         let cfg = &self.w.cfg;
         let (nh, dh, d) = (cfg.n_heads, cfg.d_head(), cfg.d_model);
@@ -560,6 +628,207 @@ impl IncrementalEngine {
         self.ledger
             .add(if trick { Cat::Vq } else { Cat::Attention }, c * per_acc);
         acc
+    }
+
+    #[inline]
+    fn is_softmax(&self) -> bool {
+        self.w.cfg.attention == AttentionKind::Softmax
+    }
+
+    /// Full streaming-softmax recompute of row i: fresh per-head shifts
+    /// (the true row maxima), aggregates written back, drift counter
+    /// reset. Returns the renormalized value-space accumulator. Ledger:
+    /// [`flops::attn_sm_full_cost`] — the figure the decision rule in
+    /// [`Self::attn_sm_apply_changes`] prices delta updates against.
+    fn attn_sm_full_row(&mut self, li: usize, i: usize) -> Vec<f32> {
+        self.stats.rows_recomputed += 1;
+        let (nh, dh, d) = (
+            self.w.cfg.n_heads,
+            self.w.cfg.d_head(),
+            self.w.cfg.d_model,
+        );
+        let scale = 1.0 / (dh as f32).sqrt();
+        let full_cost = flops::attn_sm_full_cost(&self.w.cfg, i + 1);
+        debug_assert!(nh <= 16);
+        let scores = &mut self.scratch.mid;
+        let layer = &mut self.layers[li];
+        let agg = layer.agg.as_mut().expect("softmax engine carries aggregates");
+        let q = layer.q.row(i);
+        // Pass 1: scores and per-head maxima (the fresh frozen shifts).
+        scores.resize((i + 1) * nh, 0.0);
+        let mut m = [f32::NEG_INFINITY; 16];
+        for j in 0..=i {
+            let k = layer.k.row(j);
+            for h in 0..nh {
+                let s = tensor::dot(&q[h * dh..(h + 1) * dh], &k[h * dh..(h + 1) * dh]) * scale;
+                scores[j * nh + h] = s;
+                m[h] = m[h].max(s);
+            }
+        }
+        // Pass 2: accumulate num/den under the fresh shifts; renormalize.
+        let num = agg.num.row_mut(i);
+        num.fill(0.0);
+        let mut den = [0f32; 16];
+        for j in 0..=i {
+            let v = layer.v.row(j);
+            for h in 0..nh {
+                let wj = (scores[j * nh + h] - m[h]).exp();
+                tensor::sm_add_term(
+                    &mut num[h * dh..(h + 1) * dh],
+                    &mut den[h],
+                    wj,
+                    &v[h * dh..(h + 1) * dh],
+                );
+            }
+        }
+        let mut acc = vec![0.0; d];
+        for h in 0..nh {
+            tensor::sm_renorm_into(
+                &num[h * dh..(h + 1) * dh],
+                den[h],
+                &mut acc[h * dh..(h + 1) * dh],
+            );
+        }
+        agg.den.row_mut(i).copy_from_slice(&den[..nh]);
+        agg.m.row_mut(i).copy_from_slice(&m[..nh]);
+        agg.drift[i] = 0;
+        self.ledger.add(Cat::Attention, full_cost);
+        acc
+    }
+
+    /// Semi-naive sweep over clean consumer rows for a set of key/value
+    /// column changes — the softmax counterpart of the exact
+    /// [`Self::correct_rows`] sweeps. Per affected row the engine picks
+    /// delta-update vs full recompute by comparing the two FLOP-ledger
+    /// arms ([`flops::attn_sm_delta_cost`] vs [`flops::attn_sm_full_cost`]);
+    /// the drift counter and the guards in [`super::attn_delta`] can force
+    /// the full path regardless (docs/ARCHITECTURE.md §12).
+    fn attn_sm_apply_changes(
+        &mut self,
+        li: usize,
+        changes: &[SmChange],
+        row_dirty: &[bool],
+        mut acc_touched: Option<&mut Vec<bool>>,
+    ) {
+        if changes.is_empty() {
+            return;
+        }
+        let n = self.layers[li].x.rows();
+        let start_min = changes.iter().map(|c| c.start).min().unwrap_or(n);
+        let (delta_on, refresh) = (self.opts.attn_delta, self.opts.attn_refresh_every);
+        let dh = self.w.cfg.d_head();
+        let scale = 1.0 / (dh as f32).sqrt();
+        for i in start_min..n {
+            if row_dirty[i] {
+                continue;
+            }
+            let sides: usize = changes
+                .iter()
+                .filter(|c| c.start <= i)
+                .map(|c| c.sides())
+                .sum();
+            if sides == 0 {
+                continue;
+            }
+            let full_cost = flops::attn_sm_full_cost(&self.w.cfg, i + 1);
+            let delta_cost = flops::attn_sm_delta_cost(&self.w.cfg, sides);
+            let want_delta = delta_on && delta_cost < full_cost;
+            let drift_ok = refresh == 0
+                || (self.layers[li]
+                    .agg
+                    .as_ref()
+                    .expect("softmax engine carries aggregates")
+                    .drift[i] as usize)
+                    < refresh;
+            if want_delta && !drift_ok {
+                self.stats.attn_refreshes += 1;
+            }
+            let mut applied = false;
+            if want_delta && drift_ok {
+                applied = self.attn_sm_delta_row(li, i, changes, scale);
+                if applied {
+                    self.ledger.add(Cat::Attention, delta_cost);
+                    self.stats.attn_delta_rows += 1;
+                    self.stats.attn_delta_saved_flops += full_cost - delta_cost;
+                }
+            }
+            if !applied {
+                let acc = self.attn_sm_full_row(li, i);
+                self.layers[li].acc.row_mut(i).copy_from_slice(&acc);
+                self.stats.attn_full_rows += 1;
+            }
+            if let Some(t) = acc_touched.as_deref_mut() {
+                t[i] = true;
+            }
+        }
+    }
+
+    /// Attempt the delta update of one clean row's aggregates: subtract
+    /// each change's retained old term (bit-identical weight — recomputed
+    /// from the retained old key under the same frozen shift), add its new
+    /// term, renormalize once. All sides are staged against scratch copies
+    /// so a guard trip midway leaves the row untouched; returns whether
+    /// the delta committed.
+    fn attn_sm_delta_row(&mut self, li: usize, i: usize, changes: &[SmChange], scale: f32) -> bool {
+        let (nh, dh) = (self.w.cfg.n_heads, self.w.cfg.d_head());
+        let num = &mut self.scratch.a;
+        let layer = &mut self.layers[li];
+        let agg = layer.agg.as_mut().expect("softmax engine carries aggregates");
+        let q = layer.q.row(i);
+        let mut m = [0f32; 16];
+        m[..nh].copy_from_slice(agg.m.row(i));
+        let mut den = [0f32; 16];
+        den[..nh].copy_from_slice(agg.den.row(i));
+        num.clear();
+        num.extend_from_slice(agg.num.row(i));
+        let mut w = [0f32; 16];
+        for ch in changes {
+            if ch.start > i {
+                continue;
+            }
+            if let Some((k_old, v_old)) = &ch.old {
+                if !attn_delta::side_weights(q, k_old, &m[..nh], nh, dh, scale, &mut w) {
+                    return false;
+                }
+                for h in 0..nh {
+                    tensor::sm_sub_term(
+                        &mut num[h * dh..(h + 1) * dh],
+                        &mut den[h],
+                        w[h],
+                        &v_old[h * dh..(h + 1) * dh],
+                    );
+                }
+            }
+            if let Some(j) = ch.new_j {
+                let (kn, vn) = (layer.k.row(j), layer.v.row(j));
+                if !attn_delta::side_weights(q, kn, &m[..nh], nh, dh, scale, &mut w) {
+                    return false;
+                }
+                for h in 0..nh {
+                    tensor::sm_add_term(
+                        &mut num[h * dh..(h + 1) * dh],
+                        &mut den[h],
+                        w[h],
+                        &vn[h * dh..(h + 1) * dh],
+                    );
+                }
+            }
+        }
+        if den[..nh].iter().any(|&dv| dv < attn_delta::MIN_DEN) {
+            return false;
+        }
+        agg.num.row_mut(i).copy_from_slice(num);
+        agg.den.row_mut(i).copy_from_slice(&den[..nh]);
+        agg.drift[i] += 1;
+        let acc = layer.acc.row_mut(i);
+        for h in 0..nh {
+            tensor::sm_renorm_into(
+                &num[h * dh..(h + 1) * dh],
+                den[h],
+                &mut acc[h * dh..(h + 1) * dh],
+            );
+        }
+        true
     }
 
     /// VQ assignment from an accumulator.
@@ -856,8 +1125,10 @@ impl IncrementalEngine {
                 if score_trick {
                     layer.vc.insert_row(at, &vc);
                 }
-                let accw = layer.acc.cols;
-                layer.acc.insert_row(at, &vec![0.0; accw]);
+                layer.acc.insert_zero_row(at);
+                if let Some(a) = &mut layer.agg {
+                    a.insert_zero_row(at);
+                }
                 layer.codes.insert(at, CodeTuple::new(&vec![0; vq_heads]));
                 col_changes.push(ColChange::Added { j: at });
             }
@@ -873,6 +1144,9 @@ impl IncrementalEngine {
                     Vec::new()
                 };
                 layer.acc.remove_row(at);
+                if let Some(a) = &mut layer.agg {
+                    a.remove_row(at);
+                }
                 layer.codes.remove(at);
                 let val_old = if score_trick { vc_old } else { v_old };
                 col_changes.push(ColChange::Removed { j: at, k_old, val_old });
@@ -913,38 +1187,69 @@ impl IncrementalEngine {
             }
         }
         let mut acc_touched = vec![false; n];
-        for cc in &col_changes {
-            match cc {
-                ColChange::Modified { j, k_old, val_old } => {
-                    self.correct_rows(
-                        li,
-                        *j..n,
-                        &row_dirty,
-                        Some((k_old, val_old)),
-                        Some(*j),
-                        Some(&mut acc_touched),
-                    );
-                }
-                ColChange::Added { j } => {
-                    self.correct_rows(
-                        li,
-                        (*j + 1)..n,
-                        &row_dirty,
-                        None,
-                        Some(*j),
-                        Some(&mut acc_touched),
-                    );
-                }
-                ColChange::Removed { j, k_old, val_old } => {
+        if self.is_softmax() {
+            // Semi-naive path: normalize the column changes and let the
+            // aggregate sweep pick delta vs full per clean row. The old
+            // (k, val) rows move into the change records — they are the
+            // retained terms the delta subtracts bit-identically.
+            let changes: Vec<SmChange> = col_changes
+                .into_iter()
+                .map(|cc| match cc {
+                    ColChange::Modified { j, k_old, val_old } => SmChange {
+                        start: j,
+                        old: Some((k_old, val_old)),
+                        new_j: Some(j),
+                    },
+                    // The inserted row itself is dirty (full recompute);
+                    // later rows add the new column's term.
+                    ColChange::Added { j } => SmChange {
+                        start: j,
+                        old: None,
+                        new_j: Some(j),
+                    },
                     // Rows now at index ≥ j were at ≥ j+1 and saw column j.
-                    self.correct_rows(
-                        li,
-                        *j..n,
-                        &row_dirty,
-                        Some((k_old, val_old)),
-                        None,
-                        Some(&mut acc_touched),
-                    );
+                    ColChange::Removed { j, k_old, val_old } => SmChange {
+                        start: j,
+                        old: Some((k_old, val_old)),
+                        new_j: None,
+                    },
+                })
+                .collect();
+            self.attn_sm_apply_changes(li, &changes, &row_dirty, Some(&mut acc_touched));
+        } else {
+            for cc in &col_changes {
+                match cc {
+                    ColChange::Modified { j, k_old, val_old } => {
+                        self.correct_rows(
+                            li,
+                            *j..n,
+                            &row_dirty,
+                            Some((k_old, val_old)),
+                            Some(*j),
+                            Some(&mut acc_touched),
+                        );
+                    }
+                    ColChange::Added { j } => {
+                        self.correct_rows(
+                            li,
+                            (*j + 1)..n,
+                            &row_dirty,
+                            None,
+                            Some(*j),
+                            Some(&mut acc_touched),
+                        );
+                    }
+                    ColChange::Removed { j, k_old, val_old } => {
+                        // Rows now at index ≥ j were at ≥ j+1 and saw column j.
+                        self.correct_rows(
+                            li,
+                            *j..n,
+                            &row_dirty,
+                            Some((k_old, val_old)),
+                            None,
+                            Some(&mut acc_touched),
+                        );
+                    }
                 }
             }
         }
@@ -1277,6 +1582,9 @@ impl IncrementalEngine {
         for l in &self.layers {
             b += l.x.bytes() + l.q.bytes() + l.k.bytes() + l.v.bytes();
             b += l.vc.bytes() + l.acc.bytes();
+            if let Some(a) = &l.agg {
+                b += a.bytes();
+            }
             b += l.codes.len() * std::mem::size_of::<CodeTuple>();
         }
         b += self.final_hidden.bytes();
@@ -1479,6 +1787,9 @@ impl IncrementalEngine {
                 layer.vc.reindex(&plan.final_ids);
             }
             layer.acc.reindex(&plan.final_ids);
+            if let Some(a) = &mut layer.agg {
+                a.reindex(&plan.final_ids);
+            }
             let old_codes = std::mem::take(&mut layer.codes);
             let vq_heads = self.w.cfg.vq_heads;
             layer.codes = plan
@@ -1489,9 +1800,15 @@ impl IncrementalEngine {
                     None => CodeTuple::new(&vec![0; vq_heads]),
                 })
                 .collect();
+            // `agg_cols` is 0 for element-wise engines, keeping their
+            // ledger series (and golden traces) byte-identical.
+            let agg_cols = layer
+                .agg
+                .as_ref()
+                .map_or(0, |a| a.num.cols + a.den.cols + a.m.cols);
             self.ledger.add(
                 Cat::Bookkeeping,
-                (nf * (4 * self.w.cfg.d_model + layer.acc.cols)) as u64,
+                (nf * (4 * self.w.cfg.d_model + layer.acc.cols + agg_cols)) as u64,
             );
         }
 
@@ -1526,28 +1843,54 @@ impl IncrementalEngine {
                 _ => nf,
             }
         };
-        // Removed columns.
-        for (c, k_old, val_old) in &removed_cols {
-            self.correct_rows(li, boundary(*c)..nf, &row_dirty, Some((k_old, val_old)), None, None);
-        }
-        // Modified columns (changed k/v at surviving rows) and Added
-        // columns (inserted rows' k/v): every clean row after the column
-        // is a survivor (inserted rows are all dirty), so one sweep each.
-        for (f_col, _) in &rows {
-            let old = orig_of[*f_col].map(|o| &modified_cols[&o]);
-            match old {
-                Some((k_old, val_old)) => {
-                    self.correct_rows(
-                        li,
-                        (*f_col + 1)..nf,
-                        &row_dirty,
-                        Some((k_old, val_old)),
-                        Some(*f_col),
-                        None,
-                    );
-                }
-                None => {
-                    self.correct_rows(li, (*f_col + 1)..nf, &row_dirty, None, Some(*f_col), None);
+        if self.is_softmax() {
+            // Semi-naive path: pool the whole revision's column changes
+            // into one aggregate sweep, so each clean row decides delta vs
+            // full ONCE for the pooled wave (same decision rule as the
+            // staged single-edit path).
+            let mut changes: Vec<SmChange> = Vec::new();
+            for (c, k_old, val_old) in &removed_cols {
+                changes.push(SmChange {
+                    start: boundary(*c),
+                    old: Some((k_old.clone(), val_old.clone())),
+                    new_j: None,
+                });
+            }
+            for (f_col, _) in &rows {
+                let old = orig_of[*f_col].and_then(|o| modified_cols.remove(&o));
+                // `f_col` itself is dirty, so `start` at the column is safe
+                // and later rows pick up both sides.
+                changes.push(SmChange {
+                    start: *f_col,
+                    old,
+                    new_j: Some(*f_col),
+                });
+            }
+            self.attn_sm_apply_changes(li, &changes, &row_dirty, None);
+        } else {
+            // Removed columns.
+            for (c, k_old, val_old) in &removed_cols {
+                self.correct_rows(li, boundary(*c)..nf, &row_dirty, Some((k_old, val_old)), None, None);
+            }
+            // Modified columns (changed k/v at surviving rows) and Added
+            // columns (inserted rows' k/v): every clean row after the column
+            // is a survivor (inserted rows are all dirty), so one sweep each.
+            for (f_col, _) in &rows {
+                let old = orig_of[*f_col].map(|o| &modified_cols[&o]);
+                match old {
+                    Some((k_old, val_old)) => {
+                        self.correct_rows(
+                            li,
+                            (*f_col + 1)..nf,
+                            &row_dirty,
+                            Some((k_old, val_old)),
+                            Some(*f_col),
+                            None,
+                        );
+                    }
+                    None => {
+                        self.correct_rows(li, (*f_col + 1)..nf, &row_dirty, None, Some(*f_col), None);
+                    }
                 }
             }
         }
@@ -1693,6 +2036,19 @@ impl IncrementalEngine {
                 put(&mut tf, p("vc"), &l.vc);
             }
             put(&mut tf, p("acc"), &l.acc);
+            // Softmax engines persist the streaming-softmax aggregates so
+            // a restored session can keep delta-updating without a full
+            // refresh. Element-wise checkpoints stay byte-identical to the
+            // pre-aggregate format (no tensors added, no version bump).
+            if let Some(a) = &l.agg {
+                put(&mut tf, p("sm_num"), &a.num);
+                put(&mut tf, p("sm_den"), &a.den);
+                put(&mut tf, p("sm_m"), &a.m);
+                tf.insert(
+                    p("sm_drift"),
+                    Tensor::i32(vec![n], a.drift.iter().map(|&x| x as i32).collect()),
+                );
+            }
             let mut codes = Vec::with_capacity(n * self.w.cfg.vq_heads);
             for c in &l.codes {
                 codes.extend(c.as_slice().iter().map(|&x| x as i32));
@@ -1718,6 +2074,12 @@ impl IncrementalEngine {
         tf: &crate::util::TensorFile,
         opts: EngineOptions,
     ) -> anyhow::Result<IncrementalEngine> {
+        // Same normalization as `try_new`: softmax engines run in value
+        // space, and checkpoints recorded the normalized mode.
+        let mut opts = opts;
+        if w.cfg.attention == AttentionKind::Softmax {
+            opts.score_trick = false;
+        }
         let (_, toks) = tf.get("tokens")?.as_i32()?;
         let (_, pos) = tf.get("pos_ids")?.as_i32()?;
         let (_, meta) = tf.get("meta")?.as_i32()?;
@@ -1773,6 +2135,21 @@ impl IncrementalEngine {
                 eng.layers[li].vc = get(p("vc"), vc_w)?;
             }
             eng.layers[li].acc = get(p("acc"), acc_w)?;
+            if w.cfg.attention == AttentionKind::Softmax {
+                let num = get(p("sm_num"), d)?;
+                let den = get(p("sm_den"), w.cfg.n_heads)?;
+                let m = get(p("sm_m"), w.cfg.n_heads)?;
+                let (dims, drift) = tf.get(&p("sm_drift"))?.as_i32()?;
+                anyhow::ensure!(dims == [n], "sm_drift dims");
+                let agg = eng.layers[li]
+                    .agg
+                    .as_mut()
+                    .expect("softmax shell carries aggregates");
+                agg.num = num;
+                agg.den = den;
+                agg.m = m;
+                agg.drift = drift.iter().map(|&x| x as u32).collect();
+            }
             let (dims, codes) = tf.get(&p("codes"))?.as_i32()?;
             anyhow::ensure!(dims == [n, w.cfg.vq_heads], "codes dims");
             eng.layers[li].codes = (0..n)
@@ -1798,8 +2175,11 @@ impl IncrementalEngine {
 
     /// Construct an engine with empty layer state (no forward pass) —
     /// internal helper for checkpoint restore.
-    fn new_shell(w: Arc<ModelWeights>, tokens: &[u32], opts: EngineOptions) -> IncrementalEngine {
+    fn new_shell(w: Arc<ModelWeights>, tokens: &[u32], mut opts: EngineOptions) -> IncrementalEngine {
         let cfg = &w.cfg;
+        if cfg.attention == AttentionKind::Softmax {
+            opts.score_trick = false;
+        }
         let d = cfg.d_model;
         let hq = cfg.vq_heads * cfg.vq_codes;
         let (vc_w, acc_w) = if opts.score_trick {
@@ -1816,6 +2196,8 @@ impl IncrementalEngine {
                 vc: RowStore::new(vc_w),
                 acc: RowStore::new(acc_w),
                 codes: Vec::new(),
+                agg: (cfg.attention == AttentionKind::Softmax)
+                    .then(|| AttnAggregates::new(d, cfg.n_heads)),
             })
             .collect();
         IncrementalEngine {

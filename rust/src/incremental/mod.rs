@@ -1,6 +1,7 @@
 //! Incremental inference (the paper's core algorithm). See
 //! [`engine::IncrementalEngine`].
 
+pub mod attn_delta;
 pub mod batch;
 pub mod codecache;
 pub mod engine;
@@ -144,7 +145,7 @@ mod tests {
             &tokens,
             EngineOptions {
                 score_trick: true,
-                verify_every: 0,
+                ..EngineOptions::default()
             },
         );
         let mut b = IncrementalEngine::new(
@@ -152,7 +153,7 @@ mod tests {
             &tokens,
             EngineOptions {
                 score_trick: false,
-                verify_every: 0,
+                ..EngineOptions::default()
             },
         );
         let mut r = Rng::new(55);
@@ -297,6 +298,7 @@ mod tests {
             EngineOptions {
                 score_trick: true,
                 verify_every: 2,
+                ..EngineOptions::default()
             },
         );
         for i in 0..6 {
@@ -306,6 +308,63 @@ mod tests {
             });
         }
         assert_eq!(eng.stats.verifications, 3);
+    }
+
+    /// Smoke for the semi-naive softmax path: the engine accepts a
+    /// softmax config, stays within the §12 tolerance of the dense oracle
+    /// under mixed edits, and actually exercises the delta arm.
+    #[test]
+    fn softmax_engine_tracks_dense_with_delta_updates() {
+        let cfg = ModelConfig {
+            attention: crate::config::AttentionKind::Softmax,
+            ..ModelConfig::vqt_tiny()
+        };
+        let w = Arc::new(ModelWeights::random(&cfg, 21));
+        let mut r = Rng::new(210);
+        let tokens: Vec<u32> = (0..32).map(|_| r.below(cfg.vocab_size) as u32).collect();
+        let mut eng = IncrementalEngine::new(w.clone(), &tokens, EngineOptions::default());
+        let rep = eng.verify();
+        assert_eq!(rep.code_mismatches, 0, "softmax rebuild must match dense");
+        assert!(rep.max_logit_diff < 1e-3, "{}", rep.max_logit_diff);
+        for _ in 0..10 {
+            let e = random_edit(&mut r, eng.len(), cfg.vocab_size, cfg.max_seq);
+            eng.apply_edit(e);
+            let rep = eng.verify();
+            assert_eq!(rep.code_mismatches, 0, "{e:?}");
+            assert!(rep.max_logit_diff < 1e-3, "{e:?}: {}", rep.max_logit_diff);
+        }
+        assert!(
+            eng.stats.attn_delta_rows > 0,
+            "edits on a 32-token doc must take the delta arm somewhere"
+        );
+        assert!(eng.stats.attn_delta_saved_flops > 0);
+    }
+
+    /// Softmax checkpoints carry the aggregates: restore resumes
+    /// delta-updating without recompute and stays within tolerance.
+    #[test]
+    fn softmax_checkpoint_roundtrips_aggregates() {
+        let cfg = ModelConfig {
+            attention: crate::config::AttentionKind::Softmax,
+            ..ModelConfig::vqt_tiny()
+        };
+        let w = Arc::new(ModelWeights::random(&cfg, 22));
+        let tokens: Vec<u32> = (0..16).map(|i| (i * 5 % 60) as u32).collect();
+        let mut eng = IncrementalEngine::new(w.clone(), &tokens, EngineOptions::default());
+        eng.apply_edit(Edit::Replace { at: 3, tok: 7 });
+        let tf = eng.to_tensor_file();
+        let mut back =
+            IncrementalEngine::from_tensor_file(w.clone(), &tf, EngineOptions::default()).unwrap();
+        assert_eq!(back.logits(), eng.logits());
+        assert_eq!(back.ledger.total(), 0, "restore must not recompute");
+        back.apply_edit(Edit::Replace { at: 9, tok: 11 });
+        eng.apply_edit(Edit::Replace { at: 9, tok: 11 });
+        // Same aggregates ⇒ bit-identical continuation.
+        assert_eq!(back.logits(), eng.logits());
+        assert!(back.stats.attn_delta_rows > 0, "restored engine keeps delta-updating");
+        let rep = back.verify();
+        assert_eq!(rep.code_mismatches, 0);
+        assert!(rep.max_logit_diff < 1e-3);
     }
 }
 
@@ -502,7 +561,7 @@ mod revision_overflow_tests {
             &tf,
             EngineOptions {
                 score_trick: false,
-                verify_every: 0
+                ..EngineOptions::default()
             }
         )
         .is_err());

@@ -67,6 +67,15 @@ impl RowStore {
         self.data.splice(idx..idx, row.iter().copied());
     }
 
+    /// Insert an all-zero row without a caller-side temporary — the common
+    /// case for stores whose new rows are filled by a later full pass
+    /// (attention accumulators and streaming-softmax aggregates).
+    pub fn insert_zero_row(&mut self, at: usize) {
+        assert!(at <= self.rows());
+        let idx = at * self.cols;
+        self.data.splice(idx..idx, std::iter::repeat(0.0).take(self.cols));
+    }
+
     pub fn remove_row(&mut self, at: usize) -> Vec<f32> {
         assert!(at < self.rows());
         let idx = at * self.cols;
@@ -122,6 +131,18 @@ mod tests {
         y[1] = 6.0;
         assert_eq!(s.row(2), &[5.0, 2.0]);
         assert_eq!(s.row(0), &[1.0, 6.0]);
+    }
+
+    #[test]
+    fn insert_zero_row_matches_explicit_zeros() {
+        let mut s = RowStore::new(3);
+        s.push_row(&[1.0, 2.0, 3.0]);
+        s.insert_zero_row(0);
+        s.insert_zero_row(2);
+        assert_eq!(s.rows(), 3);
+        assert_eq!(s.row(0), &[0.0, 0.0, 0.0]);
+        assert_eq!(s.row(1), &[1.0, 2.0, 3.0]);
+        assert_eq!(s.row(2), &[0.0, 0.0, 0.0]);
     }
 
     #[test]

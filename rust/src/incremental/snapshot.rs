@@ -35,7 +35,17 @@
 //! and rewarms lazily (first touches miss and repopulate), which stays
 //! bit-exact because cached and uncached tails are bit-identical. The
 //! stats tensor therefore stays at the 8 pre-cache counters and the
-//! snapshot format needs no version bump.
+//! snapshot format needs no version bump. The semi-naive attention
+//! counters (`attn_*`, docs/ARCHITECTURE.md §12) follow the same
+//! exclusion: they describe work already paid for, not reusable state.
+//!
+//! Softmax-attention engines additionally serialize their per-layer
+//! streaming-softmax aggregates (`sm_num`/`sm_den`/`sm_m` plus the
+//! `sm_drift` refresh counters) so a restored engine keeps taking delta
+//! updates with the exact same weights it would have used in memory.
+//! These are ordinary named tensors in the payload — gelu-series
+//! snapshots don't carry them and stay byte-identical to before, so this
+//! too needs no version bump.
 
 use crate::flops::FlopLedger;
 use crate::incremental::{EngineOptions, IncrementalEngine};

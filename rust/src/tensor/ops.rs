@@ -251,6 +251,48 @@ pub fn softmax_row(xs: &mut [f32]) {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Streaming-softmax aggregate kernels (docs/ARCHITECTURE.md §12): one
+// attention head's running numerator/denominator state, updated by adding
+// or subtracting a single key's contribution and renormalized on demand.
+// The subtract kernel is the add kernel with the weight negated — the same
+// multiply in the same order — so `add_term` followed by `sub_term` with
+// the identical weight returns each element to within one f32 rounding
+// step of its starting value (the §12 tolerance contract's per-term bound).
+// ---------------------------------------------------------------------------
+
+/// Add one key's contribution to a head's aggregates:
+/// `num += w · val`, `den += w`, where `w = exp(score − shift)` was
+/// computed by the caller (the shift is frozen between full refreshes).
+#[inline]
+pub fn sm_add_term(num: &mut [f32], den: &mut f32, w: f32, val: &[f32]) {
+    axpy(w, val, num);
+    *den += w;
+}
+
+/// Subtract one key's previous contribution from a head's aggregates:
+/// `num −= w · val`, `den −= w`. `w` must be recomputed from the RETAINED
+/// old key under the same frozen shift, so it equals the weight originally
+/// added bit-for-bit and the subtraction cancels up to f32 rounding.
+#[inline]
+pub fn sm_sub_term(num: &mut [f32], den: &mut f32, w: f32, val: &[f32]) {
+    axpy(-w, val, num);
+    *den -= w;
+}
+
+/// Renormalize a head's aggregates into the attention output slice:
+/// `out = num / den` via one reciprocal + one multiply per element (the
+/// same shape `softmax_row`'s normalize step uses). The caller guards
+/// `den` away from zero (the §12 cancellation guard) before calling.
+#[inline]
+pub fn sm_renorm_into(num: &[f32], den: f32, out: &mut [f32]) {
+    debug_assert_eq!(num.len(), out.len());
+    let inv = 1.0 / den;
+    for (o, &nv) in out.iter_mut().zip(num) {
+        *o = nv * inv;
+    }
+}
+
 /// `out = a + b` element-wise.
 pub fn add(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!((a.rows, a.cols), (b.rows, b.cols));
@@ -532,6 +574,99 @@ mod tests {
         let mut xs = vec![1000.0, 1001.0];
         softmax_row(&mut xs);
         assert!(xs.iter().all(|x| x.is_finite()));
+    }
+
+    /// Streaming-softmax aggregates built one term at a time must match
+    /// the batch `softmax_row` result — including the boundary shapes the
+    /// engine hits: a single key (seq_len 1) and a wide context.
+    #[test]
+    fn sm_aggregates_match_softmax_row() {
+        use crate::util::Rng;
+        let mut r = Rng::new(21);
+        for &(ctx, dh) in &[(1usize, 1usize), (1, 8), (5, 4), (37, 16)] {
+            let scores: Vec<f32> = (0..ctx).map(|_| r.normal()).collect();
+            let vals: Vec<Vec<f32>> = (0..ctx)
+                .map(|_| (0..dh).map(|_| r.normal()).collect())
+                .collect();
+            // Reference: batch softmax then weighted sum.
+            let mut p = scores.clone();
+            softmax_row(&mut p);
+            let mut want = vec![0.0f32; dh];
+            for (j, v) in vals.iter().enumerate() {
+                axpy(p[j], v, &mut want);
+            }
+            // Streaming: frozen shift = max score, add term by term.
+            let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut num = vec![0.0f32; dh];
+            let mut den = 0.0f32;
+            for (j, v) in vals.iter().enumerate() {
+                sm_add_term(&mut num, &mut den, (scores[j] - m).exp(), v);
+            }
+            let mut got = vec![0.0f32; dh];
+            sm_renorm_into(&num, den, &mut got);
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-5, "ctx {ctx} dh {dh}: {a} vs {b}");
+            }
+        }
+    }
+
+    /// Subtracting a term with the bit-identical weight cancels the add up
+    /// to one rounding step per element — the per-term bound the §12
+    /// drift-refresh policy multiplies by the refresh interval.
+    #[test]
+    fn sm_sub_cancels_add_to_rounding() {
+        use crate::util::Rng;
+        let mut r = Rng::new(22);
+        for &dh in &[1usize, 4, 16] {
+            let base: Vec<f32> = (0..dh).map(|_| r.normal()).collect();
+            let val: Vec<f32> = (0..dh).map(|_| r.normal()).collect();
+            let mut num = base.clone();
+            let mut den = 2.5f32;
+            let w = 0.731f32;
+            sm_add_term(&mut num, &mut den, w, &val);
+            sm_sub_term(&mut num, &mut den, w, &val);
+            for (a, b) in num.iter().zip(&base) {
+                assert!((a - b).abs() <= 2.0 * f32::EPSILON * (1.0 + b.abs() + w), "{a} vs {b}");
+            }
+            assert!((den - 2.5).abs() <= 4.0 * f32::EPSILON);
+        }
+    }
+
+    /// Replacing every key (all terms subtracted and re-added) still lands
+    /// on the batch result — the "all keys changed" boundary where the
+    /// engine's decision rule would normally pick a full recompute.
+    #[test]
+    fn sm_full_turnover_matches_rebuild() {
+        use crate::util::Rng;
+        let mut r = Rng::new(23);
+        let (ctx, dh) = (9usize, 8usize);
+        let s_old: Vec<f32> = (0..ctx).map(|_| r.normal()).collect();
+        let v_old: Vec<Vec<f32>> = (0..ctx).map(|_| (0..dh).map(|_| r.normal()).collect()).collect();
+        let s_new: Vec<f32> = (0..ctx).map(|_| r.normal() * 0.5).collect();
+        let v_new: Vec<Vec<f32>> = (0..ctx).map(|_| (0..dh).map(|_| r.normal()).collect()).collect();
+        let m = s_old.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut num = vec![0.0f32; dh];
+        let mut den = 0.0f32;
+        for j in 0..ctx {
+            sm_add_term(&mut num, &mut den, (s_old[j] - m).exp(), &v_old[j]);
+        }
+        for j in 0..ctx {
+            sm_sub_term(&mut num, &mut den, (s_old[j] - m).exp(), &v_old[j]);
+            sm_add_term(&mut num, &mut den, (s_new[j] - m).exp(), &v_new[j]);
+        }
+        let mut got = vec![0.0f32; dh];
+        sm_renorm_into(&num, den, &mut got);
+        // Reference under the same (stale) shift — shift cancels in the
+        // ratio, so compare against a fresh softmax of the new scores.
+        let mut p = s_new.clone();
+        softmax_row(&mut p);
+        let mut want = vec![0.0f32; dh];
+        for (j, v) in v_new.iter().enumerate() {
+            axpy(p[j], v, &mut want);
+        }
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
     }
 
     #[test]

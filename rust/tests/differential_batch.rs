@@ -26,7 +26,7 @@ use vqt::util::Rng;
 fn configs() -> Vec<(&'static str, ModelConfig, EngineOptions)> {
     let trick_off = EngineOptions {
         score_trick: false,
-        verify_every: 0,
+        ..EngineOptions::default()
     };
     vec![
         ("vqt_tiny", ModelConfig::vqt_tiny(), EngineOptions::default()),

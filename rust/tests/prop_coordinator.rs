@@ -88,6 +88,7 @@ fn prop_revision_converges_to_target() {
                 // Self-verification each revision: any state corruption
                 // inside diff-apply would be caught and logged here.
                 verify_every: 1,
+                ..EngineOptions::default()
             },
         },
         ServeConfig::default(),

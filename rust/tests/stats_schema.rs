@@ -12,6 +12,10 @@ use vqt::util::Json;
 
 /// Every key the merged (pool-level) stats object carries.
 const MERGED_KEYS: &[&str] = &[
+    "attn_delta_rows",
+    "attn_full_rows",
+    "attn_refreshes",
+    "attn_saved_flops",
     "batch_fill",
     "batched_rows",
     "cache_bytes",
@@ -49,6 +53,10 @@ const MERGED_KEYS: &[&str] = &[
 
 /// Every key each `per_shard` entry carries.
 const PER_SHARD_KEYS: &[&str] = &[
+    "attn_delta_rows",
+    "attn_full_rows",
+    "attn_refreshes",
+    "attn_saved_flops",
     "batched_rows",
     "cache_bytes",
     "cache_evictions",

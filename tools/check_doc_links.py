@@ -1,0 +1,120 @@
+#!/usr/bin/env python3
+"""Docs link-and-anchor checker (stdlib only — runs in the CI lint lane).
+
+Scans every tracked Markdown file for inline links `[text](target)` and
+validates the ones this repo can actually break:
+
+  * relative file links must resolve (relative to the linking file);
+  * fragment links (`#anchor`, `file.md#anchor`) must name a heading that
+    exists in the target file, using GitHub's slug rules (lowercase,
+    spaces to hyphens, punctuation stripped, duplicate slugs suffixed
+    -1, -2, ...);
+  * absolute URLs (http/https/mailto) are skipped — external liveness is
+    not this check's job, and hitting the network in CI is flaky.
+
+Exit status 0 when every link resolves; 1 with one line per broken link
+otherwise. Run from anywhere: paths are anchored at the repo root
+(this script's grandparent directory).
+"""
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+# Inline markdown links, skipping images; code spans are stripped first.
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$")
+CODE_FENCE_RE = re.compile(r"^(```|~~~)")
+
+
+def md_files():
+    skip_parts = {".git", "target", "node_modules"}
+    for p in sorted(ROOT.rglob("*.md")):
+        if not skip_parts.intersection(p.relative_to(ROOT).parts):
+            yield p
+
+
+def github_slug(heading, seen):
+    """GitHub's anchor slug: strip markdown emphasis/code/links, lowercase,
+    drop punctuation, hyphenate spaces, dedupe with -N suffixes."""
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", heading)  # [t](u) -> t
+    text = re.sub(r"[`*_]", "", text)
+    slug = re.sub(r"[^\w\- ]", "", text.lower(), flags=re.UNICODE)
+    slug = slug.replace(" ", "-")
+    if slug in seen:
+        seen[slug] += 1
+        return f"{slug}-{seen[slug]}"
+    seen[slug] = 0
+    return slug
+
+
+def anchors_of(path, cache={}):
+    if path not in cache:
+        seen = {}
+        anchors = set()
+        in_fence = False
+        for line in path.read_text(encoding="utf-8").splitlines():
+            if CODE_FENCE_RE.match(line):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            m = HEADING_RE.match(line)
+            if m:
+                anchors.add(github_slug(m.group(2), seen))
+            # Explicit <a name="..."> / id="..." anchors also count.
+            for a in re.findall(r'(?:name|id)="([^"]+)"', line):
+                anchors.add(a)
+        cache[path] = anchors
+    return cache[path]
+
+
+def links_of(path):
+    in_fence = False
+    for lineno, line in enumerate(
+        path.read_text(encoding="utf-8").splitlines(), start=1
+    ):
+        if CODE_FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        stripped = re.sub(r"`[^`]*`", "``", line)  # links in code spans don't count
+        for m in LINK_RE.finditer(stripped):
+            yield lineno, m.group(1)
+
+
+def main():
+    errors = []
+    for md in md_files():
+        for lineno, target in links_of(md):
+            if re.match(r"^[a-z][a-z0-9+.-]*:", target):  # http:, https:, mailto:
+                continue
+            where = f"{md.relative_to(ROOT)}:{lineno}"
+            path_part, _, frag = target.partition("#")
+            if path_part:
+                dest = (md.parent / path_part).resolve()
+                if not dest.exists():
+                    errors.append(f"{where}: broken link '{target}' (no such file)")
+                    continue
+            else:
+                dest = md
+            if frag and dest.suffix == ".md":
+                if frag not in anchors_of(dest):
+                    errors.append(
+                        f"{where}: broken anchor '{target}' "
+                        f"(no heading slugs to '#{frag}' in {dest.relative_to(ROOT)})"
+                    )
+    for e in errors:
+        print(e)
+    if errors:
+        print(f"\n{len(errors)} broken doc link(s)")
+        return 1
+    print(f"doc links OK across {sum(1 for _ in md_files())} markdown files")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
